@@ -1,0 +1,51 @@
+//! Regenerates **Fig. 5**: the weight-package bit budgets, effective
+//! bit-widths and performance enhancement at each log-scale sparsity,
+//! under both mask encodings.
+//!
+//! `cargo bench --bench fig5_sparsity_packing`
+
+use edgellm::pack::{best_encoding, mask_bits, package_bits, MaskEncoding};
+use edgellm::quant::Sparsity;
+use edgellm::util::bench::Table;
+
+fn main() {
+    println!("== Fig. 5: weight package budget per 2048 CH_in group ==");
+    let mut t = Table::new(&[
+        "case", "sparsity", "encoding", "scale bits", "mask bits", "wt bits",
+        "total", "eff bit-width", "enhancement", "paper",
+    ]);
+    let rows = [
+        ("1 dense", Sparsity::Dense, MaskEncoding::None, "8448 / 4.125 / 1.00x"),
+        ("2 50%", Sparsity::Half, MaskEncoding::OneHot, "6400 / 3.125 / 1.32x"),
+        ("3 75%", Sparsity::Quarter, MaskEncoding::AddrInBlock, "3840 / 1.875 / 2.2x"),
+        ("4 87.5%", Sparsity::Eighth, MaskEncoding::OneHot, "3328 / 1.625 / 2.54x"),
+        ("4 87.5%", Sparsity::Eighth, MaskEncoding::AddrInBlock, "2304 / 1.125 / 3.67x"),
+    ];
+    for (case, sp, enc, paper) in rows {
+        let p = package_bits(sp, enc);
+        t.rowv(vec![
+            case.to_string(),
+            format!("{:.1}%", sp.percent()),
+            format!("{enc:?}"),
+            p.scale_bits.to_string(),
+            p.mask_bits.to_string(),
+            p.wt_bits.to_string(),
+            p.total().to_string(),
+            format!("{:.3}", p.effective_bitwidth()),
+            format!("{:.2}x", p.enhancement()),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n== hybrid encoding crossover ==");
+    for sp in [Sparsity::Half, Sparsity::Quarter, Sparsity::Eighth] {
+        println!(
+            "{:>6.1}% sparse: one-hot {} bits vs addr-in-block {} bits -> {:?}",
+            sp.percent(),
+            mask_bits(sp, MaskEncoding::OneHot),
+            mask_bits(sp, MaskEncoding::AddrInBlock),
+            best_encoding(sp)
+        );
+    }
+}

@@ -1,0 +1,121 @@
+//! Hot-path microbenchmarks for the §Perf optimization pass: wall-time
+//! of the L3 components that run per-request or per-table-regeneration.
+//!
+//! `cargo bench --bench hotpath`
+
+use edgellm::compiler::codegen::compile;
+use edgellm::fp::error::{error_rate, Design, Mode};
+use edgellm::fp::minifloat::f16_encode;
+use edgellm::fp::mixpe::{mac_fp16_int4, PAPER_PE, T_IN};
+use edgellm::models::{DENSE, GLM_6B, STRATEGY_3};
+use edgellm::pack::layout::{encode_package, port_streams};
+use edgellm::quant::{prune_log_scale, quantize, Sparsity};
+use edgellm::sim::engine::Simulator;
+use edgellm::sim::Memory;
+use edgellm::util::bench::{time_it, Table};
+use edgellm::util::rng::Rng;
+
+fn main() {
+    let mut t = Table::new(&["hot path", "median", "min", "throughput"]);
+
+    // 1. mix-PE MAC (the Table-I harness inner loop)
+    let mut rng = Rng::new(1);
+    let a: Vec<u16> = (0..T_IN).map(|_| f16_encode(rng.normal())).collect();
+    let w: Vec<i8> = (0..T_IN).map(|_| rng.int_in(-8, 7) as i8).collect();
+    let one = f16_encode(1.0);
+    let tm = time_it(100, 2000, || {
+        std::hint::black_box(mac_fp16_int4(&PAPER_PE, &a, &w, one));
+    });
+    t.rowv(vec![
+        "mixpe 128-lane MAC".into(),
+        tm.fmt_human(),
+        edgellm::util::bench::fmt_secs(tm.min),
+        format!("{:.1} M MAC-lane/s", T_IN as f64 / tm.median / 1e6),
+    ]);
+
+    // 2. error-rate harness (1000 trials)
+    let te = time_it(1, 5, || {
+        std::hint::black_box(error_rate(Design::MixPe, Mode::Fp16Int4, &PAPER_PE, 1000, 7));
+    });
+    t.rowv(vec![
+        "error_rate 1k trials".into(),
+        te.fmt_human(),
+        edgellm::util::bench::fmt_secs(te.min),
+        format!("{:.0} trials/s", 1000.0 / te.median),
+    ]);
+
+    // 3. quantize + prune a 2048×512 matrix
+    let (k, n) = (2048usize, 512usize);
+    let w0: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let tq = time_it(1, 10, || {
+        let mut w = w0.clone();
+        prune_log_scale(&mut w, k, n, 2);
+        std::hint::black_box(quantize(&w, k, n));
+    });
+    t.rowv(vec![
+        "prune+quantize 2048x512".into(),
+        tq.fmt_human(),
+        edgellm::util::bench::fmt_secs(tq.min),
+        format!("{:.1} M elem/s", (k * n) as f64 / tq.median / 1e6),
+    ]);
+
+    // 4. HBM package encode (one column) + full port-stream assembly
+    let mut wq = w0.clone();
+    prune_log_scale(&mut wq, k, n, 2);
+    let qm = quantize(&wq, k, n);
+    let tp = time_it(1, 20, || {
+        std::hint::black_box(encode_package(&qm, 0, 0, Sparsity::Quarter));
+    });
+    t.rowv(vec![
+        "encode_package (1 col)".into(),
+        tp.fmt_human(),
+        edgellm::util::bench::fmt_secs(tp.min),
+        String::new(),
+    ]);
+    let ts = time_it(1, 3, || {
+        std::hint::black_box(port_streams(&qm, Sparsity::Quarter));
+    });
+    t.rowv(vec![
+        "port_streams 2048x512".into(),
+        ts.fmt_human(),
+        edgellm::util::bench::fmt_secs(ts.min),
+        format!(
+            "{:.1} MB/s packaged",
+            (k * n) as f64 / 2.0 / ts.median / 1e6
+        ),
+    ]);
+
+    // 5. full-model compile (graph + instruction generation)
+    let tc = time_it(1, 10, || {
+        std::hint::black_box(compile(&GLM_6B, &STRATEGY_3, 256));
+    });
+    t.rowv(vec![
+        "compile GLM-6B program".into(),
+        tc.fmt_human(),
+        edgellm::util::bench::fmt_secs(tc.min),
+        String::new(),
+    ]);
+
+    // 6. simulator: one full decode step + a 64-token generation
+    let sim = Simulator::new(&GLM_6B, &DENSE, Memory::Hbm);
+    let td = time_it(2, 50, || {
+        std::hint::black_box(sim.decode_step(512));
+    });
+    t.rowv(vec![
+        "sim decode_step".into(),
+        td.fmt_human(),
+        edgellm::util::bench::fmt_secs(td.min),
+        format!("{:.0} steps/s", 1.0 / td.median),
+    ]);
+    let tg = time_it(1, 5, || {
+        std::hint::black_box(sim.generate(128, 64));
+    });
+    t.rowv(vec![
+        "sim generate 128+64".into(),
+        tg.fmt_human(),
+        edgellm::util::bench::fmt_secs(tg.min),
+        String::new(),
+    ]);
+
+    t.print();
+}

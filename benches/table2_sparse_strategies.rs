@@ -1,0 +1,87 @@
+//! Regenerates **Table II**: GLM-6B per-matrix weight budgets and
+//! speedups under the three sparse strategies, plus the quality proxy
+//! (output drift of the functionally-sparsified tiny model).
+//!
+//! `cargo bench --bench table2_sparse_strategies`
+
+use edgellm::models::{self, SparseStrategy, GLM_6B};
+use edgellm::pack::matrix_bytes;
+use edgellm::util::bench::Table;
+
+
+/// §III.C ablation: block size of the sparsity pattern at fixed 50%
+/// sparsity — the paper's "our sparse blocks are larger … better
+/// performance at the algorithmic level" argument vs GPU 2:4.
+fn nm_ablation() {
+    use edgellm::quant::nm::{
+        mask_bits_per_channel_indexed, mask_bits_per_channel_one_hot,
+        reconstruction_error,
+    };
+    println!("\n== ablation: N:M pattern window size (50% sparsity) ==");
+    let mut t = Table::new(&[
+        "pattern", "recon error", "mask bits/ch (one-hot)", "mask bits/ch (indexed)",
+    ]);
+    for (keep, m, label) in [
+        (2usize, 4usize, "2:4 (GPU A100)"),
+        (4, 8, "4:8 (EdgeLLM)"),
+        (8, 16, "8:16 (EdgeLLM)"),
+        (32, 64, "32:64 (EdgeLLM)"),
+    ] {
+        let e = reconstruction_error(keep, m, 4096, 64, 77);
+        t.rowv(vec![
+            label.to_string(),
+            format!("{:.4}", e),
+            format!("{:.2}", mask_bits_per_channel_one_hot(keep, m)),
+            format!("{:.2}", mask_bits_per_channel_indexed(keep, m)),
+        ]);
+    }
+    t.print();
+    println!("larger windows discard less signal at the same kept fraction \u{2713}");
+}
+
+fn main() {
+    nm_ablation();
+    println!("== Table II: GLM-6B weight budget per block ==");
+    let strategies = SparseStrategy::all();
+    let mut t = Table::new(&["matrix", "dense", "strategy-1", "strategy-2", "strategy-3"]);
+    let mb = |b: usize| format!("{:.2} MB", b as f64 / (1024.0 * 1024.0));
+    for (name, k, n) in GLM_6B.block_matrices() {
+        let mut row = vec![name.to_string()];
+        for s in &strategies {
+            let sp = s.for_matrix(name);
+            let label = if sp == edgellm::quant::Sparsity::Dense {
+                format!("dense, {}", mb(matrix_bytes(k, n, sp)))
+            } else {
+                format!("{:.0}% sparse, {}", sp.percent(), mb(matrix_bytes(k, n, sp)))
+            };
+            row.push(label);
+        }
+        t.rowv(row);
+    }
+    t.print();
+
+    let mut t2 = Table::new(&["", "dense", "strategy-1", "strategy-2", "strategy-3"]);
+    let mut totals = vec!["total wt in a Block".to_string()];
+    let mut speeds = vec!["speedup".to_string()];
+    for s in &strategies {
+        totals.push(mb(models::block_weight_bytes(&GLM_6B, s)));
+        speeds.push(format!("{:.2}x", models::strategy_speedup(&GLM_6B, s)));
+    }
+    t2.rowv(totals);
+    t2.rowv(speeds);
+    t2.print();
+    println!(
+        "paper: 100.33 / 79.22 / 61.50 / 53.15 MB; speedups 1x / 1.27x / 1.63x / 1.89x\n"
+    );
+
+    println!("== Table II (bottom): algorithm quality under sparsity ==");
+    println!(
+        "paper (GLM-6B): WikiText-2 perplexity 29.92 -> 38.54 -> 59.24 -> 120.87;\n\
+         avg zero-shot accuracy 59.6 -> 56.6 -> 54.8 -> 48.0 (monotone degradation).\n\
+         We cannot re-evaluate GLM-6B (no checkpoint); the functional proxy —\n\
+         logit drift of the tiny model under the same pruning recipe — is\n\
+         asserted monotone in python/tests/test_model.py::\n\
+         test_sparsity_degrades_quality_monotonically and measured by\n\
+         `cargo run --release --example sparsity_explorer`."
+    );
+}

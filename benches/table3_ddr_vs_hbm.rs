@@ -1,0 +1,92 @@
+//! Regenerates **Table III**: per-step latency of the dense GLM block,
+//! HBM vs DDR, decode and prefill at token=128.
+//!
+//! `cargo bench --bench table3_ddr_vs_hbm`
+
+use edgellm::models::{DENSE, GLM_6B};
+use edgellm::sim::engine::Simulator;
+use edgellm::sim::Memory;
+use edgellm::util::bench::Table;
+
+// Paper Table III (µs): (step, decode HBM, decode DDR, prefill HBM, prefill DDR)
+const PAPER: &[(&str, f64, f64, f64, f64)] = &[
+    ("LayerNorm", 9.55, 15.84, 533.35, 694.86),
+    ("VMM-BN(Q)", 47.12, 181.66, 4770.07, 7840.94),
+    ("EMB_Q", 7.79, 13.70, 274.29, 351.03),
+    ("VMM-BN(K)", 2.15, 12.61, 476.38, 649.70),
+    ("EMB_K", 0.44, 1.57, 24.99, 33.15),
+    ("DAT2HBM", 0.23, 1.63, 70.42, 36.46),
+    ("TRP", 5.83, 10.06, 672.66, 837.16),
+    ("SOFTMAX", 43.38, 48.68, 872.54, 1048.91),
+    ("VMM-BN(V)", 1.97, 10.72, 475.36, 650.17),
+    ("DAT2HBM", 0.29, 2.23, 69.95, 35.44),
+    ("F2W", 5.73, 9.64, 614.95, 837.49),
+    ("VMMBNRES0", 48.34, 177.30, 4725.42, 7845.11),
+    ("LayerNorm", 9.52, 14.48, 533.76, 694.53),
+    ("VMMBN1", 137.98, 596.56, 16063.43, 26306.36),
+    ("ACT", 15.36, 33.83, 890.43, 1142.23),
+    ("VMMBNRES1", 143.98, 594.59, 16007.04, 26319.11),
+    ("VMMBNRES2", 191.41, 707.03, 23429.09, 75931.96),
+];
+
+fn main() {
+    let hbm = Simulator::new(&GLM_6B, &DENSE, Memory::Hbm);
+    let ddr = Simulator::new(&GLM_6B, &DENSE, Memory::Ddr);
+
+    println!("== Table III: dense GLM step latencies (µs), token=128 ==");
+    let mut t = Table::new(&[
+        "step", "dec HBM", "paper", "dec DDR", "paper", "pre HBM", "paper", "pre DDR", "paper",
+    ]);
+    let dec_h = hbm.decode_step(128);
+    let dec_d = ddr.decode_step(128);
+    let pre_h = hbm.prefill(128);
+    let pre_d = ddr.prefill(128);
+    for (i, (name, us)) in dec_h.block_steps.iter().take(17).enumerate() {
+        let paper = PAPER.get(i);
+        t.rowv(vec![
+            format!("{} {}", i + 1, name),
+            format!("{us:.2}"),
+            paper.map(|p| format!("{:.2}", p.1)).unwrap_or_default(),
+            format!("{:.2}", dec_d.block_steps[i].1),
+            paper.map(|p| format!("{:.2}", p.2)).unwrap_or_default(),
+            format!("{:.2}", pre_h.block_steps[i].1),
+            paper.map(|p| format!("{:.2}", p.3)).unwrap_or_default(),
+            format!("{:.2}", pre_d.block_steps[i].1),
+            paper.map(|p| format!("{:.2}", p.4)).unwrap_or_default(),
+        ]);
+    }
+    t.print();
+
+    println!("\n== summary ==");
+    let mut t2 = Table::new(&["metric", "ours", "paper"]);
+    let block_h: f64 = dec_h.block_steps.iter().take(17).map(|(_, u)| u).sum();
+    let block_d: f64 = dec_d.block_steps.iter().take(17).map(|(_, u)| u).sum();
+    t2.rowv(vec!["decode block HBM (µs)".into(), format!("{block_h:.1}"), "674.83".into()]);
+    t2.rowv(vec!["decode block DDR (µs)".into(), format!("{block_d:.1}"), "2432.12".into()]);
+    t2.rowv(vec![
+        "decode total HBM (ms)".into(),
+        format!("{:.2}", dec_h.breakdown.total_us() / 1e3),
+        "19.45".into(),
+    ]);
+    t2.rowv(vec![
+        "decode total DDR (ms)".into(),
+        format!("{:.2}", dec_d.breakdown.total_us() / 1e3),
+        "70.87".into(),
+    ]);
+    t2.rowv(vec![
+        "prefill total HBM (ms)".into(),
+        format!("{:.1}", pre_h.breakdown.total_us() / 1e3),
+        "1974.8 (28 blocks)".into(),
+    ]);
+    t2.rowv(vec![
+        "decode speed HBM (tok/s)".into(),
+        format!("{:.2}", 1e6 / dec_h.breakdown.total_us()),
+        "51.42".into(),
+    ]);
+    t2.rowv(vec![
+        "decode speed DDR (tok/s)".into(),
+        format!("{:.2}", 1e6 / dec_d.breakdown.total_us()),
+        "14.11".into(),
+    ]);
+    t2.print();
+}

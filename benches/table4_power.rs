@@ -1,0 +1,60 @@
+//! Regenerates **Table IV**: per-operator power and the normalized
+//! average power during sparse GLM-6B decode.
+//!
+//! `cargo bench --bench table4_power`
+
+use edgellm::models::{GLM_6B, STRATEGY_3};
+use edgellm::sim::engine::Simulator;
+use edgellm::sim::operators::block_ops;
+use edgellm::sim::power::{decode_energy, op_power_w, STANDBY_W};
+use edgellm::sim::Memory;
+use edgellm::util::bench::Table;
+
+// Paper Table IV rows (W @140/280 MHz).
+const PAPER: &[(&str, f64)] = &[
+    ("RMSNorm", 41.02),
+    ("VMM-BN(Q)", 54.02),
+    ("PosEmb(Q)", 40.81),
+    ("VMM-BN(K)", 42.79),
+    ("PosEmb(K)", 40.63),
+    ("KcacheHBM", 40.62),
+    ("VMM(Q*K^T)", 41.01),
+    ("Softmax", 40.65),
+    ("VMM-BN(V)", 42.84),
+    ("VcacheHBM", 40.62),
+    ("VMM(SFT*V)", 40.92),
+    ("VMM-BN-RES(O)", 57.25),
+    ("RMSNorm", 40.97),
+    ("VMM-BN(gate)", 55.13),
+    ("Swiglu", 41.11),
+    ("VMM-BN(up)", 58.13),
+    ("VMM-BN-RES(4h-h)", 53.23),
+];
+
+fn main() {
+    println!("== Table IV: operator power (W) ==");
+    println!("standby (bitstream loaded): {STANDBY_W} W (paper: 40.36 W)\n");
+    let ops = block_ops(&GLM_6B, &STRATEGY_3);
+    let mut t = Table::new(&["step", "operator", "ours (W)", "paper (W)"]);
+    for (i, op) in ops.iter().enumerate() {
+        let p = op_power_w(op);
+        let paper = PAPER.get(i).map(|x| format!("{:.2}", x.1)).unwrap_or_default();
+        t.rowv(vec![
+            (i + 1).to_string(),
+            op.name.to_string(),
+            format!("{p:.2}"),
+            paper,
+        ]);
+    }
+    t.print();
+
+    let sim = Simulator::new(&GLM_6B, &STRATEGY_3, Memory::Hbm);
+    let e = decode_energy(&sim, 128);
+    println!(
+        "\nnormalized average power (duty-cycle weighted): {:.2} W (paper: 56.86 W)\n\
+         energy per decoded token: {:.3} J -> {:.2} token/J",
+        e.avg_power_w,
+        e.energy_j,
+        1.0 / e.energy_j
+    );
+}

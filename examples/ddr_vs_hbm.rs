@@ -1,0 +1,65 @@
+//! DDR-vs-HBM edge deployment study (Table III's ablation as a tool).
+//!
+//! Edge systems often have no HBM; this example sweeps context lengths
+//! and prefill sizes over both memory systems and prints where the
+//! crossovers fall — decode is ~4× slower on DDR, prefill only ~2×,
+//! and longer prefills shrink the gap (weight reuse).
+//!
+//! Run: `cargo run --release --example ddr_vs_hbm [--arch qwen] [--strategy s3]`
+
+use edgellm::models;
+use edgellm::sim::engine::Simulator;
+use edgellm::sim::Memory;
+use edgellm::util::bench::Table;
+use edgellm::util::Args;
+
+fn main() {
+    let args = Args::parse();
+    let arch = if args.get_or("arch", "glm") == "qwen" {
+        models::QWEN_7B
+    } else {
+        models::GLM_6B
+    };
+    let strat = match args.get_or("strategy", "dense").as_str() {
+        "s1" => models::STRATEGY_1,
+        "s2" => models::STRATEGY_2,
+        "s3" => models::STRATEGY_3,
+        _ => models::DENSE,
+    };
+    let hbm = Simulator::new(&arch, &strat, Memory::Hbm);
+    let ddr = Simulator::new(&arch, &strat, Memory::Ddr);
+
+    println!("== decode speed vs context ({} / {}) ==", arch.name, strat.name);
+    let mut t = Table::new(&["ctx", "HBM tok/s", "DDR tok/s", "HBM/DDR"]);
+    for ctx in [32usize, 128, 256, 512, 1024, 2048] {
+        let h = hbm.decode_tokens_per_s(ctx);
+        let d = ddr.decode_tokens_per_s(ctx);
+        t.rowv(vec![
+            ctx.to_string(),
+            format!("{h:.1}"),
+            format!("{d:.1}"),
+            format!("{:.2}x", h / d),
+        ]);
+    }
+    t.print();
+
+    println!("\n== prefill runtime vs prompt length ==");
+    let mut t2 = Table::new(&["tokens", "HBM ms", "DDR ms", "DDR/HBM"]);
+    for tok in [16usize, 64, 128, 256, 512] {
+        let h = hbm.prefill(tok).breakdown.total_us() / 1e3;
+        let d = ddr.prefill(tok).breakdown.total_us() / 1e3;
+        t2.rowv(vec![
+            tok.to_string(),
+            format!("{h:.1}"),
+            format!("{d:.1}"),
+            format!("{:.2}x", d / h),
+        ]);
+    }
+    t2.print();
+    println!(
+        "paper (Table III, dense GLM): decode 51.42 vs 14.11 tok/s; prefill\n\
+         degradation shrinks as the prompt grows — weight reuse amortizes the\n\
+         bandwidth loss. 'the performance of EdgeLLM is still good enough for\n\
+         edge applications' even on pure-DDR systems."
+    );
+}

@@ -1,0 +1,165 @@
+"""AOT entry point: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (per model config):
+  artifacts/<name>.decode.hlo.txt      one autoregressive step
+  artifacts/<name>.prefill<T>.hlo.txt  prompt ingestion at bucket T
+  artifacts/<name>.weights.bin         flat weight arrays (custom binary)
+  artifacts/<name>.manifest.json       shapes/arg-order contract for rust
+
+Run via `make artifacts`; python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MAGIC = b"ELLMWT01"
+DTYPES = {"float32": 0, "int8": 1, "int32": 2}
+
+# Prefill shape buckets (prompts are padded up to the nearest bucket).
+PREFILL_BUCKETS = (16, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path, arrays):
+    """Custom binary tensor container the rust loader understands."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(arrays)))
+        for name, arr in arrays:
+            arr = np.asarray(arr)
+            dt = DTYPES[str(arr.dtype)]
+            nb = arr.nbytes
+            f.write(struct.pack("<I", len(name)))
+            f.write(name.encode())
+            f.write(struct.pack("<BB", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<Q", nb))
+            f.write(arr.tobytes())
+
+
+def weight_names(cfg):
+    names = ["embed"]
+    per = ["wq", "sq", "wk", "sk", "wv", "sv", "wo", "so",
+           "w_gate", "s_gate", "w_up", "s_up", "w_down", "s_down",
+           "g1", "g2"]
+    for i in range(cfg.n_layers):
+        names += [f"layer{i}.{p}" for p in per]
+    names += ["g_final", "w_lm", "s_lm"]
+    return names
+
+
+def build(cfg: M.ModelConfig, name: str, outdir: str, seed: int,
+          keep_of_8: int = 8, buckets=PREFILL_BUCKETS):
+    os.makedirs(outdir, exist_ok=True)
+    weights = M.init_weights(cfg, seed=seed, sparsity_keep_of_8=keep_of_8)
+    flat = weights.flat()
+    names = weight_names(cfg)
+    assert len(names) == len(flat)
+
+    L, T = cfg.n_layers, cfg.max_tokens
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    cache_spec = jax.ShapeDtypeStruct((L, T, kvh, hd), jnp.float32)
+    w_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat]
+
+    def decode_fn(token_id, pos_arr, k_caches, v_caches, *w):
+        logits, kc, vc = M.decode_step(
+            cfg, list(w), token_id, pos_arr[0], k_caches, v_caches)
+        return logits, kc, vc
+
+    dec = jax.jit(decode_fn).lower(
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        cache_spec, cache_spec, *w_specs)
+    dec_path = os.path.join(outdir, f"{name}.decode.hlo.txt")
+    with open(dec_path, "w") as f:
+        f.write(to_hlo_text(dec))
+    print(f"wrote {dec_path}", file=sys.stderr)
+
+    prefill_files = {}
+    for t in buckets:
+        if t > cfg.max_tokens:
+            continue
+
+        def prefill_fn(token_ids, *w):
+            return M.prefill(cfg, list(w), token_ids)
+
+        pre = jax.jit(prefill_fn).lower(
+            jax.ShapeDtypeStruct((t,), jnp.int32), *w_specs)
+        p = os.path.join(outdir, f"{name}.prefill{t}.hlo.txt")
+        with open(p, "w") as f:
+            f.write(to_hlo_text(pre))
+        prefill_files[str(t)] = os.path.basename(p)
+        print(f"wrote {p}", file=sys.stderr)
+
+    wpath = os.path.join(outdir, f"{name}.weights.bin")
+    write_weights_bin(wpath, list(zip(names, flat)))
+    print(f"wrote {wpath}", file=sys.stderr)
+
+    manifest = {
+        "name": name,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "d_ffn": cfg.d_ffn,
+            "max_tokens": cfg.max_tokens,
+            "head_dim": cfg.head_dim,
+            "n_params": cfg.n_params(),
+        },
+        "seed": seed,
+        "sparsity_keep_of_8": keep_of_8,
+        "decode": os.path.basename(dec_path),
+        "prefill": prefill_files,
+        "weights": os.path.basename(wpath),
+        # decode args: token_id[1] i32, pos[1] i32, k_caches, v_caches, *weights
+        # prefill args: token_ids[T] i32, *weights
+        "weight_names": names,
+        "cache_shape": [L, T, kvh, hd],
+    }
+    mpath = os.path.join(outdir, f"{name}.manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tiny,test",
+                    help="comma list: tiny (≈100M) and/or test (≈0.4M)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    todo = args.models.split(",")
+    if "test" in todo:
+        build(M.TEST, "test", args.out, args.seed, buckets=(16,))
+    if "tiny" in todo:
+        build(M.TINY, "tiny", args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Emit golden outputs for rust integration tests.
+
+Runs the same prefill+greedy-decode loop the rust coordinator runs, via
+the *reference* (pure-jnp) graphs, and writes the expected token ids and
+logit samples to artifacts/<name>.golden.json. The rust test then replays
+the loop through the AOT HLO artifacts and asserts agreement — proving
+the whole python→HLO→PJRT→rust chain end to end.
+"""
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+PROMPT = [72, 101, 108, 108, 111]  # "Hello" bytes
+N_DECODE = 8
+
+
+def run(cfg: M.ModelConfig, name: str, outdir: str, seed: int):
+    w = M.init_weights(cfg, seed=seed)
+    flat = w.flat()
+    L, T = cfg.n_layers, cfg.max_tokens
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+
+    toks = jnp.asarray(PROMPT, jnp.int32)
+    logits, kc, vc = M.prefill(cfg, flat, jnp.pad(toks, (0, 16 - len(PROMPT))))
+    last = logits[len(PROMPT) - 1]
+    generated = []
+    cur = int(jnp.argmax(last))
+    pos = len(PROMPT)
+    first_logits = np.asarray(last)
+    dec_logits = None
+    for i in range(N_DECODE):
+        generated.append(cur)
+        lg, kc, vc = M.decode_step(
+            cfg, flat, jnp.asarray([cur], jnp.int32), pos, kc, vc)
+        dec_logits = np.asarray(lg[0])
+        cur = int(jnp.argmax(lg[0]))
+        pos += 1
+
+    out = {
+        "prompt": PROMPT,
+        "generated": generated,
+        "prefill_logits_head": [float(x) for x in first_logits[:8]],
+        "last_decode_logits_head": [float(x) for x in dec_logits[:8]],
+        "seed": seed,
+    }
+    path = os.path.join(outdir, f"{name}.golden.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="test")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    for name in args.models.split(","):
+        cfg = {"test": M.TEST, "tiny": M.TINY}[name]
+        run(cfg, name, args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

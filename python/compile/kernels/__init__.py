@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (build-time only) + pure-jnp reference oracles."""

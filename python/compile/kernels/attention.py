@@ -1,0 +1,62 @@
+"""Pallas kernel: FP16*FP16 MHA decode against the KV cache.
+
+This is the paper's MODE-0 path: the PE array runs at parallelism T_in/4
+because the KV cache operand is FP16 (4x the bits of INT4) and both
+operands stream from HBM. The kernel grid iterates over query heads — the
+"head" dimension of the paper's unified data format
+[head, CH/T_out, token, T_out] — and each step performs the full
+q.K^T -> masked softmax -> .V chain for one head, keeping the running
+row in VMEM (the paper's on-chip softmax operator, step-8).
+
+Grouped-query attention (GLM2/Qwen style): kv head = head // (h / kvh);
+the BlockSpec index_map implements the paper's "highly shared weight-heads
+in MHA" observation by mapping several grid steps to the same KV tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mha_decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+    """One query head: o[1, d] = softmax(q k^T / sqrt(d), mask<pos) v."""
+    d = q_ref.shape[-1]
+    q = q_ref[0]  # [d]
+    k = k_ref[:, 0, :]  # [t_max, d]
+    v = v_ref[:, 0, :]
+    pos = pos_ref[0]
+    scores = (k @ q) * (1.0 / jnp.sqrt(jnp.float32(d)))  # [t_max]
+    t_max = scores.shape[0]
+    neg = jnp.float32(-1e30)
+    scores = jnp.where(jnp.arange(t_max) < pos, scores, neg)
+    m = jnp.max(scores)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e)
+    o_ref[0] = probs @ v
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mha_decode(q, k_cache, v_cache, pos):
+    """q: f32[h, d]; k_cache/v_cache: f32[t_max, kvh, d]; pos: int32[1].
+
+    Returns f32[h, d]. pos counts valid entries including current token.
+    """
+    h, d = q.shape
+    t_max, kvh, _ = k_cache.shape
+    group = h // kvh
+    return pl.pallas_call(
+        _mha_decode_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, d), jnp.float32),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            # shared KV tile: several query heads hit the same kv head
+            pl.BlockSpec((t_max, 1, d), lambda i: (0, i // group, 0)),
+            pl.BlockSpec((t_max, 1, d), lambda i: (0, i // group, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        interpret=True,
+    )(q, k_cache, v_cache, pos)

@@ -1,0 +1,59 @@
+"""Pallas kernel: log-scale structured-sparse FP16*INT4 VMM.
+
+EdgeLLM stores pruned weights as (scale, mask, value) packages in HBM
+(Fig. 5) and uses the mask to *select* the matching activation lanes before
+feeding the dense PE array — the time-unrolled micro-architecture that
+keeps utilization at 100% for any log-scale sparsity (1/2, 1/4, 1/8 kept).
+
+The software analogue: the compiler (rust/src/pack) turns the mask into an
+explicit index tensor `w_idx[kk, n]` (input-channel index of every kept
+weight, per output column). The kernel gathers activation lanes by index
+— exactly the hardware's sparse-DMA activation select — then runs a dense
+multiply-accumulate over only the kept channels, so the FLOP count drops
+by the kept fraction like the hardware's cycle count does.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import QBLOCK
+
+BLOCK_N = 128
+
+
+def _sparse_vmm_kernel(x_ref, idx_ref, val_ref, s_ref, o_ref):
+    x = x_ref[...]  # [m, k]
+    idx = idx_ref[...]  # [kk, bn]
+    val = val_ref[...]  # [kk, bn]
+    # per-element scale: row block of the ORIGINAL channel index
+    s = jnp.take_along_axis(s_ref[...], idx // QBLOCK, axis=0)  # [kk, bn]
+    w = val.astype(jnp.float32) * s
+    xg = jnp.take(x, idx, axis=1)  # activation select: [m, kk, bn]
+    o_ref[...] = jnp.einsum(
+        "mkn,kn->mn", xg, w, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def sparse_vmm(x, w_idx, w_val, scales, block_n=BLOCK_N):
+    """x: f32[m, k]; w_idx: int32[kk, n]; w_val: int8[kk, n];
+    scales: f32[k//QBLOCK, n]. Returns f32[m, n]."""
+    m, k = x.shape
+    kk, n = w_idx.shape
+    assert n % block_n == 0, f"n={n} not a multiple of block_n={block_n}"
+    return pl.pallas_call(
+        _sparse_vmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((kk, block_n), lambda j: (0, j)),
+            pl.BlockSpec((kk, block_n), lambda j: (0, j)),
+            pl.BlockSpec((k // QBLOCK, block_n), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j: (0, j)),
+        interpret=True,
+    )(x, w_idx, w_val, scales)

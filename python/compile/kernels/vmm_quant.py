@@ -1,0 +1,83 @@
+"""Pallas kernel: FP16*INT4 block-dequantized VMM (the paper's FFN MatMUL).
+
+Hardware mapping (DESIGN.md §2): EdgeLLM's G-VSA streams 8192–16384 bits of
+INT4 weight per cycle from HBM through a T_in=128 vector MAC while the
+(decode: single-token) activation vector stays resident in BRAM. On the
+TPU-shaped Pallas abstraction that becomes:
+
+  * grid over output-channel tiles (`BLOCK_N`) — the CH_out groups that the
+    paper interleaves across the 32 HBM AXI ports;
+  * activations `x` live fully in VMEM (tiny in decode: one token row);
+  * each grid step streams one `[k, BLOCK_N]` weight tile HBM->VMEM
+    (the BlockSpec expresses the paper's DMA schedule);
+  * the inner fori loop walks the QBLOCK=128 input-channel groups — the
+    vector-systolic row-by-row feed — dequantizing with the per-block FP16
+    scale and accumulating into the output tile.
+
+The kernel is lowered with interpret=True (CPU PJRT cannot run Mosaic
+custom-calls); the *structure* above is what a real TPU build would tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import QBLOCK
+
+# Output-channel tile: one tile per grid step, mirroring a CH_out group
+# spread across HBM ports. 128 matches T_in of the paper's PE.
+BLOCK_N = 128
+
+
+def _vmm_quant_kernel(x_ref, wq_ref, s_ref, o_ref):
+    """One output tile: o[m, BN] = sum_kb x[:, kb] @ (wq[kb] * s[kb]).
+
+    §Perf note: a "simpler" reshape+broadcast dequant followed by one
+    full-k matmul was tried and measured 3× SLOWER end-to-end on XLA-CPU
+    (it materializes the whole dequantized f32 tile per step; the blocked
+    fori keeps the dequant working-set at one QBLOCK×BN tile, which is
+    also the faithful model of the PE's on-the-fly dequant). Keep the
+    blocked loop.
+    """
+    k = x_ref.shape[1]
+    nblocks = k // QBLOCK
+
+    def body(b, acc):
+        xb = jax.lax.dynamic_slice_in_dim(x_ref[...], b * QBLOCK, QBLOCK, axis=1)
+        wb = jax.lax.dynamic_slice_in_dim(wq_ref[...], b * QBLOCK, QBLOCK, axis=0)
+        sb = jax.lax.dynamic_slice_in_dim(s_ref[...], b, 1, axis=0)  # [1, BN]
+        w = wb.astype(jnp.float32) * sb  # dequant: INT4 * FP16-scale
+        return acc + xb @ w
+
+    acc = jnp.zeros((x_ref.shape[0], o_ref.shape[1]), jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, nblocks, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def vmm_quant(x, w_q, scales, block_n=BLOCK_N):
+    """x: f32[m, k] @ dequant(w_q: int8[k, n], scales: f32[k//QBLOCK, n]).
+
+    k must be a multiple of QBLOCK and n a multiple of `block_n`.
+    """
+    m, k = x.shape
+    _, n = w_q.shape
+    assert k % QBLOCK == 0, f"k={k} not a multiple of QBLOCK={QBLOCK}"
+    block_n = min(block_n, n)  # narrow matrices (e.g. KV proj) use one tile
+    assert n % block_n == 0, f"n={n} not a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _vmm_quant_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            # activations resident across all grid steps (BRAM in the paper)
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            # weight tile streamed per CH_out group (HBM AXI burst)
+            pl.BlockSpec((k, block_n), lambda j: (0, j)),
+            pl.BlockSpec((k // QBLOCK, block_n), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j: (0, j)),
+        interpret=True,
+    )(x, w_q, scales)

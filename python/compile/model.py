@@ -1,0 +1,310 @@
+"""L2: GLM-style quantized transformer graphs (decode step + prefill).
+
+This is the compute the EdgeLLM accelerator executes: a ChatGLM/Qwen-shaped
+decoder block chain (Fig. 6's 17 fused steps) built from the L1 Pallas
+kernels — FP16*INT4 block-dequant VMMs for every weight matmul (MODE-1)
+and FP16*FP16 attention against the KV cache (MODE-0).
+
+Everything here runs at *build time only*: `aot.py` lowers `decode_step`
+and `prefill` to HLO text artifacts; the rust coordinator executes those
+through PJRT with weights resident on device.
+
+Weight layout per layer (all int8-valued INT4 + f32 scales per 128-block):
+  wq [d, d]      wk [d, kv]      wv [d, kv]      wo [d, d]
+  w_gate [d, f]  w_up [d, f]     w_down [f, d]
+plus rmsnorm gammas g1, g2. Global: embed [vocab, d] (f32), g_final [d],
+w_lm [d, vocab].
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.ref import QBLOCK
+from .kernels.vmm_quant import vmm_quant
+from .kernels.attention import mha_decode
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters. All channel dims must be multiples
+    of QBLOCK=128 so the block-quantized kernels tile exactly."""
+
+    vocab: int = 256
+    d_model: int = 768
+    n_layers: int = 12
+    n_heads: int = 12
+    n_kv_heads: int = 2
+    d_ffn: int = 3072
+    max_tokens: int = 256  # KV cache capacity
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def n_params(self) -> int:
+        per_layer = (
+            2 * self.d_model * self.d_model
+            + 2 * self.d_model * self.kv_dim
+            + 3 * self.d_model * self.d_ffn
+            + 2 * self.d_model
+        )
+        return (
+            self.n_layers * per_layer
+            + 2 * self.vocab * self.d_model
+            + self.d_model
+        )
+
+
+# ~100M-parameter config used by the end-to-end serving example.
+TINY = ModelConfig()
+# Small config for fast pytest runs.
+TEST = ModelConfig(vocab=256, d_model=128, n_layers=2, n_heads=4,
+                   n_kv_heads=2, d_ffn=256, max_tokens=32)
+
+
+def quantize(w: np.ndarray):
+    """Symmetric INT4 block quantization, 128 input channels per block
+    sharing one scale (paper §III.C). The scale is rounded through FP16 —
+    the hardware stores FP16 scales — before use as f32.
+
+    w: f32[k, n] -> (w_q int8[k, n] in [-8, 7], scales f32[k//QBLOCK, n])
+    """
+    k, n = w.shape
+    assert k % QBLOCK == 0, f"k={k} not a multiple of {QBLOCK}"
+    blocks = w.reshape(k // QBLOCK, QBLOCK, n)
+    amax = np.abs(blocks).max(axis=1)  # [k/Q, n]
+    scales = (amax / 7.0).astype(np.float16).astype(np.float32)
+    scales = np.where(scales == 0.0, 1.0, scales)
+    q = np.clip(np.round(blocks / scales[:, None, :]), -8, 7)
+    return q.reshape(k, n).astype(np.int8), scales
+
+
+def prune_log_scale(w: np.ndarray, keep_of_8: int, rng: np.random.Generator = None):
+    """Log-scale structured pruning: within every group of 8 adjacent input
+    channels (per output column), keep only the `keep_of_8` largest-
+    magnitude weights (keep_of_8 in {8, 4, 2, 1} = dense/50%/75%/87.5%)."""
+    k, n = w.shape
+    assert k % 8 == 0
+    if keep_of_8 >= 8:
+        return w
+    g = w.reshape(k // 8, 8, n)
+    # rank within each group; zero everything below the cut
+    order = np.argsort(-np.abs(g), axis=1)
+    keep_mask = np.zeros_like(g, dtype=bool)
+    np.put_along_axis(keep_mask, order[:, :keep_of_8, :], True, axis=1)
+    return (g * keep_mask).reshape(k, n)
+
+
+@dataclasses.dataclass
+class LayerWeights:
+    wq: jnp.ndarray
+    sq: jnp.ndarray
+    wk: jnp.ndarray
+    sk: jnp.ndarray
+    wv: jnp.ndarray
+    sv: jnp.ndarray
+    wo: jnp.ndarray
+    so: jnp.ndarray
+    w_gate: jnp.ndarray
+    s_gate: jnp.ndarray
+    w_up: jnp.ndarray
+    s_up: jnp.ndarray
+    w_down: jnp.ndarray
+    s_down: jnp.ndarray
+    g1: jnp.ndarray
+    g2: jnp.ndarray
+
+    def flat(self) -> List[jnp.ndarray]:
+        return [getattr(self, f.name) for f in dataclasses.fields(self)]
+
+
+@dataclasses.dataclass
+class ModelWeights:
+    embed: jnp.ndarray  # f32[vocab, d]
+    layers: List[LayerWeights]
+    g_final: jnp.ndarray
+    w_lm: jnp.ndarray
+    s_lm: jnp.ndarray
+
+    def flat(self) -> List[jnp.ndarray]:
+        out = [self.embed]
+        for l in self.layers:
+            out.extend(l.flat())
+        out.extend([self.g_final, self.w_lm, self.s_lm])
+        return out
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0,
+                 sparsity_keep_of_8: int = 8) -> ModelWeights:
+    """Random-initialized, optionally pruned, block-quantized weights.
+
+    Deterministic in `seed` — the rust side regenerates identical weights
+    through the same recipe when cross-checking numerics.
+    """
+    rng = np.random.default_rng(seed)
+    d, f, kv = cfg.d_model, cfg.d_ffn, cfg.kv_dim
+
+    def qmat(k, n, scale):
+        w = rng.standard_normal((k, n)).astype(np.float32) * scale
+        w = prune_log_scale(w, sparsity_keep_of_8)
+        q, s = quantize(w)
+        return jnp.asarray(q), jnp.asarray(s)
+
+    layers = []
+    att_scale = (2.0 / (d + d)) ** 0.5
+    ffn_scale = (2.0 / (d + f)) ** 0.5
+    for _ in range(cfg.n_layers):
+        wq, sq = qmat(d, d, att_scale)
+        wk, sk = qmat(d, kv, att_scale)
+        wv, sv = qmat(d, kv, att_scale)
+        wo, so = qmat(d, d, att_scale)
+        wg, sg = qmat(d, f, ffn_scale)
+        wu, su = qmat(d, f, ffn_scale)
+        wd, sd = qmat(f, d, ffn_scale)
+        layers.append(LayerWeights(
+            wq, sq, wk, sk, wv, sv, wo, so,
+            wg, sg, wu, su, wd, sd,
+            jnp.ones((d,), jnp.float32), jnp.ones((d,), jnp.float32)))
+    embed = jnp.asarray(
+        rng.standard_normal((cfg.vocab, d)).astype(np.float32) * 0.02)
+    w_lm, s_lm = qmat(d, cfg.vocab, (2.0 / (d + cfg.vocab)) ** 0.5)
+    return ModelWeights(embed, layers, jnp.ones((d,), jnp.float32),
+                        w_lm, s_lm)
+
+
+def _attention_decode(cfg, lw, xn, k_cache, v_cache, pos):
+    """Steps 2–12 of the paper's block graph for one token."""
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = vmm_quant(xn, lw.wq, lw.sq).reshape(1, h, hd)
+    k = vmm_quant(xn, lw.wk, lw.sk).reshape(1, kvh, hd)
+    v = vmm_quant(xn, lw.wv, lw.sv).reshape(1, kvh, hd)
+    q = ref.rope(q, pos)[0]  # [h, hd]
+    k = ref.rope(k, pos)[0]  # [kvh, hd]
+    # DAT2HBM: write this token's K/V into the cache at `pos`
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k[None], (pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (pos, 0, 0))
+    attn = mha_decode(q, k_cache, v_cache,
+                      jnp.reshape(pos + 1, (1,)).astype(jnp.int32))
+    out = vmm_quant(attn.reshape(1, cfg.d_model), lw.wo, lw.so)
+    return out, k_cache, v_cache
+
+
+def _ffn(cfg, lw, xn):
+    """Steps 14–17: SwiGLU FFN, all matmuls FP16*INT4."""
+    gate = vmm_quant(xn, lw.w_gate, lw.s_gate)
+    up = vmm_quant(xn, lw.w_up, lw.s_up)
+    act = ref.swiglu(gate, up)
+    return vmm_quant(act, lw.w_down, lw.s_down)
+
+
+def decode_step(cfg: ModelConfig, weights_flat, token_id, pos,
+                k_caches, v_caches):
+    """One autoregressive decode step.
+
+    token_id: int32[1]; pos: int32 scalar; k_caches/v_caches:
+    f32[L, max_tokens, kvh, hd]. Returns (logits[1, vocab], k_caches,
+    v_caches).
+    """
+    w = unflatten(cfg, weights_flat)
+    x = jnp.take(w.embed, token_id, axis=0)  # [1, d]
+    new_k, new_v = [], []
+    for i, lw in enumerate(w.layers):
+        xn = ref.rmsnorm(x, lw.g1)
+        att, kc, vc = _attention_decode(
+            cfg, lw, xn, k_caches[i], v_caches[i], pos)
+        x = x + att
+        xn = ref.rmsnorm(x, lw.g2)
+        x = x + _ffn(cfg, lw, xn)
+        new_k.append(kc)
+        new_v.append(vc)
+    xn = ref.rmsnorm(x, w.g_final)
+    logits = vmm_quant(xn, w.w_lm, w.s_lm)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill(cfg: ModelConfig, weights_flat, token_ids):
+    """Process a (padded) prompt of static length T.
+
+    token_ids: int32[T]. Returns (logits f32[T, vocab], k_caches, v_caches
+    f32[L, max_tokens, kvh, hd]) — cache rows beyond the true prompt
+    length are garbage and are progressively overwritten by decode steps.
+    """
+    w = unflatten(cfg, weights_flat)
+    t = token_ids.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = jnp.take(w.embed, token_ids, axis=0)  # [t, d]
+    new_k, new_v = [], []
+    for lw in w.layers:
+        xn = ref.rmsnorm(x, lw.g1)
+        q = vmm_quant(xn, lw.wq, lw.sq).reshape(t, h, hd)
+        k = vmm_quant(xn, lw.wk, lw.sk).reshape(t, kvh, hd)
+        v = vmm_quant(xn, lw.wv, lw.sv).reshape(t, kvh, hd)
+        q = ref.rope(q, 0)
+        k = ref.rope(k, 0)
+        attn = ref.mha_prefill(q, k, v, h // kvh).reshape(t, cfg.d_model)
+        x = x + vmm_quant(attn, lw.wo, lw.so)
+        xn = ref.rmsnorm(x, lw.g2)
+        x = x + _ffn(cfg, lw, xn)
+        pad = cfg.max_tokens - t
+        new_k.append(jnp.pad(k, ((0, pad), (0, 0), (0, 0))))
+        new_v.append(jnp.pad(v, ((0, pad), (0, 0), (0, 0))))
+    xn = ref.rmsnorm(x, w.g_final)
+    logits = vmm_quant(xn, w.w_lm, w.s_lm)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def unflatten(cfg: ModelConfig, flat) -> ModelWeights:
+    """Rebuild the ModelWeights pytree from the flat artifact arg list."""
+    n_fields = len(dataclasses.fields(LayerWeights))
+    embed = flat[0]
+    layers = []
+    at = 1
+    for _ in range(cfg.n_layers):
+        layers.append(LayerWeights(*flat[at:at + n_fields]))
+        at += n_fields
+    g_final, w_lm, s_lm = flat[at:at + 3]
+    return ModelWeights(embed, layers, g_final, w_lm, s_lm)
+
+
+def reference_decode_step(cfg, weights: ModelWeights, token_id, pos,
+                          k_caches, v_caches):
+    """Oracle decode step built only from ref.py (no Pallas) for tests."""
+    flat = weights.flat()
+
+    def sub_vmm(x, wq, s):
+        return ref.vmm_quant(x, wq, s)
+
+    # monkey-free: recompute with ref ops
+    w = unflatten(cfg, flat)
+    x = jnp.take(w.embed, token_id, axis=0)
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    nk, nv = [], []
+    for i, lw in enumerate(w.layers):
+        xn = ref.rmsnorm(x, lw.g1)
+        q = sub_vmm(xn, lw.wq, lw.sq).reshape(1, h, hd)
+        k = sub_vmm(xn, lw.wk, lw.sk).reshape(1, kvh, hd)
+        v = sub_vmm(xn, lw.wv, lw.sv).reshape(1, kvh, hd)
+        q = ref.rope(q, pos)[0]
+        k = ref.rope(k, pos)[0]
+        kc = jax.lax.dynamic_update_slice(k_caches[i], k[None], (pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(v_caches[i], v, (pos, 0, 0))
+        attn = ref.mha_decode(q, kc, vc, pos + 1)
+        x = x + sub_vmm(attn.reshape(1, cfg.d_model), lw.wo, lw.so)
+        xn = ref.rmsnorm(x, lw.g2)
+        gate = sub_vmm(xn, lw.w_gate, lw.s_gate)
+        up = sub_vmm(xn, lw.w_up, lw.s_up)
+        x = x + sub_vmm(ref.swiglu(gate, up), lw.w_down, lw.s_down)
+        nk.append(kc)
+        nv.append(vc)
+    xn = ref.rmsnorm(x, w.g_final)
+    return sub_vmm(xn, w.w_lm, w.s_lm), jnp.stack(nk), jnp.stack(nv)

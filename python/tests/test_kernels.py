@@ -1,0 +1,182 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes/dtypes with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import mha_decode
+from compile.kernels.sparse_vmm import sparse_vmm
+from compile.kernels.vmm_quant import vmm_quant
+
+RNG = np.random.default_rng(0)
+
+
+def rand_quant(k, n, rng):
+    wq = rng.integers(-8, 8, (k, n)).astype(np.int8)
+    scales = rng.uniform(0.01, 0.2, (k // ref.QBLOCK, n)).astype(np.float32)
+    return jnp.asarray(wq), jnp.asarray(scales)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 5, 16]),
+    kb=st.sampled_from([1, 2, 3]),
+    nb=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_vmm_quant_matches_ref(m, kb, nb, seed):
+    rng = np.random.default_rng(seed)
+    k, n = kb * ref.QBLOCK, nb * 64
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    wq, s = rand_quant(k, n, rng)
+    got = vmm_quant(x, wq, s, block_n=64)
+    want = ref.vmm_quant(x, wq, s)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_vmm_quant_zero_scale_blocks():
+    # all-zero weight block with unit scale must contribute nothing
+    k, n = ref.QBLOCK, 128
+    x = jnp.ones((1, k), jnp.float32)
+    wq = jnp.zeros((k, n), jnp.int8)
+    s = jnp.ones((1, n), jnp.float32)
+    np.testing.assert_array_equal(vmm_quant(x, wq, s), np.zeros((1, n)))
+
+
+def test_vmm_quant_int4_extremes():
+    # -8 and +7 must dequantize exactly
+    k, n = ref.QBLOCK, 128
+    x = jnp.ones((1, k), jnp.float32)
+    wq = jnp.full((k, n), -8, jnp.int8)
+    s = jnp.full((1, n), 0.5, jnp.float32)
+    np.testing.assert_allclose(vmm_quant(x, wq, s), np.full((1, n), -8 * 0.5 * k))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.sampled_from([4, 8, 12]),
+    kvh=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([32, 64]),
+    tmax=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_mha_decode_matches_ref(h, kvh, d, tmax, seed):
+    if h % kvh != 0:
+        return
+    rng = np.random.default_rng(seed)
+    pos = int(rng.integers(1, tmax + 1))
+    q = jnp.asarray(rng.standard_normal((h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((tmax, kvh, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((tmax, kvh, d)), jnp.float32)
+    got = mha_decode(q, kc, vc, jnp.asarray([pos], jnp.int32))
+    want = ref.mha_decode(q, kc, vc, pos)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_mha_decode_masks_future():
+    # entries beyond pos must not affect the output
+    rng = np.random.default_rng(1)
+    h, kvh, d, tmax = 4, 2, 32, 16
+    q = jnp.asarray(rng.standard_normal((h, d)), jnp.float32)
+    kc = rng.standard_normal((tmax, kvh, d)).astype(np.float32)
+    vc = rng.standard_normal((tmax, kvh, d)).astype(np.float32)
+    pos = jnp.asarray([5], jnp.int32)
+    out1 = mha_decode(q, jnp.asarray(kc), jnp.asarray(vc), pos)
+    kc[5:] = 1e6  # poison the masked region
+    vc[5:] = -1e6
+    out2 = mha_decode(q, jnp.asarray(kc), jnp.asarray(vc), pos)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    keep=st.sampled_from([1, 2, 4]),
+    kb=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_sparse_vmm_matches_ref(keep, kb, seed):
+    rng = np.random.default_rng(seed)
+    m, k, n = 2, kb * ref.QBLOCK, 128
+    kk = k // 8 * keep
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    # structured indices: `keep` distinct rows per 8-group per column
+    idx = np.zeros((kk, n), np.int32)
+    for c in range(n):
+        for g in range(k // 8):
+            rows = rng.choice(8, keep, replace=False) + g * 8
+            rows.sort()
+            idx[g * keep:(g + 1) * keep, c] = rows
+    val = rng.integers(-8, 8, (kk, n)).astype(np.int8)
+    scales = rng.uniform(0.01, 0.2, (k // ref.QBLOCK, n)).astype(np.float32)
+    got = sparse_vmm(x, jnp.asarray(idx), jnp.asarray(val), jnp.asarray(scales))
+    want = ref.sparse_vmm(x, jnp.asarray(idx), jnp.asarray(val), jnp.asarray(scales))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_sparse_vmm_equals_dense_with_zeros():
+    """The sparse kernel on a pruned matrix == dense kernel on the same
+    matrix with explicit zeros (the 100%-utilization losslessness)."""
+    from compile.model import prune_log_scale, quantize
+
+    rng = np.random.default_rng(3)
+    m, k, n = 2, 2 * ref.QBLOCK, 128
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    w = prune_log_scale(w, 2)
+    q, s = quantize(w)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    dense_out = vmm_quant(x, jnp.asarray(q), jnp.asarray(s))
+    # pack to (idx, val) like rust pack_sparse
+    keep = 2
+    kk = k // 8 * keep
+    idx = np.zeros((kk, n), np.int32)
+    val = np.zeros((kk, n), np.int8)
+    for c in range(n):
+        for g in range(k // 8):
+            slot = 0
+            for r in range(8):
+                row = g * 8 + r
+                if q[row, c] != 0:
+                    assert slot < keep
+                    idx[g * keep + slot, c] = row
+                    val[g * keep + slot, c] = q[row, c]
+                    slot += 1
+            for sl in range(slot, keep):
+                idx[g * keep + sl, c] = g * 8
+    sparse_out = sparse_vmm(x, jnp.asarray(idx), jnp.asarray(val), jnp.asarray(s))
+    np.testing.assert_allclose(sparse_out, dense_out, rtol=1e-5, atol=1e-4)
+
+
+def test_rope_rotates_pairs():
+    # position 0 is identity
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((1, 2, 64)), jnp.float32)
+    out = ref.rope(x, 0)
+    np.testing.assert_allclose(out[0, :, :], x[0, :, :], rtol=1e-6)
+    # norms preserved in the rotated half
+    x2 = ref.rope(x, 7)
+    rot_in = np.asarray(x)[..., :32]
+    rot_out = np.asarray(x2)[..., :32]
+    np.testing.assert_allclose(
+        np.linalg.norm(rot_in), np.linalg.norm(rot_out), rtol=1e-5
+    )
+
+
+def test_rmsnorm_scale_invariance():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((3, 128)), jnp.float32)
+    g = jnp.ones((128,), jnp.float32)
+    a = ref.rmsnorm(x, g)
+    b = ref.rmsnorm(x * 1000.0, g)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_swiglu_matches_formula():
+    g = jnp.asarray([[0.0, 1.0, -2.0]], jnp.float32)
+    u = jnp.asarray([[3.0, 3.0, 3.0]], jnp.float32)
+    got = np.asarray(ref.swiglu(g, u))
+    sig = 1.0 / (1.0 + np.exp(-np.asarray(g)))
+    want = np.asarray(u) * np.asarray(g) * sig
+    np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,162 @@
+"""L2 model-graph correctness: decode/prefill consistency, quantization
+invariants, and AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return M.init_weights(M.TEST, seed=1)
+
+
+@pytest.fixture(scope="module")
+def caches():
+    cfg = M.TEST
+    shape = (cfg.n_layers, cfg.max_tokens, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape), jnp.zeros(shape)
+
+
+def test_decode_matches_reference(weights, caches):
+    cfg = M.TEST
+    kc, vc = caches
+    tok = jnp.asarray([42], jnp.int32)
+    lg, k2, v2 = M.decode_step(cfg, weights.flat(), tok, 0, kc, vc)
+    rl, rk, rv = M.reference_decode_step(cfg, weights, tok, 0, kc, vc)
+    np.testing.assert_allclose(lg, rl, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(k2, rk, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(v2, rv, rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_consistent_with_decode(weights, caches):
+    """prefill(t0..t3) must equal token-by-token decode — the KV cache
+    contract the rust coordinator relies on."""
+    cfg = M.TEST
+    toks = jnp.asarray([5, 9, 3, 7], jnp.int32)
+    lg_p, kp, vp = M.prefill(cfg, weights.flat(), toks)
+    kc, vc = caches
+    lg_d = None
+    for i in range(4):
+        lg_d, kc, vc = M.decode_step(cfg, weights.flat(), toks[i:i+1], i, kc, vc)
+    np.testing.assert_allclose(lg_p[3:4], lg_d, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(kp[:, :4], kc[:, :4], rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(vp[:, :4], vc[:, :4], rtol=1e-3, atol=1e-4)
+
+
+def test_padded_prefill_matches_exact(weights):
+    """Padding the prompt to a bucket must not change the last real
+    token's logits (the masking/garbage-row argument in model.py)."""
+    cfg = M.TEST
+    toks = [11, 22, 33]
+    lg_a, _, _ = M.prefill(
+        cfg, weights.flat(),
+        jnp.asarray(toks + [0] * (8 - len(toks)), jnp.int32))
+    lg_b, _, _ = M.prefill(
+        cfg, weights.flat(),
+        jnp.asarray(toks + [99] * (16 - len(toks)), jnp.int32))
+    np.testing.assert_allclose(lg_a[2], lg_b[2], rtol=1e-4, atol=1e-4)
+
+
+def test_decode_at_later_positions(weights, caches):
+    cfg = M.TEST
+    kc, vc = caches
+    flat = weights.flat()
+    # fill three positions then check pos=3 only attends to 0..3
+    for i, t in enumerate([1, 2, 3]):
+        _, kc, vc = M.decode_step(cfg, flat, jnp.asarray([t], jnp.int32), i, kc, vc)
+    lg, kc2, _ = M.decode_step(cfg, flat, jnp.asarray([4], jnp.int32), 3, kc, vc)
+    assert lg.shape == (1, cfg.vocab)
+    # cache rows past pos=3 unchanged
+    np.testing.assert_array_equal(kc2[:, 5:], kc[:, 5:])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), kb=st.sampled_from([1, 2]))
+def test_quantize_roundtrip_bounded(seed, kb):
+    rng = np.random.default_rng(seed)
+    k, n = kb * 128, 32
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    q, s = M.quantize(w)
+    assert q.dtype == np.int8 and q.min() >= -8 and q.max() <= 7
+    dq = np.repeat(np.asarray(s), 128, 0)[:k] * q
+    err = np.abs(dq - w)
+    bound = np.repeat(np.asarray(s), 128, 0)[:k] * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), keep=st.sampled_from([1, 2, 4]))
+def test_prune_log_scale_structure(seed, keep):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((256, 16)).astype(np.float32)
+    p = M.prune_log_scale(w, keep)
+    g = p.reshape(-1, 8, 16)
+    nz = (g != 0).sum(axis=1)
+    assert (nz <= keep).all()
+    # kept entries match the originals
+    mask = p != 0
+    np.testing.assert_array_equal(p[mask], w.reshape(256, 16)[mask])
+
+
+def test_init_weights_deterministic():
+    a = M.init_weights(M.TEST, seed=7)
+    b = M.init_weights(M.TEST, seed=7)
+    np.testing.assert_array_equal(a.layers[0].wq, b.layers[0].wq)
+    np.testing.assert_array_equal(a.embed, b.embed)
+    c = M.init_weights(M.TEST, seed=8)
+    assert not np.array_equal(np.asarray(a.layers[0].wq), np.asarray(c.layers[0].wq))
+
+
+def test_sparsified_model_still_decodes(caches):
+    cfg = M.TEST
+    w = M.init_weights(cfg, seed=2, sparsity_keep_of_8=2)
+    kc, vc = caches
+    lg, _, _ = M.decode_step(cfg, w.flat(), jnp.asarray([1], jnp.int32), 0, kc, vc)
+    assert jnp.isfinite(lg).all()
+    # pruned weights are actually sparse
+    q = np.asarray(w.layers[0].w_gate).reshape(-1, 8, cfg.d_ffn)
+    assert ((q != 0).sum(axis=1) <= 2).all()
+
+
+def test_sparsity_degrades_quality_monotonically(caches):
+    """Table II's qualitative claim: more sparsity ⇒ outputs drift
+    further from the dense model (our proxy for perplexity increase)."""
+    cfg = M.TEST
+    kc, vc = caches
+    tok = jnp.asarray([7], jnp.int32)
+    outs = {}
+    for keep in [8, 4, 2, 1]:
+        w = M.init_weights(cfg, seed=3, sparsity_keep_of_8=keep)
+        lg, _, _ = M.decode_step(cfg, w.flat(), tok, 0, kc, vc)
+        outs[keep] = np.asarray(lg[0])
+    base = outs[8]
+
+    def rel_err(a):
+        return np.linalg.norm(a - base) / np.linalg.norm(base)
+
+    e4, e2, e1 = rel_err(outs[4]), rel_err(outs[2]), rel_err(outs[1])
+    assert e4 < e2 < e1, f"{e4} {e2} {e1}"
+
+
+def test_n_params_formula():
+    assert M.TINY.n_params() == M.TINY.n_params()
+    assert 90e6 < M.TINY.n_params() < 115e6
+    assert M.TEST.n_params() < 1e6
+
+
+def test_lowering_produces_hlo_text(tmp_path):
+    """AOT smoke: the TEST model lowers to parseable HLO text."""
+    from compile import aot
+
+    aot.build(M.TEST, "t", str(tmp_path), seed=0, buckets=(16,))
+    hlo = (tmp_path / "t.decode.hlo.txt").read_text()
+    assert hlo.startswith("HloModule")
+    assert "ENTRY" in hlo
+    manifest = (tmp_path / "t.manifest.json").read_text()
+    assert '"decode"' in manifest

@@ -1,0 +1,205 @@
+//! Dynamic-token symbolic expressions (paper §IV.B).
+//!
+//! The compiler records every instruction parameter that depends on the
+//! runtime token count as a numeric expression over the `token` variable,
+//! kept as a small DAG. At compile time everything reducible is folded
+//! (`MAX_TOKEN` makes addresses static); what remains is embedded in the
+//! runtime code and evaluated per inference — "if this parameter can be
+//! evaluated directly, the compiler returns the result of this
+//! instruction, otherwise it is embedded in the runtime code".
+
+use std::fmt;
+use std::rc::Rc;
+
+/// Expression node. `Token` is the only runtime variable; `MaxToken` is a
+/// compile-time macro constant (RTL Macro Define).
+#[derive(Debug, Clone)]
+pub enum Expr {
+    Const(i64),
+    Token,
+    Add(Rc<Expr>, Rc<Expr>),
+    Sub(Rc<Expr>, Rc<Expr>),
+    Mul(Rc<Expr>, Rc<Expr>),
+    /// integer division (exact in practice: strides divide evenly)
+    Div(Rc<Expr>, Rc<Expr>),
+    Max(Rc<Expr>, Rc<Expr>),
+}
+
+impl Expr {
+    pub fn c(v: i64) -> Rc<Expr> {
+        Rc::new(Expr::Const(v))
+    }
+
+    pub fn token() -> Rc<Expr> {
+        Rc::new(Expr::Token)
+    }
+
+    pub fn add(a: Rc<Expr>, b: Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Add(a, b))
+    }
+
+    pub fn sub(a: Rc<Expr>, b: Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Sub(a, b))
+    }
+
+    pub fn mul(a: Rc<Expr>, b: Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Mul(a, b))
+    }
+
+    pub fn div(a: Rc<Expr>, b: Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Div(a, b))
+    }
+
+    pub fn max(a: Rc<Expr>, b: Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Max(a, b))
+    }
+
+    /// Evaluate with a concrete token count.
+    pub fn eval(&self, token: i64) -> i64 {
+        match self {
+            Expr::Const(v) => *v,
+            Expr::Token => token,
+            Expr::Add(a, b) => a.eval(token) + b.eval(token),
+            Expr::Sub(a, b) => a.eval(token) - b.eval(token),
+            Expr::Mul(a, b) => a.eval(token) * b.eval(token),
+            Expr::Div(a, b) => a.eval(token) / b.eval(token),
+            Expr::Max(a, b) => a.eval(token).max(b.eval(token)),
+        }
+    }
+
+    /// Constant-fold: returns Some(v) iff the expression does not depend
+    /// on `token` (the compiler's "can be evaluated directly" test).
+    pub fn fold(&self) -> Option<i64> {
+        match self {
+            Expr::Const(v) => Some(*v),
+            Expr::Token => None,
+            Expr::Add(a, b) => Some(a.fold()? + b.fold()?),
+            Expr::Sub(a, b) => Some(a.fold()? - b.fold()?),
+            Expr::Mul(a, b) => Some(a.fold()? * b.fold()?),
+            Expr::Div(a, b) => Some(a.fold()? / b.fold()?),
+            Expr::Max(a, b) => Some(a.fold()?.max(b.fold()?)),
+        }
+    }
+
+    /// Simplify: fold constant subtrees, drop identities (x+0, x*1, x*0).
+    pub fn simplify(e: &Rc<Expr>) -> Rc<Expr> {
+        if let Some(v) = e.fold() {
+            return Expr::c(v);
+        }
+        match &**e {
+            Expr::Add(a, b) => {
+                let (a, b) = (Self::simplify(a), Self::simplify(b));
+                match (a.fold(), b.fold()) {
+                    (Some(0), _) => b,
+                    (_, Some(0)) => a,
+                    _ => Expr::add(a, b),
+                }
+            }
+            Expr::Sub(a, b) => {
+                let (a, b) = (Self::simplify(a), Self::simplify(b));
+                if b.fold() == Some(0) {
+                    a
+                } else {
+                    Expr::sub(a, b)
+                }
+            }
+            Expr::Mul(a, b) => {
+                let (a, b) = (Self::simplify(a), Self::simplify(b));
+                match (a.fold(), b.fold()) {
+                    (Some(0), _) | (_, Some(0)) => Expr::c(0),
+                    (Some(1), _) => b,
+                    (_, Some(1)) => a,
+                    _ => Expr::mul(a, b),
+                }
+            }
+            Expr::Div(a, b) => {
+                let (a, b) = (Self::simplify(a), Self::simplify(b));
+                if b.fold() == Some(1) {
+                    a
+                } else {
+                    Expr::div(a, b)
+                }
+            }
+            Expr::Max(a, b) => Expr::max(Self::simplify(a), Self::simplify(b)),
+            _ => e.clone(),
+        }
+    }
+
+    /// Number of nodes (instruction-space cost of a runtime expression).
+    pub fn size(&self) -> usize {
+        match self {
+            Expr::Const(_) | Expr::Token => 1,
+            Expr::Add(a, b)
+            | Expr::Sub(a, b)
+            | Expr::Mul(a, b)
+            | Expr::Div(a, b)
+            | Expr::Max(a, b) => 1 + a.size() + b.size(),
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Const(v) => write!(f, "{v}"),
+            Expr::Token => write!(f, "token"),
+            Expr::Add(a, b) => write!(f, "({a} + {b})"),
+            Expr::Sub(a, b) => write!(f, "({a} - {b})"),
+            Expr::Mul(a, b) => write!(f, "({a} * {b})"),
+            Expr::Div(a, b) => write!(f, "({a} / {b})"),
+            Expr::Max(a, b) => write!(f, "max({a}, {b})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_and_fold() {
+        // bytes of a [CH/Tout, token, Tout] activation: token * 4096 * 2
+        let e = Expr::mul(Expr::token(), Expr::c(8192));
+        assert_eq!(e.eval(1), 8192);
+        assert_eq!(e.eval(128), 1048576);
+        assert_eq!(e.fold(), None);
+        let c = Expr::mul(Expr::c(64), Expr::c(128));
+        assert_eq!(c.fold(), Some(8192));
+    }
+
+    #[test]
+    fn simplify_folds_constants() {
+        let e = Expr::add(
+            Expr::mul(Expr::c(2), Expr::c(3)),
+            Expr::mul(Expr::token(), Expr::c(1)),
+        );
+        let s = Expr::simplify(&e);
+        assert_eq!(s.to_string(), "(6 + token)");
+        assert_eq!(s.size(), 3);
+    }
+
+    #[test]
+    fn simplify_identities() {
+        let e = Expr::mul(Expr::token(), Expr::c(0));
+        assert_eq!(Expr::simplify(&e).fold(), Some(0));
+        let e2 = Expr::add(Expr::token(), Expr::c(0));
+        assert_eq!(Expr::simplify(&e2).to_string(), "token");
+        let e3 = Expr::div(Expr::token(), Expr::c(1));
+        assert_eq!(Expr::simplify(&e3).to_string(), "token");
+    }
+
+    #[test]
+    fn max_token_makes_addresses_static() {
+        // address = base + MAX_TOKEN·stride is constant-foldable even
+        // though the live token count is dynamic (paper's key trick).
+        const MAX_TOKEN: i64 = 256;
+        let addr = Expr::add(Expr::c(0x1000), Expr::mul(Expr::c(MAX_TOKEN), Expr::c(8192)));
+        assert_eq!(addr.fold(), Some(0x1000 + 256 * 8192));
+    }
+
+    #[test]
+    fn display_roundtrips_structure() {
+        let e = Expr::max(Expr::token(), Expr::c(1));
+        assert_eq!(e.to_string(), "max(token, 1)");
+    }
+}

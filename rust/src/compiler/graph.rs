@@ -1,0 +1,168 @@
+//! The fused operator graph (Fig. 6) and its compilation invariants.
+//!
+//! A `Graph` is a linear chain of fused hardware steps (the paper executes
+//! temporally — "one operator starting only after the previous one has
+//! finished"). Compilation checks the unified-data-format contract: every
+//! edge chains without rearrangement, dynamic shapes are expressions over
+//! `token`, and every activation fits the statically-planned arena.
+
+use std::rc::Rc;
+
+use super::expr::Expr;
+use super::tensor::{TensorDesc, T_OUT};
+use crate::models::{LlmArch, SparseStrategy};
+use crate::sim::operators::{block_ops, output_ops, OpClass, OpInstance};
+
+/// One node of the compiled graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: OpInstance,
+    /// layer this node belongs to (output head = n_layers)
+    pub layer: usize,
+    /// input activation descriptor (shape at MAX_TOKEN for planning)
+    pub input: TensorDesc,
+    pub output: TensorDesc,
+    /// dynamic byte counts as token-expressions
+    pub in_bytes: Rc<Expr>,
+    pub out_bytes: Rc<Expr>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub arch: LlmArch,
+    pub nodes: Vec<Node>,
+    /// bytes of activation arena consumed by static planning
+    pub arena_bytes: usize,
+}
+
+/// Build the full-model operator graph at a planning MAX_TOKEN.
+pub fn build_graph(arch: &LlmArch, strat: &SparseStrategy, max_token: usize) -> Graph {
+    let mut nodes = Vec::new();
+    // Double-buffered activation arena: ping/pong between steps.
+    let act_bytes = |ch: usize| max_token * ch.max(T_OUT) * 2;
+    let max_ch = (2 * arch.d_ffn).max(arch.d_model).max(arch.vocab);
+    let slot = act_bytes(max_ch).next_multiple_of(4096);
+    let ping = 0usize;
+    let pong = slot;
+    let arena_bytes = 2 * slot;
+
+    let tok = Expr::token();
+    let mut flip = false;
+    let mut push = |op: &OpInstance, layer: usize, in_ch: usize, out_ch: usize| {
+        let (src, dst) = if flip { (pong, ping) } else { (ping, pong) };
+        flip = !flip;
+        let input = TensorDesc::text(op.name, max_token, in_ch.max(T_OUT), src);
+        let output = TensorDesc::text(op.name, max_token, out_ch.max(T_OUT), dst);
+        let in_bytes = Expr::simplify(&Expr::mul(tok.clone(), Expr::c((in_ch * 2) as i64)));
+        let out_bytes = Expr::simplify(&Expr::mul(tok.clone(), Expr::c((out_ch * 2) as i64)));
+        nodes.push(Node { op: op.clone(), layer, input, output, in_bytes, out_bytes });
+    };
+
+    for layer in 0..arch.n_layers {
+        for op in block_ops(arch, strat) {
+            let (in_ch, out_ch) = io_channels(arch, &op);
+            push(&op, layer, in_ch, out_ch);
+        }
+    }
+    for op in output_ops(arch) {
+        let (in_ch, out_ch) = io_channels(arch, &op);
+        push(&op, arch.n_layers, in_ch, out_ch);
+    }
+    Graph { arch: arch.clone(), nodes, arena_bytes }
+}
+
+/// Channel widths of an operator's activation input/output.
+fn io_channels(arch: &LlmArch, op: &OpInstance) -> (usize, usize) {
+    match op.class {
+        OpClass::VmmBn => (op.k, op.n),
+        OpClass::MhaMatmul => (arch.kv_dim(), arch.d_model),
+        OpClass::Softmax => (arch.n_heads * T_OUT, arch.n_heads * T_OUT),
+        OpClass::LayerNorm | OpClass::Rope | OpClass::Act | OpClass::Dat2Hbm => (op.n, op.n),
+    }
+}
+
+impl Graph {
+    /// The unified-format invariant: every adjacent pair chains without a
+    /// data rearrangement. Returns the offending edge if any.
+    pub fn check_chaining(&self) -> Result<(), (usize, String)> {
+        for (i, pair) in self.nodes.windows(2).enumerate() {
+            if !pair[0].output.chains_with(&pair[1].input) {
+                return Err((i, format!(
+                    "{} -> {} requires a rearrangement",
+                    pair[0].op.name, pair[1].op.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Steps per block (Fig. 6: 17) and total node count.
+    pub fn steps_per_block(&self) -> usize {
+        self.nodes.len().saturating_sub(2) / self.arch.n_layers
+    }
+
+    /// All dynamic byte expressions must fit the arena at token=MAX.
+    pub fn check_arena(&self, max_token: usize) -> Result<(), String> {
+        for n in &self.nodes {
+            let need = n.out_bytes.eval(max_token as i64) as usize;
+            let avail = self.arena_bytes / 2;
+            if need > avail {
+                return Err(format!(
+                    "{}: needs {need} bytes > slot {avail}",
+                    n.op.name
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{DENSE, GLM_6B, STRATEGY_3, TINY};
+
+    #[test]
+    fn glm_graph_has_17_steps_per_block() {
+        let g = build_graph(&GLM_6B, &DENSE, 256);
+        assert_eq!(g.steps_per_block(), 17);
+        assert_eq!(g.nodes.len(), 17 * 28 + 2);
+    }
+
+    #[test]
+    fn chaining_holds_everywhere() {
+        for (arch, strat) in [(&GLM_6B, &DENSE), (&TINY, &STRATEGY_3)] {
+            let g = build_graph(arch, strat, 128);
+            assert!(g.check_chaining().is_ok());
+        }
+    }
+
+    #[test]
+    fn arena_fits_max_token() {
+        let g = build_graph(&GLM_6B, &DENSE, 256);
+        assert!(g.check_arena(256).is_ok());
+    }
+
+    #[test]
+    fn dynamic_bytes_scale_with_token() {
+        let g = build_graph(&TINY, &DENSE, 64);
+        let n = &g.nodes[1]; // VMM-BN(Q)
+        assert_eq!(
+            n.out_bytes.eval(64) / n.out_bytes.eval(1),
+            64,
+            "activation bytes must be linear in token"
+        );
+    }
+
+    #[test]
+    fn ping_pong_buffers_alternate() {
+        let g = build_graph(&TINY, &DENSE, 64);
+        for pair in g.nodes.windows(2) {
+            assert_ne!(
+                pair[0].output.base, pair[1].output.base,
+                "consecutive steps must not overwrite their own input"
+            );
+            assert_eq!(pair[0].output.base, pair[1].input.base);
+        }
+    }
+}

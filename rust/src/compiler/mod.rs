@@ -1,0 +1,15 @@
+//! The end-to-end compiler (paper §IV): unified data format, operator
+//! graph, dynamic-token instruction generation, and the instruction-
+//! pipeline latency-hiding schedule.
+//!
+//! * [`tensor`] — the `[CH/T_out, token, T_out]` universal layout
+//! * [`expr`] — symbolic token-expressions (DAG form, partial evaluation)
+//! * [`graph`] — Fig. 6's fused 17-step block graph + invariants
+//! * [`codegen`] — static-address instruction generation (MAX_TOKEN plan)
+//! * [`pipeline`] — Fig. 9's auxiliary-path latency hiding
+
+pub mod codegen;
+pub mod expr;
+pub mod graph;
+pub mod pipeline;
+pub mod tensor;

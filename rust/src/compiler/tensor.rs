@@ -1,0 +1,200 @@
+//! The unified data format (paper §IV.A): every activation tensor lives
+//! in memory as `[batch/head, CH/T_out, (H, W | token), T_out]` with the
+//! channel-parallel dimension T_out innermost.
+//!
+//! Properties the compiler relies on (and this module checks):
+//! * text and image tensors share the layout, so *no operator ever needs
+//!   a data rearrangement* between steps;
+//! * the innermost `[token, T_out]` (or `[W, T_out]`) plane is contiguous,
+//!   so AXI bursts of width T_out×16 bit advance along it with unit
+//!   stride ("the incremental address in AXI burst transfer will exactly
+//!   be the width-dimension or token-dimension");
+//! * transposes (the K^T in attention) become *segmented continuous*
+//!   reads over that plane instead of physical data movement.
+
+/// Channel-direction hardware parallelism (elements per AXI beat at FP16).
+pub const T_OUT: usize = 16;
+
+/// Unified tensor descriptor. `outer` is head (attention) or batch; text
+/// tensors set `h = 1, w = token`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorDesc {
+    pub name: String,
+    pub outer: usize,
+    pub channels: usize,
+    pub h: usize,
+    /// tokens (text) or width (image)
+    pub w: usize,
+    pub t_out: usize,
+    /// base address in the activation arena (bytes)
+    pub base: usize,
+}
+
+impl TensorDesc {
+    /// Text-type tensor: (tokens, channels) → [CH/Tout, token, Tout].
+    pub fn text(name: &str, tokens: usize, channels: usize, base: usize) -> Self {
+        assert!(channels % T_OUT == 0, "channels {channels} % {T_OUT} != 0");
+        TensorDesc { name: name.into(), outer: 1, channels, h: 1, w: tokens, t_out: T_OUT, base }
+    }
+
+    /// Image-type tensor: (H, W, CH) → [CH/Tout, H, W, Tout].
+    pub fn image(name: &str, h: usize, w: usize, channels: usize, base: usize) -> Self {
+        assert!(channels % T_OUT == 0);
+        TensorDesc { name: name.into(), outer: 1, channels, h, w, t_out: T_OUT, base }
+    }
+
+    /// Per-head view (MHA): adds the head dimension outermost without
+    /// moving data — channels divide into heads.
+    pub fn with_heads(mut self, heads: usize) -> Self {
+        assert!(self.channels % heads == 0);
+        self.outer = heads;
+        self.channels /= heads;
+        self
+    }
+
+    pub fn ch_groups(&self) -> usize {
+        self.channels / self.t_out
+    }
+
+    /// Total elements.
+    pub fn elements(&self) -> usize {
+        self.outer * self.channels * self.h * self.w
+    }
+
+    /// FP16 bytes.
+    pub fn bytes(&self) -> usize {
+        self.elements() * 2
+    }
+
+    /// Linear element offset of (outer o, channel c, row y, col x) under
+    /// the unified layout.
+    pub fn offset(&self, o: usize, c: usize, y: usize, x: usize) -> usize {
+        assert!(o < self.outer && c < self.channels && y < self.h && x < self.w);
+        let (g, t) = (c / self.t_out, c % self.t_out);
+        (((o * self.ch_groups() + g) * self.h + y) * self.w + x) * self.t_out + t
+    }
+
+    /// Byte address of an element.
+    pub fn addr(&self, o: usize, c: usize, y: usize, x: usize) -> usize {
+        self.base + 2 * self.offset(o, c, y, x)
+    }
+
+    /// One AXI burst descriptor: (start element offset, beats) covering
+    /// the full `[w, t_out]` plane of (outer, group, row) — the paper's
+    /// burst unit. Each beat carries T_OUT FP16 values.
+    pub fn burst_of_plane(&self, o: usize, g: usize, y: usize) -> (usize, usize) {
+        let start = (((o * self.ch_groups() + g) * self.h + y) * self.w) * self.t_out;
+        (start, self.w)
+    }
+
+    /// Check two descriptors are layout-compatible (an operator can
+    /// stream one into the other with no rearrangement): same T_out and
+    /// same innermost plane length.
+    pub fn chains_with(&self, next: &TensorDesc) -> bool {
+        self.t_out == next.t_out
+    }
+
+    /// The segmented-continuous transpose read schedule for K^T: returns,
+    /// for each (head, channel-group), the burst covering all tokens of
+    /// that group — consecutive addresses, so no reshape is required.
+    pub fn transpose_bursts(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for o in 0..self.outer {
+            for g in 0..self.ch_groups() {
+                for y in 0..self.h {
+                    out.push(self.burst_of_plane(o, g, y));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_and_image_share_layout() {
+        // text (tokens=7, ch=64) and image (1×7, ch=64) produce identical
+        // addressing — the unification claim.
+        let t = TensorDesc::text("t", 7, 64, 0);
+        let i = TensorDesc::image("i", 1, 7, 64, 0);
+        for c in [0usize, 15, 16, 63] {
+            for x in [0usize, 3, 6] {
+                assert_eq!(t.offset(0, c, 0, x), i.offset(0, c, 0, x));
+            }
+        }
+    }
+
+    #[test]
+    fn innermost_plane_is_contiguous() {
+        // walking token-then-lane must touch consecutive element offsets
+        let t = TensorDesc::text("x", 4, 32, 0);
+        let mut last = None;
+        for tok in 0..4 {
+            for lane in 0..T_OUT {
+                let off = t.offset(0, lane, 0, tok);
+                if let Some(l) = last {
+                    assert_eq!(off, l + 1, "burst not contiguous");
+                }
+                last = Some(off);
+            }
+        }
+    }
+
+    #[test]
+    fn burst_covers_whole_plane() {
+        let t = TensorDesc::text("x", 9, 48, 0x100);
+        let (start, beats) = t.burst_of_plane(0, 2, 0);
+        assert_eq!(beats, 9);
+        assert_eq!(start, 2 * 9 * T_OUT);
+        // last element of the burst = last token of group 2's last lane
+        let last = t.offset(0, 2 * T_OUT + (T_OUT - 1), 0, 8);
+        assert_eq!(start + beats * T_OUT - 1, last);
+    }
+
+    #[test]
+    fn head_view_does_not_move_data() {
+        // Reinterpreting (tokens, 128) as 4 heads × 32 channels keeps
+        // every element at the same address.
+        let flat = TensorDesc::text("qkv", 5, 128, 0);
+        let headed = flat.clone().with_heads(4);
+        for head in 0..4 {
+            for c in 0..32 {
+                for tok in 0..5 {
+                    assert_eq!(
+                        headed.offset(head, c, 0, tok),
+                        flat.offset(0, head * 32 + c, 0, tok)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_bursts_are_sorted_and_disjoint() {
+        let t = TensorDesc::text("k", 16, 64, 0).with_heads(2);
+        let bursts = t.transpose_bursts();
+        assert_eq!(bursts.len(), 2 * 2); // 2 heads × (32/16) groups
+        let mut end = 0;
+        for (start, beats) in bursts {
+            assert!(start >= end, "overlapping bursts");
+            end = start + beats * T_OUT;
+        }
+        assert_eq!(end, t.elements());
+    }
+
+    #[test]
+    fn chains_without_rearrangement() {
+        let a = TensorDesc::text("a", 3, 64, 0);
+        let b = TensorDesc::text("b", 3, 256, 4096);
+        assert!(a.chains_with(&b));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unaligned_channels() {
+        TensorDesc::text("bad", 3, 60, 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: the CPU half of the CPU-FPGA heterogeneous system.
+//!
+//! * [`engine`] — request queue, KV sessions, decode loop, metrics
+//! * [`server`] — the LAN (TCP/JSON-lines) inference server of Fig. 8
+//! * [`tokenizer`] — byte-level token ids for the functional tiny model
+//! * [`sampler`] — greedy / temperature / top-p sampling
+
+pub mod engine;
+pub mod sampler;
+pub mod server;
+pub mod tokenizer;

@@ -1,0 +1,120 @@
+//! Token sampling policies for the decode loop.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub enum Sampling {
+    /// argmax — deterministic, used by the golden tests
+    Greedy,
+    /// softmax with temperature
+    Temperature(f32),
+    /// nucleus sampling
+    TopP { p: f32, temperature: f32 },
+}
+
+/// Sample the next token id from logits.
+pub fn sample(logits: &[f32], policy: Sampling, rng: &mut Rng) -> i32 {
+    match policy {
+        Sampling::Greedy => argmax(logits),
+        Sampling::Temperature(t) => {
+            let probs = softmax_t(logits, t);
+            draw(&probs, rng)
+        }
+        Sampling::TopP { p, temperature } => {
+            let probs = softmax_t(logits, temperature);
+            let mut order: Vec<usize> = (0..probs.len()).collect();
+            order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            let mut cum = 0.0f32;
+            let mut kept = Vec::new();
+            for &i in &order {
+                cum += probs[i];
+                kept.push(i);
+                if cum >= p {
+                    break;
+                }
+            }
+            let total: f32 = kept.iter().map(|&i| probs[i]).sum();
+            let mut x = rng.f32() * total;
+            for &i in &kept {
+                x -= probs[i];
+                if x <= 0.0 {
+                    return i as i32;
+                }
+            }
+            *kept.last().unwrap() as i32
+        }
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+fn softmax_t(logits: &[f32], t: f32) -> Vec<f32> {
+    let t = t.max(1e-4);
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&v| ((v - m) / t).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+fn draw(probs: &[f32], rng: &mut Rng) -> i32 {
+    let mut x = rng.f32();
+    for (i, &p) in probs.iter().enumerate() {
+        x -= p;
+        if x <= 0.0 {
+            return i as i32;
+        }
+    }
+    (probs.len() - 1) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        assert_eq!(sample(&logits, Sampling::Greedy, &mut Rng::new(0)), 1);
+    }
+
+    #[test]
+    fn temperature_zero_approaches_greedy() {
+        let logits = vec![0.1, 5.0, -1.0];
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            assert_eq!(sample(&logits, Sampling::Temperature(1e-6), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        // one dominant logit: top-p 0.5 must always pick it
+        let logits = vec![10.0, 0.0, 0.0, 0.0];
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let t = sample(&logits, Sampling::TopP { p: 0.5, temperature: 1.0 }, &mut rng);
+            assert_eq!(t, 0);
+        }
+    }
+
+    #[test]
+    fn sampling_is_distributed() {
+        // uniform logits: every token should appear eventually
+        let logits = vec![1.0f32; 8];
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 8];
+        for _ in 0..500 {
+            let t = sample(&logits, Sampling::Temperature(1.0), &mut rng);
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

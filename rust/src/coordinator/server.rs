@@ -1,0 +1,102 @@
+//! LAN inference server (paper Fig. 8's deployment: FPGA+LLM as server,
+//! a thin client encodes/decodes and talks to users).
+//!
+//! Protocol: JSON lines over TCP.
+//!   request : {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0}
+//!   response: {"id": 1, "text": "...", "tokens_per_s": ...,
+//!              "first_token_ms": ..., "sim_tokens_per_s": ...}
+//! One request per line; the server answers in order (batch-1 decode, as
+//! in the paper's edge operating point).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use super::sampler::Sampling;
+use crate::util::json::Json;
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7077").
+pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("edgellm server listening on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        if let Err(e) = handle_client(engine, stream) {
+            eprintln!("client error: {e:#}");
+        }
+    }
+    Ok(())
+}
+
+/// Handle one client connection (sequential requests).
+pub fn handle_client(engine: &mut Engine, stream: TcpStream) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    eprintln!("client connected: {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match process_line(engine, &line) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+        };
+        writeln!(writer, "{reply}")?;
+    }
+    eprintln!("client disconnected: {peer}");
+    Ok(())
+}
+
+/// Parse one request line, run it, serialize the completion.
+pub fn process_line(engine: &mut Engine, line: &str) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+    let prompt = req
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing 'prompt'"))?
+        .to_string();
+    let max_new = req
+        .get("max_new_tokens")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(32);
+    let temperature = req
+        .get("temperature")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as f32;
+    let sampling = if temperature <= 0.0 {
+        Sampling::Greedy
+    } else {
+        Sampling::Temperature(temperature)
+    };
+    engine.submit(&prompt, max_new, sampling);
+    let c = engine
+        .step()?
+        .ok_or_else(|| anyhow::anyhow!("queue empty after submit"))?;
+    Ok(Json::obj(vec![
+        ("id", Json::Num(c.id as f64)),
+        ("text", Json::Str(c.text)),
+        ("n_prompt", Json::Num(c.n_prompt as f64)),
+        ("n_generated", Json::Num(c.n_generated as f64)),
+        ("first_token_ms", Json::Num(c.first_token_s * 1e3)),
+        ("tokens_per_s", Json::Num(c.tokens_per_s)),
+        ("sim_first_token_ms", Json::Num(c.sim_first_token_ms)),
+        ("sim_tokens_per_s", Json::Num(c.sim_tokens_per_s)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::json::Json;
+
+    #[test]
+    fn request_json_shape_parses() {
+        let j = Json::parse(r#"{"prompt":"hi","max_new_tokens":8,"temperature":0.7}"#)
+            .unwrap();
+        assert_eq!(j.get("prompt").unwrap().as_str(), Some("hi"));
+        assert_eq!(j.get("max_new_tokens").unwrap().as_usize(), Some(8));
+    }
+}

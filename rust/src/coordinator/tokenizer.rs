@@ -1,0 +1,41 @@
+//! Byte-level tokenizer for the functional (tiny, vocab=256) model.
+//!
+//! The paper's client side "encodes and decodes the token ids"; for the
+//! end-to-end example we use raw UTF-8 bytes as token ids — lossless,
+//! deterministic, and vocabulary-complete for any input.
+
+/// Encode text to token ids (one byte = one token).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+/// Decode token ids back to text (lossy on invalid UTF-8 boundaries).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .map(|&t| (t.clamp(0, 255)) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "Hello, EdgeLLM!";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo ✓";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_bounded_by_vocab() {
+        assert!(encode("any text å").iter().all(|&t| (0..256).contains(&t)));
+    }
+}

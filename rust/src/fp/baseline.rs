@@ -1,0 +1,125 @@
+//! The two control designs of Table I: standard pairwise adder trees with
+//! rounded intermediate results.
+//!
+//!   baseline-1: every product and every tree node rounded to FP16
+//!   baseline-2: accumulation in FP20 (S1-E6-M13) to dodge FP16 overflow,
+//!               converted to FP16 only at the output
+//!
+//! Both share the PE's multiplier front-end (exact product before the
+//! first rounding), matching the paper's "standard pairwise addition-based
+//! adder tree ... precision of intermediate calculations varied".
+
+use super::minifloat::{FP16, FP20, MiniFloat};
+
+/// Pairwise tree reduction where every node result is rounded to `fmt`.
+fn tree_sum_fmt(fmt: &MiniFloat, mut lanes: Vec<u32>) -> u32 {
+    if lanes.is_empty() {
+        return 0;
+    }
+    while lanes.len() > 1 {
+        let mut next = Vec::with_capacity(lanes.len().div_ceil(2));
+        for pair in lanes.chunks(2) {
+            next.push(if pair.len() == 2 {
+                fmt.add(pair[0], pair[1])
+            } else {
+                pair[0]
+            });
+        }
+        lanes = next;
+    }
+    lanes[0]
+}
+
+fn dot_via_tree(fmt: &MiniFloat, products: Vec<f64>, scale: u16) -> u16 {
+    let lanes: Vec<u32> = products.into_iter().map(|p| fmt.encode(p)).collect();
+    let acc = tree_sum_fmt(fmt, lanes);
+    // convert accumulator format -> FP16, then the FP16 scale multiply
+    let r16 = FP16.encode(fmt.decode(acc));
+    FP16.mul(r16, scale as u32) as u16
+}
+
+/// baseline-1, MODE-1: FP16 adder tree, FP16×INT4 products.
+pub fn b1_mac_fp16_int4(a: &[u16], w: &[i8], scale: u16) -> u16 {
+    let products: Vec<f64> = a
+        .iter()
+        .zip(w)
+        .map(|(&ai, &wi)| FP16.decode(ai as u32) * wi as f64)
+        .collect();
+    dot_via_tree(&FP16, products, scale)
+}
+
+/// baseline-1, MODE-0: FP16 adder tree, FP16×FP16 products.
+pub fn b1_mac_fp16_fp16(a: &[u16], b: &[u16], scale: u16) -> u16 {
+    let products: Vec<f64> = a
+        .iter()
+        .zip(b)
+        .map(|(&ai, &bi)| FP16.decode(ai as u32) * FP16.decode(bi as u32))
+        .collect();
+    dot_via_tree(&FP16, products, scale)
+}
+
+/// baseline-2, MODE-1: FP20 adder tree.
+pub fn b2_mac_fp16_int4(a: &[u16], w: &[i8], scale: u16) -> u16 {
+    let products: Vec<f64> = a
+        .iter()
+        .zip(w)
+        .map(|(&ai, &wi)| FP16.decode(ai as u32) * wi as f64)
+        .collect();
+    dot_via_tree(&FP20, products, scale)
+}
+
+/// baseline-2, MODE-0: FP20 adder tree.
+pub fn b2_mac_fp16_fp16(a: &[u16], b: &[u16], scale: u16) -> u16 {
+    let products: Vec<f64> = a
+        .iter()
+        .zip(b)
+        .map(|(&ai, &bi)| FP16.decode(ai as u32) * FP16.decode(bi as u32))
+        .collect();
+    dot_via_tree(&FP20, products, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::minifloat::{f16_decode, f16_encode};
+
+    const ONE: u16 = 0x3C00;
+
+    #[test]
+    fn small_sums_exact_in_both_baselines() {
+        let a = [f16_encode(1.0), f16_encode(2.0)];
+        let w = [3i8, -1];
+        assert_eq!(f16_decode(b1_mac_fp16_int4(&a, &w, ONE)), 1.0);
+        assert_eq!(f16_decode(b2_mac_fp16_int4(&a, &w, ONE)), 1.0);
+    }
+
+    #[test]
+    fn fp16_tree_overflows_where_fp20_survives() {
+        // 128 lanes of 600*7 = 4200 each: true sum 537600 overflows FP16
+        // (max 65504) mid-tree; FP20's E6 range keeps it finite.
+        let a = vec![f16_encode(600.0); 128];
+        let w = vec![7i8; 128];
+        let b1 = f16_decode(b1_mac_fp16_int4(&a, &w, ONE));
+        let b2 = f16_decode(b2_mac_fp16_int4(&a, &w, ONE));
+        assert!(b1.is_infinite(), "baseline-1 should overflow, got {b1}");
+        assert!(b2.is_infinite() || b2 > 60000.0); // FP16 output saturates
+    }
+
+    #[test]
+    fn fp16_tree_loses_small_terms() {
+        // One big lane + many tiny ones: FP16 accumulation drops the tiny
+        // contributions that the exact sum keeps.
+        let mut a = vec![f16_encode(1024.0)];
+        let mut w = vec![7i8];
+        for _ in 0..127 {
+            a.push(f16_encode(0.25));
+            w.push(1i8);
+        }
+        let exact = crate::fp::mixpe::exact_dot_fp16_int4(&a, &w, 1.0);
+        let b1 = f16_decode(b1_mac_fp16_int4(&a, &w, ONE));
+        let b2 = f16_decode(b2_mac_fp16_int4(&a, &w, ONE));
+        let e1 = ((b1 - exact) / exact).abs();
+        let e2 = ((b2 - exact) / exact).abs();
+        assert!(e2 <= e1, "FP20 ({e2}) should beat FP16 ({e1})");
+    }
+}

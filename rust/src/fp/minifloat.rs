@@ -1,0 +1,226 @@
+//! Parametric small-float codec (software model of the PE's float formats).
+//!
+//! The paper's datapath manipulates three formats:
+//!   * FP16 (S1-E5-M10) — activations, KV cache, scales, outputs
+//!   * FP20 (S1-E6-M13) — baseline-2's wide adder-tree format
+//! Both are instances of `MiniFloat { ebits, mbits }` with IEEE semantics:
+//! hidden bit, subnormals, round-to-nearest-even, saturation to ±inf.
+//!
+//! All arithmetic is emulated *exactly* through f64 (every MiniFloat value
+//! and every pairwise product/sum of two of them is exactly representable
+//! in f64 for the formats used here), so rounding happens exactly once per
+//! hardware operation, as in RTL.
+
+/// A small IEEE-like binary float format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MiniFloat {
+    pub ebits: u32,
+    pub mbits: u32,
+}
+
+pub const FP16: MiniFloat = MiniFloat { ebits: 5, mbits: 10 };
+/// Baseline-2's custom accumulator format (S1-E6-M13), paper §III.B.
+pub const FP20: MiniFloat = MiniFloat { ebits: 6, mbits: 13 };
+
+impl MiniFloat {
+    pub fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    pub fn total_bits(&self) -> u32 {
+        1 + self.ebits + self.mbits
+    }
+
+    fn emax_field(&self) -> u32 {
+        (1 << self.ebits) - 1
+    }
+
+    /// Decode a bit pattern to f64 (exact).
+    pub fn decode(&self, bits: u32) -> f64 {
+        let sign = if bits >> (self.ebits + self.mbits) & 1 == 1 { -1.0 } else { 1.0 };
+        let e = (bits >> self.mbits) & self.emax_field();
+        let m = bits & ((1 << self.mbits) - 1);
+        if e == self.emax_field() {
+            if m == 0 {
+                return sign * f64::INFINITY;
+            }
+            return f64::NAN;
+        }
+        let (mant, exp) = if e == 0 {
+            (m as f64, 1 - self.bias() - self.mbits as i32)
+        } else {
+            ((m + (1 << self.mbits)) as f64, e as i32 - self.bias() - self.mbits as i32)
+        };
+        sign * mant * (exp as f64).exp2()
+    }
+
+    /// Encode an f64 to the nearest representable value (RNE); overflows
+    /// saturate to ±inf like the hardware's output integration stage.
+    pub fn encode(&self, x: f64) -> u32 {
+        let sign_bit = if x.is_sign_negative() { 1u32 << (self.ebits + self.mbits) } else { 0 };
+        if x.is_nan() {
+            return sign_bit | (self.emax_field() << self.mbits) | 1;
+        }
+        let a = x.abs();
+        if a == 0.0 {
+            return sign_bit;
+        }
+        if a.is_infinite() {
+            return sign_bit | (self.emax_field() << self.mbits);
+        }
+        // Find the unbiased exponent of the leading bit.
+        let e = a.log2().floor() as i32;
+        // Normal range: e in [1-bias, emax_field-1-bias]
+        let emin = 1 - self.bias();
+        let emax = self.emax_field() as i32 - 1 - self.bias();
+        let e_clamped = e.max(emin);
+        // Quantum for this exponent.
+        let q = ((e_clamped - self.mbits as i32) as f64).exp2();
+        let scaled = a / q;
+        let rounded = round_half_even(scaled);
+        let mut mant = rounded as u64;
+        let mut e_final = e_clamped;
+        // Rounding may carry into the next binade.
+        if mant >= (2u64 << self.mbits) {
+            mant >>= 1;
+            e_final += 1;
+        }
+        if e_final > emax || (e_final == e_clamped && mant >= (2u64 << self.mbits)) {
+            // overflow -> inf
+            return sign_bit | (self.emax_field() << self.mbits);
+        }
+        if mant < (1u64 << self.mbits) {
+            // subnormal (or zero after rounding)
+            return sign_bit | (mant as u32);
+        }
+        let e_field = (e_final + self.bias()) as u32;
+        if e_field >= self.emax_field() {
+            return sign_bit | (self.emax_field() << self.mbits);
+        }
+        sign_bit | (e_field << self.mbits) | ((mant as u32) & ((1 << self.mbits) - 1))
+    }
+
+    /// Round an f64 through this format (decode(encode(x))).
+    pub fn round(&self, x: f64) -> f64 {
+        self.decode(self.encode(x))
+    }
+
+    /// One hardware multiply: exact product, single rounding.
+    pub fn mul(&self, a_bits: u32, b_bits: u32) -> u32 {
+        self.encode(self.decode(a_bits) * self.decode(b_bits))
+    }
+
+    /// One hardware add: exact sum, single rounding.
+    pub fn add(&self, a_bits: u32, b_bits: u32) -> u32 {
+        self.encode(self.decode(a_bits) + self.decode(b_bits))
+    }
+
+    /// Split into (sign, biased_exponent_effective, mantissa_with_hidden).
+    /// Subnormals report exponent 1 and no hidden bit, matching the
+    /// stage-0 field splitter in Fig. 4(b).
+    pub fn split(&self, bits: u32) -> (bool, i32, u32) {
+        let sign = bits >> (self.ebits + self.mbits) & 1 == 1;
+        let e = (bits >> self.mbits) & self.emax_field();
+        let m = bits & ((1 << self.mbits) - 1);
+        if e == 0 {
+            (sign, 1, m)
+        } else {
+            (sign, e as i32, m | (1 << self.mbits))
+        }
+    }
+}
+
+fn round_half_even(x: f64) -> f64 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Convenience FP16 helpers used across the crate.
+pub fn f16_encode(x: f64) -> u16 {
+    FP16.encode(x) as u16
+}
+
+pub fn f16_decode(bits: u16) -> f64 {
+    FP16.decode(bits as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp16_roundtrip_all_finite_patterns() {
+        // Exhaustive: every finite FP16 bit pattern decodes and re-encodes
+        // to itself (the codec is a bijection on finite values).
+        for bits in 0u32..=0xFFFF {
+            let e = (bits >> 10) & 0x1F;
+            if e == 0x1F {
+                continue; // inf/nan
+            }
+            let x = FP16.decode(bits);
+            let back = FP16.encode(x);
+            // +0 and -0 both map to themselves via sign handling
+            assert_eq!(back, bits, "pattern {bits:#06x} -> {x} -> {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn fp16_known_values() {
+        assert_eq!(f16_decode(0x3C00), 1.0);
+        assert_eq!(f16_decode(0xC000), -2.0);
+        assert_eq!(f16_decode(0x7BFF), 65504.0);
+        assert_eq!(f16_encode(1.0), 0x3C00);
+        assert_eq!(f16_encode(65504.0), 0x7BFF);
+        assert_eq!(f16_encode(65520.0), 0x7C00); // overflow -> inf
+        assert_eq!(f16_decode(0x0001), (2.0f64).powi(-24)); // smallest subnormal
+    }
+
+    #[test]
+    fn fp16_rne_ties() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10: ties to even (1.0)
+        let tie = 1.0 + (2.0f64).powi(-11);
+        assert_eq!(f16_encode(tie), 0x3C00);
+        // 1 + 3*2^-11 ties up to 1+2^-9's neighbour (even mantissa 2)
+        let tie2 = 1.0 + 3.0 * (2.0f64).powi(-11);
+        assert_eq!(f16_encode(tie2), 0x3C02);
+    }
+
+    #[test]
+    fn fp20_wider_than_fp16() {
+        // FP20 must represent values FP16 cannot (more mantissa + exponent)
+        let x = 1.0 + (2.0f64).powi(-12);
+        assert_eq!(FP16.round(x), 1.0);
+        assert_eq!(FP20.round(x), x);
+        // FP20 range exceeds FP16 range (E6 vs E5)
+        assert!(FP20.round(1e6).is_finite());
+        assert!(FP16.round(1e6).is_infinite());
+    }
+
+    #[test]
+    fn split_matches_decode() {
+        for bits in [0x3C00u32, 0x0001, 0x03FF, 0x7BFF, 0x8400, 0x0400] {
+            let (s, e, m) = FP16.split(bits);
+            let v = (if s { -1.0 } else { 1.0 })
+                * m as f64
+                * ((e - FP16.bias() - FP16.mbits as i32) as f64).exp2();
+            assert_eq!(v, FP16.decode(bits), "bits={bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn single_rounding_mul_add() {
+        let a = f16_encode(1.5) as u32;
+        let b = f16_encode(2.5) as u32;
+        assert_eq!(FP16.decode(FP16.mul(a, b)), 3.75);
+        assert_eq!(FP16.decode(FP16.add(a, b)), 4.0);
+    }
+}

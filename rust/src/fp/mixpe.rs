@@ -1,0 +1,339 @@
+//! Bit-accurate model of the mix-precision vector MAC unit (Fig. 4b).
+//!
+//! The unit computes `scale * Σ_i a_i * w_i` over a T_in-lane vector in
+//! four pipeline stages:
+//!
+//!   Stage-0  field split: FP16 -> (S, E, M+hidden); INT4 -> (S, |w|).
+//!   Stage-1  sign XOR; exponent max-scan + per-lane distance;
+//!            full-mantissa integer multiply (nothing truncated here —
+//!            "no fractional detail is lost in the arithmetic processes").
+//!   Stage-2  alignment shifter: each product is shifted right by its
+//!            exponent distance and enters the **19-bit** adder tree;
+//!            the width cap is the paper's deliberate accuracy/area
+//!            trade-off and the sole source of arithmetic error.
+//!   Stage-3  LZA normalization -> FP16, then FP16 multiply by the
+//!            block-quantization scale.
+//!
+//! Two operand modes (Fig. 4 table):
+//!   MODE-1 (FFN): T_in   lanes of FP16 (DAT) × INT4 (WT)
+//!   MODE-0 (MHA): T_in/4 lanes of FP16 (DAT) × FP16 (KV cache; each FP16
+//!          occupies the HBM bits of four INT4s, so lane count drops 4×)
+
+use super::minifloat::FP16;
+
+/// Vector length of the PE (paper: T_in = 128).
+pub const T_IN: usize = 128;
+
+/// Adder-tree configuration: the paper fixes 19 bits; the harness sweeps
+/// this to show the accuracy/width trade-off (DESIGN.md ablation).
+#[derive(Debug, Clone, Copy)]
+pub struct PeConfig {
+    /// Total adder-tree operand width in bits, including sign.
+    pub tree_bits: u32,
+}
+
+pub const PAPER_PE: PeConfig = PeConfig { tree_bits: 19 };
+
+impl PeConfig {
+    fn max_mag(&self) -> i64 {
+        (1i64 << (self.tree_bits - 1)) - 1
+    }
+
+    /// Guard bits: how far a product is up-shifted so the max-exponent
+    /// lane occupies the full tree operand width (sign + tree_bits−1
+    /// magnitude bits). With 14-bit MODE-1 products and the paper's
+    /// 19-bit operands this is 4 — the aligned-lane precision floor is
+    /// 2^-18 of the largest product, which is what lets the fused tree
+    /// beat even an FP20 accumulator after heavy cancellation (Table I).
+    /// Internally the tree grows like any synthesized adder tree
+    /// (19 + log2(T_in) bits at the root); "19 bits" caps the *operand*
+    /// width, i.e. the alignment-shifter output.
+    fn guard(&self, product_bits: u32) -> i32 {
+        self.tree_bits as i32 - 1 - product_bits as i32
+    }
+}
+
+/// Alignment shifter: up-shift by `guard` (to fill the operand width),
+/// down-shift by the exponent distance `d`, with round-to-nearest — the
+/// shifted-out MSB is added back (one extra adder input in RTL),
+/// de-biasing the truncation. Output clamped to the operand width.
+fn align(cfg: &PeConfig, p: i64, d: u32, guard: i32) -> i64 {
+    let sh = guard - d as i32;
+    let v = if sh >= 0 {
+        p << sh
+    } else {
+        let d = (-sh) as u32;
+        if d >= 63 {
+            0
+        } else {
+            (p + (1i64 << (d - 1))) >> d
+        }
+    };
+    v.clamp(-cfg.max_mag(), cfg.max_mag())
+}
+
+// NOTE on the adder tree: the hardware reduces pairwise, but its internal
+// nodes grow wide enough to be exact (root 19 + log2(T_in) ≤ 26 bits), so
+// integer addition order cannot change the result — we fold directly.
+// (§Perf: the explicit Vec-of-levels tree was 2 allocations + O(n) moves
+// per MAC; the fold is allocation-free and bit-identical.)
+
+/// MODE-1: FP16 activations × INT4 weights (FFN layers), then × scale.
+///
+/// `a` are FP16 bit patterns, `w` are INT4 values in [-8, 7], `scale` is
+/// the FP16 block-quantization scale. Returns the FP16 result bits.
+pub fn mac_fp16_int4(cfg: &PeConfig, a: &[u16], w: &[i8], scale: u16) -> u16 {
+    assert_eq!(a.len(), w.len());
+    // Stage 0/1 (first sweep): exponent max-scan over active lanes.
+    // (§Perf: two sweeps over the inputs instead of building a lane Vec —
+    // the split is cheap, the allocation was not.)
+    let mut e_max = i32::MIN;
+    let mut any = false;
+    for (&ai, &wi) in a.iter().zip(w) {
+        if wi == 0 {
+            continue;
+        }
+        let (_, e_a, m_a) = FP16.split(ai as u32);
+        if m_a == 0 {
+            continue;
+        }
+        e_max = e_max.max(e_a);
+        any = true;
+    }
+    if !any {
+        return 0;
+    }
+    // Stage 1/2 (second sweep): multiply, align into 19-bit operands, sum.
+    // MODE-1 products are ≤ 2^14 (11-bit mantissa × 8) → guard 4.
+    let guard = cfg.guard(14);
+    let mut sum = 0i64;
+    for (&ai, &wi) in a.iter().zip(w) {
+        if wi == 0 {
+            continue;
+        }
+        let (s_a, e_a, m_a) = FP16.split(ai as u32);
+        if m_a == 0 {
+            continue;
+        }
+        let neg = s_a ^ (wi < 0);
+        let p = (m_a as i64) * (wi.unsigned_abs() as i64);
+        let p = if neg { -p } else { p };
+        sum += align(cfg, p, (e_max - e_a) as u32, guard);
+    }
+    // Stage 3: LZA normalize to FP16. The integer sum carries scale
+    // 2^(e_max - bias - mbits - guard).
+    let exp = e_max - FP16.bias() - FP16.mbits as i32 - guard;
+    let result = sum as f64 * (exp as f64).exp2();
+    let r16 = FP16.encode(result);
+    // Final FP16 multiply by the quantization scale.
+    FP16.mul(r16, scale as u32) as u16
+}
+
+/// MODE-0: FP16 activations × FP16 KV-cache data (MHA blocks).
+///
+/// Fig. 4's MODE-0 row: each FP16 operand occupies the HBM bits of four
+/// INT4s and is processed by **three** of the shared 11×4 multipliers
+/// (75% DSP utilization): the 11-bit mantissa (hidden bit included) is
+/// decomposed into INT4 digits `m = d2·2^8 + d1·2^4 + d0`, each digit
+/// producing one ≤15-bit partial product that enters the common
+/// alignment shifter + 19-bit adder tree as its own lane with exponent
+/// offset {+8, +4, +0}. The full 22-bit product is therefore represented
+/// exactly across three tree lanes — the reason MODE-0's error rate is an
+/// order of magnitude below MODE-1's in Table I.
+///
+/// No quantization scale in MHA; pass `scale = 0x3C00` (1.0) to model the
+/// shared datapath exactly.
+pub fn mac_fp16_fp16(cfg: &PeConfig, a: &[u16], b: &[u16], scale: u16) -> u16 {
+    assert_eq!(a.len(), b.len());
+    // First sweep: exponent max over digit lanes.
+    let mut e_max = i32::MIN;
+    let mut any = false;
+    for (&ai, &bi) in a.iter().zip(b) {
+        let (_, e_a, m_a) = FP16.split(ai as u32);
+        let (_, e_b, m_b) = FP16.split(bi as u32);
+        if m_a == 0 || m_b == 0 {
+            continue;
+        }
+        let e = e_a + e_b;
+        for (digit, shift) in [(m_b >> 8, 8), ((m_b >> 4) & 0xF, 4), (m_b & 0xF, 0)] {
+            if digit != 0 {
+                e_max = e_max.max(e + shift);
+                any = true;
+            }
+        }
+    }
+    if !any {
+        return 0;
+    }
+    // Second sweep: multiply digits, align, sum.
+    // Digit partial products occupy ≤15 bits → guard 3 at 19-bit operands.
+    let guard = cfg.guard(15);
+    let mut sum = 0i64;
+    for (&ai, &bi) in a.iter().zip(b) {
+        let (s_a, e_a, m_a) = FP16.split(ai as u32);
+        let (s_b, e_b, m_b) = FP16.split(bi as u32);
+        if m_a == 0 || m_b == 0 {
+            continue;
+        }
+        let neg = s_a ^ s_b;
+        let e = e_a + e_b;
+        for (digit, shift) in [(m_b >> 8, 8), ((m_b >> 4) & 0xF, 4), (m_b & 0xF, 0)] {
+            if digit == 0 {
+                continue;
+            }
+            let p = (m_a as i64) * (digit as i64); // ≤ 2047·15 < 2^15
+            let p = if neg { -p } else { p };
+            sum += align(cfg, p, (e_max - (e + shift)) as u32, guard);
+        }
+    }
+    // Lane value = p·2^(e_lane − 2·bias − 2·mbits): the digit-grid offset
+    // is already folded into e_lane (= e_a + e_b + digit_shift).
+    let exp = e_max - 2 * FP16.bias() - 2 * FP16.mbits as i32 - guard;
+    let result = sum as f64 * (exp as f64).exp2();
+    let r16 = FP16.encode(result);
+    FP16.mul(r16, scale as u32) as u16
+}
+
+/// Exact (f64, Neumaier-compensated) dot product — the harness oracle.
+pub fn exact_dot_fp16_int4(a: &[u16], w: &[i8], scale: f64) -> f64 {
+    let mut sum = 0.0f64;
+    let mut c = 0.0f64;
+    for (&ai, &wi) in a.iter().zip(w) {
+        let x = FP16.decode(ai as u32) * wi as f64;
+        let t = sum + x;
+        c += if sum.abs() >= x.abs() { (sum - t) + x } else { (x - t) + sum };
+        sum = t;
+    }
+    (sum + c) * scale
+}
+
+/// Exact FP16×FP16 oracle.
+pub fn exact_dot_fp16_fp16(a: &[u16], b: &[u16], scale: f64) -> f64 {
+    let mut sum = 0.0f64;
+    let mut c = 0.0f64;
+    for (&ai, &bi) in a.iter().zip(b) {
+        let x = FP16.decode(ai as u32) * FP16.decode(bi as u32);
+        let t = sum + x;
+        c += if sum.abs() >= x.abs() { (sum - t) + x } else { (x - t) + sum };
+        sum = t;
+    }
+    (sum + c) * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::minifloat::{f16_decode, f16_encode};
+    use crate::util::rng::Rng;
+
+    const ONE: u16 = 0x3C00;
+
+    #[test]
+    fn single_lane_exact() {
+        // One lane, no alignment, no saturation: result must be exact.
+        let a = [f16_encode(1.5)];
+        let w = [3i8];
+        let out = mac_fp16_int4(&PAPER_PE, &a, &w, ONE);
+        assert_eq!(f16_decode(out), 4.5);
+    }
+
+    #[test]
+    fn zero_weights_skip_lanes() {
+        let a = [f16_encode(7.0), f16_encode(1e4)];
+        let w = [0i8, 0];
+        assert_eq!(mac_fp16_int4(&PAPER_PE, &a, &w, ONE), 0);
+    }
+
+    #[test]
+    fn equal_exponent_sums_exact() {
+        // All lanes same exponent: shifter distance 0, tree adds exactly.
+        let a = vec![f16_encode(1.0); 8];
+        let w = vec![2i8; 8];
+        let out = mac_fp16_int4(&PAPER_PE, &a, &w, ONE);
+        assert_eq!(f16_decode(out), 16.0);
+    }
+
+    #[test]
+    fn scale_applied_in_fp16() {
+        let a = [f16_encode(2.0)];
+        let w = [4i8];
+        let scale = f16_encode(0.25);
+        let out = mac_fp16_int4(&PAPER_PE, &a, &w, scale);
+        assert_eq!(f16_decode(out), 2.0);
+    }
+
+    #[test]
+    fn fp16_mode_single_lane() {
+        let a = [f16_encode(1.5)];
+        let b = [f16_encode(-2.0)];
+        let out = mac_fp16_fp16(&PAPER_PE, &a, &b, ONE);
+        assert_eq!(f16_decode(out), -3.0);
+    }
+
+    #[test]
+    fn random_vectors_close_to_exact() {
+        // Error must be tiny relative to the absolute-sum scale (robust to
+        // cancellation, which inflates relative-to-result metrics).
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let a: Vec<u16> = (0..T_IN)
+                .map(|_| f16_encode(rng.normal()))
+                .collect();
+            let w: Vec<i8> = (0..T_IN).map(|_| rng.int_in(-8, 7) as i8).collect();
+            let got = f16_decode(mac_fp16_int4(&PAPER_PE, &a, &w, ONE));
+            let exact = exact_dot_fp16_int4(&a, &w, 1.0);
+            let norm: f64 = a
+                .iter()
+                .zip(&w)
+                .map(|(&ai, &wi)| (f16_decode(ai) * wi as f64).abs())
+                .sum();
+            assert!(
+                (got - exact).abs() <= 1e-3 * norm.max(1.0),
+                "got={got} exact={exact} norm={norm}"
+            );
+        }
+    }
+
+    #[test]
+    fn wider_tree_is_more_accurate() {
+        // Ablation invariant: growing the tree width cannot hurt accuracy
+        // on average (DESIGN.md §ablation).
+        let mut rng = Rng::new(5);
+        let wide = PeConfig { tree_bits: 30 };
+        let mut err19 = 0.0;
+        let mut err30 = 0.0;
+        let mut n = 0;
+        for _ in 0..300 {
+            let a: Vec<u16> = (0..T_IN)
+                .map(|_| f16_encode(rng.normal() * (2.0f64).powi(rng.int_in(-8, 8) as i32)))
+                .collect();
+            let w: Vec<i8> = (0..T_IN).map(|_| rng.int_in(-8, 7) as i8).collect();
+            let exact = exact_dot_fp16_int4(&a, &w, 1.0);
+            if exact.abs() < 1e-6 {
+                continue;
+            }
+            let g19 = f16_decode(mac_fp16_int4(&PAPER_PE, &a, &w, ONE));
+            let g30 = f16_decode(mac_fp16_int4(&wide, &a, &w, ONE));
+            err19 += ((g19 - exact) / exact).abs();
+            err30 += ((g30 - exact) / exact).abs();
+            n += 1;
+        }
+        assert!(n > 100);
+        assert!(
+            err30 <= err19 * 1.05,
+            "30b mean err {} should not exceed 19b {}",
+            err30 / n as f64,
+            err19 / n as f64
+        );
+    }
+
+    #[test]
+    fn saturation_clamps_not_wraps() {
+        // Huge same-sign inputs: the 19-bit tree saturates; the result
+        // must stay the right sign and be finite-or-inf, never flip sign.
+        let a = vec![f16_encode(60000.0); T_IN];
+        let w = vec![7i8; T_IN];
+        let out = mac_fp16_int4(&PAPER_PE, &a, &w, ONE);
+        assert!(f16_decode(out) > 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Bit-accurate model of EdgeLLM's mix-precision computing unit (§III.B).
+//!
+//! * [`minifloat`] — parametric FP16/FP20 codecs with exact single-rounding
+//!   arithmetic
+//! * [`mixpe`] — this work's 4-stage MAC datapath (19-bit aligned adder
+//!   tree, LZA normalize, FP16 scale multiply)
+//! * [`baseline`] — Table I's baseline-1 (FP16 tree) and baseline-2 (FP20
+//!   tree) control designs
+//! * [`error`] — the 100k-random-trial error-rate harness (Table I)
+//! * [`ppa`] — structural area/power/frequency model (Table I PPA columns)
+
+pub mod baseline;
+pub mod error;
+pub mod minifloat;
+pub mod mixpe;
+pub mod ppa;

@@ -1,0 +1,11 @@
+//! EdgeLLM reproduction: rust coordinator + simulator over AOT JAX/Pallas compute.
+pub mod baselines;
+pub mod compiler;
+pub mod coordinator;
+pub mod fp;
+pub mod models;
+pub mod pack;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,157 @@
+//! edgellm — CLI for the EdgeLLM reproduction.
+//!
+//! Subcommands:
+//!   serve     --artifacts DIR --model NAME --addr HOST:PORT
+//!   generate  --artifacts DIR --model NAME --prompt TEXT [--max-new N]
+//!             [--temperature T]
+//!   simulate  --arch glm|qwen --strategy dense|s1|s2|s3 --mem hbm|ddr
+//!             [--ctx N] [--prefill N]
+//!   info      --artifacts DIR --model NAME
+
+use edgellm::coordinator::engine::{Engine, EngineConfig};
+use edgellm::coordinator::sampler::Sampling;
+use edgellm::coordinator::server;
+use edgellm::models::{self, SparseStrategy};
+use edgellm::runtime::model::LlmRuntime;
+use edgellm::sim::engine::Simulator;
+use edgellm::sim::Memory;
+use edgellm::util::Args;
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "simulate" => cmd_simulate(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "edgellm — CPU-FPGA heterogeneous LLM accelerator (reproduction)\n\n\
+         USAGE:\n  edgellm serve    --artifacts artifacts --model tiny --addr 127.0.0.1:7077\n  \
+         edgellm generate --artifacts artifacts --model tiny --prompt \"Hello\" --max-new 32\n  \
+         edgellm simulate --arch glm --strategy s3 --ctx 128\n  \
+         edgellm info     --artifacts artifacts --model tiny"
+    );
+}
+
+fn load_engine(args: &Args) -> anyhow::Result<Engine> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "tiny");
+    let runtime = LlmRuntime::load(&dir, &model)?;
+    eprintln!(
+        "loaded {} ({:.1}M params, max_tokens={})",
+        runtime.info.name,
+        runtime.info.n_params as f64 / 1e6,
+        runtime.info.max_tokens
+    );
+    Ok(Engine::new(runtime, EngineConfig::default()))
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut engine = load_engine(args)?;
+    let addr = args.get_or("addr", "127.0.0.1:7077");
+    server::serve(&mut engine, &addr)
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let mut engine = load_engine(args)?;
+    let prompt = args.get_or("prompt", "Hello");
+    let max_new = args.get_usize("max-new", 32);
+    let temp = args.get_f64("temperature", 0.0) as f32;
+    let sampling = if temp <= 0.0 { Sampling::Greedy } else { Sampling::Temperature(temp) };
+    engine.submit(&prompt, max_new, sampling);
+    let c = engine.step()?.expect("request queued");
+    println!("prompt       : {:?}", c.prompt);
+    println!("generated    : {:?}", c.text);
+    println!("tokens       : {} prompt + {} new", c.n_prompt, c.n_generated);
+    println!("first token  : {:.1} ms (measured, CPU PJRT)", c.first_token_s * 1e3);
+    println!("decode speed : {:.2} token/s (measured, CPU PJRT)", c.tokens_per_s);
+    println!("sim (VCU128) : first {:.2} ms, {:.1} token/s", c.sim_first_token_ms, c.sim_tokens_per_s);
+    Ok(())
+}
+
+fn parse_strategy(s: &str) -> SparseStrategy {
+    match s {
+        "dense" => models::DENSE,
+        "s1" | "strategy-1" => models::STRATEGY_1,
+        "s2" | "strategy-2" => models::STRATEGY_2,
+        "s3" | "strategy-3" => models::STRATEGY_3,
+        _ => {
+            eprintln!("unknown strategy {s}, using dense");
+            models::DENSE
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let arch = match args.get_or("arch", "glm").as_str() {
+        "qwen" => models::QWEN_7B,
+        "tiny" => models::TINY,
+        _ => models::GLM_6B,
+    };
+    let strat = parse_strategy(&args.get_or("strategy", "dense"));
+    let mem = if args.get_or("mem", "hbm") == "ddr" { Memory::Ddr } else { Memory::Hbm };
+    let ctx = args.get_usize("ctx", 128);
+    let sim = Simulator::new(&arch, &strat, mem);
+
+    println!("== {} / {} / {:?} ==", arch.name, strat.name, mem);
+    let rep = sim.decode_step(ctx);
+    println!("decode @ctx={ctx}:");
+    for (name, us) in &rep.block_steps {
+        println!("  {name:<18} {us:>10.2} µs");
+    }
+    let bd = &rep.breakdown;
+    println!(
+        "  block total {:.1} µs | model total {:.1} ms | {:.1} token/s",
+        rep.block_steps.iter().take(17).map(|(_, u)| u).sum::<f64>(),
+        bd.total_us() / 1e3,
+        1e6 / bd.total_us()
+    );
+    println!(
+        "  breakdown: MHA {:.1} ms, FFN {:.1} ms, other {:.1} ms",
+        bd.mha_us / 1e3,
+        bd.ffn_us / 1e3,
+        bd.other_us / 1e3
+    );
+    if let Some(t) = args.get("prefill") {
+        let t: usize = t.parse().unwrap_or(128);
+        let pre = sim.prefill(t).breakdown;
+        println!("prefill @T={t}: {:.1} ms", pre.total_us() / 1e3);
+    }
+    let e = edgellm::sim::power::decode_energy(&sim, ctx);
+    println!(
+        "power: {:.2} W avg | energy {:.3} J/token | {:.2} token/J",
+        e.avg_power_w,
+        e.energy_j,
+        1.0 / e.energy_j
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "tiny");
+    let rt = LlmRuntime::load(&dir, &model)?;
+    let i = &rt.info;
+    println!("model       : {}", i.name);
+    println!("params      : {:.1} M", i.n_params as f64 / 1e6);
+    println!("d_model     : {}", i.d_model);
+    println!("layers      : {}", i.n_layers);
+    println!("heads       : {} ({} kv)", i.n_heads, i.n_kv_heads);
+    println!("d_ffn       : {}", i.d_ffn);
+    println!("max_tokens  : {}", i.max_tokens);
+    println!("prefill     : buckets {:?}", rt.prefill_buckets());
+    Ok(())
+}

@@ -1,0 +1,286 @@
+//! Bit-level serialization of weight packages (Fig. 5's [scale|mask|wt]
+//! order) and the per-port HBM stream assembly.
+//!
+//! This is what the compiler's weight pre-processing step emits and what
+//! the accelerator's sparse DMA consumes; the decoder here doubles as the
+//! model of that DMA for tests.
+
+use super::{best_encoding, MaskEncoding, CH_GROUP, HBM_PORTS};
+use crate::quant::{QuantMatrix, Sparsity, QBLOCK, SGROUP};
+
+/// Append `bits` low-order bits of `v` to a bit vector (LSB-first).
+/// Word-level writes: one shift/or per field instead of per bit
+/// (§Perf: ~8× on port_streams assembly).
+fn push_bits(out: &mut Vec<u8>, bitpos: &mut usize, v: u64, bits: usize) {
+    debug_assert!(bits <= 56, "field too wide for the single-splice path");
+    let byte = *bitpos / 8;
+    let shift = *bitpos % 8;
+    let need = (shift + bits + 7) / 8;
+    if out.len() < byte + need {
+        out.resize(byte + need, 0);
+    }
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let v = (v & mask) << shift;
+    for (i, slot) in out[byte..byte + need].iter_mut().enumerate() {
+        *slot |= (v >> (8 * i)) as u8;
+    }
+    *bitpos += bits;
+}
+
+fn read_bits(data: &[u8], bitpos: &mut usize, bits: usize) -> u64 {
+    debug_assert!(bits <= 56);
+    let byte = *bitpos / 8;
+    let shift = *bitpos % 8;
+    let need = (shift + bits + 7) / 8;
+    let mut raw = 0u64;
+    for (i, &b) in data[byte..byte + need].iter().enumerate() {
+        raw |= (b as u64) << (8 * i);
+    }
+    *bitpos += bits;
+    (raw >> shift) & if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 }
+}
+
+/// One serialized package: CH_GROUP input channels of one output column.
+pub struct Package {
+    pub data: Vec<u8>,
+    pub sparsity: Sparsity,
+    pub encoding: MaskEncoding,
+}
+
+/// Serialize the package for output column `col`, input channels
+/// `[group_base, group_base + CH_GROUP)` (rows past `m.k` are padding).
+pub fn encode_package(
+    m: &QuantMatrix,
+    col: usize,
+    group_base: usize,
+    sparsity: Sparsity,
+) -> Package {
+    let encoding = best_encoding(sparsity);
+    let mut data = Vec::new();
+    let mut pos = 0usize;
+    // [scale]: 16 FP16 scales
+    for b in 0..CH_GROUP / QBLOCK {
+        let row = group_base + b * QBLOCK;
+        let s = if row < m.k { m.scales[(row / QBLOCK) * m.n + col] } else { 0 };
+        push_bits(&mut data, &mut pos, s as u64, 16);
+    }
+    // collect the group's values
+    let val_at = |row: usize| -> i8 {
+        if row < m.k { m.q[row * m.n + col] } else { 0 }
+    };
+    // [mask]
+    match encoding {
+        MaskEncoding::None => {}
+        MaskEncoding::OneHot => {
+            for r in 0..CH_GROUP {
+                let bit = (val_at(group_base + r) != 0) as u64;
+                push_bits(&mut data, &mut pos, bit, 1);
+            }
+        }
+        MaskEncoding::AddrInBlock => {
+            let bits_per = if sparsity == Sparsity::Eighth { 4 } else { 3 };
+            let keep = sparsity.keep_of_8();
+            for g in 0..CH_GROUP / SGROUP {
+                let mut written = 0;
+                for r in 0..SGROUP {
+                    let row = group_base + g * SGROUP + r;
+                    if val_at(row) != 0 {
+                        push_bits(&mut data, &mut pos, r as u64, bits_per);
+                        written += 1;
+                    }
+                }
+                for _ in written..keep {
+                    // pad empty slots with offset 0 (value 0 ignored)
+                    push_bits(&mut data, &mut pos, 0, bits_per);
+                }
+            }
+        }
+    }
+    // [wt]: kept INT4 values (dense: all values)
+    let keep = sparsity.keep_of_8();
+    for g in 0..CH_GROUP / SGROUP {
+        let mut written = 0;
+        for r in 0..SGROUP {
+            let row = group_base + g * SGROUP + r;
+            let v = val_at(row);
+            if sparsity == Sparsity::Dense {
+                push_bits(&mut data, &mut pos, (v as u8 & 0xF) as u64, 4);
+            } else if v != 0 {
+                push_bits(&mut data, &mut pos, (v as u8 & 0xF) as u64, 4);
+                written += 1;
+            }
+        }
+        if sparsity != Sparsity::Dense {
+            for _ in written..keep {
+                push_bits(&mut data, &mut pos, 0, 4);
+            }
+        }
+    }
+    Package { data, sparsity, encoding }
+}
+
+/// Decode a package back to (scales, dense group values) — the sparse
+/// DMA's activation-select inverse. Returns (16 scales, CH_GROUP values).
+pub fn decode_package(p: &Package) -> (Vec<u16>, Vec<i8>) {
+    let mut pos = 0usize;
+    let mut scales = Vec::with_capacity(CH_GROUP / QBLOCK);
+    for _ in 0..CH_GROUP / QBLOCK {
+        scales.push(read_bits(&p.data, &mut pos, 16) as u16);
+    }
+    let keep = p.sparsity.keep_of_8();
+    let mut vals = vec![0i8; CH_GROUP];
+    let sign_extend = |v: u64| -> i8 {
+        let v = v as u8;
+        if v & 0x8 != 0 { (v | 0xF0) as i8 } else { v as i8 }
+    };
+    match p.encoding {
+        MaskEncoding::None => {
+            for (r, slot) in vals.iter_mut().enumerate() {
+                let _ = r;
+                *slot = sign_extend(read_bits(&p.data, &mut pos, 4));
+            }
+        }
+        MaskEncoding::OneHot => {
+            let mut mask = vec![false; CH_GROUP];
+            for m in mask.iter_mut() {
+                *m = read_bits(&p.data, &mut pos, 1) == 1;
+            }
+            // wt section: fixed keep slots per group
+            for g in 0..CH_GROUP / SGROUP {
+                let rows: Vec<usize> =
+                    (0..SGROUP).filter(|&r| mask[g * SGROUP + r]).collect();
+                for s in 0..keep {
+                    let v = sign_extend(read_bits(&p.data, &mut pos, 4));
+                    if let Some(&r) = rows.get(s) {
+                        vals[g * SGROUP + r] = v;
+                    }
+                }
+            }
+        }
+        MaskEncoding::AddrInBlock => {
+            let bits_per = if p.sparsity == Sparsity::Eighth { 4 } else { 3 };
+            let mut addrs = vec![0usize; CH_GROUP / SGROUP * keep];
+            for a in addrs.iter_mut() {
+                *a = read_bits(&p.data, &mut pos, bits_per) as usize;
+            }
+            for g in 0..CH_GROUP / SGROUP {
+                for s in 0..keep {
+                    let r = addrs[g * keep + s] & (SGROUP - 1);
+                    let v = sign_extend(read_bits(&p.data, &mut pos, 4));
+                    if v != 0 {
+                        vals[g * SGROUP + r] = v;
+                    }
+                }
+            }
+        }
+    }
+    (scales, vals)
+}
+
+/// Assemble the per-port HBM streams for a whole matrix: stream[p] holds
+/// the packages of output channels p, p+32, p+64, … in order, each
+/// column's CH_GROUP portions contiguous (the AXI burst unit).
+pub fn port_streams(m: &QuantMatrix, sparsity: Sparsity) -> Vec<Vec<u8>> {
+    let mut streams: Vec<Vec<u8>> = vec![Vec::new(); HBM_PORTS];
+    let groups = m.k.div_ceil(CH_GROUP);
+    for col in 0..m.n {
+        let port = super::port_of(col);
+        for g in 0..groups {
+            let pkg = encode_package(m, col, g * CH_GROUP, sparsity);
+            streams[port].extend_from_slice(&pkg.data);
+        }
+    }
+    streams
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pack::package_bits;
+    use crate::quant::{prune_log_scale, quantize};
+    use crate::util::rng::Rng;
+
+    fn pruned(k: usize, n: usize, keep: usize, seed: u64) -> QuantMatrix {
+        let mut rng = Rng::new(seed);
+        let mut w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        prune_log_scale(&mut w, k, n, keep);
+        quantize(&w, k, n)
+    }
+
+    #[test]
+    fn package_size_matches_fig5() {
+        for (keep, sp) in [
+            (8, Sparsity::Dense),
+            (4, Sparsity::Half),
+            (2, Sparsity::Quarter),
+            (1, Sparsity::Eighth),
+        ] {
+            let m = pruned(CH_GROUP, 4, keep, 42);
+            let p = encode_package(&m, 0, 0, sp);
+            let want = package_bits(sp, best_encoding(sp)).total().div_ceil(8);
+            assert_eq!(p.data.len(), want, "sparsity {sp:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_sparsities() {
+        for (keep, sp) in [
+            (8, Sparsity::Dense),
+            (4, Sparsity::Half),
+            (2, Sparsity::Quarter),
+            (1, Sparsity::Eighth),
+        ] {
+            let m = pruned(CH_GROUP, 4, keep, keep as u64 * 3 + 1);
+            for col in 0..4 {
+                let p = encode_package(&m, col, 0, sp);
+                let (scales, vals) = decode_package(&p);
+                for b in 0..CH_GROUP / QBLOCK {
+                    assert_eq!(scales[b], m.scales[b * m.n + col]);
+                }
+                for r in 0..CH_GROUP {
+                    assert_eq!(
+                        vals[r],
+                        m.q[r * m.n + col],
+                        "sparsity {sp:?} col {col} row {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_rows_decode_to_zero() {
+        // matrix shorter than CH_GROUP: the padded tail must be zeros
+        let m = pruned(QBLOCK * 2, 2, 4, 9);
+        let p = encode_package(&m, 1, 0, Sparsity::Half);
+        let (_, vals) = decode_package(&p);
+        for r in m.k..CH_GROUP {
+            assert_eq!(vals[r], 0);
+        }
+    }
+
+    #[test]
+    fn port_streams_cover_all_columns() {
+        let m = pruned(CH_GROUP, 64, 4, 11);
+        let streams = port_streams(&m, Sparsity::Half);
+        let per_pkg = package_bits(Sparsity::Half, MaskEncoding::OneHot)
+            .total()
+            .div_ceil(8);
+        // 64 columns over 32 ports = 2 packages per port
+        assert!(streams.iter().all(|s| s.len() == 2 * per_pkg));
+    }
+
+    #[test]
+    fn negative_values_roundtrip() {
+        // INT4 sign extension: -8..-1 must survive the nibble trip.
+        let mut m = pruned(CH_GROUP, 1, 8, 13);
+        for r in 0..16 {
+            m.q[r] = -8 + (r % 8) as i8 - 0; // includes -8 and 0..-1 range
+        }
+        let p = encode_package(&m, 0, 0, Sparsity::Dense);
+        let (_, vals) = decode_package(&p);
+        for r in 0..16 {
+            assert_eq!(vals[r], m.q[r], "row {r}");
+        }
+    }
+}

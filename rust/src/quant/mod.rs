@@ -1,0 +1,302 @@
+//! Block-level INT4 quantization and log-scale structured sparsity
+//! (paper §III.C) — the weight-compression substrate.
+//!
+//! * 128 adjacent input channels share one FP16 scale (symmetric INT4).
+//! * Log-scale structured sparsity: within every group of 8 adjacent
+//!   input channels (per output column), only k ∈ {8, 4, 2, 1} weights
+//!   are kept (dense / 50% / 75% / 87.5%) — the kept fraction is a power
+//!   of two, which is what lets the time-unrolled PE stay at 100%
+//!   utilization for any sparsity level.
+//!
+//! This module must agree bit-for-bit with `python/compile/model.py`'s
+//! `quantize`/`prune_log_scale` (tested via the shared recipe).
+
+pub mod nm;
+pub mod sparse;
+
+use crate::fp::minifloat::{f16_decode, f16_encode};
+
+/// Input channels per quantization block (shared scale).
+pub const QBLOCK: usize = 128;
+/// Structured-sparsity group: the "eight adjacent data" unit.
+pub const SGROUP: usize = 8;
+
+/// A column-major quantized matrix: values in [-8, 7], one FP16 scale per
+/// (QBLOCK input channels × output channel).
+#[derive(Debug, Clone)]
+pub struct QuantMatrix {
+    /// rows = input channels (k), cols = output channels (n)
+    pub k: usize,
+    pub n: usize,
+    /// row-major `k × n` INT4 values stored as i8
+    pub q: Vec<i8>,
+    /// row-major `(k/QBLOCK) × n` FP16 scale bit patterns
+    pub scales: Vec<u16>,
+}
+
+impl QuantMatrix {
+    pub fn scale_rows(&self) -> usize {
+        self.k / QBLOCK
+    }
+
+    /// Dequantized value at (row, col) as f64.
+    pub fn dequant(&self, row: usize, col: usize) -> f64 {
+        let s = self.scales[(row / QBLOCK) * self.n + col];
+        self.q[row * self.n + col] as f64 * f16_decode(s)
+    }
+
+    /// Count of non-zero INT4 values.
+    pub fn nnz(&self) -> usize {
+        self.q.iter().filter(|&&v| v != 0).count()
+    }
+}
+
+/// Symmetric INT4 block quantization with FP16 scales — same recipe as
+/// `python/compile/model.py::quantize` (amax/7, scale rounded through
+/// FP16, zero-scale columns forced to 1.0).
+pub fn quantize(w: &[f32], k: usize, n: usize) -> QuantMatrix {
+    assert_eq!(w.len(), k * n);
+    assert!(k % QBLOCK == 0, "k={k} not a multiple of {QBLOCK}");
+    let blocks = k / QBLOCK;
+    let mut q = vec![0i8; k * n];
+    let mut scales = vec![0u16; blocks * n];
+    // Row-major sweeps (the matrix is row-major): first pass folds |max|
+    // per (block, col) across rows, second pass quantizes — §Perf: ~6×
+    // over the column-major formulation (sequential instead of strided).
+    let mut colbuf = vec![0f32; n]; // per-column amax, then scale
+    for b in 0..blocks {
+        colbuf.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..QBLOCK {
+            let row = &w[(b * QBLOCK + r) * n..(b * QBLOCK + r + 1) * n];
+            for (a, &x) in colbuf.iter_mut().zip(row) {
+                *a = a.max(x.abs());
+            }
+        }
+        let srow = &mut scales[b * n..(b + 1) * n];
+        for (a, s_out) in colbuf.iter_mut().zip(srow.iter_mut()) {
+            let mut s = f16_decode(f16_encode((*a / 7.0) as f64)) as f32;
+            if s == 0.0 {
+                s = 1.0;
+            }
+            *s_out = f16_encode(s as f64);
+            *a = s; // second pass divides by the FP16-rounded scale
+        }
+        for r in 0..QBLOCK {
+            let row = b * QBLOCK + r;
+            let src = &w[row * n..(row + 1) * n];
+            let dst = &mut q[row * n..(row + 1) * n];
+            for ((d, &x), &s) in dst.iter_mut().zip(src).zip(colbuf.iter()) {
+                *d = (x / s).round_ties_even().clamp(-8.0, 7.0) as i8;
+            }
+        }
+    }
+    QuantMatrix { k, n, q, scales }
+}
+
+/// Dequantize back to f32 (row-major k × n).
+pub fn dequantize(m: &QuantMatrix) -> Vec<f32> {
+    let mut out = vec![0f32; m.k * m.n];
+    for r in 0..m.k {
+        for c in 0..m.n {
+            out[r * m.n + c] = m.dequant(r, c) as f32;
+        }
+    }
+    out
+}
+
+/// Log-scale structured magnitude pruning: keep the `keep_of_8` largest-
+/// magnitude weights in every group of 8 adjacent input channels (per
+/// column). keep_of_8 ∈ {8, 4, 2, 1} ⇔ sparsity {0, 50, 75, 87.5}%.
+/// Same recipe as `python/compile/model.py::prune_log_scale`.
+pub fn prune_log_scale(w: &mut [f32], k: usize, n: usize, keep_of_8: usize) {
+    assert_eq!(w.len(), k * n);
+    assert!(k % SGROUP == 0);
+    assert!(
+        matches!(keep_of_8, 1 | 2 | 4 | 8),
+        "keep_of_8 must be a power of two ≤ 8 (log-scale), got {keep_of_8}"
+    );
+    if keep_of_8 >= SGROUP {
+        return;
+    }
+    // Alloc-free selection on stack arrays, sweeping each 8-row band once
+    // (§Perf: removes the per-(group,column) Vec + comparator sort).
+    for g in 0..k / SGROUP {
+        let base = g * SGROUP * n;
+        for c in 0..n {
+            // gather |magnitudes| of the 8-group for this column
+            let mut mag = [0f32; SGROUP];
+            for (i, m) in mag.iter_mut().enumerate() {
+                *m = w[base + i * n + c].abs();
+            }
+            // zero the (8 - keep) smallest: repeatedly drop the min
+            for _ in 0..SGROUP - keep_of_8 {
+                let mut min_i = 0;
+                for i in 1..SGROUP {
+                    // <= : ties drop the later index, keeping the earlier
+                    // one, matching numpy's stable argsort in model.py
+                    if mag[i] <= mag[min_i] {
+                        min_i = i;
+                    }
+                }
+                mag[min_i] = f32::INFINITY; // consumed
+                w[base + min_i * n + c] = 0.0;
+            }
+        }
+    }
+}
+
+/// Sparsity level expressed as kept fraction (log-scale: 1, 1/2, 1/4, 1/8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sparsity {
+    Dense,
+    /// 50%: 4-of-8 kept
+    Half,
+    /// 75%: 2-of-8 kept
+    Quarter,
+    /// 87.5%: 1-of-8 kept
+    Eighth,
+}
+
+impl Sparsity {
+    pub fn keep_of_8(&self) -> usize {
+        match self {
+            Sparsity::Dense => 8,
+            Sparsity::Half => 4,
+            Sparsity::Quarter => 2,
+            Sparsity::Eighth => 1,
+        }
+    }
+
+    pub fn kept_fraction(&self) -> f64 {
+        self.keep_of_8() as f64 / 8.0
+    }
+
+    pub fn percent(&self) -> f64 {
+        100.0 * (1.0 - self.kept_fraction())
+    }
+
+    pub fn all() -> [Sparsity; 4] {
+        [Sparsity::Dense, Sparsity::Half, Sparsity::Quarter, Sparsity::Eighth]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_w(k: usize, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..k * n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        // |w - dq(q(w))| ≤ scale/2 per element (symmetric, 4-bit).
+        let (k, n) = (QBLOCK * 2, 16);
+        let w = random_w(k, n, 1);
+        let m = quantize(&w, k, n);
+        let dq = dequantize(&m);
+        for b in 0..m.scale_rows() {
+            for c in 0..n {
+                let s = f16_decode(m.scales[b * n + c]) as f32;
+                for r in 0..QBLOCK {
+                    let i = (b * QBLOCK + r) * n + c;
+                    assert!(
+                        (w[i] - dq[i]).abs() <= s * 0.5 + 1e-6,
+                        "elem {i}: w={} dq={} s={s}",
+                        w[i],
+                        dq[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_values_in_int4_range() {
+        let (k, n) = (QBLOCK, 8);
+        let w = random_w(k, n, 2);
+        let m = quantize(&w, k, n);
+        assert!(m.q.iter().all(|&v| (-8..=7).contains(&v)));
+    }
+
+    #[test]
+    fn quantize_preserves_block_max_sign() {
+        // The max-|magnitude| element in each block quantizes to ±7 or ±8.
+        let (k, n) = (QBLOCK, 4);
+        let w = random_w(k, n, 3);
+        let m = quantize(&w, k, n);
+        for c in 0..n {
+            let (mut best_r, mut best) = (0, 0.0f32);
+            for r in 0..k {
+                if w[r * n + c].abs() > best {
+                    best = w[r * n + c].abs();
+                    best_r = r;
+                }
+            }
+            let q = m.q[best_r * n + c];
+            assert!(q.abs() >= 6, "block max quantized to {q}");
+            assert_eq!(q.signum() as f32, w[best_r * n + c].signum());
+        }
+    }
+
+    #[test]
+    fn prune_keeps_exactly_k_per_group() {
+        let (k, n) = (QBLOCK, 8);
+        for keep in [1usize, 2, 4] {
+            let mut w = random_w(k, n, 4);
+            prune_log_scale(&mut w, k, n, keep);
+            for g in 0..k / SGROUP {
+                for c in 0..n {
+                    let nz = (0..SGROUP)
+                        .filter(|&i| w[(g * SGROUP + i) * n + c] != 0.0)
+                        .count();
+                    assert!(nz <= keep, "group {g} col {c}: {nz} > {keep}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prune_keeps_largest_magnitudes() {
+        let n = 1;
+        let mut w = vec![0.1f32, -3.0, 0.2, 2.0, -0.05, 0.9, -0.4, 0.3];
+        prune_log_scale(&mut w, 8, n, 2);
+        assert_eq!(w, vec![0.0, -3.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn prune_dense_is_identity() {
+        let mut w = random_w(QBLOCK, 4, 5);
+        let orig = w.clone();
+        prune_log_scale(&mut w, QBLOCK, 4, 8);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prune_rejects_non_log_scale() {
+        let mut w = random_w(SGROUP, 1, 6);
+        prune_log_scale(&mut w, SGROUP, 1, 3);
+    }
+
+    #[test]
+    fn sparsity_percentages() {
+        assert_eq!(Sparsity::Dense.percent(), 0.0);
+        assert_eq!(Sparsity::Half.percent(), 50.0);
+        assert_eq!(Sparsity::Quarter.percent(), 75.0);
+        assert_eq!(Sparsity::Eighth.percent(), 87.5);
+    }
+
+    #[test]
+    fn pruned_then_quantized_nnz_matches() {
+        let (k, n) = (QBLOCK * 2, 8);
+        let mut w = random_w(k, n, 7);
+        prune_log_scale(&mut w, k, n, 2);
+        let m = quantize(&w, k, n);
+        // ≤ 25% kept; some kept weights may quantize to 0
+        assert!(m.nnz() <= k * n / 4);
+        assert!(m.nnz() > k * n / 8, "unexpectedly sparse: {}", m.nnz());
+    }
+}

@@ -1,0 +1,170 @@
+//! Structured-sparse representation: the compiler-side "mask → activation
+//! select" transform that feeds the sparse DMA (paper §III.C).
+//!
+//! For a log-scale-pruned matrix, every group of 8 input channels holds
+//! exactly ≤ keep_of_8 non-zeros per column. The hardware stores only the
+//! kept values plus a mask; the sparse DMA uses the mask to pick the
+//! matching activation lanes. In software we materialize the same thing
+//! as an explicit index tensor `idx[kk, n]` + value tensor `val[kk, n]`
+//! (column-padded groups ensure a rectangular shape — the time-unrolled
+//! micro-architecture's 100%-utilization property).
+
+use super::{QuantMatrix, SGROUP};
+
+/// Sparse-packed matrix: exactly `keep_of_8` slots per 8-channel group
+/// per column (zero-padded within the group when fewer non-zeros exist).
+#[derive(Debug, Clone)]
+pub struct SparseMatrix {
+    pub k: usize,
+    pub n: usize,
+    pub keep_of_8: usize,
+    /// `kk × n` input-channel index of each kept slot (row-major)
+    pub idx: Vec<u32>,
+    /// `kk × n` INT4 value of each kept slot
+    pub val: Vec<i8>,
+    /// `(k/QBLOCK) × n` FP16 scales (shared with the dense layout)
+    pub scales: Vec<u16>,
+}
+
+impl SparseMatrix {
+    /// Rows of the packed representation: k × keep/8.
+    pub fn kk(&self) -> usize {
+        self.k / SGROUP * self.keep_of_8
+    }
+}
+
+/// Pack a (pruned, quantized) matrix into the fixed-slot sparse layout.
+/// Panics if any group/column exceeds `keep_of_8` non-zeros — that means
+/// the matrix was not pruned with the matching pattern.
+pub fn pack_sparse(m: &QuantMatrix, keep_of_8: usize) -> SparseMatrix {
+    assert!(m.k % SGROUP == 0);
+    let groups = m.k / SGROUP;
+    let kk = groups * keep_of_8;
+    let mut idx = vec![0u32; kk * m.n];
+    let mut val = vec![0i8; kk * m.n];
+    for c in 0..m.n {
+        for g in 0..groups {
+            let mut slot = 0usize;
+            for r in 0..SGROUP {
+                let row = g * SGROUP + r;
+                let v = m.q[row * m.n + c];
+                if v != 0 {
+                    assert!(
+                        slot < keep_of_8,
+                        "group {g} col {c} has more than {keep_of_8} non-zeros"
+                    );
+                    let out = (g * keep_of_8 + slot) * m.n + c;
+                    idx[out] = row as u32;
+                    val[out] = v;
+                    slot += 1;
+                }
+            }
+            // unfilled slots keep val=0; point idx at the group base so
+            // gathers stay in-bounds
+            for s in slot..keep_of_8 {
+                idx[(g * keep_of_8 + s) * m.n + c] = (g * SGROUP) as u32;
+            }
+        }
+    }
+    SparseMatrix {
+        k: m.k,
+        n: m.n,
+        keep_of_8,
+        idx,
+        val,
+        scales: m.scales.clone(),
+    }
+}
+
+/// Reference sparse VMM (f64): y = x · W using only the packed slots.
+/// Mirrors `python/compile/kernels/sparse_vmm.py`.
+pub fn sparse_vmm_ref(s: &SparseMatrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), s.k);
+    let kk = s.kk();
+    let mut y = vec![0f64; s.n];
+    for c in 0..s.n {
+        let mut acc = 0f64;
+        for r in 0..kk {
+            let i = r * s.n + c;
+            let row = s.idx[i] as usize;
+            let scale = crate::fp::minifloat::f16_decode(
+                s.scales[(row / super::QBLOCK) * s.n + c],
+            );
+            acc += x[row] * s.val[i] as f64 * scale;
+        }
+        y[c] = acc;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{prune_log_scale, quantize, QBLOCK};
+    use crate::util::rng::Rng;
+
+    fn pruned_quant(k: usize, n: usize, keep: usize, seed: u64) -> QuantMatrix {
+        let mut rng = Rng::new(seed);
+        let mut w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        prune_log_scale(&mut w, k, n, keep);
+        quantize(&w, k, n)
+    }
+
+    #[test]
+    fn packed_shape_is_rectangular() {
+        let m = pruned_quant(QBLOCK, 8, 2, 1);
+        let s = pack_sparse(&m, 2);
+        assert_eq!(s.kk(), QBLOCK / 8 * 2);
+        assert_eq!(s.idx.len(), s.kk() * 8);
+    }
+
+    #[test]
+    fn sparse_vmm_matches_dense() {
+        // The packed representation must compute the same product as the
+        // dense (pruned) matrix — the 100%-utilization claim is lossless.
+        let (k, n) = (QBLOCK * 2, 16);
+        for keep in [1usize, 2, 4] {
+            let m = pruned_quant(k, n, keep, keep as u64);
+            let s = pack_sparse(&m, keep);
+            let mut rng = Rng::new(99);
+            let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+            let y_sparse = sparse_vmm_ref(&s, &x);
+            // dense reference
+            for c in 0..n {
+                let mut acc = 0f64;
+                for r in 0..k {
+                    acc += x[r] * m.dequant(r, c);
+                }
+                assert!(
+                    (acc - y_sparse[c]).abs() < 1e-9,
+                    "col {c}: dense {acc} vs sparse {}",
+                    y_sparse[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn indices_stay_in_group() {
+        let m = pruned_quant(QBLOCK, 4, 2, 7);
+        let s = pack_sparse(&m, 2);
+        for g in 0..m.k / SGROUP {
+            for slot in 0..2 {
+                for c in 0..4 {
+                    let row = s.idx[(g * 2 + slot) * 4 + c] as usize;
+                    assert!(row / SGROUP == g, "idx escaped its group");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn overfull_group_rejected() {
+        // A dense matrix cannot be packed at keep_of_8 = 2.
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..QBLOCK * 2).map(|_| 1.0 + rng.f32()).collect();
+        let m = quantize(&w, QBLOCK, 2);
+        pack_sparse(&m, 2);
+    }
+}

@@ -1,0 +1,90 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The python side (`python/compile/aot.py`) lowers the JAX/Pallas model to
+//! HLO *text* (see `/opt/xla-example/README.md` for why text, not proto).
+//! This module wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+use anyhow::Result;
+use std::path::Path;
+
+/// A compiled HLO executable bound to a PJRT client.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// Shared PJRT client wrapper. One per process.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<HloExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse hlo text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(HloExecutable {
+            exe,
+            name: path.display().to_string(),
+        })
+    }
+}
+
+impl HloExecutable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs; returns the elements of the result tuple.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the single output
+    /// buffer is a tuple literal; we decompose it for the caller.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result {}: {e:?}", self.name))?;
+        lit.decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose tuple {}: {e:?}", self.name))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape literal to {dims:?}: {e:?}"))
+}
+
+/// Extract an f32 vec from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to_vec f32: {e:?}"))
+}
+
+pub mod model;
+pub mod weights;

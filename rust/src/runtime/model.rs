@@ -1,0 +1,319 @@
+//! LLM artifact runtime: manifest + weights + compiled HLO executables.
+//!
+//! Weights are uploaded to the PJRT device **once** at load time
+//! (`execute_b` with persistent `PjRtBuffer`s); the per-step inputs
+//! (token id, position, KV cache) are tiny. Python never runs here.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::weights::{self, DType, Tensor};
+use crate::util::json::Json;
+
+/// Model architecture constants mirrored from the python ModelConfig.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ffn: usize,
+    pub max_tokens: usize,
+    pub head_dim: usize,
+    pub n_params: usize,
+    pub cache_shape: [usize; 4], // [L, max_tokens, kvh, head_dim]
+}
+
+/// A loaded, compiled, weight-resident model ready to serve.
+pub struct LlmRuntime {
+    pub info: ModelInfo,
+    client: xla::PjRtClient,
+    decode_exe: xla::PjRtLoadedExecutable,
+    /// (bucket_len, executable) sorted ascending by bucket.
+    prefill_exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+/// Mutable per-request state: the KV cache (host copy) and position.
+pub struct Session {
+    pub pos: usize,
+    k_cache: Vec<f32>,
+    v_cache: Vec<f32>,
+    cache_dims: Vec<usize>,
+}
+
+fn parse_manifest(dir: &Path, name: &str) -> Result<(Json, ModelInfo)> {
+    let mpath = dir.join(format!("{name}.manifest.json"));
+    let text = std::fs::read_to_string(&mpath)
+        .with_context(|| format!("read manifest {}", mpath.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("manifest json: {e}"))?;
+    let cfg = j.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+    let get = |k: &str| -> Result<usize> {
+        cfg.get(k)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest config missing {k}"))
+    };
+    let cache: Vec<usize> = j
+        .get("cache_shape")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("manifest missing cache_shape"))?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect();
+    let info = ModelInfo {
+        name: name.to_string(),
+        vocab: get("vocab")?,
+        d_model: get("d_model")?,
+        n_layers: get("n_layers")?,
+        n_heads: get("n_heads")?,
+        n_kv_heads: get("n_kv_heads")?,
+        d_ffn: get("d_ffn")?,
+        max_tokens: get("max_tokens")?,
+        head_dim: get("head_dim")?,
+        n_params: get("n_params")?,
+        cache_shape: [cache[0], cache[1], cache[2], cache[3]],
+    };
+    Ok((j, info))
+}
+
+impl LlmRuntime {
+    /// Load `<dir>/<name>.*` artifacts, compile, and upload weights.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let dir = dir.as_ref();
+        let (manifest, info) = parse_manifest(dir, name)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let p: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&p)
+                .map_err(|e| anyhow!("parse hlo {}: {e:?}", p.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", p.display()))
+        };
+
+        let decode_file = manifest
+            .get("decode")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("manifest missing decode"))?;
+        let decode_exe = compile(decode_file)?;
+
+        let mut prefill_exes = Vec::new();
+        if let Some(Json::Obj(m)) = manifest.get("prefill") {
+            for (bucket, file) in m {
+                let t: usize = bucket.parse().context("prefill bucket key")?;
+                let f = file
+                    .as_str()
+                    .ok_or_else(|| anyhow!("prefill file not a string"))?;
+                prefill_exes.push((t, compile(f)?));
+            }
+        }
+        prefill_exes.sort_by_key(|(t, _)| *t);
+        if prefill_exes.is_empty() {
+            bail!("manifest has no prefill buckets");
+        }
+
+        let wfile = manifest
+            .get("weights")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("manifest missing weights"))?;
+        let tensors = weights::load(dir.join(wfile))?;
+        let expected: Vec<String> = manifest
+            .get("weight_names")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing weight_names"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+        if expected.len() != tensors.len() {
+            bail!(
+                "weights container has {} tensors, manifest expects {}",
+                tensors.len(),
+                expected.len()
+            );
+        }
+        let mut weight_bufs = Vec::with_capacity(tensors.len());
+        for (t, name) in tensors.iter().zip(&expected) {
+            if &t.name != name {
+                bail!("weight order mismatch: {} vs {}", t.name, name);
+            }
+            weight_bufs.push(upload(&client, t)?);
+        }
+        Ok(LlmRuntime { info, client, decode_exe, prefill_exes, weight_bufs })
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefill_exes
+            .iter()
+            .map(|(t, _)| *t)
+            .find(|t| *t >= len)
+    }
+
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        self.prefill_exes.iter().map(|(t, _)| *t).collect()
+    }
+
+    /// Run prefill over `prompt` (padded to a bucket); returns the logits
+    /// of the last real token plus a fresh session.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > self.info.max_tokens {
+            bail!(
+                "prompt of {} exceeds max_tokens {}",
+                prompt.len(),
+                self.info.max_tokens
+            );
+        }
+        let (bucket, exe) = self
+            .prefill_exes
+            .iter()
+            .find(|(t, _)| *t >= prompt.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "prompt of {} exceeds largest prefill bucket {:?}",
+                    prompt.len(),
+                    self.prefill_exes.last().map(|(t, _)| *t)
+                )
+            })?;
+        let mut padded = prompt.to_vec();
+        padded.resize(*bucket, 0);
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&padded, &[*bucket], None)
+            .map_err(|e| anyhow!("upload tokens: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        args.extend(self.weight_bufs.iter());
+        let outs = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("prefill execute: {e:?}"))?;
+        let mut tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("prefill fetch: {e:?}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("prefill detuple: {e:?}"))?;
+        let [logits, kc, vc]: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| anyhow!("prefill returned wrong arity"))?;
+        let all_logits = logits
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
+        let v = self.info.vocab;
+        let last = prompt.len() - 1;
+        let last_logits = all_logits[last * v..(last + 1) * v].to_vec();
+        let session = Session {
+            pos: prompt.len(),
+            k_cache: kc.to_vec::<f32>().map_err(|e| anyhow!("kc to_vec: {e:?}"))?,
+            v_cache: vc.to_vec::<f32>().map_err(|e| anyhow!("vc to_vec: {e:?}"))?,
+            cache_dims: self.info.cache_shape.to_vec(),
+        };
+        Ok((last_logits, session))
+    }
+
+    /// One decode step: feed `token`, advance the session, return logits.
+    pub fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        if session.pos >= self.info.max_tokens {
+            bail!("KV cache full (max_tokens={})", self.info.max_tokens);
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[token], &[1], None)
+            .map_err(|e| anyhow!("upload token: {e:?}"))?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[session.pos as i32], &[1], None)
+            .map_err(|e| anyhow!("upload pos: {e:?}"))?;
+        let kc_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&session.k_cache, &session.cache_dims, None)
+            .map_err(|e| anyhow!("upload k cache: {e:?}"))?;
+        let vc_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&session.v_cache, &session.cache_dims, None)
+            .map_err(|e| anyhow!("upload v cache: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &pos_buf, &kc_buf, &vc_buf];
+        args.extend(self.weight_bufs.iter());
+        let outs = self
+            .decode_exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("decode execute: {e:?}"))?;
+        let mut tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("decode fetch: {e:?}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decode detuple: {e:?}"))?;
+        let [logits, kc, vc]: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| anyhow!("decode returned wrong arity"))?;
+        session.k_cache = kc.to_vec::<f32>().map_err(|e| anyhow!("kc to_vec: {e:?}"))?;
+        session.v_cache = vc.to_vec::<f32>().map_err(|e| anyhow!("vc to_vec: {e:?}"))?;
+        session.pos += 1;
+        logits
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))
+    }
+}
+
+// NOTE: `buffer_from_host_raw_bytes` in xla 0.1.6 is buggy — it passes the
+// `ElementType` discriminant (F32=10) where XLA expects a `PrimitiveType`
+// (F32=11), silently creating F16 buffers. Always go through the typed
+// `buffer_from_host_buffer`, which maps the type correctly.
+
+fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    match t.dtype {
+        DType::F32 => upload_f32_bytes(client, &t.data, &t.dims),
+        DType::I32 => {
+            let v: Vec<i32> = t
+                .data
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            client
+                .buffer_from_host_buffer::<i32>(&v, &t.dims, None)
+                .map_err(|e| anyhow!("upload tensor {}: {e:?}", t.name))
+        }
+        DType::I8 => {
+            // &[u8] -> &[i8] is a bit-identical reinterpretation
+            let v: &[i8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const i8, t.data.len())
+            };
+            client
+                .buffer_from_host_buffer::<i8>(v, &t.dims, None)
+                .map_err(|e| anyhow!("upload tensor {}: {e:?}", t.name))
+        }
+    }
+    .map_err(|e| anyhow!("tensor {}: {e}", t.name))
+}
+
+fn upload_f32_bytes(
+    client: &xla::PjRtClient,
+    data: &[u8],
+    dims: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    let v: Vec<f32> = data
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    client
+        .buffer_from_host_buffer::<f32>(&v, dims, None)
+        .map_err(|e| anyhow!("upload f32 buffer: {e:?}"))
+}
+
+/// Greedy argmax sampling.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}

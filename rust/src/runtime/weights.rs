@@ -1,0 +1,180 @@
+//! Loader for the `*.weights.bin` tensor container emitted by
+//! `python/compile/aot.py` (format: magic "ELLMWT01", u32 count, then per
+//! tensor: u32 name_len, name, u8 dtype, u8 ndim, u32 dims…, u64 nbytes,
+//! raw little-endian data).
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"ELLMWT01";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::I32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// One tensor from the container: raw bytes plus shape/dtype metadata.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn n_elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor {} is {:?}, not f32", self.name, self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i8(&self) -> Result<&[u8]> {
+        if self.dtype != DType::I8 {
+            bail!("tensor {} is {:?}, not i8", self.name, self.dtype);
+        }
+        Ok(&self.data)
+    }
+}
+
+/// Read all tensors from a weights container file.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open weights {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse(&buf).with_context(|| format!("parse weights {}", path.display()))
+}
+
+fn parse(buf: &[u8]) -> Result<Vec<Tensor>> {
+    let mut at = 0usize;
+    let take = |at: &mut usize, n: usize| -> Result<&[u8]> {
+        if *at + n > buf.len() {
+            bail!("truncated container at byte {at}");
+        }
+        let s = &buf[*at..*at + n];
+        *at += n;
+        Ok(s)
+    };
+    if take(&mut at, 8)? != MAGIC {
+        bail!("bad magic");
+    }
+    let count = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len =
+            u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut at, name_len)?.to_vec())
+            .context("tensor name not utf-8")?;
+        let dtype = DType::from_code(take(&mut at, 1)?[0])?;
+        let ndim = take(&mut at, 1)?[0] as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize);
+        }
+        let nbytes =
+            u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap()) as usize;
+        let expect = dims.iter().product::<usize>() * dtype.size();
+        if nbytes != expect {
+            bail!("tensor {name}: nbytes {nbytes} != shape-implied {expect}");
+        }
+        let data = take(&mut at, nbytes)?.to_vec();
+        out.push(Tensor { name, dtype, dims, data });
+    }
+    if at != buf.len() {
+        bail!("trailing bytes after last tensor");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_container() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "a": f32[2]
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'a');
+        b.push(0); // f32
+        b.push(1); // ndim
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&8u64.to_le_bytes());
+        b.extend_from_slice(&1.5f32.to_le_bytes());
+        b.extend_from_slice(&(-2.0f32).to_le_bytes());
+        // tensor "q": i8[2,2]
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'q');
+        b.push(1); // i8
+        b.push(2); // ndim
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&4u64.to_le_bytes());
+        b.extend_from_slice(&[1u8, 255, 0, 7]);
+        b
+    }
+
+    #[test]
+    fn parse_sample() {
+        let ts = parse(&sample_container()).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "a");
+        assert_eq!(ts[0].as_f32().unwrap(), vec![1.5, -2.0]);
+        assert_eq!(ts[1].dims, vec![2, 2]);
+        assert_eq!(ts[1].as_i8().unwrap(), &[1, 255, 0, 7]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample_container();
+        b[0] = b'X';
+        assert!(parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let b = sample_container();
+        assert!(parse(&b[..b.len() - 1]).is_err());
+        assert!(parse(&b[..20]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let mut b = sample_container();
+        b.push(0);
+        assert!(parse(&b).is_err());
+    }
+}

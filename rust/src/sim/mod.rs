@@ -1,0 +1,90 @@
+//! Cycle-approximate model of the EdgeLLM accelerator on the VCU128.
+//!
+//! This is the substitution for the physical FPGA (DESIGN.md §3): it
+//! implements the paper's own roofline arithmetic —
+//!
+//! * HBM: 32 AXI ports × 256 bit/cycle at 280 MHz feed the MatMUL/MHA
+//!   operators (8192 bits per AXI cycle; the compute array at 140 MHz
+//!   consumes 16384 bits per compute cycle — "twice higher frequency").
+//! * DDR: ~60 GB/s for activations and the non-HBM operators.
+//! * PE array: 4096 FP16×INT4 MACs/cycle (FFN), 1024 FP16×FP16
+//!   MACs/cycle (MHA) at 140 MHz.
+//! * Per-operator latency = max(memory streaming, compute) / utilization
+//!   + DMA/instruction overhead, calibrated against Table III.
+//!
+//! Modules: [`operators`] per-op latency, [`engine`] instruction-stream
+//! execution with latency hiding, [`power`] Table-IV power/energy.
+
+pub mod engine;
+pub mod operators;
+pub mod power;
+
+/// Clock and bandwidth constants of the paper's operating point.
+#[derive(Debug, Clone)]
+pub struct HwConfig {
+    /// compute clock (Hz) — paper: 140 MHz
+    pub compute_hz: f64,
+    /// AXI/DMA clock (Hz) — paper: 280 MHz
+    pub axi_hz: f64,
+    /// HBM bits per AXI cycle (32 ports × 256 bit)
+    pub hbm_bits_per_axi_cycle: f64,
+    /// DDR bandwidth (bytes/s) — paper: ~60 GB/s edge DDR
+    pub ddr_bytes_per_s: f64,
+    /// FP16×INT4 MACs per compute cycle (FFN mode)
+    pub ffn_macs_per_cycle: f64,
+    /// FP16×FP16 MACs per compute cycle (MHA mode)
+    pub mha_macs_per_cycle: f64,
+    /// sustained fraction of peak HBM bandwidth (paper measures 70–80%)
+    pub hbm_utilization: f64,
+    /// sustained fraction of peak DDR bandwidth
+    pub ddr_utilization: f64,
+    /// elements/s for the element-wise nonlinear pipelines at 140 MHz
+    pub elemwise_per_cycle: f64,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig {
+            compute_hz: 140e6,
+            axi_hz: 280e6,
+            hbm_bits_per_axi_cycle: 8192.0,
+            ddr_bytes_per_s: 60e9,
+            ffn_macs_per_cycle: 4096.0,
+            mha_macs_per_cycle: 1024.0,
+            hbm_utilization: 0.75,
+            ddr_utilization: 0.79,
+            elemwise_per_cycle: 1.0,
+        }
+    }
+}
+
+impl HwConfig {
+    /// Peak HBM streaming rate in bytes/s (the paper's ideal_operation_time
+    /// denominator: 8192 bit per 3.571 ns cycle ≈ 286.7 GB/s).
+    pub fn hbm_bytes_per_s(&self) -> f64 {
+        self.hbm_bits_per_axi_cycle / 8.0 * self.axi_hz
+    }
+}
+
+/// Which memory system backs the weight/KV stream (Table III's HBM vs DDR
+/// ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Memory {
+    Hbm,
+    Ddr,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hbm_peak_matches_paper_ideal() {
+        // Paper: ideal time of the 4096×4096 INT4 VMM = 29.25 µs
+        // (4096·4096·4 bit / 8192 bit/cycle × 3.571 ns).
+        let hw = HwConfig::default();
+        let bytes = 4096.0 * 4096.0 * 4.0 / 8.0;
+        let t = bytes / hw.hbm_bytes_per_s() * 1e6;
+        assert!((t - 29.25).abs() < 0.1, "ideal Q time {t} µs");
+    }
+}

@@ -1,0 +1,331 @@
+//! Per-operator latency model, calibrated against Table III.
+//!
+//! Operator classes follow Fig. 6's fused 17-step block graph (plus the
+//! two output-layer steps). Latency formulas:
+//!
+//! * weight VMMs (`VmmBn*`): max(weight-stream time, compute time) /
+//!   utilization + output-proportional BN overhead. In decode (1 token)
+//!   these are pure weight streaming; in prefill weights are reused
+//!   across the token tile, so compute dominates.
+//! * KV-cache VMMs (`MhaMatmul`): FP16 stream of ctx×kv_dim from HBM +
+//!   MHA-mode compute at 1024 MAC/cycle.
+//! * element-wise ops (`LayerNorm`, `Rope`, `Softmax`, `Act`): DMA
+//!   overhead + per-element pipeline cost from/to DDR.
+//! * cache writes (`Dat2Hbm`): one token's K or V row over the KV DMA.
+
+use super::{HwConfig, Memory};
+use crate::models::{LlmArch, SparseStrategy};
+use crate::pack;
+use crate::quant::Sparsity;
+
+/// Operator classes of the fused block graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// RMSNorm/LayerNorm over d_model
+    LayerNorm,
+    /// weight MatMUL + BatchNorm/residual epilogue; fields: (k, n, sparsity)
+    VmmBn,
+    /// rotary embedding over n channels
+    Rope,
+    /// KV-cache matmul (Q·Kᵀ or SFT·V): per-head ctx × head_dim
+    MhaMatmul,
+    /// softmax over heads × ctx
+    Softmax,
+    /// K/V row write to HBM
+    Dat2Hbm,
+    /// Swiglu / nonlinear activation over n channels
+    Act,
+}
+
+/// One instruction in the compiled stream.
+#[derive(Debug, Clone)]
+pub struct OpInstance {
+    pub class: OpClass,
+    pub name: &'static str,
+    /// input channels (VMM) or element count basis
+    pub k: usize,
+    /// output channels
+    pub n: usize,
+    pub sparsity: Sparsity,
+}
+
+/// Latency of one operator instance in microseconds.
+///
+/// `tokens`: tokens processed this pass (1 in decode, T in prefill).
+/// `ctx`: attention context length (cache entries visible).
+pub fn latency_us(
+    hw: &HwConfig,
+    op: &OpInstance,
+    tokens: usize,
+    ctx: usize,
+    mem: Memory,
+) -> f64 {
+    let t = tokens as f64;
+    match op.class {
+        OpClass::VmmBn => {
+            // packaged weight bytes (scale+mask+wt) — sparsity pays off here
+            let wbytes = pack::matrix_bytes(op.k, op.n, op.sparsity) as f64;
+            let (bw, util) = match mem {
+                Memory::Hbm => (hw.hbm_bytes_per_s(), hw.hbm_utilization),
+                Memory::Ddr => (hw.ddr_bytes_per_s, hw.ddr_utilization),
+            };
+            let stream_s = wbytes / (bw * util);
+            // compute: tokens × k × n MACs on the (sparsity-skipping) array
+            let macs = t * op.k as f64 * op.n as f64
+                * op.sparsity.kept_fraction();
+            let mut compute_s = macs / (hw.ffn_macs_per_cycle * hw.compute_hz);
+            if mem == Memory::Ddr && tokens > 1 {
+                // prefill on DDR: activation tiles contend with the weight
+                // stream on the single DDR channel (Table III: ~1.6×)
+                compute_s *= 1.64;
+            }
+            let overhead_s = op.n as f64 * 2e-9; // BN/residual epilogue
+            (stream_s.max(compute_s) + overhead_s) * 1e6
+        }
+        OpClass::MhaMatmul => {
+            // stream ctx rows of FP16 KV (one kv head group) from HBM…
+            let kv_bytes = ctx as f64 * op.k as f64 * 2.0;
+            let (bw, util) = match mem {
+                Memory::Hbm => (hw.hbm_bytes_per_s(), hw.hbm_utilization),
+                Memory::Ddr => (hw.ddr_bytes_per_s, hw.ddr_utilization),
+            };
+            let stream_s = kv_bytes / (bw * util);
+            // …against tokens × heads × head_dim × ctx FP16 MACs
+            let macs = t * op.n as f64 * ctx as f64;
+            let compute_s = macs / (hw.mha_macs_per_cycle * hw.compute_hz);
+            let overhead_s = 2.0e-6; // DMA setup on the KV path
+            (stream_s.max(compute_s) + overhead_s) * 1e6
+        }
+        OpClass::LayerNorm => {
+            // Table III: decode 9.55 µs, prefill(128) 533 µs → linear in
+            // tokens with ~5.4 µs setup and ~4.1 µs/token at d=4096.
+            let per_token = op.n as f64 / 4096.0 * 4.12;
+            let (oh, derate) = match mem {
+                Memory::Hbm => (5.4, 1.0),
+                Memory::Ddr => (5.4, 1.30), // Table III: 15.84/694 µs
+            };
+            oh + t * per_token * derate
+        }
+        OpClass::Rope => {
+            // Table III EMB_Q: decode 7.79 µs, prefill 274 µs (d=4096)
+            let per_token = op.n as f64 / 4096.0 * 2.1;
+            let (oh, derate) = match mem {
+                Memory::Hbm => (5.6, 1.0),
+                Memory::Ddr => (5.6, 1.75),
+            };
+            oh + t * per_token * derate
+        }
+        OpClass::Softmax => {
+            // elems = heads × ctx per query token; Table III: decode@128
+            // 43.4 µs, prefill 873 µs → ~1.6 ns/elem + large fixed cost
+            // (cache-read DMA program).
+            let elems = t * op.n as f64 * ctx as f64;
+            let (oh, per_elem_ns) = match mem {
+                Memory::Hbm => (36.9, 1.594),
+                Memory::Ddr => (41.5, 1.92),
+            };
+            oh + elems * per_elem_ns * 1e-3
+        }
+        OpClass::Dat2Hbm => {
+            // one token's KV row (k bytes FP16) over the write-DMA path
+            let bytes = t * op.k as f64 * 2.0;
+            let (bw, oh) = match mem {
+                Memory::Hbm => (hw.hbm_bytes_per_s() / 32.0, 0.2), // one port
+                Memory::Ddr => (hw.ddr_bytes_per_s / 8.0, 1.5),
+            };
+            oh + bytes / bw * 1e6
+        }
+        OpClass::Act => {
+            // Table III ACT (Swiglu, d_ffn=13696): decode 15.36 µs,
+            // prefill 890 µs → ~6.9 µs/token at 13696 ch + 8.5 µs setup
+            let per_token = op.n as f64 / 13696.0 * 6.9;
+            let (oh, derate) = match mem {
+                Memory::Hbm => (8.5, 1.0),
+                Memory::Ddr => (8.5, 1.35),
+            };
+            oh + t * per_token * derate
+        }
+    }
+}
+
+/// Build Fig. 6's fused operator sequence for one transformer block.
+pub fn block_ops(arch: &LlmArch, strat: &SparseStrategy) -> Vec<OpInstance> {
+    let d = arch.d_model;
+    let kv = arch.kv_dim();
+    let f = arch.d_ffn;
+    let h = arch.n_heads;
+    vec![
+        OpInstance { class: OpClass::LayerNorm, name: "RMSNorm", k: d, n: d, sparsity: Sparsity::Dense },
+        OpInstance { class: OpClass::VmmBn, name: "VMM-BN(Q)", k: d, n: d, sparsity: strat.q },
+        OpInstance { class: OpClass::Rope, name: "PosEmb(Q)", k: d, n: d, sparsity: Sparsity::Dense },
+        OpInstance { class: OpClass::VmmBn, name: "VMM-BN(K)", k: d, n: kv, sparsity: strat.k },
+        OpInstance { class: OpClass::Rope, name: "PosEmb(K)", k: kv, n: kv, sparsity: Sparsity::Dense },
+        OpInstance { class: OpClass::Dat2Hbm, name: "KcacheHBM", k: kv, n: kv, sparsity: Sparsity::Dense },
+        OpInstance { class: OpClass::MhaMatmul, name: "VMM(Q*K^T)", k: kv, n: h * arch.head_dim, sparsity: Sparsity::Dense },
+        OpInstance { class: OpClass::Softmax, name: "Softmax", k: h, n: h, sparsity: Sparsity::Dense },
+        OpInstance { class: OpClass::VmmBn, name: "VMM-BN(V)", k: d, n: kv, sparsity: strat.v },
+        OpInstance { class: OpClass::Dat2Hbm, name: "VcacheHBM", k: kv, n: kv, sparsity: Sparsity::Dense },
+        OpInstance { class: OpClass::MhaMatmul, name: "VMM(SFT*V)", k: kv, n: h * arch.head_dim, sparsity: Sparsity::Dense },
+        OpInstance { class: OpClass::VmmBn, name: "VMM-BN-RES(O)", k: d, n: d, sparsity: strat.o },
+        OpInstance { class: OpClass::LayerNorm, name: "RMSNorm", k: d, n: d, sparsity: Sparsity::Dense },
+        // h→4h covers SwiGLU's gate and up projections (steps 14 and 16
+        // in Table III — two separate ~27 MB streams in GLM-6B)
+        OpInstance { class: OpClass::VmmBn, name: "VMM-BN(gate)", k: d, n: f, sparsity: strat.h_to_4h },
+        OpInstance { class: OpClass::Act, name: "Swiglu", k: f, n: f, sparsity: Sparsity::Dense },
+        OpInstance { class: OpClass::VmmBn, name: "VMM-BN(up)", k: d, n: f, sparsity: strat.h_to_4h },
+        OpInstance { class: OpClass::VmmBn, name: "VMM-BN-RES(4h-h)", k: f, n: d, sparsity: strat.h4_to_h },
+    ]
+}
+
+/// Output head: final norm + LM head VMM (paper steps 18–19). The
+/// compiler's last-token optimization makes these run at tokens=1 even in
+/// prefill.
+pub fn output_ops(arch: &LlmArch) -> Vec<OpInstance> {
+    vec![
+        OpInstance {
+            class: OpClass::LayerNorm,
+            name: "Outlayer_LN",
+            k: arch.d_model,
+            n: arch.d_model,
+            sparsity: Sparsity::Dense,
+        },
+        OpInstance {
+            class: OpClass::VmmBn,
+            name: "VMMBN_Arg",
+            k: arch.d_model,
+            n: arch.vocab,
+            sparsity: Sparsity::Dense,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{DENSE, GLM_6B};
+
+    fn hw() -> HwConfig {
+        HwConfig::default()
+    }
+
+    #[test]
+    fn decode_q_vmm_near_table3() {
+        // Table III step-2 decode (HBM): 47.12 µs for the 4096×4096 Q VMM.
+        let op = OpInstance {
+            class: OpClass::VmmBn,
+            name: "Q",
+            k: 4096,
+            n: 4096,
+            sparsity: Sparsity::Dense,
+        };
+        let t = latency_us(&hw(), &op, 1, 128, Memory::Hbm);
+        assert!((t - 47.12).abs() / 47.12 < 0.15, "Q decode {t} µs");
+        // DDR: 181.66 µs
+        let td = latency_us(&hw(), &op, 1, 128, Memory::Ddr);
+        assert!((td - 181.66).abs() / 181.66 < 0.15, "Q decode DDR {td} µs");
+    }
+
+    #[test]
+    fn prefill_q_vmm_near_table3() {
+        // Table III step-2 prefill@128 (HBM): 4770 µs — compute-bound.
+        let op = OpInstance {
+            class: OpClass::VmmBn,
+            name: "Q",
+            k: 4096,
+            n: 4096,
+            sparsity: Sparsity::Dense,
+        };
+        let t = latency_us(&hw(), &op, 128, 128, Memory::Hbm);
+        assert!((t - 4770.0).abs() / 4770.0 < 0.25, "Q prefill {t} µs");
+        let td = latency_us(&hw(), &op, 128, 128, Memory::Ddr);
+        assert!((td - 7841.0).abs() / 7841.0 < 0.25, "Q prefill DDR {td} µs");
+    }
+
+    #[test]
+    fn ffn_vmm_near_table3() {
+        // Table III step-14 (gate proj, 4096×13696): decode 137.98 µs.
+        let op = OpInstance {
+            class: OpClass::VmmBn,
+            name: "gate",
+            k: 4096,
+            n: 13696,
+            sparsity: Sparsity::Dense,
+        };
+        let t = latency_us(&hw(), &op, 1, 128, Memory::Hbm);
+        assert!((t - 137.98).abs() / 137.98 < 0.2, "gate decode {t} µs");
+        // DDR: 596.56 µs
+        let td = latency_us(&hw(), &op, 1, 128, Memory::Ddr);
+        assert!((td - 596.56).abs() / 596.56 < 0.2, "gate decode DDR {td} µs");
+    }
+
+    #[test]
+    fn layernorm_matches_both_calibration_points() {
+        let op = OpInstance {
+            class: OpClass::LayerNorm,
+            name: "LN",
+            k: 4096,
+            n: 4096,
+            sparsity: Sparsity::Dense,
+        };
+        let dec = latency_us(&hw(), &op, 1, 128, Memory::Hbm);
+        assert!((dec - 9.55).abs() < 0.5, "{dec}");
+        let pre = latency_us(&hw(), &op, 128, 128, Memory::Hbm);
+        assert!((pre - 533.0).abs() / 533.0 < 0.05, "{pre}");
+    }
+
+    #[test]
+    fn softmax_matches_calibration() {
+        let op = OpInstance {
+            class: OpClass::Softmax,
+            name: "SM",
+            k: 32,
+            n: 32,
+            sparsity: Sparsity::Dense,
+        };
+        let dec = latency_us(&hw(), &op, 1, 128, Memory::Hbm);
+        assert!((dec - 43.38).abs() / 43.38 < 0.05, "{dec}");
+        let pre = latency_us(&hw(), &op, 128, 128, Memory::Hbm);
+        assert!((pre - 872.5).abs() / 872.5 < 0.05, "{pre}");
+    }
+
+    #[test]
+    fn sparsity_cuts_vmm_decode_time() {
+        let mk = |s: Sparsity| OpInstance {
+            class: OpClass::VmmBn,
+            name: "x",
+            k: 4096,
+            n: 4096,
+            sparsity: s,
+        };
+        let hwc = hw();
+        let dense = latency_us(&hwc, &mk(Sparsity::Dense), 1, 1, Memory::Hbm);
+        let half = latency_us(&hwc, &mk(Sparsity::Half), 1, 1, Memory::Hbm);
+        let eighth = latency_us(&hwc, &mk(Sparsity::Eighth), 1, 1, Memory::Hbm);
+        assert!(half < dense * 0.82, "50% sparse {half} vs dense {dense}");
+        assert!(eighth < dense * 0.45, "87.5% sparse {eighth} vs {dense}");
+    }
+
+    #[test]
+    fn mha_latency_grows_linearly_with_ctx() {
+        let op = OpInstance {
+            class: OpClass::MhaMatmul,
+            name: "qk",
+            k: 256,
+            n: 4096,
+            sparsity: Sparsity::Dense,
+        };
+        let hwc = hw();
+        let t128 = latency_us(&hwc, &op, 1, 128, Memory::Hbm);
+        let t1024 = latency_us(&hwc, &op, 1, 1024, Memory::Hbm);
+        let grow = (t1024 - 2.0) / (t128 - 2.0); // subtract fixed overhead
+        assert!((grow - 8.0).abs() < 0.5, "growth {grow}");
+    }
+
+    #[test]
+    fn block_has_17_steps() {
+        // Fig. 6 / Table III: one block = 17 fused hardware steps.
+        let ops = block_ops(&GLM_6B, &DENSE);
+        assert_eq!(ops.len(), 17);
+        assert_eq!(output_ops(&GLM_6B).len(), 2);
+    }
+}

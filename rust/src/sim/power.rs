@@ -1,0 +1,162 @@
+//! Power/energy model (Table IV, Table V).
+//!
+//! The FPGA idles at 40.36 W once the 140/280 MHz bitstream is loaded;
+//! each operator adds an activity-dependent increment:
+//!
+//! * element-wise operators: small control+BRAM activity (~0.3–0.8 W)
+//! * KV-path ops: one HBM pseudo-channel active (~0.5 W)
+//! * weight VMMs: the full HBM interface plus the PE array — the paper
+//!   measures up to ~18 W over standby, scaling with streamed bandwidth
+//!   and array occupancy.
+//!
+//! Energy per token integrates power over the per-operator latencies from
+//! the timing model; "normalized average power" is the duty-cycle-weighted
+//! mean the paper reports as 56.86 W.
+
+use super::engine::Simulator;
+use super::operators::{block_ops, latency_us, output_ops, OpClass, OpInstance};
+
+/// Idle power after bitstream load (Table IV "standby").
+pub const STANDBY_W: f64 = 40.36;
+
+/// Active-power increment (W over standby) while an operator runs.
+pub fn active_increment_w(op: &OpInstance) -> f64 {
+    match op.class {
+        OpClass::LayerNorm => 0.64,
+        OpClass::Rope => 0.36,
+        OpClass::Softmax => 0.29,
+        OpClass::Act => 0.75,
+        OpClass::Dat2Hbm => 0.26,
+        // KV-cache matmuls keep only a slice of HBM + the MHA array busy
+        OpClass::MhaMatmul => 0.60,
+        // weight VMMs: HBM interface + PE array, scaled by output width
+        // (how much of the 4096-lane array a column tile keeps busy) —
+        // calibrated to Table IV's 54.02 W for Q (n=4096) and ~42.8 W for
+        // K/V (n=256).
+        OpClass::VmmBn => {
+            let occupancy = (op.n as f64 / 4096.0).min(1.0);
+            let base = 1.5; // HBM PHY + DMA engines clocked up
+            let stream = 7.16 * occupancy.max(0.0875); // interface activity
+            let array = 5.0 * occupancy; // PE array switching
+            base + stream + array
+        }
+    }
+}
+
+/// Power while executing `op` (Table IV rows).
+pub fn op_power_w(op: &OpInstance) -> f64 {
+    STANDBY_W + active_increment_w(op)
+}
+
+/// Energy and duty-cycle-weighted power of one forward pass.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub energy_j: f64,
+    pub time_s: f64,
+    /// duty-cycle-weighted mean power (paper's "normalized average")
+    pub avg_power_w: f64,
+}
+
+/// Integrate power over one decode step at context `ctx`.
+pub fn decode_energy(sim: &Simulator, ctx: usize) -> EnergyReport {
+    energy_of_pass(sim, 1, ctx)
+}
+
+fn energy_of_pass(sim: &Simulator, tokens: usize, ctx: usize) -> EnergyReport {
+    let mut energy = 0.0f64;
+    let mut time = 0.0f64;
+    let layers = sim.arch.n_layers as f64;
+    for op in &block_ops(&sim.arch, &sim.strat) {
+        let us = latency_us(&sim.hw, op, tokens, ctx, sim.mem) * layers;
+        energy += op_power_w(op) * us * 1e-6;
+        time += us * 1e-6;
+    }
+    for op in &output_ops(&sim.arch) {
+        let us = latency_us(&sim.hw, op, 1, ctx, sim.mem);
+        energy += op_power_w(op) * us * 1e-6;
+        time += us * 1e-6;
+    }
+    EnergyReport { energy_j: energy, time_s: time, avg_power_w: energy / time }
+}
+
+/// Tokens per joule at steady-state decode (Table V's efficiency metric).
+pub fn tokens_per_joule(sim: &Simulator, ctx: usize) -> f64 {
+    let rep = decode_energy(sim, ctx);
+    1.0 / rep.energy_j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{GLM_6B, STRATEGY_3};
+    use crate::quant::Sparsity;
+    use crate::sim::Memory;
+
+    fn q_op() -> OpInstance {
+        OpInstance {
+            class: OpClass::VmmBn,
+            name: "Q",
+            k: 4096,
+            n: 4096,
+            sparsity: Sparsity::Dense,
+        }
+    }
+
+    #[test]
+    fn table4_vmm_q_power() {
+        // Table IV: VMM-BN(Q) 54.02 W.
+        let p = op_power_w(&q_op());
+        assert!((p - 54.02).abs() < 1.5, "Q power {p} W");
+    }
+
+    #[test]
+    fn table4_kv_vmm_power() {
+        // Table IV: VMM-BN(K/V) ≈ 42.8 W (narrow output).
+        let op = OpInstance {
+            class: OpClass::VmmBn,
+            name: "K",
+            k: 4096,
+            n: 256,
+            sparsity: Sparsity::Dense,
+        };
+        let p = op_power_w(&op);
+        assert!((p - 42.8).abs() < 1.5, "K power {p} W");
+    }
+
+    #[test]
+    fn table4_nonlinear_powers_small() {
+        // Table IV: nonlinear operators all land between 40.6 and 41.2 W.
+        for (class, lo, hi) in [
+            (OpClass::LayerNorm, 40.6, 41.2),
+            (OpClass::Rope, 40.6, 41.2),
+            (OpClass::Softmax, 40.6, 41.2),
+            (OpClass::Act, 40.6, 41.3),
+        ] {
+            let op = OpInstance { class, name: "x", k: 4096, n: 4096, sparsity: Sparsity::Dense };
+            let p = op_power_w(&op);
+            assert!(p >= lo && p <= hi, "{class:?}: {p} W");
+        }
+    }
+
+    #[test]
+    fn normalized_average_near_paper() {
+        // Table IV: normalized average 56.86 W. Our duty-cycle-weighted
+        // decode average must land in the same regime (±15%): VMM-heavy
+        // steps dominate the time axis.
+        let sim = Simulator::new(&GLM_6B, &STRATEGY_3, Memory::Hbm);
+        let rep = decode_energy(&sim, 128);
+        assert!(
+            (rep.avg_power_w - 56.86).abs() / 56.86 < 0.15,
+            "avg power {} W",
+            rep.avg_power_w
+        );
+    }
+
+    #[test]
+    fn sparse3_tokens_per_joule_near_paper() {
+        // Table V: EdgeLLM 1.51 token/J on the 6B model.
+        let sim = Simulator::new(&GLM_6B, &STRATEGY_3, Memory::Hbm);
+        let tpj = tokens_per_joule(&sim, 128);
+        assert!((tpj - 1.51).abs() / 1.51 < 0.2, "{tpj} token/J");
+    }
+}

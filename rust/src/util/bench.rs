@@ -1,0 +1,146 @@
+//! Tiny benchmark + report-table harness (offline build: no criterion).
+//!
+//! Every `benches/*.rs` binary regenerates one paper table/figure: it runs
+//! the workload, prints the paper's reported rows next to ours, and (for
+//! hot-path benches) measures wall time with warmup + repeated samples.
+
+use std::time::Instant;
+
+/// Measure `f`'s median wall time over `samples` runs after `warmup` runs.
+/// Returns (median_secs, min_secs, mean_secs).
+pub fn time_it<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Timing { median, min, mean }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median: f64,
+    pub min: f64,
+    pub mean: f64,
+}
+
+impl Timing {
+    pub fn fmt_human(&self) -> String {
+        fmt_secs(self.median)
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Fixed-width ASCII table printer for paper-vs-measured reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn rowv(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |sep: char| {
+            let mut s = String::from("+");
+            for wi in &w {
+                s.push_str(&sep.to_string().repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        println!("{}", line('-'));
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!(" {:<width$} ", h, width = w[i]))
+            .collect();
+        println!("|{}|", hdr.join("|"));
+        println!("{}", line('='));
+        for r in &self.rows {
+            let cells: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<width$} ", c, width = w[i]))
+                .collect();
+            println!("|{}|", cells.join("|"));
+        }
+        println!("{}", line('-'));
+    }
+}
+
+/// Format a ratio like "1.91x".
+pub fn ratio(ours: f64, baseline: f64) -> String {
+    format!("{:.2}x", ours / baseline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let t = time_it(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.min >= 0.0 && t.median >= t.min);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with(" s"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".to_string()]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Shared utilities implemented in-tree (offline build: the vendored crate
+//! set has no rand/serde/criterion/clap).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+/// Minimal CLI flag parser: `--key value` and `--flag` forms.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse() -> Self {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_positional() {
+        let a = Args::from_iter(
+            ["serve", "--model", "tiny", "--verbose", "--port", "7070"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get_usize("port", 0), 7070);
+        assert!(a.has("verbose"));
+        assert!(!a.has("missing"));
+    }
+}

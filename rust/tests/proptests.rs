@@ -1,0 +1,193 @@
+//! Randomized property tests over the substrates (deterministic seeds;
+//! the offline build has no proptest crate, so cases are generated with
+//! the in-tree xoshiro RNG).
+
+use edgellm::compiler::expr::Expr;
+use edgellm::fp::minifloat::{f16_decode, f16_encode, FP16, FP20};
+use edgellm::fp::mixpe::{
+    exact_dot_fp16_fp16, exact_dot_fp16_int4, mac_fp16_fp16, mac_fp16_int4, PAPER_PE,
+};
+use edgellm::pack::layout::{decode_package, encode_package};
+use edgellm::pack::CH_GROUP;
+use edgellm::quant::sparse::{pack_sparse, sparse_vmm_ref};
+use edgellm::quant::{dequantize, prune_log_scale, quantize, Sparsity, QBLOCK};
+use edgellm::util::rng::Rng;
+
+const CASES: usize = 50;
+
+#[test]
+fn prop_quantize_dequantize_bounded_everywhere() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let k = QBLOCK * (1 + (case % 3));
+        let n = 8 + (case % 5) * 8;
+        let scale = (2.0f64).powi(rng.int_in(-6, 6) as i32) as f32;
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * scale).collect();
+        let m = quantize(&w, k, n);
+        let dq = dequantize(&m);
+        for r in 0..k {
+            for c in 0..n {
+                let s = f16_decode(m.scales[(r / QBLOCK) * n + c]) as f32;
+                let err = (w[r * n + c] - dq[r * n + c]).abs();
+                assert!(err <= s * 0.5 + s * 1e-3, "case {case} ({r},{c}): err {err} s {s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_pack_is_lossless() {
+    let mut rng = Rng::new(202);
+    for case in 0..CASES {
+        let keep = [1usize, 2, 4][case % 3];
+        let k = QBLOCK * (1 + case % 2);
+        let n = 8;
+        let mut w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        prune_log_scale(&mut w, k, n, keep);
+        let m = quantize(&w, k, n);
+        let s = pack_sparse(&m, keep);
+        let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let y = sparse_vmm_ref(&s, &x);
+        for c in 0..n {
+            let dense: f64 = (0..k).map(|r| x[r] * m.dequant(r, c)).sum();
+            assert!(
+                (dense - y[c]).abs() <= 1e-9 * (1.0 + dense.abs()),
+                "case {case} col {c}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_hbm_package_roundtrip_random_matrices() {
+    let mut rng = Rng::new(303);
+    for case in 0..20 {
+        let (keep, sp) = [
+            (8usize, Sparsity::Dense),
+            (4, Sparsity::Half),
+            (2, Sparsity::Quarter),
+            (1, Sparsity::Eighth),
+        ][case % 4];
+        let n = 4;
+        let mut w: Vec<f32> = (0..CH_GROUP * n).map(|_| rng.normal() as f32).collect();
+        prune_log_scale(&mut w, CH_GROUP, n, keep);
+        let m = quantize(&w, CH_GROUP, n);
+        let col = case % n;
+        let pkg = encode_package(&m, col, 0, sp);
+        let (scales, vals) = decode_package(&pkg);
+        for b in 0..CH_GROUP / QBLOCK {
+            assert_eq!(scales[b], m.scales[b * n + col], "case {case}");
+        }
+        for r in 0..CH_GROUP {
+            assert_eq!(vals[r], m.q[r * n + col], "case {case} row {r}");
+        }
+    }
+}
+
+#[test]
+fn prop_mixpe_error_bounded_by_alignment_quantum() {
+    // |PE - exact| ≤ lanes · 2^(e_max - 18) style bound, expressed via the
+    // absolute-sum norm (robust formulation).
+    let mut rng = Rng::new(404);
+    for case in 0..CASES {
+        let lanes = [8usize, 32, 128][case % 3];
+        let a: Vec<u16> = (0..lanes)
+            .map(|_| f16_encode(rng.normal() * (rng.int_in(-3, 3) as f64).exp2()))
+            .collect();
+        let w: Vec<i8> = (0..lanes).map(|_| rng.int_in(-8, 7) as i8).collect();
+        let got = f16_decode(mac_fp16_int4(&PAPER_PE, &a, &w, f16_encode(1.0)));
+        let exact = exact_dot_fp16_int4(&a, &w, 1.0);
+        let norm: f64 = a
+            .iter()
+            .zip(&w)
+            .map(|(&ai, &wi)| (f16_decode(ai) * wi as f64).abs())
+            .sum();
+        assert!(
+            (got - exact).abs() <= 2e-3 * norm.max(1e-20) + 1e-9,
+            "case {case}: got {got} exact {exact} norm {norm}"
+        );
+    }
+}
+
+#[test]
+fn prop_mixpe_fp16_mode_error_bounded() {
+    let mut rng = Rng::new(505);
+    for case in 0..CASES {
+        let lanes = 32;
+        let gen = |rng: &mut Rng| f16_encode(rng.normal() * (rng.int_in(-3, 3) as f64).exp2());
+        let a: Vec<u16> = (0..lanes).map(|_| gen(&mut rng)).collect();
+        let b: Vec<u16> = (0..lanes).map(|_| gen(&mut rng)).collect();
+        let got = f16_decode(mac_fp16_fp16(&PAPER_PE, &a, &b, f16_encode(1.0)));
+        let exact = exact_dot_fp16_fp16(&a, &b, 1.0);
+        let norm: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&ai, &bi)| (f16_decode(ai) * f16_decode(bi)).abs())
+            .sum();
+        assert!(
+            (got - exact).abs() <= 2e-3 * norm.max(1e-20) + 1e-9,
+            "case {case}: got {got} exact {exact}"
+        );
+    }
+}
+
+#[test]
+fn prop_fp20_refines_fp16() {
+    // every FP16-representable value is exactly representable in FP20
+    let mut rng = Rng::new(606);
+    for _ in 0..500 {
+        let bits = (rng.next_u32() & 0xFFFF) as u32;
+        if (bits >> 10) & 0x1F == 0x1F {
+            continue; // skip inf/nan
+        }
+        let x = FP16.decode(bits);
+        assert_eq!(FP20.round(x), x, "bits {bits:#06x}");
+    }
+}
+
+#[test]
+fn prop_expr_simplify_preserves_semantics() {
+    let mut rng = Rng::new(707);
+    for case in 0..200 {
+        let e = random_expr(&mut rng, 4);
+        let s = Expr::simplify(&e);
+        for tok in [0i64, 1, 7, 127, 4096] {
+            assert_eq!(e.eval(tok), s.eval(tok), "case {case}: {e} vs {s}");
+        }
+        assert!(s.size() <= e.size(), "simplify grew {e} -> {s}");
+    }
+}
+
+fn random_expr(rng: &mut Rng, depth: usize) -> std::rc::Rc<Expr> {
+    if depth == 0 || rng.below(4) == 0 {
+        return if rng.below(2) == 0 {
+            Expr::token()
+        } else {
+            Expr::c(rng.int_in(0, 64))
+        };
+    }
+    let a = random_expr(rng, depth - 1);
+    let b = random_expr(rng, depth - 1);
+    match rng.below(5) {
+        0 => Expr::add(a, b),
+        1 => Expr::sub(a, b),
+        2 => Expr::mul(a, b),
+        // divisor must be non-zero: fold constants away from 0
+        3 => Expr::div(a, Expr::c(rng.int_in(1, 16))),
+        _ => Expr::max(a, b),
+    }
+}
+
+#[test]
+fn prop_rng_choose_indices_uniformish() {
+    // sanity on the test harness itself: chosen index sets cover the range
+    let mut rng = Rng::new(808);
+    let mut hits = vec![0usize; 64];
+    for _ in 0..2000 {
+        for i in rng.choose_indices(64, 8) {
+            hits[i] += 1;
+        }
+    }
+    let (min, max) = (hits.iter().min().unwrap(), hits.iter().max().unwrap());
+    assert!(*min > 150 && *max < 350, "min {min} max {max}");
+}

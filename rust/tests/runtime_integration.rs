@@ -1,0 +1,122 @@
+//! End-to-end integration: AOT HLO artifacts executed from rust must
+//! reproduce the python reference loop bit-for-bit (within f32 tolerance).
+//!
+//! Requires `make artifacts` to have produced artifacts/test.*.
+
+use edgellm::runtime::model::{argmax, LlmRuntime};
+use edgellm::util::json::Json;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("test.manifest.json").exists()
+}
+
+#[test]
+fn golden_generation_matches_python() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let golden: Json = Json::parse(
+        &std::fs::read_to_string(dir.join("test.golden.json")).unwrap(),
+    )
+    .unwrap();
+    let prompt: Vec<i32> = golden
+        .get("prompt")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+    let expect_tokens: Vec<i32> = golden
+        .get("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+    let expect_prefill_head: Vec<f32> = golden
+        .get("prefill_logits_head")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+
+    let rt = LlmRuntime::load(&dir, "test").expect("load test model");
+    assert_eq!(rt.info.vocab, 256);
+
+    let (logits, mut session) = rt.prefill(&prompt).expect("prefill");
+    for (i, (&got, &want)) in
+        logits.iter().zip(&expect_prefill_head).enumerate()
+    {
+        assert!(
+            (got - want).abs() < 1e-4,
+            "prefill logit {i}: {got} vs {want}"
+        );
+    }
+
+    let mut cur = argmax(&logits);
+    let mut generated = Vec::new();
+    let mut last_logits = Vec::new();
+    for _ in 0..expect_tokens.len() {
+        generated.push(cur);
+        last_logits = rt.decode(&mut session, cur).expect("decode");
+        cur = argmax(&last_logits);
+    }
+    assert_eq!(generated, expect_tokens, "greedy token trajectory");
+
+    let expect_decode_head: Vec<f32> = golden
+        .get("last_decode_logits_head")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    for (i, (&got, &want)) in
+        last_logits.iter().zip(&expect_decode_head).enumerate()
+    {
+        assert!(
+            (got - want).abs() < 1e-4,
+            "decode logit {i}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn session_respects_max_tokens() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = LlmRuntime::load(artifacts_dir(), "test").unwrap();
+    let max = rt.info.max_tokens;
+    let (_logits, mut s) = rt.prefill(&[1, 2, 3]).unwrap();
+    let mut steps = 0;
+    while s.pos < max {
+        rt.decode(&mut s, 7).unwrap();
+        steps += 1;
+    }
+    assert_eq!(steps, max - 3);
+    assert!(rt.decode(&mut s, 7).is_err(), "cache-full must error");
+}
+
+#[test]
+fn prefill_rejects_oversized_prompt() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = LlmRuntime::load(artifacts_dir(), "test").unwrap();
+    let too_long = vec![1i32; rt.info.max_tokens + 1];
+    assert!(rt.prefill(&too_long).is_err());
+    assert!(rt.prefill(&[]).is_err());
+}

@@ -1,0 +1,87 @@
+//! Serving-path integration tests: engine queue → decode loop → protocol.
+//! Requires `make artifacts` (uses the fast `test` model).
+
+use edgellm::coordinator::engine::{Engine, EngineConfig};
+use edgellm::coordinator::sampler::Sampling;
+use edgellm::coordinator::server::process_line;
+use edgellm::runtime::model::LlmRuntime;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Option<Engine> {
+    if !artifacts_dir().join("test.manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let rt = LlmRuntime::load(artifacts_dir(), "test").unwrap();
+    Some(Engine::new(rt, EngineConfig::default()))
+}
+
+#[test]
+fn engine_serves_fifo_requests() {
+    let Some(mut eng) = engine() else { return };
+    eng.submit("Hello", 4, Sampling::Greedy);
+    eng.submit("World", 6, Sampling::Greedy);
+    assert_eq!(eng.pending(), 2);
+    let all = eng.run_all().unwrap();
+    assert_eq!(all.len(), 2);
+    assert_eq!(all[0].id, 1);
+    assert_eq!(all[1].id, 2);
+    assert_eq!(all[0].n_generated, 4);
+    assert_eq!(all[1].n_generated, 6);
+    assert!(all[0].tokens_per_s > 0.0);
+    assert!(all[0].sim_tokens_per_s > 0.0);
+}
+
+#[test]
+fn greedy_generation_is_deterministic() {
+    let Some(mut eng) = engine() else { return };
+    eng.submit("abc", 8, Sampling::Greedy);
+    eng.submit("abc", 8, Sampling::Greedy);
+    let all = eng.run_all().unwrap();
+    assert_eq!(all[0].text, all[1].text);
+}
+
+#[test]
+fn generation_respects_kv_budget() {
+    let Some(mut eng) = engine() else { return };
+    // test model: max_tokens=32, largest prefill bucket=16.
+    let long_prompt = "x".repeat(100);
+    eng.submit(&long_prompt, 1000, Sampling::Greedy);
+    let c = eng.step().unwrap().unwrap();
+    // prompt clamped to bucket, generation clamped to cache budget
+    assert!(c.n_prompt <= 16, "{}", c.n_prompt);
+    assert!(c.n_prompt + c.n_generated <= 32);
+}
+
+#[test]
+fn protocol_request_response() {
+    let Some(mut eng) = engine() else { return };
+    let reply = process_line(
+        &mut eng,
+        r#"{"prompt": "Hi", "max_new_tokens": 3, "temperature": 0}"#,
+    )
+    .unwrap();
+    assert_eq!(reply.get("n_generated").unwrap().as_usize(), Some(3));
+    assert!(reply.get("text").is_some());
+    assert!(reply.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn protocol_rejects_bad_json() {
+    let Some(mut eng) = engine() else { return };
+    assert!(process_line(&mut eng, "not json").is_err());
+    assert!(process_line(&mut eng, r#"{"no_prompt": 1}"#).is_err());
+}
+
+#[test]
+fn temperature_sampling_changes_output() {
+    let Some(mut eng) = engine() else { return };
+    eng.submit("seed text", 12, Sampling::Temperature(5.0));
+    eng.submit("seed text", 12, Sampling::Temperature(5.0));
+    let all = eng.run_all().unwrap();
+    // hot sampling with different RNG positions: overwhelmingly different
+    assert_ne!(all[0].text, all[1].text);
+}
