@@ -65,22 +65,22 @@ fn main() -> anyhow::Result<()> {
         1.0 / e.energy_j
     );
 
-    println!("== 5. functional generation through AOT artifacts ==");
+    println!("== 5. functional generation through the serving engine ==");
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("test.manifest.json").exists() {
-        let rt = LlmRuntime::load(&dir, "test")?;
-        let mut eng = Engine::new(rt, EngineConfig::default());
-        eng.submit("Hello EdgeLLM", 16, Sampling::Greedy);
-        let c = eng.step()?.unwrap();
-        println!(
-            "   generated {} tokens in {:.1} ms ({:.0} tok/s on CPU PJRT)",
-            c.n_generated,
-            c.decode_s * 1e3,
-            c.tokens_per_s
-        );
-    } else {
-        println!("   (skipped: run `make artifacts` first)");
-    }
+    let rt = LlmRuntime::load_or_reference(
+        &dir,
+        "test",
+        edgellm::runtime::reference::ReferenceConfig::default(),
+    );
+    let mut eng = Engine::new(rt, EngineConfig::default());
+    eng.submit("Hello EdgeLLM", 16, Sampling::Greedy);
+    let c = eng.step()?.unwrap();
+    println!(
+        "   generated {} tokens in {:.1} ms ({:.0} tok/s measured)",
+        c.n_generated,
+        c.decode_s * 1e3,
+        c.tokens_per_s
+    );
     println!("quickstart OK");
     Ok(())
 }

@@ -12,14 +12,21 @@
 use edgellm::coordinator::engine::{Engine, EngineConfig};
 use edgellm::coordinator::sampler::Sampling;
 use edgellm::runtime::model::LlmRuntime;
+use edgellm::runtime::reference::ReferenceConfig;
 use edgellm::util::bench::Table;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let model = std::env::args().nth(1).unwrap_or_else(|| "tiny".into());
-    eprintln!("loading {model} artifacts (compiles HLO + uploads weights)…");
     let t0 = std::time::Instant::now();
-    let rt = LlmRuntime::load(&dir, &model)?;
+    let rt = LlmRuntime::load_or_reference(
+        &dir,
+        &model,
+        ReferenceConfig {
+            max_tokens: 128,
+            ..ReferenceConfig::default()
+        },
+    );
     eprintln!(
         "loaded {} ({:.1}M params) in {:.1}s",
         rt.info.name,
@@ -28,7 +35,8 @@ fn main() -> anyhow::Result<()> {
     );
     let mut engine = Engine::new(rt, EngineConfig::default());
 
-    // a batch of edge-assistant-style requests (batch-1 decode, FIFO)
+    // a batch of edge-assistant-style requests, interleaved by the
+    // continuous-batching scheduler
     let requests = [
         ("Hello robot, please report status.", 48),
         ("What is the battery level?", 32),

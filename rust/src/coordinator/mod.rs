@@ -1,7 +1,9 @@
 //! L3 coordinator: the CPU half of the CPU-FPGA heterogeneous system.
 //!
-//! * [`engine`] — request queue, KV sessions, decode loop, metrics
-//! * [`server`] — the LAN (TCP/JSON-lines) inference server of Fig. 8
+//! * [`engine`] — continuous-batching scheduler: request queue, live
+//!   session pool, batched decode rounds, retirement, serving metrics
+//! * [`server`] — the LAN (TCP/JSON-lines) inference server of Fig. 8,
+//!   multi-client: every connection feeds the shared scheduler
 //! * [`tokenizer`] — byte-level token ids for the functional tiny model
 //! * [`sampler`] — greedy / temperature / top-p sampling
 

@@ -1,37 +1,253 @@
 //! LAN inference server (paper Fig. 8's deployment: FPGA+LLM as server,
-//! a thin client encodes/decodes and talks to users).
+//! a thin client encodes/decodes and talks to users) — multi-client.
 //!
 //! Protocol: JSON lines over TCP.
-//!   request : {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0}
+//!   request : {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0,
+//!              "top_p": 0.9}
 //!   response: {"id": 1, "text": "...", "tokens_per_s": ...,
 //!              "first_token_ms": ..., "sim_tokens_per_s": ...}
-//! One request per line; the server answers in order (batch-1 decode, as
-//! in the paper's edge operating point).
+//!   stats   : {"stats": true} →
+//!             {"queue_depth": ..., "active_sessions": ...,
+//!              "rounds": ..., "decode_tokens": ...,
+//!              "tokens_per_s": ..., "sim_tokens_per_s": ...}
+//!
+//! Malformed input never kills a connection: every request line gets a
+//! reply, either a completion or `{"error": "..."}`.
+//!
+//! Unlike the original one-blocking-client loop, each connection runs on
+//! its own thread and *enqueues* into the shared continuous-batching
+//! scheduler; a dedicated scheduler thread drives `Engine::step_round`
+//! and routes retired completions back to the waiting connections. Many
+//! clients therefore decode concurrently inside one shared batch.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
 
 use anyhow::Result;
 
-use super::engine::Engine;
+use super::engine::{Completion, Engine};
 use super::sampler::Sampling;
 use crate::util::json::Json;
 
+/// Protocol-level cap on `max_new_tokens`; requests beyond it are
+/// rejected with a structured error (the engine additionally clamps to
+/// the model's KV budget).
+pub const MAX_NEW_TOKENS_LIMIT: usize = 4096;
+
+/// A parsed protocol request.
+pub enum ServerRequest {
+    Generate {
+        prompt: String,
+        max_new_tokens: usize,
+        sampling: Sampling,
+    },
+    Stats,
+}
+
+/// Parse and validate one request line. Pure — no engine needed — so the
+/// protocol surface is testable in isolation.
+pub fn parse_request(line: &str) -> Result<ServerRequest, String> {
+    let req = Json::parse(line).map_err(|e| format!("bad request json: {e}"))?;
+    if req.get("stats").and_then(|v| v.as_bool()) == Some(true) {
+        return Ok(ServerRequest::Stats);
+    }
+    let prompt = req
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .ok_or_else(|| "missing 'prompt'".to_string())?
+        .to_string();
+    let max_new_tokens = match req.get("max_new_tokens") {
+        None => 32,
+        Some(v) => {
+            let n = v
+                .as_f64()
+                .ok_or_else(|| "'max_new_tokens' must be a number".to_string())?;
+            if !(1.0..=MAX_NEW_TOKENS_LIMIT as f64).contains(&n) {
+                return Err(format!(
+                    "'max_new_tokens' out of range: {n} (want 1..={MAX_NEW_TOKENS_LIMIT})"
+                ));
+            }
+            n as usize
+        }
+    };
+    let temperature = req
+        .get("temperature")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as f32;
+    let sampling = match req.get("top_p").and_then(|v| v.as_f64()) {
+        Some(p) if !(0.0..=1.0).contains(&p) => {
+            return Err(format!("'top_p' out of range: {p} (want 0..=1)"));
+        }
+        Some(p) => Sampling::TopP {
+            p: p as f32,
+            temperature: if temperature > 0.0 { temperature } else { 1.0 },
+        },
+        None if temperature <= 0.0 => Sampling::Greedy,
+        None => Sampling::Temperature(temperature),
+    };
+    Ok(ServerRequest::Generate {
+        prompt,
+        max_new_tokens,
+        sampling,
+    })
+}
+
+fn error_json(msg: impl Into<String>) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.into()))])
+}
+
+fn completion_json(c: &Completion) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(c.id as f64)),
+        ("text", Json::Str(c.text.clone())),
+        ("n_prompt", Json::Num(c.n_prompt as f64)),
+        ("n_generated", Json::Num(c.n_generated as f64)),
+        ("first_token_ms", Json::Num(c.first_token_s * 1e3)),
+        ("tokens_per_s", Json::Num(c.tokens_per_s)),
+        ("sim_first_token_ms", Json::Num(c.sim_first_token_ms)),
+        ("sim_tokens_per_s", Json::Num(c.sim_tokens_per_s)),
+    ])
+}
+
+fn stats_json(engine: &Engine) -> Json {
+    let m = engine.metrics();
+    Json::obj(vec![
+        ("queue_depth", Json::Num(engine.pending() as f64)),
+        ("active_sessions", Json::Num(engine.active_sessions() as f64)),
+        ("submitted", Json::Num(m.submitted as f64)),
+        ("completed", Json::Num(m.completed as f64)),
+        ("rounds", Json::Num(m.rounds as f64)),
+        ("decode_tokens", Json::Num(m.decode_tokens as f64)),
+        ("peak_active", Json::Num(m.peak_active as f64)),
+        ("tokens_per_s", Json::Num(m.tokens_per_s())),
+        ("sim_tokens_per_s", Json::Num(m.sim_tokens_per_s())),
+    ])
+}
+
+/// Synchronous protocol entry point: parse one request line, run it on a
+/// dedicated engine, serialize the reply. Always returns a reply object
+/// — protocol or engine failures become `{"error": ...}`.
+///
+/// The threaded server uses the shared scheduler instead (`serve`); this
+/// path backs the CLI and the protocol tests.
+pub fn process_line(engine: &mut Engine, line: &str) -> Json {
+    match parse_request(line) {
+        Err(msg) => error_json(msg),
+        Ok(ServerRequest::Stats) => stats_json(engine),
+        Ok(ServerRequest::Generate {
+            prompt,
+            max_new_tokens,
+            sampling,
+        }) => {
+            engine.submit(&prompt, max_new_tokens, sampling);
+            match engine.step() {
+                Ok(Some(c)) => completion_json(&c),
+                Ok(None) => error_json("queue empty after submit"),
+                Err(e) => error_json(format!("{e:#}")),
+            }
+        }
+    }
+}
+
+type Reply = Result<Completion, String>;
+
+/// State shared between connection threads and the scheduler thread.
+/// Lock order: `engine` before `waiters` — both threads keep it.
+struct Shared {
+    engine: Mutex<Engine>,
+    /// wakes the scheduler when work arrives (paired with `engine`)
+    work: Condvar,
+    waiters: Mutex<HashMap<u64, mpsc::Sender<Reply>>>,
+}
+
 /// Serve forever on `addr` (e.g. "127.0.0.1:7077").
-pub fn serve(engine: &mut Engine, addr: &str) -> Result<()> {
+pub fn serve(engine: Engine, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    eprintln!("edgellm server listening on {addr}");
+    serve_on(engine, listener)
+}
+
+/// Serve forever on an already-bound listener (lets callers bind port 0
+/// and learn the ephemeral address first — used by tests and examples).
+pub fn serve_on(engine: Engine, listener: TcpListener) -> Result<()> {
+    eprintln!(
+        "edgellm server listening on {} (continuous batching)",
+        listener.local_addr()?
+    );
+    let shared = Arc::new(Shared {
+        engine: Mutex::new(engine),
+        work: Condvar::new(),
+        waiters: Mutex::new(HashMap::new()),
+    });
+
+    {
+        let shared = Arc::clone(&shared);
+        thread::spawn(move || scheduler_loop(&shared));
+    }
+
     for stream in listener.incoming() {
-        let stream = stream?;
-        if let Err(e) = handle_client(engine, stream) {
-            eprintln!("client error: {e:#}");
+        match stream {
+            Ok(stream) => {
+                let shared = Arc::clone(&shared);
+                thread::spawn(move || {
+                    if let Err(e) = handle_client(&shared, stream) {
+                        eprintln!("client error: {e:#}");
+                    }
+                });
+            }
+            Err(e) => eprintln!("accept error: {e}"),
         }
     }
     Ok(())
 }
 
-/// Handle one client connection (sequential requests).
-pub fn handle_client(engine: &mut Engine, stream: TcpStream) -> Result<()> {
+/// Drive the shared engine: one `step_round` per iteration while work is
+/// pending, sleeping on the condvar when idle.
+fn scheduler_loop(shared: &Shared) {
+    loop {
+        let mut engine = shared.engine.lock().unwrap();
+        while !engine.has_work() {
+            engine = shared.work.wait(engine).unwrap();
+        }
+        match engine.step_round() {
+            Ok(done) => {
+                if done.is_empty() {
+                    continue;
+                }
+                let mut waiters = shared.waiters.lock().unwrap();
+                for c in done {
+                    if let Some(tx) = waiters.remove(&c.id) {
+                        let _ = tx.send(Ok(c));
+                    }
+                }
+            }
+            Err(e) => {
+                // a runtime failure poisons the whole round; fail every
+                // registered waiter rather than wedging its client. A
+                // failing round can also discard completions it had
+                // already retired (e.g. an admission-time retirement
+                // followed by a decode error), so draining abort_all()'s
+                // queued/live ids alone would leave those clients
+                // blocked forever — clear the whole map. No new waiter
+                // can register while we hold the engine lock.
+                let msg = format!("engine error: {e:#}");
+                eprintln!("{msg}");
+                engine.abort_all();
+                let mut waiters = shared.waiters.lock().unwrap();
+                for (_, tx) in waiters.drain() {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Handle one client connection: each request line is enqueued into the
+/// shared scheduler; the reply is written when the session retires.
+fn handle_client(shared: &Shared, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr()?;
     eprintln!("client connected: {peer}");
     let mut writer = stream.try_clone()?;
@@ -41,9 +257,32 @@ pub fn handle_client(engine: &mut Engine, stream: TcpStream) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match process_line(engine, &line) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+        let reply = match parse_request(&line) {
+            Err(msg) => error_json(msg),
+            Ok(ServerRequest::Stats) => {
+                let engine = shared.engine.lock().unwrap();
+                stats_json(&engine)
+            }
+            Ok(ServerRequest::Generate {
+                prompt,
+                max_new_tokens,
+                sampling,
+            }) => {
+                let (tx, rx) = mpsc::channel::<Reply>();
+                {
+                    let mut engine = shared.engine.lock().unwrap();
+                    let id = engine.submit(&prompt, max_new_tokens, sampling);
+                    // register the waiter before releasing the engine
+                    // lock so the scheduler can't retire the id first
+                    shared.waiters.lock().unwrap().insert(id, tx);
+                    shared.work.notify_one();
+                }
+                match rx.recv() {
+                    Ok(Ok(c)) => completion_json(&c),
+                    Ok(Err(msg)) => error_json(msg),
+                    Err(_) => error_json("server shutting down"),
+                }
+            }
         };
         writeln!(writer, "{reply}")?;
     }
@@ -51,45 +290,9 @@ pub fn handle_client(engine: &mut Engine, stream: TcpStream) -> Result<()> {
     Ok(())
 }
 
-/// Parse one request line, run it, serialize the completion.
-pub fn process_line(engine: &mut Engine, line: &str) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
-    let prompt = req
-        .get("prompt")
-        .and_then(|p| p.as_str())
-        .ok_or_else(|| anyhow::anyhow!("missing 'prompt'"))?
-        .to_string();
-    let max_new = req
-        .get("max_new_tokens")
-        .and_then(|v| v.as_usize())
-        .unwrap_or(32);
-    let temperature = req
-        .get("temperature")
-        .and_then(|v| v.as_f64())
-        .unwrap_or(0.0) as f32;
-    let sampling = if temperature <= 0.0 {
-        Sampling::Greedy
-    } else {
-        Sampling::Temperature(temperature)
-    };
-    engine.submit(&prompt, max_new, sampling);
-    let c = engine
-        .step()?
-        .ok_or_else(|| anyhow::anyhow!("queue empty after submit"))?;
-    Ok(Json::obj(vec![
-        ("id", Json::Num(c.id as f64)),
-        ("text", Json::Str(c.text)),
-        ("n_prompt", Json::Num(c.n_prompt as f64)),
-        ("n_generated", Json::Num(c.n_generated as f64)),
-        ("first_token_ms", Json::Num(c.first_token_s * 1e3)),
-        ("tokens_per_s", Json::Num(c.tokens_per_s)),
-        ("sim_first_token_ms", Json::Num(c.sim_first_token_ms)),
-        ("sim_tokens_per_s", Json::Num(c.sim_tokens_per_s)),
-    ]))
-}
-
 #[cfg(test)]
 mod tests {
+    use super::*;
     use crate::util::json::Json;
 
     #[test]
@@ -98,5 +301,49 @@ mod tests {
             .unwrap();
         assert_eq!(j.get("prompt").unwrap().as_str(), Some("hi"));
         assert_eq!(j.get("max_new_tokens").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn parse_request_validates() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"no_prompt": 1}"#).is_err());
+        assert!(parse_request(r#"{"prompt":"x","max_new_tokens":0}"#).is_err());
+        assert!(parse_request(r#"{"prompt":"x","max_new_tokens":-3}"#).is_err());
+        assert!(parse_request(r#"{"prompt":"x","max_new_tokens":100000}"#).is_err());
+        assert!(parse_request(r#"{"prompt":"x","max_new_tokens":"много"}"#).is_err());
+        assert!(parse_request(r#"{"prompt":"x","top_p":1.5}"#).is_err());
+        assert!(matches!(
+            parse_request(r#"{"stats": true}"#),
+            Ok(ServerRequest::Stats)
+        ));
+    }
+
+    #[test]
+    fn parse_request_sampling_policies() {
+        let greedy = parse_request(r#"{"prompt":"x"}"#).unwrap();
+        assert!(matches!(
+            greedy,
+            ServerRequest::Generate {
+                sampling: Sampling::Greedy,
+                max_new_tokens: 32,
+                ..
+            }
+        ));
+        let temp = parse_request(r#"{"prompt":"x","temperature":0.7}"#).unwrap();
+        assert!(matches!(
+            temp,
+            ServerRequest::Generate {
+                sampling: Sampling::Temperature(_),
+                ..
+            }
+        ));
+        let nucleus = parse_request(r#"{"prompt":"x","top_p":0.9}"#).unwrap();
+        assert!(matches!(
+            nucleus,
+            ServerRequest::Generate {
+                sampling: Sampling::TopP { .. },
+                ..
+            }
+        ));
     }
 }

@@ -1,18 +1,20 @@
 //! edgellm — CLI for the EdgeLLM reproduction.
 //!
 //! Subcommands:
-//!   serve     --artifacts DIR --model NAME --addr HOST:PORT
-//!   generate  --artifacts DIR --model NAME --prompt TEXT [--max-new N]
-//!             [--temperature T]
-//!   simulate  --arch glm|qwen --strategy dense|s1|s2|s3 --mem hbm|ddr
-//!             [--ctx N] [--prefill N]
-//!   info      --artifacts DIR --model NAME
+//!   serve     --addr HOST:PORT [--backend auto|ref|artifacts]
+//!             [--artifacts DIR --model NAME] [--max-active N]
+//!   generate  --prompt TEXT [--max-new N] [--temperature T]
+//!             [--backend auto|ref|artifacts] [--artifacts DIR --model NAME]
+//!   simulate  --arch glm|qwen|tiny --strategy dense|s1|s2|s3 --mem hbm|ddr
+//!             [--ctx N] [--prefill N] [--batch B]
+//!   info      [--backend auto|ref|artifacts] [--artifacts DIR --model NAME]
 
 use edgellm::coordinator::engine::{Engine, EngineConfig};
 use edgellm::coordinator::sampler::Sampling;
 use edgellm::coordinator::server;
 use edgellm::models::{self, SparseStrategy};
 use edgellm::runtime::model::LlmRuntime;
+use edgellm::runtime::reference::ReferenceConfig;
 use edgellm::sim::engine::Simulator;
 use edgellm::sim::Memory;
 use edgellm::util::Args;
@@ -39,46 +41,72 @@ fn main() {
 fn print_help() {
     println!(
         "edgellm — CPU-FPGA heterogeneous LLM accelerator (reproduction)\n\n\
-         USAGE:\n  edgellm serve    --artifacts artifacts --model tiny --addr 127.0.0.1:7077\n  \
-         edgellm generate --artifacts artifacts --model tiny --prompt \"Hello\" --max-new 32\n  \
-         edgellm simulate --arch glm --strategy s3 --ctx 128\n  \
-         edgellm info     --artifacts artifacts --model tiny"
+         USAGE:\n  edgellm serve    --addr 127.0.0.1:7077 --max-active 8\n  \
+         edgellm generate --prompt \"Hello\" --max-new 32\n  \
+         edgellm simulate --arch glm --strategy s3 --ctx 128 --batch 8\n  \
+         edgellm info\n\n\
+         Backends: --backend ref (pure-Rust reference model, default when\n\
+         no artifacts are present), --backend artifacts (AOT PJRT\n\
+         artifacts from --artifacts/--model; needs the pjrt feature)."
     );
 }
 
-fn load_engine(args: &Args) -> anyhow::Result<Engine> {
+/// Load the functional runtime: AOT artifacts when requested/available,
+/// otherwise the always-available pure-Rust reference model.
+fn load_runtime(args: &Args) -> anyhow::Result<LlmRuntime> {
+    let backend = args.get_or("backend", "auto");
     let dir = args.get_or("artifacts", "artifacts");
     let model = args.get_or("model", "tiny");
-    let runtime = LlmRuntime::load(&dir, &model)?;
+    let runtime = match backend.as_str() {
+        "ref" => LlmRuntime::reference(ReferenceConfig::default()),
+        "artifacts" | "pjrt" => LlmRuntime::load(&dir, &model)?,
+        _ => LlmRuntime::load_or_reference(&dir, &model, ReferenceConfig::default()),
+    };
     eprintln!(
         "loaded {} ({:.1}M params, max_tokens={})",
         runtime.info.name,
         runtime.info.n_params as f64 / 1e6,
         runtime.info.max_tokens
     );
-    Ok(Engine::new(runtime, EngineConfig::default()))
+    Ok(runtime)
+}
+
+fn engine_config(args: &Args) -> EngineConfig {
+    EngineConfig {
+        max_active: args.get_usize("max-active", 8),
+        ..EngineConfig::default()
+    }
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let mut engine = load_engine(args)?;
+    let runtime = load_runtime(args)?;
+    let engine = Engine::new(runtime, engine_config(args));
     let addr = args.get_or("addr", "127.0.0.1:7077");
-    server::serve(&mut engine, &addr)
+    server::serve(engine, &addr)
 }
 
 fn cmd_generate(args: &Args) -> anyhow::Result<()> {
-    let mut engine = load_engine(args)?;
+    let runtime = load_runtime(args)?;
+    let mut engine = Engine::new(runtime, engine_config(args));
     let prompt = args.get_or("prompt", "Hello");
     let max_new = args.get_usize("max-new", 32);
     let temp = args.get_f64("temperature", 0.0) as f32;
-    let sampling = if temp <= 0.0 { Sampling::Greedy } else { Sampling::Temperature(temp) };
+    let sampling = if temp <= 0.0 {
+        Sampling::Greedy
+    } else {
+        Sampling::Temperature(temp)
+    };
     engine.submit(&prompt, max_new, sampling);
     let c = engine.step()?.expect("request queued");
     println!("prompt       : {:?}", c.prompt);
     println!("generated    : {:?}", c.text);
     println!("tokens       : {} prompt + {} new", c.n_prompt, c.n_generated);
-    println!("first token  : {:.1} ms (measured, CPU PJRT)", c.first_token_s * 1e3);
-    println!("decode speed : {:.2} token/s (measured, CPU PJRT)", c.tokens_per_s);
-    println!("sim (VCU128) : first {:.2} ms, {:.1} token/s", c.sim_first_token_ms, c.sim_tokens_per_s);
+    println!("first token  : {:.1} ms (measured)", c.first_token_s * 1e3);
+    println!("decode speed : {:.2} token/s (measured)", c.tokens_per_s);
+    println!(
+        "sim (VCU128) : first {:.2} ms, {:.1} token/s",
+        c.sim_first_token_ms, c.sim_tokens_per_s
+    );
     Ok(())
 }
 
@@ -130,6 +158,17 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let pre = sim.prefill(t).breakdown;
         println!("prefill @T={t}: {:.1} ms", pre.total_us() / 1e3);
     }
+    let batch = args.get_usize("batch", 1);
+    if batch > 1 {
+        let round = sim.decode_round(&vec![ctx; batch]);
+        println!(
+            "batched decode @B={batch}: round {:.2} ms | aggregate {:.1} token/s \
+             ({:.2}x over batch-1)",
+            round.total_us() / 1e3,
+            round.tokens_per_s(),
+            round.tokens_per_s() / (1e6 / bd.total_us())
+        );
+    }
     let e = edgellm::sim::power::decode_energy(&sim, ctx);
     println!(
         "power: {:.2} W avg | energy {:.3} J/token | {:.2} token/J",
@@ -141,9 +180,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
-    let dir = args.get_or("artifacts", "artifacts");
-    let model = args.get_or("model", "tiny");
-    let rt = LlmRuntime::load(&dir, &model)?;
+    let rt = load_runtime(args)?;
     let i = &rt.info;
     println!("model       : {}", i.name);
     println!("params      : {:.1} M", i.n_params as f64 / 1e6);

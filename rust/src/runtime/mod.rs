@@ -1,24 +1,37 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//! Model runtime: execute the LLM forward pass for the serving engine.
 //!
-//! The python side (`python/compile/aot.py`) lowers the JAX/Pallas model to
-//! HLO *text* (see `/opt/xla-example/README.md` for why text, not proto).
-//! This module wraps the `xla` crate: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Two backends live here:
+//!
+//! * **PJRT** (feature `pjrt`): load AOT-compiled HLO artifacts and run
+//!   them through the `xla` crate — `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!   The python side (`python/compile/aot.py`) lowers the JAX/Pallas
+//!   model to HLO *text* (see `/opt/xla-example/README.md` for why text,
+//!   not proto). Needs a vendored `xla` crate + libxla, hence the gate.
+//! * **Reference** (always built): a small pure-Rust transformer with
+//!   real KV-cache semantics ([`reference`]), used by the serving /
+//!   continuous-batching tests and the offline examples so the decode
+//!   loop is exercised without artifacts.
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 /// A compiled HLO executable bound to a PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct HloExecutable {
     exe: xla::PjRtLoadedExecutable,
     name: String,
 }
 
 /// Shared PJRT client wrapper. One per process.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -51,6 +64,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl HloExecutable {
     pub fn name(&self) -> &str {
         &self.name
@@ -74,6 +88,7 @@ impl HloExecutable {
 }
 
 /// Build an f32 literal of the given shape from a flat slice.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(data);
     lit.reshape(dims)
@@ -81,10 +96,12 @@ pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
 }
 
 /// Extract an f32 vec from a literal.
+#[cfg(feature = "pjrt")]
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>()
         .map_err(|e| anyhow::anyhow!("literal to_vec f32: {e:?}"))
 }
 
 pub mod model;
+pub mod reference;
 pub mod weights;

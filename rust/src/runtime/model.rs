@@ -1,13 +1,28 @@
-//! LLM artifact runtime: manifest + weights + compiled HLO executables.
+//! LLM runtime facade: one `LlmRuntime` type over two backends.
 //!
-//! Weights are uploaded to the PJRT device **once** at load time
-//! (`execute_b` with persistent `PjRtBuffer`s); the per-step inputs
-//! (token id, position, KV cache) are tiny. Python never runs here.
+//! * `pjrt` feature: manifest + weights + compiled HLO executables.
+//!   Weights are uploaded to the PJRT device **once** at load time
+//!   (`execute_b` with persistent `PjRtBuffer`s); the per-step inputs
+//!   (token id, position, KV cache) are tiny. Python never runs here.
+//! * default build: the pure-Rust [`reference`](super::reference) model,
+//!   so the serving engine, scheduler, and protocol are fully exercised
+//!   offline.
+//!
+//! Both backends share [`Session`] (host-side KV cache + position) and
+//! the `prefill` / `decode` / `decode_batch` entry points the
+//! continuous-batching scheduler drives.
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::path::{Path, PathBuf};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
 
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+
+#[cfg(feature = "pjrt")]
 use super::weights::{self, DType, Tensor};
+use super::reference::{RefLlm, ReferenceConfig};
 use crate::util::json::Json;
 
 /// Model architecture constants mirrored from the python ModelConfig.
@@ -26,9 +41,20 @@ pub struct ModelInfo {
     pub cache_shape: [usize; 4], // [L, max_tokens, kvh, head_dim]
 }
 
-/// A loaded, compiled, weight-resident model ready to serve.
+/// A loaded, weight-resident model ready to serve.
 pub struct LlmRuntime {
     pub info: ModelInfo,
+    backend: Backend,
+}
+
+enum Backend {
+    Reference(RefLlm),
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtModel),
+}
+
+#[cfg(feature = "pjrt")]
+struct PjrtModel {
     client: xla::PjRtClient,
     decode_exe: xla::PjRtLoadedExecutable,
     /// (bucket_len, executable) sorted ascending by bucket.
@@ -37,17 +63,22 @@ pub struct LlmRuntime {
 }
 
 /// Mutable per-request state: the KV cache (host copy) and position.
+///
+/// One `Session` per live request; the continuous-batching scheduler
+/// keeps up to `max_active` of these in flight at once.
 pub struct Session {
     pub pos: usize,
-    k_cache: Vec<f32>,
-    v_cache: Vec<f32>,
-    cache_dims: Vec<usize>,
+    pub(crate) k_cache: Vec<f32>,
+    pub(crate) v_cache: Vec<f32>,
+    /// only the PJRT backend re-uploads the cache and needs its dims
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    pub(crate) cache_dims: Vec<usize>,
 }
 
 fn parse_manifest(dir: &Path, name: &str) -> Result<(Json, ModelInfo)> {
     let mpath = dir.join(format!("{name}.manifest.json"));
     let text = std::fs::read_to_string(&mpath)
-        .with_context(|| format!("read manifest {}", mpath.display()))?;
+        .map_err(|e| anyhow!("read manifest {}: {e}", mpath.display()))?;
     let j = Json::parse(&text).map_err(|e| anyhow!("manifest json: {e}"))?;
     let cfg = j.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
     let get = |k: &str| -> Result<usize> {
@@ -62,6 +93,9 @@ fn parse_manifest(dir: &Path, name: &str) -> Result<(Json, ModelInfo)> {
         .iter()
         .map(|v| v.as_usize().unwrap_or(0))
         .collect();
+    if cache.len() != 4 {
+        bail!("manifest cache_shape must have 4 dims, got {}", cache.len());
+    }
     let info = ModelInfo {
         name: name.to_string(),
         vocab: get("vocab")?,
@@ -79,7 +113,40 @@ fn parse_manifest(dir: &Path, name: &str) -> Result<(Json, ModelInfo)> {
 }
 
 impl LlmRuntime {
+    /// Build the pure-Rust reference model (no artifacts required).
+    pub fn reference(cfg: ReferenceConfig) -> Self {
+        let model = RefLlm::new(cfg);
+        LlmRuntime {
+            info: model.info().clone(),
+            backend: Backend::Reference(model),
+        }
+    }
+
+    /// Reference model with default (tiny) dimensions.
+    pub fn reference_tiny() -> Self {
+        Self::reference(ReferenceConfig::default())
+    }
+
+    /// Try the AOT artifacts at `<dir>/<name>.*`; fall back to the
+    /// reference model (`ref_cfg`) when they are absent or this build
+    /// has no PJRT backend. The single backend-selection policy used by
+    /// the CLI and the examples.
+    pub fn load_or_reference(
+        dir: impl AsRef<Path>,
+        name: &str,
+        ref_cfg: ReferenceConfig,
+    ) -> Self {
+        match Self::load(dir, name) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("artifacts unavailable ({e:#}); using the reference backend");
+                Self::reference(ref_cfg)
+            }
+        }
+    }
+
     /// Load `<dir>/<name>.*` artifacts, compile, and upload weights.
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
         let dir = dir.as_ref();
         let (manifest, info) = parse_manifest(dir, name)?;
@@ -143,19 +210,41 @@ impl LlmRuntime {
             }
             weight_bufs.push(upload(&client, t)?);
         }
-        Ok(LlmRuntime { info, client, decode_exe, prefill_exes, weight_bufs })
+        Ok(LlmRuntime {
+            info,
+            backend: Backend::Pjrt(PjrtModel {
+                client,
+                decode_exe,
+                prefill_exes,
+                weight_bufs,
+            }),
+        })
+    }
+
+    /// Without the `pjrt` feature, artifacts cannot be executed; the
+    /// manifest is still validated so errors stay informative.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let dir = dir.as_ref();
+        let (_manifest, info) = parse_manifest(dir, name)?;
+        bail!(
+            "artifacts for '{}' found but this build has no PJRT backend \
+             (rebuild with --features pjrt, or use LlmRuntime::reference())",
+            info.name
+        )
     }
 
     /// Smallest prefill bucket that fits `len` tokens.
     pub fn bucket_for(&self, len: usize) -> Option<usize> {
-        self.prefill_exes
-            .iter()
-            .map(|(t, _)| *t)
-            .find(|t| *t >= len)
+        self.prefill_buckets().into_iter().find(|t| *t >= len)
     }
 
     pub fn prefill_buckets(&self) -> Vec<usize> {
-        self.prefill_exes.iter().map(|(t, _)| *t).collect()
+        match &self.backend {
+            Backend::Reference(m) => m.prefill_buckets(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(m) => m.prefill_exes.iter().map(|(t, _)| *t).collect(),
+        }
     }
 
     /// Run prefill over `prompt` (padded to a bucket); returns the logits
@@ -171,6 +260,56 @@ impl LlmRuntime {
                 self.info.max_tokens
             );
         }
+        match &self.backend {
+            Backend::Reference(m) => m.prefill(prompt),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(m) => m.prefill(&self.info, prompt),
+        }
+    }
+
+    /// One decode step: feed `token`, advance the session, return logits.
+    pub fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        if session.pos >= self.info.max_tokens {
+            bail!("KV cache full (max_tokens={})", self.info.max_tokens);
+        }
+        match &self.backend {
+            Backend::Reference(m) => m.decode(session, token),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(m) => m.decode(session, token),
+        }
+    }
+
+    /// One batched decode round: feed `tokens[i]` to `sessions[i]` for
+    /// every live session and return each session's next-token logits.
+    ///
+    /// This is the scheduler's single entry point per round. The
+    /// functional backends execute the sessions one after another (the
+    /// paper's accelerator is a batch-1 datapath); the *performance*
+    /// benefit of sharing one weight stream across the batch is modeled
+    /// by `sim::engine::Simulator::decode_round`.
+    pub fn decode_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        if sessions.len() != tokens.len() {
+            bail!(
+                "decode_batch: {} sessions vs {} tokens",
+                sessions.len(),
+                tokens.len()
+            );
+        }
+        sessions
+            .iter_mut()
+            .zip(tokens.iter())
+            .map(|(s, &t)| self.decode(s, t))
+            .collect()
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtModel {
+    fn prefill(&self, info: &ModelInfo, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
         let (bucket, exe) = self
             .prefill_exes
             .iter()
@@ -205,23 +344,19 @@ impl LlmRuntime {
         let all_logits = logits
             .to_vec::<f32>()
             .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
-        let v = self.info.vocab;
+        let v = info.vocab;
         let last = prompt.len() - 1;
         let last_logits = all_logits[last * v..(last + 1) * v].to_vec();
         let session = Session {
             pos: prompt.len(),
             k_cache: kc.to_vec::<f32>().map_err(|e| anyhow!("kc to_vec: {e:?}"))?,
             v_cache: vc.to_vec::<f32>().map_err(|e| anyhow!("vc to_vec: {e:?}"))?,
-            cache_dims: self.info.cache_shape.to_vec(),
+            cache_dims: info.cache_shape.to_vec(),
         };
         Ok((last_logits, session))
     }
 
-    /// One decode step: feed `token`, advance the session, return logits.
-    pub fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
-        if session.pos >= self.info.max_tokens {
-            bail!("KV cache full (max_tokens={})", self.info.max_tokens);
-        }
+    fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
         let tok_buf = self
             .client
             .buffer_from_host_buffer::<i32>(&[token], &[1], None)
@@ -267,6 +402,7 @@ impl LlmRuntime {
 // (F32=11), silently creating F16 buffers. Always go through the typed
 // `buffer_from_host_buffer`, which maps the type correctly.
 
+#[cfg(feature = "pjrt")]
 fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
     match t.dtype {
         DType::F32 => upload_f32_bytes(client, &t.data, &t.dims),
@@ -293,6 +429,7 @@ fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
     .map_err(|e| anyhow!("tensor {}: {e}", t.name))
 }
 
+#[cfg(feature = "pjrt")]
 fn upload_f32_bytes(
     client: &xla::PjRtClient,
     data: &[u8],
@@ -316,4 +453,42 @@ pub fn argmax(logits: &[f32]) -> i32 {
         }
     }
     best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_without_artifacts_is_informative() {
+        let err = LlmRuntime::load("definitely-missing-dir", "nope").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest"), "{msg}");
+    }
+
+    #[test]
+    fn decode_batch_checks_arity() {
+        let rt = LlmRuntime::reference_tiny();
+        let (_l, mut s) = rt.prefill(&[1, 2, 3]).unwrap();
+        let mut sessions = vec![&mut s];
+        assert!(rt.decode_batch(&mut sessions, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn decode_batch_matches_sequential_decode() {
+        let rt = LlmRuntime::reference_tiny();
+        let (_l, mut a) = rt.prefill(&[10, 20]).unwrap();
+        let (_l, mut b) = rt.prefill(&[30]).unwrap();
+        let (_l, mut a2) = rt.prefill(&[10, 20]).unwrap();
+        let (_l, mut b2) = rt.prefill(&[30]).unwrap();
+
+        let la = rt.decode(&mut a, 5).unwrap();
+        let lb = rt.decode(&mut b, 6).unwrap();
+
+        let mut sessions = vec![&mut a2, &mut b2];
+        let batched = rt.decode_batch(&mut sessions, &[5, 6]).unwrap();
+        assert_eq!(batched[0], la);
+        assert_eq!(batched[1], lb);
+        assert_eq!(a.pos, a2.pos);
+    }
 }

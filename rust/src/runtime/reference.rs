@@ -1,0 +1,288 @@
+//! Pure-Rust reference LLM backend.
+//!
+//! A deliberately small autoregressive transformer (byte vocabulary,
+//! seeded random weights) with the *same* session semantics as the AOT
+//! artifact path: per-layer K/V caches indexed by position, prefill that
+//! returns the last token's logits plus a fresh [`Session`], and one
+//! decode step per generated token. It exists so the serving engine, the
+//! continuous-batching scheduler, and the TCP protocol are exercised
+//! end-to-end on any machine — no artifacts, no PJRT, no Python.
+//!
+//! Numbers produced here are functional, not paper numbers; the VCU128
+//! performance model lives in `sim::engine` and is charged by the
+//! serving engine independently of which functional backend runs.
+
+use anyhow::{bail, Result};
+
+use super::model::{ModelInfo, Session};
+use crate::util::rng::Rng;
+
+/// Byte-level vocabulary, matching `coordinator::tokenizer`.
+pub const REF_VOCAB: usize = 256;
+
+/// Dimensions of the reference model.
+#[derive(Debug, Clone)]
+pub struct ReferenceConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for ReferenceConfig {
+    fn default() -> Self {
+        ReferenceConfig {
+            name: "ref-tiny".to_string(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            max_tokens: 64,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Per-layer projection weights, row-major `d × d`.
+struct Layer {
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+}
+
+pub struct RefLlm {
+    info: ModelInfo,
+    /// token embeddings, `REF_VOCAB × d`
+    emb: Vec<f32>,
+    layers: Vec<Layer>,
+    /// output head, `REF_VOCAB × d`
+    w_out: Vec<f32>,
+    buckets: Vec<usize>,
+}
+
+fn init(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// `y = W x` for row-major `rows × d` W.
+fn matvec(w: &[f32], x: &[f32], rows: usize) -> Vec<f32> {
+    let d = x.len();
+    let mut y = vec![0.0f32; rows];
+    for (r, yr) in y.iter_mut().enumerate() {
+        let row = &w[r * d..(r + 1) * d];
+        let mut acc = 0.0f32;
+        for (a, b) in row.iter().zip(x.iter()) {
+            acc += a * b;
+        }
+        *yr = acc;
+    }
+    y
+}
+
+impl RefLlm {
+    pub fn new(cfg: ReferenceConfig) -> Self {
+        let d = cfg.d_model;
+        let mut rng = Rng::new(cfg.seed);
+        // 1/sqrt(d) keeps activations and logits O(1) through the depth
+        let s = 1.0 / (d as f32).sqrt();
+        let emb = init(&mut rng, REF_VOCAB * d, 1.0);
+        let layers: Vec<Layer> = (0..cfg.n_layers)
+            .map(|_| Layer {
+                wq: init(&mut rng, d * d, s),
+                wk: init(&mut rng, d * d, s),
+                wv: init(&mut rng, d * d, s),
+                wo: init(&mut rng, d * d, s),
+            })
+            .collect();
+        let w_out = init(&mut rng, REF_VOCAB * d, s);
+        // power-of-two prefill buckets up to max_tokens, mirroring the
+        // AOT artifact layout (one compiled graph per bucket)
+        let mut buckets = Vec::new();
+        let mut b = 8usize;
+        while b < cfg.max_tokens {
+            buckets.push(b);
+            b *= 2;
+        }
+        buckets.push(cfg.max_tokens);
+        let n_params = emb.len() + layers.len() * 4 * d * d + w_out.len();
+        let info = ModelInfo {
+            name: cfg.name,
+            vocab: REF_VOCAB,
+            d_model: d,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            n_kv_heads: cfg.n_heads,
+            d_ffn: 4 * d,
+            max_tokens: cfg.max_tokens,
+            head_dim: d / cfg.n_heads.max(1),
+            n_params,
+            cache_shape: [cfg.n_layers, cfg.max_tokens, 1, d],
+        };
+        RefLlm {
+            info,
+            emb,
+            layers,
+            w_out,
+            buckets,
+        }
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn fresh_session(&self) -> Session {
+        let [l, t, h, d] = self.info.cache_shape;
+        Session {
+            pos: 0,
+            k_cache: vec![0.0; l * t * h * d],
+            v_cache: vec![0.0; l * t * h * d],
+            cache_dims: self.info.cache_shape.to_vec(),
+        }
+    }
+
+    /// One forward step at `session.pos`: writes K/V rows, attends over
+    /// the cache, advances the position, returns next-token logits.
+    fn step(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        let d = self.info.d_model;
+        let max_t = self.info.max_tokens;
+        let pos = session.pos;
+        if pos >= max_t {
+            bail!("KV cache full (max_tokens={max_t})");
+        }
+        let tok = token.rem_euclid(REF_VOCAB as i32) as usize;
+        let mut h: Vec<f32> = self.emb[tok * d..(tok + 1) * d].to_vec();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let q = matvec(&layer.wq, &h, d);
+            let k = matvec(&layer.wk, &h, d);
+            let v = matvec(&layer.wv, &h, d);
+            let base = li * max_t * d;
+            session.k_cache[base + pos * d..base + (pos + 1) * d].copy_from_slice(&k);
+            session.v_cache[base + pos * d..base + (pos + 1) * d].copy_from_slice(&v);
+            // causal attention over cached positions 0..=pos
+            let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+            let mut scores = Vec::with_capacity(pos + 1);
+            for i in 0..=pos {
+                let ki = &session.k_cache[base + i * d..base + (i + 1) * d];
+                let mut s = 0.0f32;
+                for (a, b) in ki.iter().zip(q.iter()) {
+                    s += a * b;
+                }
+                scores.push(s * inv_sqrt_d);
+            }
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut wsum = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - m).exp();
+                wsum += *s;
+            }
+            let mut ctx = vec![0.0f32; d];
+            for (i, s) in scores.iter().enumerate() {
+                let a = s / wsum;
+                let vi = &session.v_cache[base + i * d..base + (i + 1) * d];
+                for (c, x) in ctx.iter_mut().zip(vi.iter()) {
+                    *c += a * x;
+                }
+            }
+            let o = matvec(&layer.wo, &ctx, d);
+            for (hx, ox) in h.iter_mut().zip(o.iter()) {
+                *hx = (*hx + ox).tanh();
+            }
+        }
+        session.pos += 1;
+        Ok(matvec(&self.w_out, &h, REF_VOCAB))
+    }
+
+    /// Prefill: run the prompt token by token against a fresh session,
+    /// return the last token's logits plus the session.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+        let mut session = self.fresh_session();
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.step(&mut session, t)?;
+        }
+        Ok((logits, session))
+    }
+
+    /// One decode step.
+    pub fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        self.step(session, token)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_a_seed() {
+        let a = RefLlm::new(ReferenceConfig::default());
+        let b = RefLlm::new(ReferenceConfig::default());
+        let (la, _) = a.prefill(&[72, 105]).unwrap();
+        let (lb, _) = b.prefill(&[72, 105]).unwrap();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = RefLlm::new(ReferenceConfig::default());
+        let b = RefLlm::new(ReferenceConfig {
+            seed: 99,
+            ..ReferenceConfig::default()
+        });
+        let (la, _) = a.prefill(&[72]).unwrap();
+        let (lb, _) = b.prefill(&[72]).unwrap();
+        assert_ne!(la, lb);
+    }
+
+    #[test]
+    fn logits_depend_on_history() {
+        // the same token decoded after different prefixes must see
+        // different attention contexts
+        let m = RefLlm::new(ReferenceConfig::default());
+        let (_, mut s1) = m.prefill(&[1, 2, 3]).unwrap();
+        let (_, mut s2) = m.prefill(&[9, 8, 7]).unwrap();
+        let l1 = m.decode(&mut s1, 42).unwrap();
+        let l2 = m.decode(&mut s2, 42).unwrap();
+        assert_ne!(l1, l2);
+    }
+
+    #[test]
+    fn cache_full_errors() {
+        let m = RefLlm::new(ReferenceConfig {
+            max_tokens: 8,
+            ..ReferenceConfig::default()
+        });
+        let (_, mut s) = m.prefill(&[1, 2, 3]).unwrap();
+        for _ in 0..5 {
+            m.decode(&mut s, 7).unwrap();
+        }
+        assert_eq!(s.pos, 8);
+        assert!(m.decode(&mut s, 7).is_err());
+    }
+
+    #[test]
+    fn logits_are_finite_and_vocab_sized() {
+        let m = RefLlm::new(ReferenceConfig::default());
+        let (l, _) = m.prefill(&[0, 255, 128]).unwrap();
+        assert_eq!(l.len(), REF_VOCAB);
+        assert!(l.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn buckets_cover_max_tokens() {
+        let m = RefLlm::new(ReferenceConfig {
+            max_tokens: 48,
+            ..ReferenceConfig::default()
+        });
+        let b = m.prefill_buckets();
+        assert_eq!(*b.last().unwrap(), 48);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -60,12 +60,18 @@ impl Simulator {
     }
 
     fn host_gap(&self) -> f64 {
-        if self.latency_hiding { 0.0 } else { HOST_GAP_US }
+        if self.latency_hiding {
+            0.0
+        } else {
+            HOST_GAP_US
+        }
     }
 
     fn category(op: &OpInstance) -> Category {
         match (op.class, op.name) {
-            (OpClass::MhaMatmul, _) | (OpClass::Softmax, _) | (OpClass::Dat2Hbm, _) => Category::Mha,
+            (OpClass::MhaMatmul, _) | (OpClass::Softmax, _) | (OpClass::Dat2Hbm, _) => {
+                Category::Mha
+            }
             (OpClass::VmmBn, n)
                 if n.contains("gate") || n.contains("up") || n.contains("4h") =>
             {
@@ -138,6 +144,78 @@ impl Simulator {
     /// "decode speed" operating points).
     pub fn decode_tokens_per_s(&self, ctx: usize) -> f64 {
         1e6 / self.decode_step(ctx).breakdown.total_us()
+    }
+
+    /// One **batched** decode round: one token for each of `ctxs.len()`
+    /// live sessions, where `ctxs[i]` is session *i*'s cache length.
+    ///
+    /// Continuous batching changes the accounting, not the datapath:
+    /// decode is dominated by streaming the (shared, read-only) weights,
+    /// so the weight-bound operators are charged **once per round** with
+    /// the batch as the token tile — exactly like a prefill tile reuses
+    /// the stream across tokens. Only the per-session state is charged
+    /// per session: each session attends to its *own* KV cache
+    /// (`MhaMatmul`, `Softmax`) and writes its own cache rows
+    /// (`Dat2Hbm`). The host instruction update is one shared stream per
+    /// round.
+    ///
+    /// `decode_round(&[c])` equals `decode_step(c)` — batch 1 degenerates
+    /// to the paper's Table III single-request numbers.
+    pub fn decode_round(&self, ctxs: &[usize]) -> RoundReport {
+        let b = ctxs.len().max(1);
+        let mut bd = Breakdown::default();
+        for op in &block_ops(&self.arch, &self.strat) {
+            let us = match op.class {
+                // weight / activation stream shared by the whole batch
+                OpClass::VmmBn | OpClass::LayerNorm | OpClass::Rope | OpClass::Act => {
+                    latency_us(&self.hw, op, b, 1, self.mem)
+                }
+                // per-session KV state
+                OpClass::MhaMatmul | OpClass::Softmax | OpClass::Dat2Hbm => ctxs
+                    .iter()
+                    .map(|&c| latency_us(&self.hw, op, 1, c.max(1), self.mem))
+                    .sum(),
+            };
+            let us_all = us * self.arch.n_layers as f64;
+            match Self::category(op) {
+                Category::Mha => bd.mha_us += us_all,
+                Category::Ffn => bd.ffn_us += us_all,
+                Category::Other => bd.other_us += us_all,
+            }
+            bd.host_us += self.host_gap() * self.arch.n_layers as f64;
+        }
+        let max_ctx = ctxs.iter().copied().max().unwrap_or(1).max(1);
+        for op in &output_ops(&self.arch) {
+            // last-token optimization: the output head sees one token per
+            // session, i.e. a b-token tile
+            let us = latency_us(&self.hw, op, b, max_ctx, self.mem);
+            bd.other_us += us;
+            bd.host_us += self.host_gap();
+        }
+        RoundReport {
+            batch: b,
+            breakdown: bd,
+        }
+    }
+}
+
+/// Simulated cost of one batched decode round.
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    /// sessions served this round (one token each)
+    pub batch: usize,
+    pub breakdown: Breakdown,
+}
+
+impl RoundReport {
+    pub fn total_us(&self) -> f64 {
+        self.breakdown.total_us()
+    }
+
+    /// Aggregate decode throughput of the round: batch tokens per round
+    /// latency.
+    pub fn tokens_per_s(&self) -> f64 {
+        self.batch as f64 / (self.breakdown.total_us() * 1e-6)
     }
 }
 
@@ -251,6 +329,53 @@ mod tests {
         let q = qwen.decode_tokens_per_s(128);
         assert!(q < g, "qwen {q} should be slower than glm {g}");
         assert!((q - 69.4).abs() / 69.4 < 0.25, "qwen {q} tok/s");
+    }
+
+    #[test]
+    fn decode_round_batch1_equals_decode_step() {
+        let sim = Simulator::new(&GLM_6B, &DENSE, Memory::Hbm);
+        let round = sim.decode_round(&[128]).total_us();
+        let step = sim.decode_step(128).breakdown.total_us();
+        assert!((round - step).abs() < 1e-6, "{round} vs {step}");
+    }
+
+    #[test]
+    fn batching_amortizes_weight_stream() {
+        // batch-1 decode is weight-stream bound, so sharing one stream
+        // across 8 sessions beats 8 sequential rounds — but only until
+        // the 140 MHz PE array becomes the bottleneck. For GLM-6B the
+        // stream/compute crossover sits near batch 2 (Q VMM: 47 µs
+        // stream vs 29 µs/token compute), so the aggregate gain
+        // saturates around 1.5x, not 8x. The model must show both the
+        // gain and the roofline ceiling.
+        let sim = Simulator::new(&GLM_6B, &DENSE, Memory::Hbm);
+        let one = sim.decode_round(&[128]);
+        let eight = sim.decode_round(&[128; 8]);
+        assert!(
+            eight.total_us() < 8.0 * one.total_us() * 0.7,
+            "one round of 8 must amortize vs 8 rounds of 1: {} vs {}",
+            eight.total_us(),
+            8.0 * one.total_us()
+        );
+        let gain = eight.tokens_per_s() / one.tokens_per_s();
+        assert!(
+            gain > 1.4 && gain < 2.5,
+            "GLM batch-8 aggregate gain should sit near the compute \
+             roofline (~1.5x), got {gain}"
+        );
+    }
+
+    #[test]
+    fn round_charges_each_sessions_own_context() {
+        // a long-context straggler inflates the round by *its* MHA cost
+        let sim = Simulator::new(&GLM_6B, &DENSE, Memory::Hbm);
+        let uniform = sim.decode_round(&[128; 4]).total_us();
+        let skewed = sim.decode_round(&[128, 128, 128, 2048]).total_us();
+        assert!(skewed > uniform);
+        let delta = skewed - uniform;
+        let mha_alone = sim.decode_round(&[2048]).breakdown.mha_us
+            - sim.decode_round(&[128]).breakdown.mha_us;
+        assert!((delta - mha_alone).abs() / mha_alone < 0.05, "{delta} vs {mha_alone}");
     }
 
     #[test]

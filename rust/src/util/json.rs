@@ -73,12 +73,19 @@ impl Json {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {at}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub at: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -194,7 +201,9 @@ impl<'a> Parser<'a> {
         }
         while self
             .peek()
-            .map(|c| c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-')
+            .map(|c| {
+                c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-'
+            })
             .unwrap_or(false)
         {
             self.at += 1;

@@ -1,0 +1,215 @@
+//! Continuous-batching scheduler tests: admission, interleaved decode,
+//! retirement, metrics, and the multi-client TCP server.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+
+use edgellm::coordinator::engine::{Engine, EngineConfig};
+use edgellm::coordinator::sampler::Sampling;
+use edgellm::coordinator::server;
+use edgellm::runtime::model::LlmRuntime;
+use edgellm::runtime::reference::ReferenceConfig;
+use edgellm::util::json::Json;
+
+fn engine_with(max_active: usize) -> Engine {
+    Engine::new(
+        LlmRuntime::reference(ReferenceConfig::default()),
+        EngineConfig {
+            max_active,
+            ..EngineConfig::default()
+        },
+    )
+}
+
+/// Acceptance: ≥8 concurrent requests through the scheduler with
+/// max_active ≥ 4; all complete with the exact per-request token counts.
+#[test]
+fn concurrent_requests_complete_with_correct_token_counts() {
+    let mut eng = engine_with(4);
+    let prompts = [
+        "alpha", "bravo", "charlie", "delta", "echo", "foxtrot", "golf", "hotel", "india",
+        "juliett",
+    ];
+    let mut want = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let max_new = 3 + i; // 3..=12, all within the KV budget
+        let id = eng.submit(p, max_new, Sampling::Greedy);
+        want.push((id, max_new));
+    }
+    assert_eq!(eng.pending(), 10);
+
+    let mut done = Vec::new();
+    while eng.has_work() {
+        assert!(eng.active_sessions() <= 4);
+        done.extend(eng.step_round().unwrap());
+    }
+    assert_eq!(done.len(), 10);
+    let mut got: Vec<(u64, usize)> = done.iter().map(|c| (c.id, c.n_generated)).collect();
+    got.sort_unstable();
+    assert_eq!(got, want);
+    // every request decoded some text
+    assert!(done.iter().all(|c| c.n_generated > 0));
+    // the pool was actually shared: peak liveness hit the configured cap
+    assert_eq!(eng.metrics().peak_active, 4);
+    // and decode rounds were batched: strictly fewer rounds than a
+    // run-to-completion FIFO would need (sum of all max_new = 75)
+    let total_tokens: u64 = want.iter().map(|(_, n)| *n as u64).sum();
+    assert_eq!(eng.metrics().decode_tokens, total_tokens);
+    assert!(eng.metrics().rounds < total_tokens);
+}
+
+#[test]
+fn requests_are_admitted_mid_flight() {
+    let mut eng = engine_with(2);
+    eng.submit("first", 16, Sampling::Greedy);
+    eng.submit("second", 16, Sampling::Greedy);
+    eng.submit("third", 4, Sampling::Greedy);
+    // first two rounds: pool is full, "third" must wait in the queue
+    eng.step_round().unwrap();
+    assert_eq!(eng.active_sessions(), 2);
+    assert_eq!(eng.pending(), 1);
+    // submitting *while sessions are live* is the whole point
+    eng.submit("fourth", 4, Sampling::Greedy);
+    assert_eq!(eng.pending(), 2);
+    let done = eng.run_all().unwrap();
+    assert_eq!(done.len(), 4);
+    assert_eq!(eng.metrics().completed, 4);
+}
+
+/// Batching must not change greedy results: each session's trajectory
+/// depends only on its own logits/KV state.
+#[test]
+fn batched_greedy_matches_sequential_greedy() {
+    let prompts = ["one", "two", "three", "four", "five", "six", "seven", "eight"];
+    let run = |max_active: usize| -> Vec<(u64, String)> {
+        let mut eng = engine_with(max_active);
+        for p in &prompts {
+            eng.submit(p, 10, Sampling::Greedy);
+        }
+        let mut out: Vec<(u64, String)> = eng
+            .run_all()
+            .unwrap()
+            .into_iter()
+            .map(|c| (c.id, c.text))
+            .collect();
+        out.sort();
+        out
+    };
+    assert_eq!(run(1), run(8));
+}
+
+#[test]
+fn eos_token_retires_session_early() {
+    // discover what greedy decoding would emit first…
+    let rt = LlmRuntime::reference(ReferenceConfig::default());
+    let toks = edgellm::coordinator::tokenizer::encode("stop early");
+    let (logits, _s) = rt.prefill(&toks).unwrap();
+    let first = edgellm::runtime::model::argmax(&logits);
+
+    // …then declare that token EOS: the session must retire with zero
+    // emitted tokens instead of running to max_new
+    let mut eng = Engine::new(
+        LlmRuntime::reference(ReferenceConfig::default()),
+        EngineConfig {
+            max_active: 4,
+            eos_token: Some(first),
+            ..EngineConfig::default()
+        },
+    );
+    eng.submit("stop early", 8, Sampling::Greedy);
+    let c = eng.step().unwrap().unwrap();
+    assert_eq!(c.n_generated, 0, "eos must stop generation");
+}
+
+/// The simulated VCU128 aggregate throughput is what continuous batching
+/// buys: one shared weight stream per round across the live pool.
+#[test]
+fn batching_improves_simulated_aggregate_throughput() {
+    let run = |max_active: usize| -> f64 {
+        let mut eng = engine_with(max_active);
+        for i in 0..8 {
+            eng.submit(&format!("request number {i}"), 16, Sampling::Greedy);
+        }
+        eng.run_all().unwrap();
+        eng.metrics().sim_tokens_per_s()
+    };
+    let seq = run(1);
+    let batched = run(8);
+    assert!(
+        batched > seq * 1.5,
+        "batch-8 {batched:.1} tok/s should beat batch-1 {seq:.1} tok/s"
+    );
+}
+
+#[test]
+fn metrics_counters_are_consistent() {
+    let mut eng = engine_with(4);
+    for i in 0..6 {
+        eng.submit("count me", 4 + i, Sampling::Greedy);
+    }
+    let done = eng.run_all().unwrap();
+    let m = eng.metrics();
+    assert_eq!(m.submitted, 6);
+    assert_eq!(m.completed, 6);
+    let toks: u64 = done.iter().map(|c| c.n_generated as u64).sum();
+    assert_eq!(m.decode_tokens, toks);
+    assert!(m.peak_active <= 4);
+    assert!(m.sim_decode_us > 0.0);
+    assert_eq!(eng.pending(), 0);
+    assert_eq!(eng.active_sessions(), 0);
+}
+
+fn send_request(addr: std::net::SocketAddr, body: String) -> Json {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    writeln!(stream, "{body}").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap()
+}
+
+/// Eight simultaneous TCP clients share one scheduler; everyone gets
+/// their own completion.
+#[test]
+fn tcp_server_serves_concurrent_clients() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let eng = engine_with(4);
+    thread::spawn(move || {
+        let _ = server::serve_on(eng, listener);
+    });
+
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            thread::spawn(move || {
+                let body = format!(
+                    r#"{{"prompt": "client {i} says hi", "max_new_tokens": {}}}"#,
+                    4 + i
+                );
+                send_request(addr, body)
+            })
+        })
+        .collect();
+
+    let mut counts = Vec::new();
+    for h in handles {
+        let reply = h.join().unwrap();
+        assert!(reply.get("error").is_none(), "{reply}");
+        counts.push(reply.get("n_generated").unwrap().as_usize().unwrap());
+    }
+    counts.sort_unstable();
+    assert_eq!(counts, vec![4, 5, 6, 7, 8, 9, 10, 11]);
+
+    // server-side stats: every request went through the one scheduler
+    // (pool overlap itself is asserted deterministically in
+    // concurrent_requests_complete_with_correct_token_counts — here the
+    // degree of overlap depends on client thread timing)
+    let stats = send_request(addr, r#"{"stats": true}"#.to_string());
+    assert_eq!(stats.get("completed").unwrap().as_usize(), Some(8));
+    assert_eq!(stats.get("decode_tokens").unwrap().as_usize(), Some(60));
+
+    // protocol errors come back as structured replies over TCP too
+    let err = send_request(addr, r#"{"max_new_tokens": 4}"#.to_string());
+    assert!(err.get("error").is_some());
+}

@@ -1,27 +1,35 @@
 //! Serving-path integration tests: engine queue → decode loop → protocol.
-//! Requires `make artifacts` (uses the fast `test` model).
+//!
+//! Runs against the pure-Rust reference backend, so the whole path is
+//! exercised on any machine — no AOT artifacts needed.
 
 use edgellm::coordinator::engine::{Engine, EngineConfig};
 use edgellm::coordinator::sampler::Sampling;
 use edgellm::coordinator::server::process_line;
 use edgellm::runtime::model::LlmRuntime;
+use edgellm::runtime::reference::ReferenceConfig;
 
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+fn engine() -> Engine {
+    Engine::new(
+        LlmRuntime::reference(ReferenceConfig::default()),
+        EngineConfig::default(),
+    )
 }
 
-fn engine() -> Option<Engine> {
-    if !artifacts_dir().join("test.manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return None;
-    }
-    let rt = LlmRuntime::load(artifacts_dir(), "test").unwrap();
-    Some(Engine::new(rt, EngineConfig::default()))
+/// max_tokens=32 with prefill buckets [8, 16, 32].
+fn small_engine() -> Engine {
+    Engine::new(
+        LlmRuntime::reference(ReferenceConfig {
+            max_tokens: 32,
+            ..ReferenceConfig::default()
+        }),
+        EngineConfig::default(),
+    )
 }
 
 #[test]
 fn engine_serves_fifo_requests() {
-    let Some(mut eng) = engine() else { return };
+    let mut eng = engine();
     eng.submit("Hello", 4, Sampling::Greedy);
     eng.submit("World", 6, Sampling::Greedy);
     assert_eq!(eng.pending(), 2);
@@ -37,7 +45,7 @@ fn engine_serves_fifo_requests() {
 
 #[test]
 fn greedy_generation_is_deterministic() {
-    let Some(mut eng) = engine() else { return };
+    let mut eng = engine();
     eng.submit("abc", 8, Sampling::Greedy);
     eng.submit("abc", 8, Sampling::Greedy);
     let all = eng.run_all().unwrap();
@@ -46,39 +54,67 @@ fn greedy_generation_is_deterministic() {
 
 #[test]
 fn generation_respects_kv_budget() {
-    let Some(mut eng) = engine() else { return };
-    // test model: max_tokens=32, largest prefill bucket=16.
+    let mut eng = small_engine();
     let long_prompt = "x".repeat(100);
     eng.submit(&long_prompt, 1000, Sampling::Greedy);
     let c = eng.step().unwrap().unwrap();
-    // prompt clamped to bucket, generation clamped to cache budget
-    assert!(c.n_prompt <= 16, "{}", c.n_prompt);
+    // prompt clamped to the largest prefill bucket, generation clamped
+    // to the remaining cache budget
+    assert!(c.n_prompt <= 32, "{}", c.n_prompt);
     assert!(c.n_prompt + c.n_generated <= 32);
 }
 
 #[test]
 fn protocol_request_response() {
-    let Some(mut eng) = engine() else { return };
+    let mut eng = engine();
     let reply = process_line(
         &mut eng,
         r#"{"prompt": "Hi", "max_new_tokens": 3, "temperature": 0}"#,
-    )
-    .unwrap();
+    );
+    assert!(reply.get("error").is_none(), "{reply}");
     assert_eq!(reply.get("n_generated").unwrap().as_usize(), Some(3));
     assert!(reply.get("text").is_some());
     assert!(reply.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
 }
 
 #[test]
-fn protocol_rejects_bad_json() {
-    let Some(mut eng) = engine() else { return };
-    assert!(process_line(&mut eng, "not json").is_err());
-    assert!(process_line(&mut eng, r#"{"no_prompt": 1}"#).is_err());
+fn protocol_rejects_bad_input_with_structured_errors() {
+    let mut eng = engine();
+    // malformed JSON
+    let r = process_line(&mut eng, "not json");
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("json"));
+    // missing prompt
+    let r = process_line(&mut eng, r#"{"no_prompt": 1}"#);
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("prompt"));
+    // out-of-range max_new_tokens: zero, negative, huge, non-numeric
+    for bad in [
+        r#"{"prompt":"x","max_new_tokens":0}"#,
+        r#"{"prompt":"x","max_new_tokens":-5}"#,
+        r#"{"prompt":"x","max_new_tokens":1000000}"#,
+        r#"{"prompt":"x","max_new_tokens":"ten"}"#,
+    ] {
+        let r = process_line(&mut eng, bad);
+        let msg = r.get("error").expect("error reply").as_str().unwrap();
+        assert!(msg.contains("max_new_tokens"), "{bad} -> {msg}");
+    }
+    // the engine survived all of it
+    let ok = process_line(&mut eng, r#"{"prompt":"Hi","max_new_tokens":2}"#);
+    assert_eq!(ok.get("n_generated").unwrap().as_usize(), Some(2));
+}
+
+#[test]
+fn protocol_stats_reply() {
+    let mut eng = engine();
+    process_line(&mut eng, r#"{"prompt":"warm up","max_new_tokens":4}"#);
+    let stats = process_line(&mut eng, r#"{"stats": true}"#);
+    assert_eq!(stats.get("completed").unwrap().as_usize(), Some(1));
+    assert_eq!(stats.get("decode_tokens").unwrap().as_usize(), Some(4));
+    assert!(stats.get("sim_tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
 }
 
 #[test]
 fn temperature_sampling_changes_output() {
-    let Some(mut eng) = engine() else { return };
+    let mut eng = engine();
     eng.submit("seed text", 12, Sampling::Temperature(5.0));
     eng.submit("seed text", 12, Sampling::Temperature(5.0));
     let all = eng.run_all().unwrap();
