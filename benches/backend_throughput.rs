@@ -1,0 +1,195 @@
+//! Backend throughput: prefill and batched-decode tokens/s of the
+//! functional reference backend, at batch 1 / 4 / 8 — and the start of
+//! the repo's recorded perf trajectory.
+//!
+//! The model is sized so its weights (~80 MB dense f32 attention +
+//! nibble-packed INT4 FFN) overflow every cache level: batch-1 decode is
+//! then genuinely bound by streaming the weights (plus the per-row
+//! nibble decode), which is exactly the cost a batched round amortizes —
+//! each weight matrix is walked once per round regardless of batch size.
+//! Aggregate tokens/s at batch 8 versus the batch-1 scalar path is the
+//! headline number; it is written, machine-readable, to
+//! `BENCH_backend.json` so CI can archive the trajectory.
+//!
+//! `cargo bench --bench backend_throughput`
+
+use std::time::Instant;
+
+use edgellm::runtime::model::{LlmRuntime, Session};
+use edgellm::runtime::reference::ReferenceConfig;
+use edgellm::util::bench::{fmt_secs, Table};
+use edgellm::util::json::Json;
+
+/// Prompt length fed to every session (fits the 64-token bucket).
+const PROMPT_LEN: usize = 64;
+/// Decode rounds measured per sample.
+const ROUNDS: usize = 48;
+/// Measured samples per batch size (plus one warmup).
+const SAMPLES: usize = 3;
+const BATCHES: [usize; 3] = [1, 4, 8];
+
+fn bench_cfg() -> ReferenceConfig {
+    ReferenceConfig {
+        name: "ref-bench".to_string(),
+        d_model: 640,
+        n_layers: 10,
+        n_heads: 8,
+        max_tokens: 128,
+        seed: 0xB0BA,
+        ..ReferenceConfig::default()
+    }
+}
+
+fn prompt(session: usize) -> Vec<i32> {
+    (0..PROMPT_LEN)
+        .map(|i| ((i * 31 + session * 67 + 5) % 256) as i32)
+        .collect()
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Aggregate decode tokens/s over `ROUNDS` batched rounds at batch `b`.
+/// Batch 1 *is* the scalar path (`decode` delegates to a batch of one).
+fn decode_tps(rt: &LlmRuntime, pristine: &[Session], b: usize) -> (f64, f64) {
+    let mut times = Vec::new();
+    for sample in 0..SAMPLES + 1 {
+        let mut sessions: Vec<Session> = pristine[..b].to_vec();
+        let t0 = Instant::now();
+        for round in 0..ROUNDS {
+            let tokens: Vec<i32> =
+                (0..b).map(|s| ((round * 13 + s * 7) % 256) as i32).collect();
+            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+            let logits = rt.decode_batch(&mut refs, &tokens).expect("decode round");
+            std::hint::black_box(&logits);
+        }
+        if sample > 0 {
+            times.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    let t = median(times);
+    let tokens = (b * ROUNDS) as f64;
+    (tokens / t, t / ROUNDS as f64)
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    println!(
+        "== backend throughput: d={} L={} ffn={} (INT4), prompt {PROMPT_LEN}, \
+         {ROUNDS} rounds ==",
+        cfg.d_model,
+        cfg.n_layers,
+        4 * cfg.d_model
+    );
+    let build0 = Instant::now();
+    let rt = LlmRuntime::reference(cfg);
+    println!(
+        "model built in {} ({} params)",
+        fmt_secs(build0.elapsed().as_secs_f64()),
+        rt.info.n_params
+    );
+
+    // prefill: single-pass sequence-level GEMM, measured per prompt
+    let mut prefill_times = Vec::new();
+    for sample in 0..SAMPLES + 1 {
+        let t0 = Instant::now();
+        let (logits, session) = rt.prefill(&prompt(sample)).expect("prefill");
+        std::hint::black_box((&logits, &session));
+        if sample > 0 {
+            prefill_times.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    let prefill_s = median(prefill_times);
+    let prefill_tps = PROMPT_LEN as f64 / prefill_s;
+
+    // one pristine post-prefill session per batch lane, cloned per sample
+    let max_b = *BATCHES.iter().max().unwrap();
+    let pristine: Vec<Session> = (0..max_b)
+        .map(|s| rt.prefill(&prompt(s)).expect("prefill").1)
+        .collect();
+
+    let mut table = Table::new(&["batch", "round latency", "aggregate tok/s", "vs batch 1"]);
+    let mut decode_rows = Vec::new();
+    let mut tps1 = 0.0;
+    for &b in &BATCHES {
+        let (tps, round_s) = decode_tps(&rt, &pristine, b);
+        if b == 1 {
+            tps1 = tps;
+        }
+        table.rowv(vec![
+            b.to_string(),
+            fmt_secs(round_s),
+            format!("{tps:.1}"),
+            format!("{:.2}x", tps / tps1),
+        ]);
+        decode_rows.push((b, tps, round_s));
+    }
+    table.print();
+
+    let speedup = decode_rows
+        .iter()
+        .find(|(b, _, _)| *b == 8)
+        .map(|(_, tps, _)| tps / tps1)
+        .expect("batch-8 row");
+    println!(
+        "prefill: {} / prompt ({prefill_tps:.0} tok/s single-pass GEMM)",
+        fmt_secs(prefill_s)
+    );
+    println!("batch 8 vs batch-1 scalar decode: {speedup:.2}x aggregate tokens/s");
+
+    // machine-readable trajectory record
+    let json = Json::obj(vec![
+        ("bench", Json::Str("backend_throughput".into())),
+        (
+            "model",
+            Json::obj(vec![
+                ("name", Json::Str(rt.info.name.clone())),
+                ("d_model", Json::Num(rt.info.d_model as f64)),
+                ("n_layers", Json::Num(rt.info.n_layers as f64)),
+                ("d_ffn", Json::Num(rt.info.d_ffn as f64)),
+                ("vocab", Json::Num(rt.info.vocab as f64)),
+                ("n_params", Json::Num(rt.info.n_params as f64)),
+                (
+                    "ffn_weight_bytes",
+                    Json::Num(rt.ffn_weight_bytes().unwrap_or(0) as f64),
+                ),
+            ]),
+        ),
+        ("prompt_len", Json::Num(PROMPT_LEN as f64)),
+        ("rounds", Json::Num(ROUNDS as f64)),
+        (
+            "prefill",
+            Json::obj(vec![
+                ("latency_s", Json::Num(prefill_s)),
+                ("tokens_per_s", Json::Num(prefill_tps)),
+            ]),
+        ),
+        (
+            "decode",
+            Json::Arr(
+                decode_rows
+                    .iter()
+                    .map(|&(b, tps, round_s)| {
+                        Json::obj(vec![
+                            ("batch", Json::Num(b as f64)),
+                            ("tokens_per_s", Json::Num(tps)),
+                            ("round_latency_s", Json::Num(round_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup_batch8_vs_batch1", Json::Num(speedup)),
+    ]);
+    std::fs::write("BENCH_backend.json", format!("{json}\n")).expect("write BENCH_backend.json");
+    println!("wrote BENCH_backend.json");
+
+    // smoke floor only — the real number lives in the JSON record; a
+    // contended runner must not turn a load dip into a red build
+    assert!(
+        speedup > 1.0,
+        "batched decode must amortize the weight stream (got {speedup:.2}x)"
+    );
+}

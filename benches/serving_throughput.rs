@@ -100,7 +100,8 @@ fn main() {
         batch8 > batch1_sim,
         "continuous batching must raise aggregate throughput"
     );
-    println!("note: wall tok/s is the functional reference backend (it executes \
-              sessions serially); the VCU128 column models the shared weight \
-              stream of the accelerator datapath.");
+    println!("note: wall tok/s is the functional reference backend (tiny model, \
+              truly batched decode since PR 2 — benches/backend_throughput.rs \
+              measures it on a cache-overflowing model); the VCU128 column \
+              models the shared weight stream of the accelerator datapath.");
 }

@@ -1,0 +1,450 @@
+#!/usr/bin/env python3
+"""Numerical validation of the Rust batched/quantized backend (PR 2).
+
+A line-for-line float32 port of `rust/src/runtime/kernels.rs` and the
+`rust/src/runtime/reference.rs` forward pass, checked for the properties
+the Rust test-suite asserts:
+
+  * INT4 block quantization round-trip error bound (quant::quantize);
+  * nibble pack/unpack identity incl. negatives (pack::layout::PackedQ4);
+  * dequant-on-the-fly q4 GEMM vs f64 dequantized reference;
+  * zero-padded input channels contribute nothing;
+  * batched kernels bit-identical to their batch-1 runs;
+  * structured-sparse fixed-slot GEMM == dense GEMM on pruned weights;
+  * single-pass GEMM prefill == token-by-token stepping (bit-exact);
+  * decode_batch == scalar decode for mixed-length batches (bit-exact);
+  * FFN fast path == f32-dequant/f64-accumulate reference.
+
+Run: python3 python/tests/validate_backend_port.py
+"""
+
+import numpy as np
+
+QBLOCK = 128
+SGROUP = 8
+F32 = np.float32
+
+rng = np.random.default_rng(0x5EED)
+
+
+# ---------------------------------------------------------------- quant
+
+def quantize(w):
+    """quant::quantize — symmetric INT4, FP16 block scales (k x n)."""
+    k, n = w.shape
+    assert k % QBLOCK == 0
+    blocks = k // QBLOCK
+    q = np.zeros((k, n), dtype=np.int8)
+    scales = np.zeros((blocks, n), dtype=np.float16)
+    for b in range(blocks):
+        blk = w[b * QBLOCK:(b + 1) * QBLOCK]
+        amax = np.abs(blk).max(axis=0).astype(F32)
+        s = (amax / F32(7.0)).astype(np.float16)
+        s = np.where(s == 0, np.float16(1.0), s)
+        scales[b] = s
+        sf = s.astype(F32)
+        q[b * QBLOCK:(b + 1) * QBLOCK] = np.clip(
+            np.round(blk / sf), -8, 7
+        ).astype(np.int8)
+    return q, scales
+
+
+def dequant(q, scales):
+    k, n = q.shape
+    out = np.zeros((k, n), dtype=np.float64)
+    for b in range(k // QBLOCK):
+        out[b * QBLOCK:(b + 1) * QBLOCK] = (
+            q[b * QBLOCK:(b + 1) * QBLOCK].astype(np.float64)
+            * scales[b].astype(np.float64)
+        )
+    return out
+
+
+def prune_log_scale(w, keep):
+    """quant::prune_log_scale — ties drop the later index."""
+    k, n = w.shape
+    assert k % SGROUP == 0
+    for g in range(k // SGROUP):
+        for c in range(n):
+            mag = np.abs(w[g * SGROUP:(g + 1) * SGROUP, c]).copy()
+            for _ in range(SGROUP - keep):
+                min_i = 0
+                for i in range(1, SGROUP):
+                    if mag[i] <= mag[min_i]:
+                        min_i = i
+                mag[min_i] = np.inf
+                w[g * SGROUP + min_i, c] = 0.0
+
+
+def pack_sparse(q, scales, keep):
+    """quant::sparse::pack_sparse + the runtime's pre-decoded slot scales."""
+    k, n = q.shape
+    groups = k // SGROUP
+    kk = groups * keep
+    idx = np.zeros((kk, n), dtype=np.int64)
+    val = np.zeros((kk, n), dtype=np.int8)
+    for c in range(n):
+        for g in range(groups):
+            slot = 0
+            for r in range(SGROUP):
+                row = g * SGROUP + r
+                v = q[row, c]
+                if v != 0:
+                    assert slot < keep, "over-dense group"
+                    idx[g * keep + slot, c] = row
+                    val[g * keep + slot, c] = v
+                    slot += 1
+            for s in range(slot, keep):
+                idx[g * keep + s, c] = g * SGROUP
+    slot_scale = np.zeros((kk, n), dtype=F32)
+    for r in range(kk):
+        for c in range(n):
+            slot_scale[r, c] = F32(scales[idx[r, c] // QBLOCK, c])
+    return idx, val, slot_scale
+
+
+# ---------------------------------------------------------------- pack
+
+def pack_nibbles(q):
+    """pack::layout::PackedQ4::from_quant (values only)."""
+    k, n = q.shape
+    assert n % 2 == 0
+    data = np.zeros((k, n // 2), dtype=np.uint8)
+    for r in range(k):
+        lo = q[r, 0::2].astype(np.uint8) & 0xF
+        hi = q[r, 1::2].astype(np.uint8) & 0xF
+        data[r] = lo | (hi << 4)
+    return data
+
+
+def nibble_i8(v):
+    v = int(v) & 0xF
+    return v - 16 if v & 0x8 else v
+
+
+def unpack_row(data_row, n):
+    """kernels::q4_gemm_into's per-row expansion (qrow)."""
+    out = np.zeros(n, dtype=F32)
+    for j, byte in enumerate(data_row):
+        out[2 * j] = F32(nibble_i8(byte & 0xF))
+        out[2 * j + 1] = F32(nibble_i8(byte >> 4))
+    return out
+
+
+# -------------------------------------------------------------- kernels
+
+def gemm(x, w):
+    """kernels::gemm_into — axpy form, input-channel outer loop."""
+    b, k = x.shape
+    n = w.shape[1]
+    out = np.zeros((b, n), dtype=F32)
+    for i in range(k):
+        wrow = w[i]
+        for s in range(b):
+            xv = x[s, i]
+            if xv == 0.0:
+                continue
+            out[s] += xv * wrow
+    return out
+
+
+def q4_gemm(x, data, scales_f32, k, n):
+    """kernels::q4_gemm_into — block partials, row expanded once."""
+    b = x.shape[0]
+    out = np.zeros((b, n), dtype=F32)
+    for blk in range(k // QBLOCK):
+        partial = np.zeros((b, n), dtype=F32)
+        for i in range(blk * QBLOCK, (blk + 1) * QBLOCK):
+            xcol = x[:, i]
+            if not np.any(xcol != 0.0):
+                continue
+            qrow = unpack_row(data[i], n)
+            for s in range(b):
+                if xcol[s] == 0.0:
+                    continue
+                partial[s] += xcol[s] * qrow
+        srow = scales_f32[blk]
+        for s in range(b):
+            out[s] += partial[s] * srow
+    return out
+
+
+def q4_sparse_gemm(x, idx, val, slot_scale):
+    """kernels::q4_sparse_gemm_into — fixed-slot gather."""
+    b = x.shape[0]
+    kk, n = idx.shape
+    out = np.zeros((b, n), dtype=F32)
+    for r in range(kk):
+        for s in range(b):
+            out[s] += (
+                x[s, idx[r]] * val[r].astype(F32) * slot_scale[r]
+            ).astype(F32)
+    return out
+
+
+def attend(q, keys, vals):
+    """kernels::attend_into (values checked in f64 — dot4 order differs
+    only in rounding)."""
+    d = q.shape[0]
+    scores = (keys @ q) / np.sqrt(d)
+    scores = np.exp(scores - scores.max())
+    a = scores / scores.sum()
+    return (a[:, None] * vals).sum(axis=0)
+
+
+def gelu(x):
+    c = F32(0.7978845608028654)
+    x = F32(x)
+    return F32(0.5) * x * (F32(1.0) + np.tanh(c * (x + F32(0.044715) * x * x * x)))
+
+
+# ------------------------------------------------------------ the model
+
+def pad_to_qblock(k):
+    return (k + QBLOCK - 1) // QBLOCK * QBLOCK
+
+
+class QLinear:
+    def __init__(self, w, sparsity_keep=8):
+        d_in, n = w.shape
+        self.d_in, self.n = d_in, n
+        self.k_pad = pad_to_qblock(d_in)
+        padded = np.zeros((self.k_pad, n), dtype=F32)
+        padded[:d_in] = w
+        if sparsity_keep < SGROUP:
+            prune_log_scale(padded, sparsity_keep)
+        self.q, self.scales = quantize(padded)
+        self.sparse = sparsity_keep < SGROUP
+        if self.sparse:
+            self.idx, self.val, self.slot_scale = pack_sparse(
+                self.q, self.scales, sparsity_keep
+            )
+        else:
+            self.data = pack_nibbles(self.q)
+        self.scales_f32 = self.scales.astype(F32)
+
+    def forward(self, x_pad):
+        if self.sparse:
+            return q4_sparse_gemm(x_pad, self.idx, self.val, self.slot_scale)
+        return q4_gemm(x_pad, self.data, self.scales_f32, self.k_pad, self.n)
+
+    def dequant_f64(self):
+        return dequant(self.q, self.scales)
+
+
+class RefLlm:
+    """reference.rs forward pass, float32, same loop structure."""
+
+    def __init__(self, d=8, d_ffn=32, n_layers=2, max_tokens=24, vocab=64,
+                 sparsity_keep=8):
+        self.d, self.d_ffn = d, d_ffn
+        self.n_layers, self.max_tokens, self.vocab = n_layers, max_tokens, vocab
+        s = F32(1.0 / np.sqrt(d))
+        s_ffn = F32(1.0 / np.sqrt(d_ffn))
+        self.emb = (rng.standard_normal((vocab, d)) * 1.0).astype(F32)
+        self.layers = []
+        for _ in range(n_layers):
+            self.layers.append({
+                "wq": (rng.standard_normal((d, d)) * s).astype(F32),
+                "wk": (rng.standard_normal((d, d)) * s).astype(F32),
+                "wv": (rng.standard_normal((d, d)) * s).astype(F32),
+                "wo": (rng.standard_normal((d, d)) * s).astype(F32),
+                "up": QLinear((rng.standard_normal((d, d_ffn)) * s).astype(F32),
+                              sparsity_keep),
+                "down": QLinear((rng.standard_normal((d_ffn, d)) * s_ffn)
+                                .astype(F32), sparsity_keep),
+            })
+        self.w_out = (rng.standard_normal((d, vocab)) * s).astype(F32)
+
+    def fresh_session(self):
+        return {
+            "pos": 0,
+            "k": np.zeros((self.n_layers, self.max_tokens, self.d), dtype=F32),
+            "v": np.zeros((self.n_layers, self.max_tokens, self.d), dtype=F32),
+        }
+
+    def ffn_batch(self, layer, h):
+        b = h.shape[0]
+        up, down = layer["up"], layer["down"]
+        x_pad = np.zeros((b, up.k_pad), dtype=F32)
+        x_pad[:, :self.d] = h
+        mid = up.forward(x_pad)
+        mid_pad = np.zeros((b, down.k_pad), dtype=F32)
+        for s in range(b):
+            for i in range(self.d_ffn):
+                mid_pad[s, i] = gelu(mid[s, i])
+        return down.forward(mid_pad)
+
+    def stack_rows(self, h, sessions, positions):
+        """shared layer walk: h is (b, d); sessions/positions parallel."""
+        for li, layer in enumerate(self.layers):
+            q = gemm(h, layer["wq"])
+            k = gemm(h, layer["wk"])
+            v = gemm(h, layer["wv"])
+            ctx = np.zeros_like(h)
+            for s in range(h.shape[0]):
+                sess, pos = sessions[s], positions[s]
+                sess["k"][li, pos] = k[s]
+                sess["v"][li, pos] = v[s]
+                ctx[s] = attend(q[s], sess["k"][li, :pos + 1],
+                                sess["v"][li, :pos + 1]).astype(F32)
+            o = gemm(ctx, layer["wo"])
+            h = np.tanh(h + o).astype(F32)
+            h = np.tanh(h + self.ffn_batch(layer, h)).astype(F32)
+        return h
+
+    def prefill(self, prompt):
+        t = len(prompt)
+        sess = self.fresh_session()
+        h = self.emb[np.array(prompt) % self.vocab].copy()
+        h = self.stack_rows(h, [sess] * t, list(range(t)))
+        sess["pos"] = t
+        return gemm(h[t - 1:t], self.w_out)[0], sess
+
+    def decode_batch(self, sessions, tokens):
+        b = len(sessions)
+        h = self.emb[np.array(tokens) % self.vocab].copy()
+        positions = [s["pos"] for s in sessions]
+        h = self.stack_rows(h, sessions, positions)
+        for s in sessions:
+            s["pos"] += 1
+        return gemm(h, self.w_out)
+
+    def decode(self, session, token):
+        return self.decode_batch([session], [token])[0]
+
+
+# ---------------------------------------------------------------- checks
+
+def check(name, cond):
+    status = "ok" if cond else "FAIL"
+    print(f"  [{status}] {name}")
+    if not cond:
+        raise SystemExit(f"validation failed: {name}")
+
+
+def main():
+    print("== kernel-level ==")
+    k, n = QBLOCK * 2, 16
+    w = rng.standard_normal((k, n)).astype(F32)
+    q, scales = quantize(w)
+    dq = dequant(q, scales)
+    err_ok = True
+    for b in range(k // QBLOCK):
+        s = scales[b].astype(np.float64)
+        blk = slice(b * QBLOCK, (b + 1) * QBLOCK)
+        err_ok &= bool(np.all(np.abs(w[blk] - dq[blk]) <= s * 0.5 + 1e-6))
+    check("quantize round-trip error <= scale/2", err_ok)
+    check("int4 range", bool(q.min() >= -8 and q.max() <= 7))
+
+    data = pack_nibbles(q)
+    unpacked = np.stack([unpack_row(data[r], n) for r in range(k)])
+    check("nibble pack/unpack identity (incl. negatives)",
+          bool(np.array_equal(unpacked, q.astype(F32))))
+
+    x = rng.standard_normal((3, k)).astype(F32)
+    fast = q4_gemm(x, data, scales.astype(F32), k, n)
+    ref = x.astype(np.float64) @ dq
+    check("q4 gemm vs f64 dequant reference < 1e-3",
+          bool(np.max(np.abs(fast - ref)) < 1e-3))
+
+    xp = x.copy()
+    xp[:, 40:QBLOCK] = 0.0
+    a = q4_gemm(xp, data, scales.astype(F32), k, n)
+    ref2 = xp.astype(np.float64) @ dq
+    check("zero-padded channels contribute nothing",
+          bool(np.max(np.abs(a - ref2)) < 1e-3))
+
+    batched = q4_gemm(x, data, scales.astype(F32), k, n)
+    solo = np.stack([
+        q4_gemm(x[s:s + 1], data, scales.astype(F32), k, n)[0]
+        for s in range(3)
+    ])
+    check("q4 gemm batched == scalar (bit-exact)",
+          bool(np.array_equal(batched, solo)))
+
+    wd = rng.standard_normal((24, 18)).astype(F32)
+    xb = rng.standard_normal((4, 24)).astype(F32)
+    gb = gemm(xb, wd)
+    gs = np.stack([gemm(xb[s:s + 1], wd)[0] for s in range(4)])
+    check("dense gemm batched == scalar (bit-exact)",
+          bool(np.array_equal(gb, gs)))
+    gref = xb.astype(np.float64) @ wd.astype(np.float64)
+    check("dense gemm vs f64 reference < 1e-4",
+          bool(np.max(np.abs(gb - gref)) < 1e-4))
+
+    for keep in (1, 2, 4):
+        wp = rng.standard_normal((QBLOCK, n)).astype(F32)
+        prune_log_scale(wp, keep)
+        qp, sp = quantize(wp)
+        per_group = [
+            int(np.count_nonzero(qp[g * SGROUP:(g + 1) * SGROUP, c]))
+            for g in range(QBLOCK // SGROUP) for c in range(n)
+        ]
+        check(f"prune keeps <= {keep} of 8", max(per_group) <= keep)
+        idx, val, ss = pack_sparse(qp, sp, keep)
+        dp = pack_nibbles(qp)
+        dense_out = q4_gemm(x[:, :QBLOCK], dp, sp.astype(F32), QBLOCK, n)
+        sparse_out = q4_sparse_gemm(x[:, :QBLOCK], idx, val, ss)
+        check(f"sparse gemm == dense gemm (keep {keep}) < 1e-4",
+              bool(np.max(np.abs(dense_out - sparse_out)) < 1e-4))
+        sb = q4_sparse_gemm(x[:, :QBLOCK], idx, val, ss)
+        so = np.stack([
+            q4_sparse_gemm(x[s:s + 1, :QBLOCK], idx, val, ss)[0]
+            for s in range(3)
+        ])
+        check(f"sparse gemm batched == scalar (keep {keep})",
+              bool(np.array_equal(sb, so)))
+
+    print("== model-level ==")
+    for keep, label in ((8, "dense"), (2, "sparse-75%")):
+        m = RefLlm(sparsity_keep=keep)
+        prompt = [3, 17, 42, 9, 28]
+        single, s_single = m.prefill(prompt)
+        _, s_step = m.prefill(prompt[:1])
+        stepped = None
+        for t in prompt[1:]:
+            stepped = m.decode(s_step, t)
+        check(f"[{label}] single-pass prefill == stepping (bit-exact)",
+              bool(np.array_equal(single, stepped))
+              and s_single["pos"] == s_step["pos"])
+
+        prompts = ([5], [1, 2, 3], [30, 31, 32, 33, 34, 35, 36])
+        seq = [m.prefill(p)[1] for p in prompts]
+        bat = [m.prefill(p)[1] for p in prompts]
+        ok = True
+        for tokens in ([7, 8, 9], [50, 51, 52]):
+            scalar = np.stack([m.decode(s, t) for s, t in zip(seq, tokens)])
+            batched = m.decode_batch(bat, tokens)
+            ok &= bool(np.array_equal(scalar, batched))
+        check(f"[{label}] decode_batch == scalar decode, mixed lengths "
+              "(bit-exact)", ok)
+
+        li = 0
+        hx = rng.standard_normal((1, m.d)).astype(F32)
+        fast = np.tanh(hx + m.ffn_batch(m.layers[li], np.tanh(hx)))
+        # f64 dequant reference of the same FFN
+        h1 = np.tanh(hx).astype(np.float64)
+        up64 = m.layers[li]["up"].dequant_f64()[:m.d]
+        down64 = m.layers[li]["down"].dequant_f64()[:m.d_ffn]
+        mid = np.array([gelu(v) for v in (h1 @ up64)[0].astype(F32)],
+                       dtype=np.float64)
+        ref_ffn = np.tanh(hx + (mid @ down64)[None, :])
+        check(f"[{label}] ffn fast path vs f64 dequant reference < 1e-4",
+              bool(np.max(np.abs(fast - ref_ffn)) < 1e-4))
+
+        logits, _ = m.prefill([0, 1, 2])
+        check(f"[{label}] logits finite", bool(np.all(np.isfinite(logits))))
+
+    m = RefLlm()
+    _, sa = m.prefill([1, 2, 3])
+    _, sb2 = m.prefill([9, 8, 7])
+    la = m.decode(sa, 5)
+    lb = m.decode(sb2, 5)
+    check("logits depend on history", not np.array_equal(la, lb))
+
+    print("all validations passed")
+
+
+if __name__ == "__main__":
+    main()

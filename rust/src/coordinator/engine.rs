@@ -164,6 +164,10 @@ pub struct Engine {
     /// completions produced by `step_round` but not yet returned by
     /// `step()`
     ready: VecDeque<Completion>,
+    /// per-round scratch (tokens fed / context lengths), reused so the
+    /// steady-state scheduler round allocates nothing of its own
+    round_tokens: Vec<i32>,
+    round_ctxs: Vec<usize>,
     rng: Rng,
     next_id: u64,
     metrics: EngineMetrics,
@@ -181,6 +185,8 @@ impl Engine {
             queue: VecDeque::new(),
             active: Vec::new(),
             ready: VecDeque::new(),
+            round_tokens: Vec::new(),
+            round_ctxs: Vec::new(),
             rng: Rng::new(cfg.seed),
             next_id: 1,
             metrics: EngineMetrics::default(),
@@ -256,8 +262,12 @@ impl Engine {
         if !self.active.is_empty() {
             // each session's sampled token is emitted now and fed to the
             // model to advance its KV state
-            let tokens: Vec<i32> = self.active.iter().map(|a| a.next_token).collect();
-            let ctxs: Vec<usize> = self.active.iter().map(|a| a.session.pos).collect();
+            self.round_tokens.clear();
+            self.round_ctxs.clear();
+            for a in self.active.iter() {
+                self.round_tokens.push(a.next_token);
+                self.round_ctxs.push(a.session.pos);
+            }
             for a in self.active.iter_mut() {
                 a.generated.push(a.next_token);
             }
@@ -265,14 +275,14 @@ impl Engine {
             let t0 = Instant::now();
             let mut sessions: Vec<&mut Session> =
                 self.active.iter_mut().map(|a| &mut a.session).collect();
-            let logits = self.runtime.decode_batch(&mut sessions, &tokens)?;
+            let logits = self.runtime.decode_batch(&mut sessions, &self.round_tokens)?;
             let round_wall = t0.elapsed().as_secs_f64();
 
             // simulated VCU128 cost: one shared round for the batch
-            let round = self.sim.decode_round(&ctxs);
+            let round = self.sim.decode_round(&self.round_ctxs);
             let round_us = round.total_us();
             self.metrics.rounds += 1;
-            self.metrics.decode_tokens += tokens.len() as u64;
+            self.metrics.decode_tokens += self.round_tokens.len() as u64;
             self.metrics.decode_wall_s += round_wall;
             self.metrics.sim_decode_us += round_us;
 

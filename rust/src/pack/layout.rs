@@ -129,10 +129,7 @@ pub fn decode_package(p: &Package) -> (Vec<u16>, Vec<i8>) {
     }
     let keep = p.sparsity.keep_of_8();
     let mut vals = vec![0i8; CH_GROUP];
-    let sign_extend = |v: u64| -> i8 {
-        let v = v as u8;
-        if v & 0x8 != 0 { (v | 0xF0) as i8 } else { v as i8 }
-    };
+    let sign_extend = |v: u64| -> i8 { nibble_i8(v as u8) };
     match p.encoding {
         MaskEncoding::None => {
             for (r, slot) in vals.iter_mut().enumerate() {
@@ -191,6 +188,71 @@ pub fn port_streams(m: &QuantMatrix, sparsity: Sparsity) -> Vec<Vec<u8>> {
         }
     }
     streams
+}
+
+/// Nibble-packed row-major INT4 weight matrix — the CPU-side mirror of
+/// the dense HBM stream, laid out for the runtime's dequant-on-the-fly
+/// GEMM ([`crate::runtime::kernels::q4_gemm_into`]).
+///
+/// Each row of `k × n` holds the `n` output-channel values of one input
+/// channel, two INT4 values per byte (even column in the low nibble).
+/// Scales are pre-decoded to f32 — one per (QBLOCK input channels ×
+/// output channel), same blocking as [`QuantMatrix`] — so the hot loop
+/// never touches the FP16 codec. Walking rows top to bottom streams the
+/// weight matrix exactly once, which is the access pattern the batched
+/// decode round amortizes across sessions.
+#[derive(Debug, Clone)]
+pub struct PackedQ4 {
+    /// input channels (multiple of QBLOCK)
+    pub k: usize,
+    /// output channels (even, so rows pack to whole bytes)
+    pub n: usize,
+    /// row-major `k × n/2` bytes: byte `r*n/2 + j` holds columns
+    /// `2j` (low nibble) and `2j+1` (high nibble) of row `r`
+    pub data: Vec<u8>,
+    /// row-major `(k/QBLOCK) × n` pre-decoded f32 scales
+    pub scales: Vec<f32>,
+}
+
+/// Sign-extend a 4-bit two's-complement nibble.
+#[inline(always)]
+pub fn nibble_i8(v: u8) -> i8 {
+    ((v << 4) as i8) >> 4
+}
+
+impl PackedQ4 {
+    /// Pack a [`QuantMatrix`] into the nibble layout.
+    pub fn from_quant(m: &QuantMatrix) -> PackedQ4 {
+        assert!(m.n % 2 == 0, "n={} must be even to nibble-pack", m.n);
+        let mut data = vec![0u8; m.k * m.n / 2];
+        for r in 0..m.k {
+            let row = &m.q[r * m.n..(r + 1) * m.n];
+            let dst = &mut data[r * m.n / 2..(r + 1) * m.n / 2];
+            for (j, b) in dst.iter_mut().enumerate() {
+                let lo = (row[2 * j] as u8) & 0xF;
+                let hi = (row[2 * j + 1] as u8) & 0xF;
+                *b = lo | (hi << 4);
+            }
+        }
+        let scales = m
+            .scales
+            .iter()
+            .map(|&s| crate::fp::minifloat::f16_decode(s) as f32)
+            .collect();
+        PackedQ4 { k: m.k, n: m.n, data, scales }
+    }
+
+    /// Dequantized value at (row, col) — test/reference path only.
+    pub fn dequant(&self, row: usize, col: usize) -> f32 {
+        let b = self.data[row * self.n / 2 + col / 2];
+        let v = if col % 2 == 0 { b & 0xF } else { b >> 4 };
+        nibble_i8(v) as f32 * self.scales[(row / QBLOCK) * self.n + col]
+    }
+
+    /// Weight bytes resident for this matrix (values + f32 scales).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
 }
 
 #[cfg(test)]
@@ -268,6 +330,36 @@ mod tests {
             .div_ceil(8);
         // 64 columns over 32 ports = 2 packages per port
         assert!(streams.iter().all(|s| s.len() == 2 * per_pkg));
+    }
+
+    #[test]
+    fn packed_q4_roundtrips_every_value() {
+        let m = pruned(QBLOCK * 2, 16, 8, 21);
+        let p = PackedQ4::from_quant(&m);
+        for r in 0..m.k {
+            for c in 0..m.n {
+                assert!(
+                    (p.dequant(r, c) - m.dequant(r, c) as f32).abs() < 1e-7,
+                    "({r},{c}): packed {} vs quant {}",
+                    p.dequant(r, c),
+                    m.dequant(r, c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_q4_nibble_sign_extension() {
+        for v in -8i8..=7 {
+            assert_eq!(nibble_i8((v as u8) & 0xF), v, "nibble {v}");
+        }
+    }
+
+    #[test]
+    fn packed_q4_halves_value_bytes() {
+        let m = pruned(QBLOCK, 32, 8, 22);
+        let p = PackedQ4::from_quant(&m);
+        assert_eq!(p.data.len(), m.q.len() / 2);
     }
 
     #[test]

@@ -93,6 +93,36 @@ pub fn quantize(w: &[f32], k: usize, n: usize) -> QuantMatrix {
     QuantMatrix { k, n, q, scales }
 }
 
+/// Smallest multiple of [`QBLOCK`] that holds `k` input channels.
+pub fn pad_to_qblock(k: usize) -> usize {
+    k.div_ceil(QBLOCK) * QBLOCK
+}
+
+/// Zero-pad a row-major `k × n` matrix up to [`pad_to_qblock`]`(k)`
+/// input-channel rows — the single padding recipe shared by the dense
+/// and sparse quantized paths.
+pub fn pad_rows(w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * n);
+    let mut padded = vec![0f32; pad_to_qblock(k) * n];
+    padded[..k * n].copy_from_slice(w);
+    padded
+}
+
+/// [`quantize`] for a matrix whose input-channel count is not a QBLOCK
+/// multiple: rows are zero-padded up to [`pad_to_qblock`]`(k)` first.
+/// Padded rows quantize to 0 and contribute nothing as long as the
+/// activation vector is zero-padded the same way (the runtime's scratch
+/// buffers guarantee that). The quantization recipe itself is unchanged —
+/// zero rows only ever lower a block's amax, never raise it.
+pub fn quantize_padded(w: &[f32], k: usize, n: usize) -> QuantMatrix {
+    let k_pad = pad_to_qblock(k);
+    if k_pad == k {
+        assert_eq!(w.len(), k * n);
+        return quantize(w, k, n);
+    }
+    quantize(&pad_rows(w, k, n), k_pad, n)
+}
+
 /// Dequantize back to f32 (row-major k × n).
 pub fn dequantize(m: &QuantMatrix) -> Vec<f32> {
     let mut out = vec![0f32; m.k * m.n];
@@ -239,6 +269,36 @@ mod tests {
             assert!(q.abs() >= 6, "block max quantized to {q}");
             assert_eq!(q.signum() as f32, w[best_r * n + c].signum());
         }
+    }
+
+    #[test]
+    fn quantize_padded_matches_unpadded_prefix() {
+        // k = 32 pads to 128; the 32 real rows must quantize exactly as
+        // they would inside a hand-padded matrix, and padded rows are 0.
+        let (k, n) = (32usize, 8);
+        let w = random_w(k, n, 11);
+        let m = quantize_padded(&w, k, n);
+        assert_eq!(m.k, QBLOCK);
+        let mut hand = vec![0f32; QBLOCK * n];
+        hand[..k * n].copy_from_slice(&w);
+        let hm = quantize(&hand, QBLOCK, n);
+        assert_eq!(m.q, hm.q);
+        assert_eq!(m.scales, hm.scales);
+        for r in k..QBLOCK {
+            for c in 0..n {
+                assert_eq!(m.q[r * n + c], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_padded_noop_when_aligned() {
+        let (k, n) = (QBLOCK, 4);
+        let w = random_w(k, n, 12);
+        let a = quantize_padded(&w, k, n);
+        let b = quantize(&w, k, n);
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.scales, b.scales);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! (column-padded groups ensure a rectangular shape — the time-unrolled
 //! micro-architecture's 100%-utilization property).
 
-use super::{QuantMatrix, SGROUP};
+use super::{QuantMatrix, QBLOCK, SGROUP};
 
 /// Sparse-packed matrix: exactly `keep_of_8` slots per 8-channel group
 /// per column (zero-padded within the group when fewer non-zeros exist).
@@ -30,6 +30,24 @@ impl SparseMatrix {
     /// Rows of the packed representation: k × keep/8.
     pub fn kk(&self) -> usize {
         self.k / SGROUP * self.keep_of_8
+    }
+
+    /// Pre-decoded f32 scale of every packed slot (`kk × n`, same layout
+    /// as `idx`/`val`): slot (r, c) carries the FP16 block scale of its
+    /// source row `idx[r*n + c]`. This is what the runtime's sparse
+    /// FP16×INT4 kernel multiplies by, decoded once at load time.
+    pub fn slot_scales(&self) -> Vec<f32> {
+        let (kk, n) = (self.kk(), self.n);
+        let mut out = vec![0f32; kk * n];
+        for r in 0..kk {
+            for c in 0..n {
+                let row = self.idx[r * n + c] as usize;
+                out[r * n + c] = crate::fp::minifloat::f16_decode(
+                    self.scales[(row / QBLOCK) * n + c],
+                ) as f32;
+            }
+        }
+        out
     }
 }
 

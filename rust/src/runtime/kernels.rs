@@ -1,0 +1,464 @@
+//! Batched, blocked CPU kernels for the functional backend — the
+//! software mirror of the paper's dataflow.
+//!
+//! Every kernel here obeys two contracts:
+//!
+//! 1. **Weight-stream-once loop order.** The outer loop of every matrix
+//!    kernel walks the weight matrix in its storage order (input-major,
+//!    the same `k × n` layout the quantizer and the HBM packager use);
+//!    the batch dimension is inner. One batched decode round therefore
+//!    reads each weight element exactly once from memory (it stays in
+//!    L1 across the batch), which is the same accounting
+//!    `sim::engine::Simulator::decode_round` charges the accelerator:
+//!    the weight stream is shared, only the per-session work multiplies.
+//! 2. **Batch-order invariance.** For a fixed session, the sequence of
+//!    floating-point operations is identical whether the session runs at
+//!    batch 1 or inside any larger batch. Batched decode is therefore
+//!    *bit-identical* to scalar decode, not merely close — the
+//!    equivalence tests assert both.
+//!
+//! The matrix kernels accumulate in axpy form (`out_row += x_i · w_row`):
+//! the inner loop is contiguous over independent output accumulators, so
+//! it vectorizes and is never serialized on floating-point add latency
+//! the way a naive dot-product reduction is — that difference is most of
+//! the single-stream throughput, and what makes batch-1 decode genuinely
+//! weight-stream-bound (and batching therefore genuinely profitable).
+//!
+//! All kernels write into caller-provided scratch (no allocation on the
+//! hot path). The FP16×INT4 kernels consume the nibble-packed
+//! [`PackedQ4`] layout (dense) or the fixed-slot [`SparseMatrix`] layout
+//! (log-scale structured sparsity) and dequantize on the fly — each
+//! packed row is expanded once per round and amortized over the whole
+//! batch, with scales factored out per 128-channel block like the
+//! mix-precision PE's scale stage. The *bit-exact* PE arithmetic model
+//! lives in `fp::mixpe`; these kernels are the fast functional
+//! counterpart.
+
+use crate::pack::layout::{nibble_i8, PackedQ4};
+use crate::quant::sparse::SparseMatrix;
+use crate::quant::QBLOCK;
+
+/// Four-lane dot product (fixed summation order): breaks the
+/// floating-point add latency chain of a naive reduction while staying
+/// deterministic. Used for attention scores, where the output is a
+/// scalar and axpy form does not apply.
+#[inline(always)]
+pub fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc[0] += xa[0] * xb[0];
+        acc[1] += xa[1] * xb[1];
+        acc[2] += xa[2] * xb[2];
+        acc[3] += xa[3] * xb[3];
+    }
+    let mut tail = 0.0f32;
+    for (xa, xb) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += xa * xb;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// `out[s*n + c] = Σ_i x[s*k + i] · w[i*n + c]` for input-major
+/// `k × n` weights and `b` activation rows (row-major `b × k`).
+/// Overwrites `out[..b*n]`.
+///
+/// Loop order: weight row outer (streamed once per call), sessions
+/// inner, output channels innermost (contiguous axpy). Input channels
+/// whose activation is zero contribute nothing and are skipped.
+pub fn gemm_into(x: &[f32], b: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert!(x.len() >= b * k);
+    debug_assert!(w.len() >= k * n);
+    debug_assert!(out.len() >= b * n);
+    out[..b * n].fill(0.0);
+    for i in 0..k {
+        let wrow = &w[i * n..(i + 1) * n];
+        for s in 0..b {
+            let xv = x[s * k + i];
+            if xv == 0.0 {
+                continue;
+            }
+            let orow = &mut out[s * n..(s + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// `out[c] = Σ_i x[i] · w[i*n + c]` — batch-1 [`gemm_into`].
+pub fn matvec_into(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let (k, n) = (x.len(), out.len());
+    gemm_into(x, 1, k, w, n, out);
+}
+
+/// Dequant-on-the-fly FP16×INT4 batched GEMM over the nibble-packed
+/// dense layout: `out[s*n + c] = Σ_i x[s*k + i] · dq(w[i, c])`,
+/// overwriting `out[..b*n]`.
+///
+/// Each packed row is expanded to f32 once per round into `qrow` and
+/// amortized over all `b` sessions — at batch 1 the nibble decode is
+/// the dominant cost, so this amortization is a large part of the
+/// batched speedup. Scales are factored out per QBLOCK: INT4 values
+/// accumulate into `partial` and the block's f32 scale is applied once
+/// per output — the software shape of the PE's block-scale stage.
+/// Rows whose activations are zero across the whole batch (e.g. the
+/// zero-padding above the model's true width) are skipped.
+///
+/// Scratch: `partial` needs `b*n` slots, `xcol` needs `b`, `qrow` `n`.
+pub fn q4_gemm_into(
+    x: &[f32],
+    b: usize,
+    w: &PackedQ4,
+    partial: &mut [f32],
+    xcol: &mut [f32],
+    qrow: &mut [f32],
+    out: &mut [f32],
+) {
+    let (k, n) = (w.k, w.n);
+    debug_assert!(x.len() >= b * k);
+    debug_assert!(partial.len() >= b * n);
+    debug_assert!(xcol.len() >= b);
+    debug_assert!(qrow.len() >= n);
+    debug_assert!(out.len() >= b * n);
+    out[..b * n].fill(0.0);
+    let half = n / 2;
+    for blk in 0..k / QBLOCK {
+        partial[..b * n].fill(0.0);
+        for i in blk * QBLOCK..(blk + 1) * QBLOCK {
+            // gather this input channel's activation across the batch
+            let mut any = false;
+            for s in 0..b {
+                let xv = x[s * k + i];
+                xcol[s] = xv;
+                any |= xv != 0.0;
+            }
+            if !any {
+                continue; // padded / inactive channel
+            }
+            // expand the nibble row once for the whole batch
+            let row = &w.data[i * half..(i + 1) * half];
+            for (j, &byte) in row.iter().enumerate() {
+                qrow[2 * j] = nibble_i8(byte & 0xF) as f32;
+                qrow[2 * j + 1] = nibble_i8(byte >> 4) as f32;
+            }
+            for (s, &xv) in xcol[..b].iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let prow = &mut partial[s * n..(s + 1) * n];
+                for (p, &qv) in prow.iter_mut().zip(&qrow[..n]) {
+                    *p += xv * qv;
+                }
+            }
+        }
+        let srow = &w.scales[blk * n..(blk + 1) * n];
+        for s in 0..b {
+            let prow = &partial[s * n..(s + 1) * n];
+            let orow = &mut out[s * n..(s + 1) * n];
+            for ((o, &p), &sc) in orow.iter_mut().zip(prow).zip(srow) {
+                *o += p * sc;
+            }
+        }
+    }
+}
+
+/// Structured-sparse FP16×INT4 batched GEMM over the fixed-slot packed
+/// layout (log-scale N:M pruning): only the kept slots are walked, with
+/// the slot index selecting the matching activation lane — the software
+/// model of the sparse DMA's activation select. `slot_scale` holds the
+/// pre-decoded f32 scale of each slot (`kk × n`, see
+/// `SparseMatrix::idx`). Overwrites `out[..b*n]`.
+pub fn q4_sparse_gemm_into(
+    x: &[f32],
+    b: usize,
+    m: &SparseMatrix,
+    slot_scale: &[f32],
+    out: &mut [f32],
+) {
+    let (k, n, kk) = (m.k, m.n, m.kk());
+    debug_assert!(x.len() >= b * k);
+    debug_assert!(slot_scale.len() >= kk * n);
+    debug_assert!(out.len() >= b * n);
+    out[..b * n].fill(0.0);
+    for r in 0..kk {
+        let idxrow = &m.idx[r * n..(r + 1) * n];
+        let valrow = &m.val[r * n..(r + 1) * n];
+        let srow = &slot_scale[r * n..(r + 1) * n];
+        for s in 0..b {
+            let xs = &x[s * k..(s + 1) * k];
+            let orow = &mut out[s * n..(s + 1) * n];
+            for c in 0..n {
+                orow[c] += xs[idxrow[c] as usize] * valrow[c] as f32 * srow[c];
+            }
+        }
+    }
+}
+
+/// Causal attention for one session: `scores.len()` cached positions,
+/// `q.len() = d`. Writes softmax(q·Kᵀ/√d)·V into `ctx`; `scores` is
+/// scratch. Identical operation order at any batch size (each session
+/// attends over its own cache, so there is nothing to share).
+pub fn attend_into(q: &[f32], keys: &[f32], vals: &[f32], scores: &mut [f32], ctx: &mut [f32]) {
+    let d = q.len();
+    let len = scores.len();
+    debug_assert!(keys.len() >= len * d && vals.len() >= len * d);
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    for (i, s) in scores.iter_mut().enumerate() {
+        *s = dot4(&keys[i * d..(i + 1) * d], q) * inv_sqrt_d;
+    }
+    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut wsum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - m).exp();
+        wsum += *s;
+    }
+    ctx.fill(0.0);
+    for (i, s) in scores.iter().enumerate() {
+        let a = s / wsum;
+        let vi = &vals[i * d..(i + 1) * d];
+        for (c, x) in ctx.iter_mut().zip(vi.iter()) {
+            *c += a * x;
+        }
+    }
+}
+
+/// GELU (tanh approximation) — the FFN activation.
+#[inline(always)]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sparse::pack_sparse;
+    use crate::quant::{prune_log_scale, quantize, QuantMatrix};
+    use crate::util::rng::Rng;
+
+    fn random(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn quantized(k: usize, n: usize, keep: usize, seed: u64) -> QuantMatrix {
+        let mut w = random(k * n, seed);
+        if keep < 8 {
+            prune_log_scale(&mut w, k, n, keep);
+        }
+        quantize(&w, k, n)
+    }
+
+    #[test]
+    fn dot4_matches_f64_reference() {
+        for len in [1usize, 3, 4, 7, 8, 33, 64] {
+            let a = random(len, 1);
+            let b = random(len, 2);
+            let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot4(&a, &b) as f64;
+            assert!((got - want).abs() < 1e-4, "len {len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_reference() {
+        let (k, n, bsz) = (24usize, 18, 3);
+        let w = random(k * n, 3);
+        let x = random(bsz * k, 4);
+        let mut out = vec![0f32; bsz * n];
+        gemm_into(&x, bsz, k, &w, n, &mut out);
+        for s in 0..bsz {
+            for c in 0..n {
+                let mut want = 0f64;
+                for i in 0..k {
+                    want += x[s * k + i] as f64 * w[i * n + c] as f64;
+                }
+                let got = out[s * n + c] as f64;
+                assert!((got - want).abs() < 1e-4, "s={s} c={c}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_batch1_is_matvec() {
+        let (k, n) = (16usize, 24);
+        let w = random(k * n, 5);
+        let x = random(k, 6);
+        let mut a = vec![0f32; n];
+        let mut b = vec![0f32; n];
+        matvec_into(&w, &x, &mut a);
+        gemm_into(&x, 1, k, &w, n, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gemm_batched_is_bitwise_per_session() {
+        let (k, n, bsz) = (16usize, 24, 5);
+        let w = random(k * n, 7);
+        let x = random(bsz * k, 8);
+        let mut batched = vec![0f32; bsz * n];
+        gemm_into(&x, bsz, k, &w, n, &mut batched);
+        for s in 0..bsz {
+            let mut one = vec![0f32; n];
+            matvec_into(&w, &x[s * k..(s + 1) * k], &mut one);
+            assert_eq!(one, batched[s * n..(s + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn q4_gemm_matches_dequant_reference() {
+        let (k, n, bsz) = (QBLOCK * 2, 16, 3);
+        let m = quantized(k, n, 8, 9);
+        let p = PackedQ4::from_quant(&m);
+        let x = random(bsz * k, 10);
+        let mut out = vec![0f32; bsz * n];
+        let mut partial = vec![0f32; bsz * n];
+        let mut xcol = vec![0f32; bsz];
+        let mut qrow = vec![0f32; n];
+        q4_gemm_into(&x, bsz, &p, &mut partial, &mut xcol, &mut qrow, &mut out);
+        for s in 0..bsz {
+            for c in 0..n {
+                let mut want = 0f64;
+                for r in 0..k {
+                    want += x[s * k + r] as f64 * m.dequant(r, c);
+                }
+                let got = out[s * n + c] as f64;
+                assert!((got - want).abs() < 1e-3, "s={s} c={c}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn q4_gemm_batched_is_bitwise_per_session() {
+        let (k, n, bsz) = (QBLOCK, 8, 4);
+        let m = quantized(k, n, 8, 11);
+        let p = PackedQ4::from_quant(&m);
+        let x = random(bsz * k, 12);
+        let mut batched = vec![0f32; bsz * n];
+        let mut partial = vec![0f32; bsz * n];
+        let mut xcol = vec![0f32; bsz];
+        let mut qrow = vec![0f32; n];
+        q4_gemm_into(&x, bsz, &p, &mut partial, &mut xcol, &mut qrow, &mut batched);
+        for s in 0..bsz {
+            let mut one = vec![0f32; n];
+            q4_gemm_into(
+                &x[s * k..(s + 1) * k],
+                1,
+                &p,
+                &mut partial,
+                &mut xcol,
+                &mut qrow,
+                &mut one,
+            );
+            assert_eq!(one, batched[s * n..(s + 1) * n], "session {s}");
+        }
+    }
+
+    #[test]
+    fn q4_gemm_zero_padded_rows_are_free() {
+        // activations above the true width are zero: identical result to
+        // an x that never had the padding
+        let (k, n) = (QBLOCK, 8);
+        let m = quantized(k, n, 8, 13);
+        let p = PackedQ4::from_quant(&m);
+        let mut x = random(k, 14);
+        for v in x[40..].iter_mut() {
+            *v = 0.0;
+        }
+        let mut out = vec![0f32; n];
+        let mut partial = vec![0f32; n];
+        let mut xcol = vec![0f32; 1];
+        let mut qrow = vec![0f32; n];
+        q4_gemm_into(&x, 1, &p, &mut partial, &mut xcol, &mut qrow, &mut out);
+        for c in 0..n {
+            let mut want = 0f64;
+            for r in 0..40 {
+                want += x[r] as f64 * m.dequant(r, c);
+            }
+            assert!((out[c] as f64 - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn q4_sparse_matches_dense_on_pruned() {
+        let (k, n, bsz) = (QBLOCK, 16, 3);
+        for keep in [1usize, 2, 4] {
+            let m = quantized(k, n, keep, 15 + keep as u64);
+            let p = PackedQ4::from_quant(&m);
+            let sm = pack_sparse(&m, keep);
+            let ss = sm.slot_scales();
+            let x = random(bsz * k, 16);
+            let mut dense = vec![0f32; bsz * n];
+            let mut partial = vec![0f32; bsz * n];
+            let mut xcol = vec![0f32; bsz];
+            let mut qrow = vec![0f32; n];
+            q4_gemm_into(&x, bsz, &p, &mut partial, &mut xcol, &mut qrow, &mut dense);
+            let mut sparse = vec![0f32; bsz * n];
+            q4_sparse_gemm_into(&x, bsz, &sm, &ss, &mut sparse);
+            for i in 0..bsz * n {
+                assert!(
+                    (dense[i] - sparse[i]).abs() < 1e-4,
+                    "keep {keep} elem {i}: {} vs {}",
+                    dense[i],
+                    sparse[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q4_sparse_batched_is_bitwise_per_session() {
+        let (k, n, bsz) = (QBLOCK, 8, 3);
+        let m = quantized(k, n, 2, 17);
+        let sm = pack_sparse(&m, 2);
+        let ss = sm.slot_scales();
+        let x = random(bsz * k, 18);
+        let mut batched = vec![0f32; bsz * n];
+        q4_sparse_gemm_into(&x, bsz, &sm, &ss, &mut batched);
+        for s in 0..bsz {
+            let mut one = vec![0f32; n];
+            q4_sparse_gemm_into(&x[s * k..(s + 1) * k], 1, &sm, &ss, &mut one);
+            assert_eq!(one, batched[s * n..(s + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn attend_single_position_returns_value_row() {
+        let d = 8;
+        let q = random(d, 19);
+        let k = random(d, 20);
+        let v = random(d, 21);
+        let mut scores = vec![0f32; 1];
+        let mut ctx = vec![0f32; d];
+        attend_into(&q, &k, &v, &mut scores, &mut ctx);
+        for i in 0..d {
+            assert!((ctx[i] - v[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn attend_weights_are_convex() {
+        // context must lie inside the convex hull of the value rows:
+        // with all-equal values it reproduces them exactly
+        let (d, len) = (4usize, 6);
+        let q = random(d, 22);
+        let k = random(len * d, 23);
+        let v: Vec<f32> = (0..len * d).map(|i| (i % d) as f32).collect();
+        let mut scores = vec![0f32; len];
+        let mut ctx = vec![0f32; d];
+        attend_into(&q, &k, &v, &mut scores, &mut ctx);
+        for i in 0..d {
+            assert!((ctx[i] - i as f32).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gelu_fixed_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(3.0) - 2.9964).abs() < 1e-3);
+        assert!(gelu(-3.0).abs() < 4e-3);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+    }
+}

@@ -102,6 +102,7 @@ pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
         .map_err(|e| anyhow::anyhow!("literal to_vec f32: {e:?}"))
 }
 
+pub mod kernels;
 pub mod model;
 pub mod reference;
 pub mod weights;

@@ -44,6 +44,9 @@ pub struct ModelInfo {
 /// A loaded, weight-resident model ready to serve.
 pub struct LlmRuntime {
     pub info: ModelInfo,
+    /// prefill bucket lengths, ascending — cached here so the scheduler
+    /// reads a slice instead of cloning a Vec every admission
+    buckets: Vec<usize>,
     backend: Backend,
 }
 
@@ -65,7 +68,9 @@ struct PjrtModel {
 /// Mutable per-request state: the KV cache (host copy) and position.
 ///
 /// One `Session` per live request; the continuous-batching scheduler
-/// keeps up to `max_active` of these in flight at once.
+/// keeps up to `max_active` of these in flight at once. `Clone` snapshots
+/// the full KV state (used by the benches to reset between samples).
+#[derive(Clone)]
 pub struct Session {
     pub pos: usize,
     pub(crate) k_cache: Vec<f32>,
@@ -118,6 +123,7 @@ impl LlmRuntime {
         let model = RefLlm::new(cfg);
         LlmRuntime {
             info: model.info().clone(),
+            buckets: model.prefill_buckets().to_vec(),
             backend: Backend::Reference(model),
         }
     }
@@ -212,6 +218,7 @@ impl LlmRuntime {
         }
         Ok(LlmRuntime {
             info,
+            buckets: prefill_exes.iter().map(|(t, _)| *t).collect(),
             backend: Backend::Pjrt(PjrtModel {
                 client,
                 decode_exe,
@@ -236,14 +243,21 @@ impl LlmRuntime {
 
     /// Smallest prefill bucket that fits `len` tokens.
     pub fn bucket_for(&self, len: usize) -> Option<usize> {
-        self.prefill_buckets().into_iter().find(|t| *t >= len)
+        self.buckets.iter().copied().find(|t| *t >= len)
     }
 
-    pub fn prefill_buckets(&self) -> Vec<usize> {
+    /// Prefill bucket lengths, ascending (no allocation).
+    pub fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Resident quantized-FFN weight bytes (reference backend only) —
+    /// the stream the batched decode round amortizes.
+    pub fn ffn_weight_bytes(&self) -> Option<usize> {
         match &self.backend {
-            Backend::Reference(m) => m.prefill_buckets(),
+            Backend::Reference(m) => Some(m.ffn_weight_bytes()),
             #[cfg(feature = "pjrt")]
-            Backend::Pjrt(m) => m.prefill_exes.iter().map(|(t, _)| *t).collect(),
+            Backend::Pjrt(_) => None,
         }
     }
 
@@ -283,10 +297,12 @@ impl LlmRuntime {
     /// every live session and return each session's next-token logits.
     ///
     /// This is the scheduler's single entry point per round. The
-    /// functional backends execute the sessions one after another (the
-    /// paper's accelerator is a batch-1 datapath); the *performance*
-    /// benefit of sharing one weight stream across the batch is modeled
-    /// by `sim::engine::Simulator::decode_round`.
+    /// reference backend executes it as a *true* batched round — each
+    /// weight matrix is streamed once for the whole batch, the same
+    /// accounting `sim::engine::Simulator::decode_round` charges the
+    /// accelerator — and is bit-identical to scalar decode per session.
+    /// The PJRT backend (batch-1 compiled artifacts) falls back to
+    /// stepping the sessions one after another.
     pub fn decode_batch(
         &self,
         sessions: &mut [&mut Session],
@@ -299,11 +315,26 @@ impl LlmRuntime {
                 tokens.len()
             );
         }
-        sessions
-            .iter_mut()
-            .zip(tokens.iter())
-            .map(|(s, &t)| self.decode(s, t))
-            .collect()
+        match &self.backend {
+            Backend::Reference(m) => m.decode_batch(sessions, tokens),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(m) => {
+                // validate the KV-budget precondition up front so a
+                // full cache never aborts the round mid-batch (a device
+                // error during stepping can still do so — the batch-1
+                // executor offers no rollback)
+                for s in sessions.iter() {
+                    if s.pos >= self.info.max_tokens {
+                        bail!("KV cache full (max_tokens={})", self.info.max_tokens);
+                    }
+                }
+                sessions
+                    .iter_mut()
+                    .zip(tokens.iter())
+                    .map(|(s, &t)| m.decode(s, t))
+                    .collect()
+            }
+        }
     }
 }
 

@@ -1,20 +1,48 @@
-//! Pure-Rust reference LLM backend.
+//! Pure-Rust reference LLM backend: a batched, blocked, quantized
+//! compute engine.
 //!
 //! A deliberately small autoregressive transformer (byte vocabulary,
 //! seeded random weights) with the *same* session semantics as the AOT
-//! artifact path: per-layer K/V caches indexed by position, prefill that
-//! returns the last token's logits plus a fresh [`Session`], and one
-//! decode step per generated token. It exists so the serving engine, the
-//! continuous-batching scheduler, and the TCP protocol are exercised
-//! end-to-end on any machine — no artifacts, no PJRT, no Python.
+//! artifact path — per-layer K/V caches indexed by position, prefill
+//! that returns the last token's logits plus a fresh [`Session`], one
+//! decode step per generated token — but with the serving hot path built
+//! the way the paper's datapath works:
+//!
+//! * **MHA in FP16-class float** (f32 here): the attention projections
+//!   run through dense GEMMs whose outer loop streams each weight row
+//!   exactly once per batched round ([`kernels::gemm_into`]).
+//! * **FFN in FP16×INT4**: the up/down projections are group-quantized
+//!   to INT4 with FP16 block scales (`quant::quantize`), stored in the
+//!   nibble-packed row-major layout (`pack::layout::PackedQ4`), and
+//!   executed by a dequant-on-the-fly GEMM. An optional log-scale
+//!   structured-sparsity fast path walks the fixed-slot packed layout
+//!   instead (`quant::sparse`).
+//! * **Sequence-level prefill**: the whole prompt is processed as
+//!   `T`-row GEMMs (one weight pass for all prompt tokens) instead of
+//!   `T` scalar steps, and only the last position's logits touch the
+//!   output head.
+//! * **True batched decode**: [`RefLlm::decode_batch`] advances every
+//!   live session in one pass per weight matrix, mirroring the
+//!   weight-stream-once accounting of `sim::engine::decode_round`. For
+//!   any fixed session the operation order is identical at every batch
+//!   size, so batched and scalar decode are bit-identical.
+//! * **Steady-state zero allocation**: all intermediates live in a
+//!   per-engine scratch arena ([`Scratch`]) that grows once and is
+//!   reused; the only per-call allocations are the returned logits.
 //!
 //! Numbers produced here are functional, not paper numbers; the VCU128
 //! performance model lives in `sim::engine` and is charged by the
 //! serving engine independently of which functional backend runs.
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Result};
 
+use super::kernels::{attend_into, gelu, gemm_into, matvec_into, q4_gemm_into, q4_sparse_gemm_into};
 use super::model::{ModelInfo, Session};
+use crate::pack::layout::PackedQ4;
+use crate::quant::sparse::{pack_sparse, SparseMatrix};
+use crate::quant::{self, prune_log_scale, Sparsity, SGROUP};
 use crate::util::rng::Rng;
 
 /// Byte-level vocabulary, matching `coordinator::tokenizer`.
@@ -29,6 +57,9 @@ pub struct ReferenceConfig {
     pub n_heads: usize,
     pub max_tokens: usize,
     pub seed: u64,
+    /// Log-scale structured sparsity applied to the FFN weights before
+    /// quantization; `Sparsity::Dense` uses the dense nibble-packed path.
+    pub ffn_sparsity: Sparsity,
 }
 
 impl Default for ReferenceConfig {
@@ -40,60 +71,179 @@ impl Default for ReferenceConfig {
             n_heads: 2,
             max_tokens: 64,
             seed: 0x5EED,
+            ffn_sparsity: Sparsity::Dense,
         }
     }
 }
 
-/// Per-layer projection weights, row-major `d × d`.
+/// A group-quantized INT4 linear layer, logical `d_in → n`. Input
+/// channels are zero-padded to a QBLOCK multiple; the matching
+/// activation padding lives in the scratch arena and is skipped by the
+/// kernels at zero cost.
+struct QLinear {
+    d_in: usize,
+    k_pad: usize,
+    n: usize,
+    body: QBody,
+}
+
+enum QBody {
+    /// nibble-packed dense layout
+    Dense(PackedQ4),
+    /// fixed-slot structured-sparse layout + pre-decoded per-slot scales
+    Sparse { m: SparseMatrix, slot_scale: Vec<f32> },
+}
+
+impl QLinear {
+    /// Quantize a row-major `d_in × n` (input-major) f32 matrix.
+    fn build(w: &[f32], d_in: usize, n: usize, sparsity: Sparsity) -> QLinear {
+        assert_eq!(w.len(), d_in * n);
+        let k_pad = quant::pad_to_qblock(d_in);
+        let keep = sparsity.keep_of_8();
+        let qm = if keep < SGROUP {
+            // pruning must see the padded matrix (group-of-8 structure)
+            let mut padded = quant::pad_rows(w, d_in, n);
+            prune_log_scale(&mut padded, k_pad, n, keep);
+            quant::quantize(&padded, k_pad, n)
+        } else {
+            quant::quantize_padded(w, d_in, n)
+        };
+        let body = if keep < SGROUP {
+            let m = pack_sparse(&qm, keep);
+            let slot_scale = m.slot_scales();
+            QBody::Sparse { m, slot_scale }
+        } else {
+            QBody::Dense(PackedQ4::from_quant(&qm))
+        };
+        QLinear { d_in, k_pad, n, body }
+    }
+
+    /// Batched forward over `b` zero-padded activation rows (`b × k_pad`).
+    fn forward(
+        &self,
+        x: &[f32],
+        b: usize,
+        partial: &mut [f32],
+        xcol: &mut [f32],
+        qrow: &mut [f32],
+        out: &mut [f32],
+    ) {
+        match &self.body {
+            QBody::Dense(p) => q4_gemm_into(x, b, p, partial, xcol, qrow, out),
+            QBody::Sparse { m, slot_scale } => q4_sparse_gemm_into(x, b, m, slot_scale, out),
+        }
+    }
+
+    /// Dequantized weight at (input row, output col) — reference path.
+    fn dequant(&self, r: usize, c: usize) -> f32 {
+        match &self.body {
+            QBody::Dense(p) => p.dequant(r, c),
+            QBody::Sparse { m, slot_scale } => {
+                let keep = m.keep_of_8;
+                let g = r / SGROUP;
+                for s in 0..keep {
+                    let slot = (g * keep + s) * m.n + c;
+                    if m.idx[slot] as usize == r && m.val[slot] != 0 {
+                        return m.val[slot] as f32 * slot_scale[slot];
+                    }
+                }
+                0.0
+            }
+        }
+    }
+}
+
+/// Per-layer weights: dense f32 attention projections + quantized FFN.
+/// Every matrix is stored **input-major** (`k × n`, input channels are
+/// rows) — the same streaming layout the quantizer and the HBM packager
+/// use, and the order the axpy kernels walk.
 struct Layer {
     wq: Vec<f32>,
     wk: Vec<f32>,
     wv: Vec<f32>,
     wo: Vec<f32>,
+    /// `d → d_ffn`, INT4
+    w_up: QLinear,
+    /// `d_ffn → d`, INT4
+    w_down: QLinear,
+}
+
+/// Scratch arena for the batched forward pass. Buffers grow to the
+/// high-water mark (`max(batch, prompt_len)` rows) on first use and are
+/// reused forever after — the decode hot path performs no allocation.
+///
+/// Invariant: the padding tail of each `ffn_in` / `ffn_mid` row
+/// (`[d_in, k_pad)`) is zero. It is initialized to zero, never written,
+/// and the quantized kernels only read it.
+#[derive(Default)]
+struct Scratch {
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    o: Vec<f32>,
+    scores: Vec<f32>,
+    ffn_in: Vec<f32>,
+    ffn_up: Vec<f32>,
+    ffn_mid: Vec<f32>,
+    ffn_out: Vec<f32>,
+    partial: Vec<f32>,
+    xcol: Vec<f32>,
+    /// one dequantized INT4 weight row, expanded once per round
+    qrow: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+fn ensure(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
 }
 
 pub struct RefLlm {
     info: ModelInfo,
-    /// token embeddings, `REF_VOCAB × d`
+    /// token embeddings, `REF_VOCAB × d` (row lookup, not a GEMM)
     emb: Vec<f32>,
     layers: Vec<Layer>,
-    /// output head, `REF_VOCAB × d`
+    /// output head, input-major `d × REF_VOCAB`
     w_out: Vec<f32>,
     buckets: Vec<usize>,
+    scratch: RefCell<Scratch>,
 }
 
 fn init(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32 * scale).collect()
 }
 
-/// `y = W x` for row-major `rows × d` W.
-fn matvec(w: &[f32], x: &[f32], rows: usize) -> Vec<f32> {
-    let d = x.len();
-    let mut y = vec![0.0f32; rows];
-    for (r, yr) in y.iter_mut().enumerate() {
-        let row = &w[r * d..(r + 1) * d];
-        let mut acc = 0.0f32;
-        for (a, b) in row.iter().zip(x.iter()) {
-            acc += a * b;
-        }
-        *yr = acc;
-    }
-    y
-}
-
 impl RefLlm {
     pub fn new(cfg: ReferenceConfig) -> Self {
         let d = cfg.d_model;
+        assert!(d % 2 == 0, "d_model={d} must be even (nibble-packed FFN)");
+        let d_ffn = 4 * d;
         let mut rng = Rng::new(cfg.seed);
-        // 1/sqrt(d) keeps activations and logits O(1) through the depth
+        // 1/sqrt(fan-in) keeps activations and logits O(1) through depth
         let s = 1.0 / (d as f32).sqrt();
+        let s_ffn = 1.0 / (d_ffn as f32).sqrt();
         let emb = init(&mut rng, REF_VOCAB * d, 1.0);
         let layers: Vec<Layer> = (0..cfg.n_layers)
-            .map(|_| Layer {
-                wq: init(&mut rng, d * d, s),
-                wk: init(&mut rng, d * d, s),
-                wv: init(&mut rng, d * d, s),
-                wo: init(&mut rng, d * d, s),
+            .map(|_| {
+                // all matrices are input-major (k × n) — the streaming /
+                // quantization layout the axpy kernels walk
+                let wq = init(&mut rng, d * d, s);
+                let wk = init(&mut rng, d * d, s);
+                let wv = init(&mut rng, d * d, s);
+                let wo = init(&mut rng, d * d, s);
+                let up = init(&mut rng, d * d_ffn, s);
+                let down = init(&mut rng, d_ffn * d, s_ffn);
+                Layer {
+                    wq,
+                    wk,
+                    wv,
+                    wo,
+                    w_up: QLinear::build(&up, d, d_ffn, cfg.ffn_sparsity),
+                    w_down: QLinear::build(&down, d_ffn, d, cfg.ffn_sparsity),
+                }
             })
             .collect();
         let w_out = init(&mut rng, REF_VOCAB * d, s);
@@ -106,7 +256,8 @@ impl RefLlm {
             b *= 2;
         }
         buckets.push(cfg.max_tokens);
-        let n_params = emb.len() + layers.len() * 4 * d * d + w_out.len();
+        let n_params =
+            emb.len() + cfg.n_layers * (4 * d * d + 2 * d * d_ffn) + w_out.len();
         let info = ModelInfo {
             name: cfg.name,
             vocab: REF_VOCAB,
@@ -114,7 +265,7 @@ impl RefLlm {
             n_layers: cfg.n_layers,
             n_heads: cfg.n_heads,
             n_kv_heads: cfg.n_heads,
-            d_ffn: 4 * d,
+            d_ffn,
             max_tokens: cfg.max_tokens,
             head_dim: d / cfg.n_heads.max(1),
             n_params,
@@ -126,6 +277,7 @@ impl RefLlm {
             layers,
             w_out,
             buckets,
+            scratch: RefCell::new(Scratch::default()),
         }
     }
 
@@ -133,8 +285,8 @@ impl RefLlm {
         &self.info
     }
 
-    pub fn prefill_buckets(&self) -> Vec<usize> {
-        self.buckets.clone()
+    pub fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
     }
 
     fn fresh_session(&self) -> Session {
@@ -147,72 +299,256 @@ impl RefLlm {
         }
     }
 
-    /// One forward step at `session.pos`: writes K/V rows, attends over
-    /// the cache, advances the position, returns next-token logits.
-    fn step(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+    /// Grow the scratch arena to hold `rows` activation rows.
+    fn reserve(&self, sc: &mut Scratch, rows: usize) {
         let d = self.info.d_model;
-        let max_t = self.info.max_tokens;
-        let pos = session.pos;
-        if pos >= max_t {
-            bail!("KV cache full (max_tokens={max_t})");
-        }
-        let tok = token.rem_euclid(REF_VOCAB as i32) as usize;
-        let mut h: Vec<f32> = self.emb[tok * d..(tok + 1) * d].to_vec();
-        for (li, layer) in self.layers.iter().enumerate() {
-            let q = matvec(&layer.wq, &h, d);
-            let k = matvec(&layer.wk, &h, d);
-            let v = matvec(&layer.wv, &h, d);
-            let base = li * max_t * d;
-            session.k_cache[base + pos * d..base + (pos + 1) * d].copy_from_slice(&k);
-            session.v_cache[base + pos * d..base + (pos + 1) * d].copy_from_slice(&v);
-            // causal attention over cached positions 0..=pos
-            let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-            let mut scores = Vec::with_capacity(pos + 1);
-            for i in 0..=pos {
-                let ki = &session.k_cache[base + i * d..base + (i + 1) * d];
-                let mut s = 0.0f32;
-                for (a, b) in ki.iter().zip(q.iter()) {
-                    s += a * b;
-                }
-                scores.push(s * inv_sqrt_d);
-            }
-            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut wsum = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - m).exp();
-                wsum += *s;
-            }
-            let mut ctx = vec![0.0f32; d];
-            for (i, s) in scores.iter().enumerate() {
-                let a = s / wsum;
-                let vi = &session.v_cache[base + i * d..base + (i + 1) * d];
-                for (c, x) in ctx.iter_mut().zip(vi.iter()) {
-                    *c += a * x;
-                }
-            }
-            let o = matvec(&layer.wo, &ctx, d);
-            for (hx, ox) in h.iter_mut().zip(o.iter()) {
-                *hx = (*hx + ox).tanh();
-            }
-        }
-        session.pos += 1;
-        Ok(matvec(&self.w_out, &h, REF_VOCAB))
+        let d_ffn = self.info.d_ffn;
+        let (kup, kdown) = match self.layers.first() {
+            Some(l) => (l.w_up.k_pad, l.w_down.k_pad),
+            None => (0, 0),
+        };
+        ensure(&mut sc.h, rows * d);
+        ensure(&mut sc.q, rows * d);
+        ensure(&mut sc.k, rows * d);
+        ensure(&mut sc.v, rows * d);
+        ensure(&mut sc.ctx, rows * d);
+        ensure(&mut sc.o, rows * d);
+        ensure(&mut sc.scores, self.info.max_tokens);
+        ensure(&mut sc.ffn_in, rows * kup);
+        ensure(&mut sc.ffn_up, rows * d_ffn);
+        ensure(&mut sc.ffn_mid, rows * kdown);
+        ensure(&mut sc.ffn_out, rows * d);
+        ensure(&mut sc.partial, rows * d_ffn.max(d));
+        ensure(&mut sc.xcol, rows);
+        ensure(&mut sc.qrow, d_ffn.max(d));
+        ensure(&mut sc.logits, rows * REF_VOCAB);
     }
 
-    /// Prefill: run the prompt token by token against a fresh session,
-    /// return the last token's logits plus the session.
-    pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
-        let mut session = self.fresh_session();
-        let mut logits = Vec::new();
-        for &t in prompt {
-            logits = self.step(&mut session, t)?;
+    /// FFN for `b` rows of `sc.h`, result in `sc.ffn_out` (no residual).
+    fn ffn_batch(&self, layer: &Layer, b: usize, sc: &mut Scratch) {
+        let d = layer.w_up.d_in;
+        let d_ffn = layer.w_up.n;
+        let (kup, kdown) = (layer.w_up.k_pad, layer.w_down.k_pad);
+        for s in 0..b {
+            let src = &sc.h[s * d..(s + 1) * d];
+            sc.ffn_in[s * kup..s * kup + d].copy_from_slice(src);
         }
+        layer.w_up.forward(
+            &sc.ffn_in,
+            b,
+            &mut sc.partial,
+            &mut sc.xcol,
+            &mut sc.qrow,
+            &mut sc.ffn_up,
+        );
+        for s in 0..b {
+            for i in 0..d_ffn {
+                sc.ffn_mid[s * kdown + i] = gelu(sc.ffn_up[s * d_ffn + i]);
+            }
+        }
+        layer.w_down.forward(
+            &sc.ffn_mid,
+            b,
+            &mut sc.partial,
+            &mut sc.xcol,
+            &mut sc.qrow,
+            &mut sc.ffn_out,
+        );
+    }
+
+    /// The Q/K/V projections for `b` rows of `sc.h` — three GEMMs, each
+    /// streaming its weight matrix once for the whole batch.
+    fn qkv(&self, layer: &Layer, b: usize, sc: &mut Scratch) {
+        let d = self.info.d_model;
+        gemm_into(&sc.h, b, d, &layer.wq, d, &mut sc.q);
+        gemm_into(&sc.h, b, d, &layer.wk, d, &mut sc.k);
+        gemm_into(&sc.h, b, d, &layer.wv, d, &mut sc.v);
+    }
+
+    /// Output projection + residual mix + quantized FFN + residual mix,
+    /// applied to `b` rows of `sc.ctx`/`sc.h` in place.
+    fn mix_and_ffn(&self, layer: &Layer, b: usize, sc: &mut Scratch) {
+        let d = self.info.d_model;
+        gemm_into(&sc.ctx, b, d, &layer.wo, d, &mut sc.o);
+        for i in 0..b * d {
+            sc.h[i] = (sc.h[i] + sc.o[i]).tanh();
+        }
+        self.ffn_batch(layer, b, sc);
+        for i in 0..b * d {
+            sc.h[i] = (sc.h[i] + sc.ffn_out[i]).tanh();
+        }
+    }
+
+    /// Sequence-level prefill: the whole prompt advances through each
+    /// weight matrix in one GEMM; only the last position's logits are
+    /// computed. Returns those logits plus the primed session.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+        let t = prompt.len();
+        if t == 0 {
+            bail!("empty prompt");
+        }
+        let max_t = self.info.max_tokens;
+        if t > max_t {
+            bail!("prompt of {t} exceeds max_tokens {max_t}");
+        }
+        let d = self.info.d_model;
+        let mut session = self.fresh_session();
+        let mut sc = self.scratch.borrow_mut();
+        let sc = &mut *sc;
+        self.reserve(sc, t);
+        for (i, &tok) in prompt.iter().enumerate() {
+            let v = tok.rem_euclid(REF_VOCAB as i32) as usize;
+            sc.h[i * d..(i + 1) * d].copy_from_slice(&self.emb[v * d..(v + 1) * d]);
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            self.qkv(layer, t, sc);
+            // all T K/V rows land contiguously at positions 0..T
+            let base = li * max_t * d;
+            session.k_cache[base..base + t * d].copy_from_slice(&sc.k[..t * d]);
+            session.v_cache[base..base + t * d].copy_from_slice(&sc.v[..t * d]);
+            for i in 0..t {
+                let len = i + 1;
+                attend_into(
+                    &sc.q[i * d..(i + 1) * d],
+                    &session.k_cache[base..base + len * d],
+                    &session.v_cache[base..base + len * d],
+                    &mut sc.scores[..len],
+                    &mut sc.ctx[i * d..(i + 1) * d],
+                );
+            }
+            self.mix_and_ffn(layer, t, sc);
+        }
+        session.pos = t;
+        let mut logits = vec![0f32; REF_VOCAB];
+        matvec_into(&self.w_out, &sc.h[(t - 1) * d..t * d], &mut logits);
         Ok((logits, session))
     }
 
-    /// One decode step.
+    /// One batched decode round: feed `tokens[s]` to `sessions[s]`,
+    /// walking each weight matrix once for the whole batch. Returns each
+    /// session's next-token logits. Bit-identical to calling
+    /// [`RefLlm::decode`] per session in any order.
+    pub fn decode_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        if sessions.len() != tokens.len() {
+            bail!(
+                "decode_batch: {} sessions vs {} tokens",
+                sessions.len(),
+                tokens.len()
+            );
+        }
+        let b = sessions.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let max_t = self.info.max_tokens;
+        for sess in sessions.iter() {
+            if sess.pos >= max_t {
+                bail!("KV cache full (max_tokens={max_t})");
+            }
+        }
+        let d = self.info.d_model;
+        let mut sc = self.scratch.borrow_mut();
+        let sc = &mut *sc;
+        self.reserve(sc, b);
+        for (s, &tok) in tokens.iter().enumerate() {
+            let v = tok.rem_euclid(REF_VOCAB as i32) as usize;
+            sc.h[s * d..(s + 1) * d].copy_from_slice(&self.emb[v * d..(v + 1) * d]);
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            self.qkv(layer, b, sc);
+            let base = li * max_t * d;
+            for (s, sess) in sessions.iter_mut().enumerate() {
+                let pos = sess.pos;
+                sess.k_cache[base + pos * d..base + (pos + 1) * d]
+                    .copy_from_slice(&sc.k[s * d..(s + 1) * d]);
+                sess.v_cache[base + pos * d..base + (pos + 1) * d]
+                    .copy_from_slice(&sc.v[s * d..(s + 1) * d]);
+                let len = pos + 1;
+                attend_into(
+                    &sc.q[s * d..(s + 1) * d],
+                    &sess.k_cache[base..base + len * d],
+                    &sess.v_cache[base..base + len * d],
+                    &mut sc.scores[..len],
+                    &mut sc.ctx[s * d..(s + 1) * d],
+                );
+            }
+            self.mix_and_ffn(layer, b, sc);
+        }
+        gemm_into(&sc.h, b, d, &self.w_out, REF_VOCAB, &mut sc.logits);
+        for sess in sessions.iter_mut() {
+            sess.pos += 1;
+        }
+        Ok((0..b)
+            .map(|s| sc.logits[s * REF_VOCAB..(s + 1) * REF_VOCAB].to_vec())
+            .collect())
+    }
+
+    /// One decode step (batch-1 specialization of [`RefLlm::decode_batch`]).
     pub fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
-        self.step(session, token)
+        let mut one = [session];
+        let mut out = self.decode_batch(&mut one, &[token])?;
+        Ok(out.pop().expect("batch of one"))
+    }
+
+    /// Validation hook: layer `li`'s quantized FFN fast path on one
+    /// activation row (no residual). Used by the equivalence tests.
+    pub fn ffn_fast(&self, li: usize, x: &[f32]) -> Vec<f32> {
+        let d = self.info.d_model;
+        assert_eq!(x.len(), d);
+        let mut sc = self.scratch.borrow_mut();
+        let sc = &mut *sc;
+        self.reserve(sc, 1);
+        sc.h[..d].copy_from_slice(x);
+        self.ffn_batch(&self.layers[li], 1, sc);
+        sc.ffn_out[..d].to_vec()
+    }
+
+    /// Validation hook: the same FFN computed against the *dequantized*
+    /// f32 weights with f64 accumulation — the reference the fast path
+    /// must match within tolerance.
+    pub fn ffn_reference(&self, li: usize, x: &[f32]) -> Vec<f32> {
+        let d = self.info.d_model;
+        let d_ffn = self.info.d_ffn;
+        assert_eq!(x.len(), d);
+        let layer = &self.layers[li];
+        let mut up = vec![0f64; d_ffn];
+        for (c, u) in up.iter_mut().enumerate() {
+            for (r, &xv) in x.iter().enumerate() {
+                *u += xv as f64 * layer.w_up.dequant(r, c) as f64;
+            }
+        }
+        let mid: Vec<f32> = up.iter().map(|&u| gelu(u as f32)).collect();
+        let mut out = vec![0f64; d];
+        for (c, o) in out.iter_mut().enumerate() {
+            for (r, &mv) in mid.iter().enumerate() {
+                *o += mv as f64 * layer.w_down.dequant(r, c) as f64;
+            }
+        }
+        out.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Resident weight bytes of the quantized FFN stack (values +
+    /// scales) — surfaced through `LlmRuntime::ffn_weight_bytes` into
+    /// the throughput bench's JSON record.
+    pub fn ffn_weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                [&l.w_up, &l.w_down]
+                    .iter()
+                    .map(|q| match &q.body {
+                        QBody::Dense(p) => p.bytes(),
+                        QBody::Sparse { m, slot_scale } => {
+                            m.idx.len() * 4 + m.val.len() + slot_scale.len() * 4
+                        }
+                    })
+                    .sum::<usize>()
+            })
+            .sum()
     }
 }
 
@@ -284,5 +620,87 @@ mod tests {
         let b = m.prefill_buckets();
         assert_eq!(*b.last().unwrap(), 48);
         assert!(b.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn single_pass_prefill_equals_stepping() {
+        // prefill(prompt) must produce the same logits and KV state as
+        // prefill(first token) followed by decoding the rest one by one
+        let m = RefLlm::new(ReferenceConfig::default());
+        let prompt = [10i32, 200, 42, 7, 99];
+        let (single, s_single) = m.prefill(&prompt).unwrap();
+        let (_, mut s_step) = m.prefill(&prompt[..1]).unwrap();
+        let mut stepped = Vec::new();
+        for &t in &prompt[1..] {
+            stepped = m.decode(&mut s_step, t).unwrap();
+        }
+        assert_eq!(s_single.pos, s_step.pos);
+        for (i, (a, b)) in single.iter().zip(&stepped).enumerate() {
+            assert!((a - b).abs() < 1e-4, "logit {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_decode_is_bitwise_scalar_decode() {
+        let m = RefLlm::new(ReferenceConfig::default());
+        let (_, mut a1) = m.prefill(&[1, 2, 3]).unwrap();
+        let (_, mut b1) = m.prefill(&[5]).unwrap();
+        let (_, mut a2) = m.prefill(&[1, 2, 3]).unwrap();
+        let (_, mut b2) = m.prefill(&[5]).unwrap();
+        let la = m.decode(&mut a1, 11).unwrap();
+        let lb = m.decode(&mut b1, 12).unwrap();
+        let mut batch = [&mut a2, &mut b2];
+        let batched = m.decode_batch(&mut batch, &[11, 12]).unwrap();
+        assert_eq!(batched[0], la);
+        assert_eq!(batched[1], lb);
+    }
+
+    #[test]
+    fn ffn_fast_matches_dequant_reference() {
+        for sparsity in [Sparsity::Dense, Sparsity::Half, Sparsity::Quarter] {
+            let m = RefLlm::new(ReferenceConfig {
+                ffn_sparsity: sparsity,
+                ..ReferenceConfig::default()
+            });
+            let d = m.info().d_model;
+            let mut rng = Rng::new(77);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            for li in 0..m.info().n_layers {
+                let fast = m.ffn_fast(li, &x);
+                let reference = m.ffn_reference(li, &x);
+                for (i, (f, r)) in fast.iter().zip(&reference).enumerate() {
+                    assert!(
+                        (f - r).abs() < 1e-4,
+                        "{sparsity:?} layer {li} out {i}: fast {f} vs ref {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_ffn_differs_from_dense_but_serves() {
+        let dense = RefLlm::new(ReferenceConfig::default());
+        let sparse = RefLlm::new(ReferenceConfig {
+            ffn_sparsity: Sparsity::Half,
+            ..ReferenceConfig::default()
+        });
+        let (ld, _) = dense.prefill(&[1, 2, 3]).unwrap();
+        let (ls, _) = sparse.prefill(&[1, 2, 3]).unwrap();
+        assert_ne!(ld, ls, "pruning must change the function");
+        assert!(ls.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // interleaving unrelated prefills/decodes through the shared
+        // scratch arena must not leak state between calls
+        let m = RefLlm::new(ReferenceConfig::default());
+        let (l1, _) = m.prefill(&[42, 43]).unwrap();
+        let _ = m.prefill(&[200, 201, 202, 203, 204]).unwrap();
+        let (_, mut s) = m.prefill(&[9]).unwrap();
+        let _ = m.decode(&mut s, 10).unwrap();
+        let (l2, _) = m.prefill(&[42, 43]).unwrap();
+        assert_eq!(l1, l2);
     }
 }
