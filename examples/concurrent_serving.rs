@@ -32,7 +32,6 @@ fn request(addr: std::net::SocketAddr, body: String) -> anyhow::Result<Json> {
 
 fn main() -> anyhow::Result<()> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?;
     let runtime = LlmRuntime::reference(ReferenceConfig {
         max_tokens: 128,
         ..ReferenceConfig::default()
@@ -44,11 +43,8 @@ fn main() -> anyhow::Result<()> {
             ..EngineConfig::default()
         },
     );
-    thread::spawn(move || {
-        if let Err(e) = server::serve_on(engine, listener) {
-            eprintln!("server died: {e:#}");
-        }
-    });
+    let server = server::spawn_on(engine, listener)?;
+    let addr = server.addr();
 
     println!("== {N_CLIENTS} concurrent clients -> one shared scheduler (max_active=8) ==");
     let t0 = std::time::Instant::now();
@@ -96,5 +92,7 @@ fn main() -> anyhow::Result<()> {
         stats.get("peak_active").and_then(|v| v.as_usize()).unwrap_or(0),
         stats.get("sim_tokens_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
     );
+    server.shutdown();
+    println!("server shut down cleanly");
     Ok(())
 }

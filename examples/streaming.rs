@@ -1,0 +1,124 @@
+//! Protocol v2 end to end: stream tokens over TCP as they decode, cancel
+//! a request mid-flight from a second connection, and shut the server
+//! down cleanly — the Fig. 8 thin-client loop, token by token.
+//!
+//! Run: `cargo run --release --example streaming`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use edgellm::coordinator::engine::{Engine, EngineConfig};
+use edgellm::coordinator::server;
+use edgellm::runtime::model::LlmRuntime;
+use edgellm::runtime::reference::ReferenceConfig;
+use edgellm::util::json::Json;
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Json> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+}
+
+fn main() -> anyhow::Result<()> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let runtime = LlmRuntime::reference(ReferenceConfig {
+        max_tokens: 128,
+        ..ReferenceConfig::default()
+    });
+    let engine = Engine::new(
+        runtime,
+        EngineConfig {
+            max_active: 4,
+            ..EngineConfig::default()
+        },
+    );
+    let handle = server::spawn_on(engine, listener)?;
+    let addr = handle.addr();
+
+    // -- 1. a streaming request: one JSON line per token ----------------
+    println!("== streaming request ==");
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(
+        stream,
+        r#"{{"prompt": "robot, report status", "max_new_tokens": 24, "stream": true}}"#
+    )?;
+    let mut reader = BufReader::new(stream);
+    let ack = read_line(&mut reader)?;
+    println!("ack: request id {}", ack.get("id").and_then(|v| v.as_usize()).unwrap_or(0));
+    print!("tokens: ");
+    loop {
+        let line = read_line(&mut reader)?;
+        if line.get("done").is_some() {
+            println!();
+            println!(
+                "final: {} tokens, {:.0} tok/s measured, {:.1} tok/s sim VCU128",
+                line.get("n_generated").and_then(|v| v.as_usize()).unwrap_or(0),
+                line.get("tokens_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                line.get("sim_tokens_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+            break;
+        }
+        let chunk = line.get("text").and_then(|v| v.as_str()).unwrap_or("");
+        print!("{}", chunk.escape_debug());
+        std::io::stdout().flush()?;
+    }
+
+    // -- 2. cancel an in-flight request from a second connection --------
+    println!("\n== cancellation ==");
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(
+        stream,
+        r#"{{"prompt": "summarize everything", "max_new_tokens": 100, "stream": true}}"#
+    )?;
+    let mut reader = BufReader::new(stream);
+    let ack = read_line(&mut reader)?;
+    let id = ack.get("id").and_then(|v| v.as_usize()).unwrap_or(0);
+    // read a few chunks, then cancel from a side connection
+    let mut chunks = 0usize;
+    let mut outcome = None;
+    while outcome.is_none() && chunks < 3 {
+        let line = read_line(&mut reader)?;
+        if line.get("done").is_some() {
+            outcome = Some(line);
+        } else {
+            chunks += 1;
+        }
+    }
+    if outcome.is_none() {
+        let mut side = TcpStream::connect(addr)?;
+        writeln!(side, r#"{{"cancel": {id}}}"#)?;
+        let reply = read_line(&mut BufReader::new(side))?;
+        println!(
+            "cancel request {id}: found={}",
+            reply.get("found").and_then(|v| v.as_bool()).unwrap_or(false)
+        );
+        loop {
+            let line = read_line(&mut reader)?;
+            if line.get("done").is_some() {
+                outcome = Some(line);
+                break;
+            }
+            chunks += 1;
+        }
+    }
+    let outcome = outcome.expect("terminal line");
+    match outcome.get("error").and_then(|v| v.as_str()) {
+        Some(msg) => println!("stream ended after {chunks} tokens: {msg}"),
+        // the tiny model decodes fast — the request may win the race
+        None => println!("request completed before the cancel landed ({chunks} tokens seen)"),
+    }
+
+    // -- 3. stats + clean shutdown --------------------------------------
+    let mut stats_conn = TcpStream::connect(addr)?;
+    writeln!(stats_conn, r#"{{"stats": true}}"#)?;
+    let stats = read_line(&mut BufReader::new(stats_conn))?;
+    println!(
+        "\nstats: completed={} cancelled={} rounds={}",
+        stats.get("completed").and_then(|v| v.as_usize()).unwrap_or(0),
+        stats.get("cancelled").and_then(|v| v.as_usize()).unwrap_or(0),
+        stats.get("rounds").and_then(|v| v.as_usize()).unwrap_or(0),
+    );
+    handle.shutdown();
+    println!("server shut down cleanly (scheduler + acceptor joined)");
+    Ok(())
+}

@@ -1,17 +1,24 @@
 //! The serving engine: continuous-batching scheduler, session/KV
-//! management, decode loop, and metrics — the CPU-side runtime of the
-//! CPU-FPGA system.
+//! management, decode loop, streaming token events, cancellation, and
+//! metrics — the CPU-side runtime of the CPU-FPGA system.
 //!
 //! The paper operates at the batch-1 edge point (Table V); scaling that
 //! serving path to many live users means interleaving sessions, not
 //! queueing them. The engine therefore runs a **step-wise scheduler**:
 //!
-//! * [`Engine::submit`] enqueues a request (cheap, callable any time);
-//! * [`Engine::step_round`] is one scheduler round — admit queued
+//! * [`Engine::submit`] enqueues a request (cheap, callable any time)
+//!   and returns a [`RequestHandle`]: a per-request event channel
+//!   ([`Event::Token`] per generated token, then [`Event::Done`] with
+//!   the full [`Completion`], or [`Event::Error`]) plus
+//!   [`RequestHandle::cancel`];
+//! * [`Engine::step_round`] is one scheduler round — reap cancelled
+//!   sessions (freeing their KV slots *before* admission), admit queued
 //!   requests into the active pool (prefill) while there are free slots,
 //!   run **one batched decode step** over every live session
 //!   ([`LlmRuntime::decode_batch`]), then retire sessions that hit EOS,
-//!   their `max_new_tokens`, or the KV budget;
+//!   their `max_new_tokens`, or the KV budget. Each session's token is
+//!   streamed out the moment it is emitted (fed back to the model), so
+//!   thin clients see tokens as they decode — the Fig. 8 LAN deployment;
 //! * retired [`Completion`]s carry both measured wall-clock metrics and
 //!   the simulated VCU128 cost of the same token counts, where each
 //!   decode round is charged **once** for the whole batch
@@ -20,8 +27,13 @@
 //!
 //! `step()` / `run_all()` keep the original run-to-completion call
 //! shape for the CLI and tests, implemented on top of `step_round`.
+//! The engine sees the runtime only through the object-safe
+//! [`Backend`](crate::runtime::backend::Backend) trait, so any backend
+//! — reference, PJRT, latency model, mock — schedules identically.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -34,7 +46,7 @@ use crate::sim::engine::Simulator;
 use crate::sim::Memory;
 use crate::util::rng::Rng;
 
-/// One generation request.
+/// One generation request (the queue-level descriptor).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -64,6 +76,77 @@ pub struct Completion {
     /// simulated VCU128 decode throughput (token/s) as experienced by
     /// this session inside its batch
     pub sim_tokens_per_s: f64,
+}
+
+/// One generated token, streamed while the session is still decoding.
+#[derive(Debug, Clone)]
+pub struct TokenEvent {
+    /// request id this token belongs to
+    pub request: u64,
+    /// 0-based position in the generated sequence
+    pub index: usize,
+    pub token: i32,
+    /// lossy single-token text preview (byte-level vocab: a multi-byte
+    /// UTF-8 character split across tokens renders as U+FFFD here); the
+    /// token ids — and the final `Completion::text` — are authoritative
+    pub text: String,
+}
+
+/// Events delivered on a request's channel, in order: zero or more
+/// `Token`s, then exactly one terminal `Done` or `Error`.
+#[derive(Debug, Clone)]
+pub enum Event {
+    Token(TokenEvent),
+    Done(Completion),
+    Error(String),
+}
+
+/// Client-side handle to an in-flight request: the token-event stream
+/// plus cancellation. Dropping the handle never blocks the engine —
+/// events for a dropped handle are discarded.
+pub struct RequestHandle {
+    id: u64,
+    cancel: Arc<AtomicBool>,
+    events: mpsc::Receiver<Event>,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the engine to drop this request. Honored at the next round
+    /// boundary: a queued request is discarded before prefill, a live
+    /// session is reaped and its KV slot freed before the round's
+    /// admissions. The terminal event is `Event::Error("cancelled")`.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Next event, blocking until one arrives. `None` once the channel
+    /// is closed (terminal event already consumed, or engine dropped).
+    pub fn recv(&self) -> Option<Event> {
+        self.events.recv().ok()
+    }
+
+    /// Next event if one is ready (non-blocking).
+    pub fn try_recv(&self) -> Option<Event> {
+        self.events.try_recv().ok()
+    }
+
+    /// Drain events until the terminal one; returns the completion or
+    /// the error message. Token events are discarded — the whole-reply
+    /// (protocol v1) consumption shape.
+    pub fn wait(&self) -> Result<Completion, String> {
+        loop {
+            match self.events.recv() {
+                Ok(Event::Token(_)) => continue,
+                Ok(Event::Done(c)) => return Ok(c),
+                Ok(Event::Error(msg)) => return Err(msg),
+                Err(_) => return Err("engine dropped the request".to_string()),
+            }
+        }
+    }
 }
 
 /// Engine configuration.
@@ -100,6 +183,8 @@ impl Default for EngineConfig {
 pub struct EngineMetrics {
     pub submitted: u64,
     pub completed: u64,
+    /// requests dropped by cancellation (queued or live)
+    pub cancelled: u64,
     /// batched decode rounds executed
     pub rounds: u64,
     /// decode tokens emitted across all sessions
@@ -130,6 +215,13 @@ impl EngineMetrics {
     }
 }
 
+/// A queued request plus its event channel and cancellation flag.
+struct QueuedRequest {
+    req: Request,
+    events: mpsc::Sender<Event>,
+    cancel: Arc<AtomicBool>,
+}
+
 /// A live session inside the scheduler's active pool.
 struct ActiveSession {
     id: u64,
@@ -145,6 +237,19 @@ struct ActiveSession {
     decode_wall_s: f64,
     sim_first_token_ms: f64,
     sim_decode_us: f64,
+    events: mpsc::Sender<Event>,
+    /// cleared on the first failed send (handle dropped), so the hot
+    /// decode loop stops building events nobody will read
+    events_open: bool,
+    cancel: Arc<AtomicBool>,
+}
+
+impl ActiveSession {
+    fn send(&mut self, ev: Event) {
+        if self.events_open && self.events.send(ev).is_err() {
+            self.events_open = false;
+        }
+    }
 }
 
 enum Admitted {
@@ -159,7 +264,7 @@ pub struct Engine {
     cfg_max_active: usize,
     cfg_prefills_per_round: usize,
     eos_token: Option<i32>,
-    queue: VecDeque<Request>,
+    queue: VecDeque<QueuedRequest>,
     active: Vec<ActiveSession>,
     /// completions produced by `step_round` but not yet returned by
     /// `step()`
@@ -197,19 +302,48 @@ impl Engine {
         &self.runtime
     }
 
-    /// Enqueue a request; returns its id. Requests are admitted into the
-    /// active pool by subsequent scheduler rounds.
-    pub fn submit(&mut self, prompt: &str, max_new_tokens: usize, sampling: Sampling) -> u64 {
+    /// Enqueue a request and hand back its streaming handle. Requests
+    /// are admitted into the active pool by subsequent scheduler rounds;
+    /// the handle's channel then carries one `Event::Token` per
+    /// generated token and a terminal `Event::Done`/`Event::Error`.
+    pub fn submit(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        sampling: Sampling,
+    ) -> RequestHandle {
         let id = self.next_id;
         self.next_id += 1;
         self.metrics.submitted += 1;
-        self.queue.push_back(Request {
-            id,
-            prompt: prompt.to_string(),
-            max_new_tokens,
-            sampling,
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        self.queue.push_back(QueuedRequest {
+            req: Request {
+                id,
+                prompt: prompt.to_string(),
+                max_new_tokens,
+                sampling,
+            },
+            events: tx,
+            cancel: Arc::clone(&cancel),
         });
-        id
+        RequestHandle { id, cancel, events: rx }
+    }
+
+    /// Flag a request (queued or live) for cancellation by id — the
+    /// server's `{"cancel": id}` path, equivalent to
+    /// [`RequestHandle::cancel`]. Returns false for unknown/finished
+    /// ids. Honored at the next round boundary.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(q) = self.queue.iter().find(|q| q.req.id == id) {
+            q.cancel.store(true, Ordering::Relaxed);
+            return true;
+        }
+        if let Some(a) = self.active.iter().find(|a| a.id == id) {
+            a.cancel.store(true, Ordering::Relaxed);
+            return true;
+        }
+        false
     }
 
     /// Requests waiting for admission (not yet prefilled).
@@ -231,27 +365,72 @@ impl Engine {
         &self.metrics
     }
 
-    /// Drop every queued and live request (server error recovery).
-    /// Returns the ids of the dropped requests.
-    pub fn abort_all(&mut self) -> Vec<u64> {
-        let mut ids: Vec<u64> = self.queue.drain(..).map(|r| r.id).collect();
-        ids.extend(self.active.drain(..).map(|a| a.id));
-        ids
+    /// Drop every queued and live request (server error recovery /
+    /// shutdown); each one's channel receives `Event::Error(msg)`, so
+    /// no waiting client needs an id-indexed routing table.
+    pub fn abort_all(&mut self, msg: &str) {
+        for q in self.queue.drain(..) {
+            let _ = q.events.send(Event::Error(msg.to_string()));
+        }
+        for a in self.active.drain(..) {
+            let _ = a.events.send(Event::Error(msg.to_string()));
+        }
     }
 
-    /// One scheduler round: admit, batch-decode, retire.
+    /// Remove cancelled requests everywhere they can sit: queued
+    /// requests are dropped before they ever prefill (their client gets
+    /// the terminal event this round, even when the pool is full and
+    /// admission would not have popped them), and live sessions are
+    /// reaped with their KV slots freed. Runs at the top of every
+    /// round, *before* admission, so a cancellation makes its slot
+    /// reusable in the same round.
+    fn reap_cancelled(&mut self) {
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].cancel.load(Ordering::Relaxed) {
+                let q = self.queue.remove(i).expect("index in bounds");
+                self.metrics.cancelled += 1;
+                let _ = q.events.send(Event::Error("cancelled".to_string()));
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].cancel.load(Ordering::Relaxed) {
+                let mut a = self.active.remove(i);
+                self.metrics.cancelled += 1;
+                a.send(Event::Error("cancelled".to_string()));
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One scheduler round: reap cancellations, admit, batch-decode,
+    /// retire.
     ///
     /// Returns the completions retired by this round (possibly empty —
-    /// e.g. every live session still has budget left).
+    /// e.g. every live session still has budget left). Streaming
+    /// consumers observe the same round through their handles' events.
     pub fn step_round(&mut self) -> Result<Vec<Completion>> {
         let mut retired = Vec::new();
+
+        // 0. cancellation: free slots before admitting new work
+        self.reap_cancelled();
 
         // 1. admission: fill free decode slots from the queue
         let mut admitted = 0;
         while self.active.len() < self.cfg_max_active && admitted < self.cfg_prefills_per_round {
-            let Some(req) = self.queue.pop_front() else { break };
+            let Some(q) = self.queue.pop_front() else { break };
+            if q.cancel.load(Ordering::Relaxed) {
+                // cancelled while queued: never prefilled, costs nothing
+                self.metrics.cancelled += 1;
+                let _ = q.events.send(Event::Error("cancelled".to_string()));
+                continue;
+            }
             admitted += 1;
-            match self.admit(req)? {
+            match self.admit(q)? {
                 Admitted::Active(a) => self.active.push(*a),
                 Admitted::Done(c) => retired.push(c),
             }
@@ -260,8 +439,8 @@ impl Engine {
 
         // 2. one batched decode step across the live pool
         if !self.active.is_empty() {
-            // each session's sampled token is emitted now and fed to the
-            // model to advance its KV state
+            // each session's sampled token is emitted now — streamed to
+            // its handle and fed to the model to advance its KV state
             self.round_tokens.clear();
             self.round_ctxs.clear();
             for a in self.active.iter() {
@@ -269,7 +448,17 @@ impl Engine {
                 self.round_ctxs.push(a.session.pos);
             }
             for a in self.active.iter_mut() {
+                let index = a.generated.len();
                 a.generated.push(a.next_token);
+                if a.events_open {
+                    let ev = Event::Token(TokenEvent {
+                        request: a.id,
+                        index,
+                        token: a.next_token,
+                        text: tokenizer::decode(&[a.next_token]),
+                    });
+                    a.send(ev);
+                }
             }
 
             let t0 = Instant::now();
@@ -312,7 +501,8 @@ impl Engine {
 
     /// Prefill one request and stage it for decoding (or retire it
     /// immediately if it has no token budget / instant EOS).
-    fn admit(&mut self, req: Request) -> Result<Admitted> {
+    fn admit(&mut self, q: QueuedRequest) -> Result<Admitted> {
+        let QueuedRequest { req, events, cancel } = q;
         let mut tokens = tokenizer::encode(&req.prompt);
         if tokens.is_empty() {
             tokens.push(0);
@@ -331,7 +521,14 @@ impl Engine {
         let max_new = req.max_new_tokens.min(budget);
 
         let t0 = Instant::now();
-        let (logits, session) = self.runtime.prefill(&tokens)?;
+        let (logits, session) = match self.runtime.prefill(&tokens) {
+            Ok(v) => v,
+            Err(e) => {
+                // tell the waiting client before failing the round
+                let _ = events.send(Event::Error(format!("prefill failed: {e:#}")));
+                return Err(e);
+            }
+        };
         let first_token_s = t0.elapsed().as_secs_f64();
         let sim_first_token_ms = self.sim.prefill(tokens.len()).breakdown.total_us() / 1e3;
 
@@ -349,6 +546,9 @@ impl Engine {
             decode_wall_s: 0.0,
             sim_first_token_ms,
             sim_decode_us: 0.0,
+            events,
+            events_open: true,
+            cancel,
         };
         if max_new == 0 || Some(next_token) == self.eos_token {
             return Ok(Admitted::Done(Self::finish(a)));
@@ -363,7 +563,7 @@ impl Engine {
         } else {
             0.0
         };
-        Completion {
+        let c = Completion {
             id: a.id,
             prompt: a.prompt,
             text: tokenizer::decode(&a.generated),
@@ -374,7 +574,11 @@ impl Engine {
             tokens_per_s: n_generated as f64 / a.decode_wall_s.max(1e-9),
             sim_first_token_ms: a.sim_first_token_ms,
             sim_tokens_per_s,
+        };
+        if a.events_open {
+            let _ = a.events.send(Event::Done(c.clone()));
         }
+        c
     }
 
     /// Run scheduler rounds until the next completion retires.
@@ -407,8 +611,9 @@ impl Engine {
 
 #[cfg(test)]
 mod tests {
-    // Scheduler tests with a live runtime are in rust/tests/scheduler.rs;
-    // here we test queue mechanics with no runtime dependency.
+    // Scheduler tests with a live runtime are in rust/tests/scheduler.rs
+    // and rust/tests/backend_trait.rs; here we test queue mechanics with
+    // no runtime dependency.
     use super::*;
 
     #[test]
@@ -434,5 +639,30 @@ mod tests {
         let m = EngineMetrics::default();
         assert_eq!(m.sim_tokens_per_s(), 0.0);
         assert_eq!(m.decode_tokens, 0);
+        assert_eq!(m.cancelled, 0);
+    }
+
+    #[test]
+    fn handle_reports_engine_drop() {
+        // an engine dropped with requests still queued must not wedge
+        // a waiting client
+        let mut eng = Engine::new(
+            LlmRuntime::reference_tiny(),
+            EngineConfig::default(),
+        );
+        let h = eng.submit("never served", 4, Sampling::Greedy);
+        drop(eng);
+        assert!(h.wait().is_err());
+    }
+
+    #[test]
+    fn cancel_unknown_id_is_false() {
+        let mut eng = Engine::new(
+            LlmRuntime::reference_tiny(),
+            EngineConfig::default(),
+        );
+        assert!(!eng.cancel(42));
+        let h = eng.submit("queued", 4, Sampling::Greedy);
+        assert!(eng.cancel(h.id()));
     }
 }

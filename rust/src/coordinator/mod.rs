@@ -1,9 +1,13 @@
 //! L3 coordinator: the CPU half of the CPU-FPGA heterogeneous system.
 //!
 //! * [`engine`] — continuous-batching scheduler: request queue, live
-//!   session pool, batched decode rounds, retirement, serving metrics
+//!   session pool, batched decode rounds, retirement, per-request
+//!   streaming token events + cancellation, serving metrics. Drives any
+//!   [`Backend`](crate::runtime::backend::Backend) through `LlmRuntime`.
 //! * [`server`] — the LAN (TCP/JSON-lines) inference server of Fig. 8,
-//!   multi-client: every connection feeds the shared scheduler
+//!   multi-client: every connection feeds the shared scheduler.
+//!   Protocol v1 (whole replies) + v2 (token streaming, `cancel`),
+//!   clean shutdown via `ServerHandle`.
 //! * [`tokenizer`] — byte-level token ids for the functional tiny model
 //! * [`sampler`] — greedy / temperature / top-p sampling
 

@@ -1,7 +1,10 @@
 //! LAN inference server (paper Fig. 8's deployment: FPGA+LLM as server,
-//! a thin client encodes/decodes and talks to users) — multi-client.
+//! a thin client encodes/decodes and talks to users) — multi-client,
+//! streaming.
 //!
-//! Protocol: JSON lines over TCP.
+//! Protocol: JSON lines over TCP, two request generations side by side.
+//!
+//! **v1 — whole response** (unchanged, bit-identical):
 //!   request : {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0,
 //!              "top_p": 0.9}
 //!   response: {"id": 1, "text": "...", "tokens_per_s": ...,
@@ -11,25 +14,45 @@
 //!              "rounds": ..., "decode_tokens": ...,
 //!              "tokens_per_s": ..., "sim_tokens_per_s": ...}
 //!
+//! **v2 — streaming + cancellation**:
+//!   request : {"prompt": "...", "stream": true, ...}
+//!   replies : {"id": 3, "stream": true}            ← ack, carries the id
+//!             {"id": 3, "index": 0, "token": 104, "text": "h"}  ← per token
+//!             {"id": 3, "done": true, "text": ..., ...}   ← final stats line
+//!   cancel  : {"cancel": 3} → {"cancelled": 3, "found": true}
+//!             (any connection may cancel any in-flight id; the cancelled
+//!             stream terminates with {"id": 3, "error": "cancelled",
+//!             "done": true} and its KV slot is freed for the next
+//!             request. Send cancels from a side connection: a cancel
+//!             pipelined behind a stream on the *same* socket is only
+//!             read after that stream ends — each connection is served
+//!             by one blocking thread.)
+//!
 //! Malformed input never kills a connection: every request line gets a
 //! reply, either a completion or `{"error": "..."}`.
 //!
-//! Unlike the original one-blocking-client loop, each connection runs on
-//! its own thread and *enqueues* into the shared continuous-batching
-//! scheduler; a dedicated scheduler thread drives `Engine::step_round`
-//! and routes retired completions back to the waiting connections. Many
-//! clients therefore decode concurrently inside one shared batch.
+//! Each connection runs on its own thread and *enqueues* into the shared
+//! continuous-batching scheduler; a dedicated scheduler thread drives
+//! `Engine::step_round`. Completions and token events flow back over the
+//! per-request channels minted by `Engine::submit` — the server routes
+//! nothing itself. Many clients therefore decode concurrently inside one
+//! shared batch, and each streaming client sees its tokens the moment
+//! the scheduler emits them.
+//!
+//! [`spawn_on`] returns a [`ServerHandle`] whose `shutdown()` stops the
+//! scheduler and accept threads cleanly (and fails in-flight requests
+//! with a terminal error event) — tests and embedders never rely on
+//! process exit to reap threads.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::thread;
+use std::thread::{self, JoinHandle};
 
 use anyhow::Result;
 
-use super::engine::{Completion, Engine};
+use super::engine::{Completion, Engine, Event, RequestHandle, TokenEvent};
 use super::sampler::Sampling;
 use crate::util::json::Json;
 
@@ -44,7 +67,11 @@ pub enum ServerRequest {
         prompt: String,
         max_new_tokens: usize,
         sampling: Sampling,
+        /// v2: stream one JSON line per token before the final line
+        stream: bool,
     },
+    /// v2: cancel an in-flight request by id
+    Cancel(u64),
     Stats,
 }
 
@@ -54,6 +81,15 @@ pub fn parse_request(line: &str) -> Result<ServerRequest, String> {
     let req = Json::parse(line).map_err(|e| format!("bad request json: {e}"))?;
     if req.get("stats").and_then(|v| v.as_bool()) == Some(true) {
         return Ok(ServerRequest::Stats);
+    }
+    if let Some(v) = req.get("cancel") {
+        let id = v
+            .as_f64()
+            .ok_or_else(|| "'cancel' must be a request id".to_string())?;
+        if id < 0.0 || id.fract() != 0.0 {
+            return Err(format!("'cancel' must be a non-negative integer id: {id}"));
+        }
+        return Ok(ServerRequest::Cancel(id as u64));
     }
     let prompt = req
         .get("prompt")
@@ -74,6 +110,12 @@ pub fn parse_request(line: &str) -> Result<ServerRequest, String> {
             n as usize
         }
     };
+    let stream = match req.get("stream") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| "'stream' must be a boolean".to_string())?,
+    };
     let temperature = req
         .get("temperature")
         .and_then(|v| v.as_f64())
@@ -93,6 +135,7 @@ pub fn parse_request(line: &str) -> Result<ServerRequest, String> {
         prompt,
         max_new_tokens,
         sampling,
+        stream,
     })
 }
 
@@ -113,6 +156,50 @@ fn completion_json(c: &Completion) -> Json {
     ])
 }
 
+/// v2 stream ack: tells the client its request id before tokens flow
+/// (the id is what `{"cancel": id}` takes).
+fn ack_json(id: u64) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("stream", Json::Bool(true)),
+    ])
+}
+
+/// v2 per-token chunk.
+fn token_json(t: &TokenEvent) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(t.request as f64)),
+        ("index", Json::Num(t.index as f64)),
+        ("token", Json::Num(t.token as f64)),
+        ("text", Json::Str(t.text.clone())),
+    ])
+}
+
+/// v2 final stats line: the v1 completion object plus `"done": true`.
+fn done_json(c: &Completion) -> Json {
+    let mut j = completion_json(c);
+    if let Json::Obj(m) = &mut j {
+        m.insert("done".to_string(), Json::Bool(true));
+    }
+    j
+}
+
+/// v2 terminal error line for a stream (cancellation lands here).
+fn stream_error_json(id: u64, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::Str(msg.to_string())),
+        ("done", Json::Bool(true)),
+    ])
+}
+
+fn cancel_json(id: u64, found: bool) -> Json {
+    Json::obj(vec![
+        ("cancelled", Json::Num(id as f64)),
+        ("found", Json::Bool(found)),
+    ])
+}
+
 fn stats_json(engine: &Engine) -> Json {
     let m = engine.metrics();
     Json::obj(vec![
@@ -120,6 +207,7 @@ fn stats_json(engine: &Engine) -> Json {
         ("active_sessions", Json::Num(engine.active_sessions() as f64)),
         ("submitted", Json::Num(m.submitted as f64)),
         ("completed", Json::Num(m.completed as f64)),
+        ("cancelled", Json::Num(m.cancelled as f64)),
         ("rounds", Json::Num(m.rounds as f64)),
         ("decode_tokens", Json::Num(m.decode_tokens as f64)),
         ("peak_active", Json::Num(m.peak_active as f64)),
@@ -133,15 +221,23 @@ fn stats_json(engine: &Engine) -> Json {
 /// — protocol or engine failures become `{"error": ...}`.
 ///
 /// The threaded server uses the shared scheduler instead (`serve`); this
-/// path backs the CLI and the protocol tests.
+/// path backs the CLI and the protocol tests. It serves the v1 whole
+/// response shape: `stream` is accepted but answered with the final
+/// object only (line-at-a-time streaming needs the threaded server),
+/// and `cancel` finds nothing in flight by construction.
 pub fn process_line(engine: &mut Engine, line: &str) -> Json {
     match parse_request(line) {
         Err(msg) => error_json(msg),
         Ok(ServerRequest::Stats) => stats_json(engine),
+        Ok(ServerRequest::Cancel(id)) => {
+            let found = engine.cancel(id);
+            cancel_json(id, found)
+        }
         Ok(ServerRequest::Generate {
             prompt,
             max_new_tokens,
             sampling,
+            stream: _,
         }) => {
             engine.submit(&prompt, max_new_tokens, sampling);
             match engine.step() {
@@ -153,15 +249,67 @@ pub fn process_line(engine: &mut Engine, line: &str) -> Json {
     }
 }
 
-type Reply = Result<Completion, String>;
-
 /// State shared between connection threads and the scheduler thread.
-/// Lock order: `engine` before `waiters` — both threads keep it.
 struct Shared {
     engine: Mutex<Engine>,
     /// wakes the scheduler when work arrives (paired with `engine`)
     work: Condvar,
-    waiters: Mutex<HashMap<u64, mpsc::Sender<Reply>>>,
+    /// set by `ServerHandle::shutdown`; checked by both loops
+    shutdown: AtomicBool,
+}
+
+/// Running server: address + the threads to reap.
+///
+/// `shutdown()` signals both loops, unblocks them, fails in-flight
+/// requests with a terminal error event, and joins the scheduler and
+/// accept threads. Connection threads exit when their client hangs up
+/// (their in-flight requests have already been answered with an error).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    scheduler: JoinHandle<()>,
+    acceptor: JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// The bound address (useful with an ephemeral port 0 listener).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the server: scheduler and accept threads are signalled,
+    /// unblocked, and joined; queued and live requests receive a
+    /// terminal `Event::Error`.
+    pub fn shutdown(self) {
+        {
+            // set the flag and notify *under the engine lock*: the
+            // scheduler checks the flag with the lock held, so this
+            // serializes with its predicate check and the wakeup cannot
+            // be lost between "predicate evaluated" and "parked"
+            let _engine = self.shared.engine.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+            self.shared.work.notify_all();
+        }
+        // unblock the accept loop with a throwaway connection; a
+        // 0.0.0.0/:: bind is not connectable on every platform, so aim
+        // at loopback on the same port
+        let mut target = self.addr;
+        if target.ip().is_unspecified() {
+            target.set_ip(match target.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let unblocked = TcpStream::connect(target).is_ok();
+        let _ = self.scheduler.join();
+        if unblocked {
+            let _ = self.acceptor.join();
+        } else {
+            // the acceptor may still be parked in accept(); leak it
+            // rather than hang the caller — it holds no engine state
+            eprintln!("server shutdown: could not poke {target}, leaving acceptor parked");
+        }
+    }
 }
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7077").
@@ -170,28 +318,75 @@ pub fn serve(engine: Engine, addr: &str) -> Result<()> {
     serve_on(engine, listener)
 }
 
-/// Serve forever on an already-bound listener (lets callers bind port 0
-/// and learn the ephemeral address first — used by tests and examples).
+/// Serve on an already-bound listener, blocking the calling thread until
+/// the server shuts down (lets callers bind port 0 and learn the
+/// ephemeral address first — used by tests and examples).
 pub fn serve_on(engine: Engine, listener: TcpListener) -> Result<()> {
-    eprintln!(
-        "edgellm server listening on {} (continuous batching)",
-        listener.local_addr()?
-    );
+    let handle = spawn_on(engine, listener)?;
+    let _ = handle.acceptor.join();
+    let _ = handle.scheduler.join();
+    Ok(())
+}
+
+/// Start the server in the background and return its [`ServerHandle`].
+pub fn spawn_on(engine: Engine, listener: TcpListener) -> Result<ServerHandle> {
+    let addr = listener.local_addr()?;
+    eprintln!("edgellm server listening on {addr} (continuous batching, protocol v1+v2)");
     let shared = Arc::new(Shared {
         engine: Mutex::new(engine),
         work: Condvar::new(),
-        waiters: Mutex::new(HashMap::new()),
+        shutdown: AtomicBool::new(false),
     });
-
-    {
+    let scheduler = {
         let shared = Arc::clone(&shared);
-        thread::spawn(move || scheduler_loop(&shared));
-    }
+        thread::spawn(move || scheduler_loop(&shared))
+    };
+    let acceptor = {
+        let shared = Arc::clone(&shared);
+        thread::spawn(move || accept_loop(&shared, listener))
+    };
+    Ok(ServerHandle {
+        addr,
+        shared,
+        scheduler,
+        acceptor,
+    })
+}
 
+/// Drive the shared engine: one `step_round` per iteration while work is
+/// pending, sleeping on the condvar when idle. Completions and token
+/// events reach the waiting connections through the per-request channels
+/// `step_round` feeds — no routing table here.
+fn scheduler_loop(shared: &Shared) {
+    loop {
+        let mut engine = shared.engine.lock().unwrap();
+        while !engine.has_work() && !shared.shutdown.load(Ordering::SeqCst) {
+            engine = shared.work.wait(engine).unwrap();
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // fail in-flight work so no connection blocks on its channel
+            engine.abort_all("server shutting down");
+            return;
+        }
+        if let Err(e) = engine.step_round() {
+            // a runtime failure poisons the whole round; fail every
+            // queued/live request rather than wedging its client (each
+            // one's channel receives the error event)
+            let msg = format!("engine error: {e:#}");
+            eprintln!("{msg}");
+            engine.abort_all(&msg);
+        }
+    }
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
     for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
         match stream {
             Ok(stream) => {
-                let shared = Arc::clone(&shared);
+                let shared = Arc::clone(shared);
                 thread::spawn(move || {
                     if let Err(e) = handle_client(&shared, stream) {
                         eprintln!("client error: {e:#}");
@@ -201,52 +396,44 @@ pub fn serve_on(engine: Engine, listener: TcpListener) -> Result<()> {
             Err(e) => eprintln!("accept error: {e}"),
         }
     }
-    Ok(())
 }
 
-/// Drive the shared engine: one `step_round` per iteration while work is
-/// pending, sleeping on the condvar when idle.
-fn scheduler_loop(shared: &Shared) {
+/// Write one v2 stream to the client: ack, token lines, terminal line.
+fn stream_reply(writer: &mut TcpStream, handle: &RequestHandle) -> Result<()> {
+    writeln!(writer, "{}", ack_json(handle.id()))?;
+    writer.flush()?;
     loop {
-        let mut engine = shared.engine.lock().unwrap();
-        while !engine.has_work() {
-            engine = shared.work.wait(engine).unwrap();
-        }
-        match engine.step_round() {
-            Ok(done) => {
-                if done.is_empty() {
-                    continue;
-                }
-                let mut waiters = shared.waiters.lock().unwrap();
-                for c in done {
-                    if let Some(tx) = waiters.remove(&c.id) {
-                        let _ = tx.send(Ok(c));
-                    }
-                }
+        match handle.recv() {
+            Some(Event::Token(t)) => {
+                writeln!(writer, "{}", token_json(&t))?;
+                writer.flush()?;
             }
-            Err(e) => {
-                // a runtime failure poisons the whole round; fail every
-                // registered waiter rather than wedging its client. A
-                // failing round can also discard completions it had
-                // already retired (e.g. an admission-time retirement
-                // followed by a decode error), so draining abort_all()'s
-                // queued/live ids alone would leave those clients
-                // blocked forever — clear the whole map. No new waiter
-                // can register while we hold the engine lock.
-                let msg = format!("engine error: {e:#}");
-                eprintln!("{msg}");
-                engine.abort_all();
-                let mut waiters = shared.waiters.lock().unwrap();
-                for (_, tx) in waiters.drain() {
-                    let _ = tx.send(Err(msg.clone()));
-                }
+            Some(Event::Done(c)) => {
+                writeln!(writer, "{}", done_json(&c))?;
+                return Ok(());
+            }
+            Some(Event::Error(msg)) => {
+                writeln!(writer, "{}", stream_error_json(handle.id(), &msg))?;
+                return Ok(());
+            }
+            None => {
+                writeln!(
+                    writer,
+                    "{}",
+                    stream_error_json(handle.id(), "server shutting down")
+                )?;
+                return Ok(());
             }
         }
     }
 }
 
 /// Handle one client connection: each request line is enqueued into the
-/// shared scheduler; the reply is written when the session retires.
+/// shared scheduler. v1 requests are answered when the session retires;
+/// v2 (`"stream": true`) requests get an ack line, one line per token,
+/// and a final `"done": true` line. `{"cancel": id}` may target any
+/// connection's request. A write failure mid-stream cancels the
+/// in-flight request (the client is gone).
 fn handle_client(shared: &Shared, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr()?;
     eprintln!("client connected: {peer}");
@@ -257,34 +444,56 @@ fn handle_client(shared: &Shared, stream: TcpStream) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse_request(&line) {
-            Err(msg) => error_json(msg),
+        match parse_request(&line) {
+            Err(msg) => writeln!(writer, "{}", error_json(msg))?,
             Ok(ServerRequest::Stats) => {
                 let engine = shared.engine.lock().unwrap();
-                stats_json(&engine)
+                let reply = stats_json(&engine);
+                drop(engine);
+                writeln!(writer, "{reply}")?;
+            }
+            Ok(ServerRequest::Cancel(id)) => {
+                let found = shared.engine.lock().unwrap().cancel(id);
+                writeln!(writer, "{}", cancel_json(id, found))?;
             }
             Ok(ServerRequest::Generate {
                 prompt,
                 max_new_tokens,
                 sampling,
+                stream,
             }) => {
-                let (tx, rx) = mpsc::channel::<Reply>();
-                {
+                let handle = {
                     let mut engine = shared.engine.lock().unwrap();
-                    let id = engine.submit(&prompt, max_new_tokens, sampling);
-                    // register the waiter before releasing the engine
-                    // lock so the scheduler can't retire the id first
-                    shared.waiters.lock().unwrap().insert(id, tx);
+                    // checked under the engine lock: shutdown() sets the
+                    // flag under the same lock, so either we see it here
+                    // (and refuse), or the scheduler is still alive and
+                    // its shutdown pass will abort this request
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        drop(engine);
+                        writeln!(writer, "{}", error_json("server shutting down"))?;
+                        continue;
+                    }
+                    let h = engine.submit(&prompt, max_new_tokens, sampling);
                     shared.work.notify_one();
-                }
-                match rx.recv() {
-                    Ok(Ok(c)) => completion_json(&c),
-                    Ok(Err(msg)) => error_json(msg),
-                    Err(_) => error_json("server shutting down"),
+                    h
+                };
+                if stream {
+                    // a failed write means the client vanished: cancel
+                    // the request so its KV slot frees at the next round
+                    // instead of decoding max_new tokens for nobody
+                    if let Err(e) = stream_reply(&mut writer, &handle) {
+                        handle.cancel();
+                        return Err(e);
+                    }
+                } else {
+                    let reply = match handle.wait() {
+                        Ok(c) => completion_json(&c),
+                        Err(msg) => error_json(msg),
+                    };
+                    writeln!(writer, "{reply}")?;
                 }
             }
-        };
-        writeln!(writer, "{reply}")?;
+        }
     }
     eprintln!("client disconnected: {peer}");
     Ok(())
@@ -319,6 +528,28 @@ mod tests {
     }
 
     #[test]
+    fn parse_request_v2_surface() {
+        // stream flag: absent → v1, true → v2, non-bool → error
+        assert!(matches!(
+            parse_request(r#"{"prompt":"x"}"#),
+            Ok(ServerRequest::Generate { stream: false, .. })
+        ));
+        assert!(matches!(
+            parse_request(r#"{"prompt":"x","stream":true}"#),
+            Ok(ServerRequest::Generate { stream: true, .. })
+        ));
+        assert!(parse_request(r#"{"prompt":"x","stream":1}"#).is_err());
+        // cancel: id must be a non-negative integer
+        assert!(matches!(
+            parse_request(r#"{"cancel": 7}"#),
+            Ok(ServerRequest::Cancel(7))
+        ));
+        assert!(parse_request(r#"{"cancel": -1}"#).is_err());
+        assert!(parse_request(r#"{"cancel": 1.5}"#).is_err());
+        assert!(parse_request(r#"{"cancel": "x"}"#).is_err());
+    }
+
+    #[test]
     fn parse_request_sampling_policies() {
         let greedy = parse_request(r#"{"prompt":"x"}"#).unwrap();
         assert!(matches!(
@@ -345,5 +576,33 @@ mod tests {
                 ..
             }
         ));
+    }
+
+    #[test]
+    fn v2_json_lines_roundtrip() {
+        // serialize → parse: the line shapes clients depend on
+        let ack = Json::parse(&ack_json(3).to_string()).unwrap();
+        assert_eq!(ack.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(ack.get("stream").unwrap().as_bool(), Some(true));
+
+        let tok = token_json(&TokenEvent {
+            request: 3,
+            index: 1,
+            token: 104,
+            text: "h".to_string(),
+        });
+        let tok = Json::parse(&tok.to_string()).unwrap();
+        assert_eq!(tok.get("index").unwrap().as_usize(), Some(1));
+        assert_eq!(tok.get("token").unwrap().as_usize(), Some(104));
+        assert_eq!(tok.get("text").unwrap().as_str(), Some("h"));
+        assert!(tok.get("done").is_none(), "token lines carry no done flag");
+
+        let cancel = Json::parse(&cancel_json(9, false).to_string()).unwrap();
+        assert_eq!(cancel.get("cancelled").unwrap().as_usize(), Some(9));
+        assert_eq!(cancel.get("found").unwrap().as_bool(), Some(false));
+
+        let err = Json::parse(&stream_error_json(4, "cancelled").to_string()).unwrap();
+        assert_eq!(err.get("error").unwrap().as_str(), Some("cancelled"));
+        assert_eq!(err.get("done").unwrap().as_bool(), Some(true));
     }
 }

@@ -1,18 +1,18 @@
 //! edgellm — CLI for the EdgeLLM reproduction.
 //!
 //! Subcommands:
-//!   serve     --addr HOST:PORT [--backend auto|ref|artifacts]
+//!   serve     --addr HOST:PORT [--backend auto|ref|sim|artifacts]
 //!             [--artifacts DIR --model NAME] [--max-active N]
-//!   generate  --prompt TEXT [--max-new N] [--temperature T]
-//!             [--backend auto|ref|artifacts] [--artifacts DIR --model NAME]
+//!   generate  --prompt TEXT [--max-new N] [--temperature T] [--stream]
+//!             [--backend auto|ref|sim|artifacts] [--artifacts DIR --model NAME]
 //!   simulate  --arch glm|qwen|tiny --strategy dense|s1|s2|s3 --mem hbm|ddr
 //!             [--ctx N] [--prefill N] [--batch B]
-//!   info      [--backend auto|ref|artifacts] [--artifacts DIR --model NAME]
+//!   info      [--backend auto|ref|sim|artifacts] [--artifacts DIR --model NAME]
 
-use edgellm::coordinator::engine::{Engine, EngineConfig};
+use edgellm::coordinator::engine::{Engine, EngineConfig, Event};
 use edgellm::coordinator::sampler::Sampling;
 use edgellm::coordinator::server;
-use edgellm::models::{self, SparseStrategy};
+use edgellm::models::{self, LlmArch, SparseStrategy};
 use edgellm::runtime::model::LlmRuntime;
 use edgellm::runtime::reference::ReferenceConfig;
 use edgellm::sim::engine::Simulator;
@@ -46,8 +46,10 @@ fn print_help() {
          edgellm simulate --arch glm --strategy s3 --ctx 128 --batch 8\n  \
          edgellm info\n\n\
          Backends: --backend ref (pure-Rust reference model, default when\n\
-         no artifacts are present), --backend artifacts (AOT PJRT\n\
-         artifacts from --artifacts/--model; needs the pjrt feature)."
+         no artifacts are present), --backend sim (VCU128 latency model\n\
+         serving deterministic pseudo-tokens; --sim-arch glm|qwen|tiny,\n\
+         --max-tokens N), --backend artifacts (AOT PJRT artifacts from\n\
+         --artifacts/--model; needs the pjrt feature)."
     );
 }
 
@@ -59,23 +61,61 @@ fn load_runtime(args: &Args) -> anyhow::Result<LlmRuntime> {
     let model = args.get_or("model", "tiny");
     let runtime = match backend.as_str() {
         "ref" => LlmRuntime::reference(ReferenceConfig::default()),
+        "sim" => {
+            let (arch, strat) = sim_arch_strategy(args);
+            LlmRuntime::simulator(
+                &arch,
+                &strat,
+                Memory::Hbm,
+                args.get_usize("max-tokens", 512),
+                args.get_usize("seed", 0xED6E) as u64,
+            )
+        }
         "artifacts" | "pjrt" => LlmRuntime::load(&dir, &model)?,
         _ => LlmRuntime::load_or_reference(&dir, &model, ReferenceConfig::default()),
     };
+    let decode_mode = if runtime.supports_batched_decode() {
+        "shared round"
+    } else {
+        "stepped"
+    };
     eprintln!(
-        "loaded {} ({:.1}M params, max_tokens={})",
+        "loaded {} ({:.1}M params, max_tokens={}, batched decode: {decode_mode})",
         runtime.info.name,
         runtime.info.n_params as f64 / 1e6,
-        runtime.info.max_tokens
+        runtime.info.max_tokens,
     );
     Ok(runtime)
 }
 
+/// The architecture/strategy pair behind `--sim-arch` / `--strategy`.
+fn sim_arch_strategy(args: &Args) -> (LlmArch, SparseStrategy) {
+    let name = args.get_or("sim-arch", "tiny");
+    let arch = match name.as_str() {
+        "glm" => models::GLM_6B,
+        "qwen" => models::QWEN_7B,
+        "tiny" => models::TINY,
+        other => {
+            eprintln!("unknown sim-arch {other}, using tiny");
+            models::TINY
+        }
+    };
+    (arch, parse_strategy(&args.get_or("strategy", "dense")))
+}
+
 fn engine_config(args: &Args) -> EngineConfig {
-    EngineConfig {
+    let mut cfg = EngineConfig {
         max_active: args.get_usize("max-active", 8),
         ..EngineConfig::default()
+    };
+    // latency-model serving: the engine's VCU128 accounting must
+    // describe the same machine the SimBackend is emulating
+    if args.get_or("backend", "auto") == "sim" {
+        let (arch, strat) = sim_arch_strategy(args);
+        cfg.sim_arch = arch;
+        cfg.sim_strategy = strat;
     }
+    cfg
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
@@ -96,6 +136,9 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     } else {
         Sampling::Temperature(temp)
     };
+    if args.has("stream") {
+        return stream_generate(&mut engine, &prompt, max_new, sampling);
+    }
     engine.submit(&prompt, max_new, sampling);
     let c = engine.step()?.expect("request queued");
     println!("prompt       : {:?}", c.prompt);
@@ -108,6 +151,48 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         c.sim_first_token_ms, c.sim_tokens_per_s
     );
     Ok(())
+}
+
+/// Drive the scheduler and print token chunks as the engine streams
+/// them — the CLI view of the v2 protocol.
+fn stream_generate(
+    engine: &mut Engine,
+    prompt: &str,
+    max_new: usize,
+    sampling: Sampling,
+) -> anyhow::Result<()> {
+    use std::io::Write as _;
+
+    let handle = engine.submit(prompt, max_new, sampling);
+    print!("streaming    : ");
+    std::io::stdout().flush()?;
+    loop {
+        engine.step_round()?;
+        while let Some(ev) = handle.try_recv() {
+            match ev {
+                Event::Token(t) => {
+                    print!("{}", t.text.escape_debug());
+                    std::io::stdout().flush()?;
+                }
+                Event::Done(c) => {
+                    println!();
+                    println!(
+                        "tokens       : {} prompt + {} new",
+                        c.n_prompt, c.n_generated
+                    );
+                    println!(
+                        "decode speed : {:.2} token/s (measured), {:.1} token/s (sim VCU128)",
+                        c.tokens_per_s, c.sim_tokens_per_s
+                    );
+                    return Ok(());
+                }
+                Event::Error(msg) => anyhow::bail!("generation failed: {msg}"),
+            }
+        }
+        if !engine.has_work() {
+            anyhow::bail!("request ended without a terminal event");
+        }
+    }
 }
 
 fn parse_strategy(s: &str) -> SparseStrategy {

@@ -1,0 +1,329 @@
+//! The `Backend` trait: the runtime interface the serving scheduler
+//! drives, decoupled from any concrete execution engine.
+//!
+//! EdgeLLM's deployment story is *heterogeneous*: the same CPU-side
+//! coordinator must drive whatever datapath is present — the pure-Rust
+//! reference engine, the PJRT/XLA artifact executor, the VCU128 latency
+//! model, or (eventually) a real FPGA bridge. The scheduler therefore
+//! talks only to this object-safe trait; picking a backend is a
+//! *constructor* decision (`LlmRuntime::reference` / `::simulator` /
+//! `::load`), never a `cfg`/`match` branch on the serving hot path.
+//!
+//! Implementations in-tree:
+//!
+//! * [`ReferenceBackend`] (= `reference::RefLlm`) — the batched,
+//!   blocked, FP16×INT4-quantized functional engine; always built.
+//! * `PjrtBackend` (feature `pjrt`, in [`super::model`]) — AOT HLO
+//!   artifacts through a PJRT client; batch-1 executables, so it keeps
+//!   the default stepping `decode_batch`.
+//! * [`SimBackend`] — wraps [`sim::engine::Simulator`]: latency-model
+//!   serving as a *real* backend. Tokens are deterministic pseudo-logits
+//!   (seeded), so the full serving stack — scheduler, sampler, streaming
+//!   protocol, cancellation — runs end-to-end with zero functional
+//!   compute, at any architecture size (GLM-6B included).
+//! * Mock backends in `rust/tests/backend_trait.rs` — the trait is the
+//!   scheduler's test seam: a backend needs no weights, no model, not
+//!   even a KV cache.
+//!
+//! [`sim::engine::Simulator`]: crate::sim::engine::Simulator
+
+use std::cell::Cell;
+
+use anyhow::{bail, Result};
+
+use super::model::{ModelInfo, Session};
+use crate::models::{LlmArch, SparseStrategy};
+use crate::sim::engine::Simulator;
+use crate::sim::Memory;
+use crate::util::rng::Rng;
+
+/// The reference backend is `RefLlm` itself; re-exported under the name
+/// the serving layer uses for it.
+pub use super::reference::RefLlm as ReferenceBackend;
+
+/// An LLM execution backend the continuous-batching scheduler can drive.
+///
+/// Object-safe by construction (`Box<dyn Backend>` is the type
+/// [`LlmRuntime`](super::model::LlmRuntime) wraps) and `Send` so an
+/// engine owning one can live behind the server's `Mutex`. Sessions are
+/// host-side state minted by `prefill`; a backend that keeps no KV state
+/// (latency models, mocks) just tracks `Session::pos`.
+///
+/// The generic entry-point validation (empty/oversized prompts, arity,
+/// KV budget) lives in `LlmRuntime`, so implementations may assume:
+///
+/// * `prefill`: `1 <= prompt.len() <= info().max_tokens`;
+/// * `decode` / `decode_batch`: every session has `pos < max_tokens`,
+///   and `sessions.len() == tokens.len()`.
+pub trait Backend: Send {
+    /// Architecture of the loaded model.
+    fn info(&self) -> &ModelInfo;
+
+    /// Prefill bucket lengths, ascending; the last bucket bounds the
+    /// prompt length the scheduler will admit.
+    fn prefill_buckets(&self) -> &[usize];
+
+    /// Run prefill over `prompt`; returns the logits of the last prompt
+    /// token plus a fresh session positioned after the prompt.
+    fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)>;
+
+    /// One decode step: feed `token`, advance the session, return the
+    /// next-token logits.
+    fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>>;
+
+    /// One batched decode round: feed `tokens[i]` to `sessions[i]` and
+    /// return each session's next-token logits.
+    ///
+    /// The default implementation steps the sessions one after another —
+    /// correct for any backend, and the right shape for batch-1
+    /// executors (PJRT artifacts). Backends that can amortize the weight
+    /// stream across the batch (the reference engine) override this and
+    /// report it via [`Backend::supports_batched_decode`].
+    fn decode_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        sessions
+            .iter_mut()
+            .zip(tokens.iter())
+            .map(|(s, &t)| self.decode(s, t))
+            .collect()
+    }
+
+    /// True when `decode_batch` executes a genuinely shared round
+    /// (weights streamed once per round, not once per session).
+    fn supports_batched_decode(&self) -> bool {
+        false
+    }
+
+    /// Resident quantized-FFN weight bytes — the stream a batched round
+    /// amortizes — when the backend exposes them (reference engine).
+    fn ffn_weight_bytes(&self) -> Option<usize> {
+        None
+    }
+}
+
+// The trait must stay object-safe: the scheduler only ever sees it
+// through `Box<dyn Backend>`.
+const _: fn(&dyn Backend) -> &ModelInfo = |b| b.info();
+
+/// Latency-model-only serving backend: the VCU128 [`Simulator`] as a
+/// first-class `Backend`.
+///
+/// Before the trait existed, "serve from the latency model" meant the
+/// side channel threaded through `Engine` (every engine owns a
+/// `Simulator` for VCU128 accounting) — there was no way to *run the
+/// serving stack itself* on a simulated datapath. `SimBackend` closes
+/// that: prefill/decode return deterministic pseudo-logits drawn from a
+/// seeded RNG keyed on `(token, position)`, sessions carry no KV tensors
+/// (only `pos`), and the wrapped `Simulator` meters every call — each
+/// prefill/decode charges its VCU128 cost to [`SimBackend::sim_time_us`],
+/// so after serving a workload the backend reports what that exact call
+/// sequence costs on the accelerator. That makes scheduler, streaming
+/// and protocol behavior testable at GLM-6B scale in microseconds.
+///
+/// The emitted byte stream is noise by design — this backend models
+/// *time*, not language; pair it with an `EngineConfig` whose `sim_arch`
+/// matches `arch` so the engine's round-level VCU128 accounting
+/// describes the same machine. `supports_batched_decode` stays false:
+/// there is no weight stream to share, rounds are stepped.
+pub struct SimBackend {
+    info: ModelInfo,
+    buckets: Vec<usize>,
+    sim: Simulator,
+    /// accumulated simulated accelerator time of every prefill/decode
+    /// served so far, µs (Cell: metering must not require `&mut` on an
+    /// object behind `Box<dyn Backend>`)
+    sim_us: Cell<f64>,
+    seed: u64,
+}
+
+impl SimBackend {
+    pub fn new(
+        arch: &LlmArch,
+        strat: &SparseStrategy,
+        mem: Memory,
+        max_tokens: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(max_tokens >= 1, "max_tokens must be at least 1");
+        let sim = Simulator::new(arch, strat, mem);
+        // power-of-two prefill buckets, mirroring the other backends
+        let mut buckets = Vec::new();
+        let mut b = 8usize;
+        while b < max_tokens {
+            buckets.push(b);
+            b *= 2;
+        }
+        buckets.push(max_tokens);
+        let info = ModelInfo {
+            name: format!("sim-{}", arch.name),
+            // byte vocabulary, matching coordinator::tokenizer — the
+            // serving stack above is identical for every backend
+            vocab: 256,
+            d_model: arch.d_model,
+            n_layers: arch.n_layers,
+            n_heads: arch.n_heads,
+            n_kv_heads: arch.n_kv_heads,
+            d_ffn: arch.d_ffn,
+            max_tokens,
+            head_dim: arch.head_dim,
+            n_params: arch.n_params(),
+            // no functional KV state: sessions track position only
+            cache_shape: [arch.n_layers, max_tokens, 0, 0],
+        };
+        SimBackend {
+            info,
+            buckets,
+            sim,
+            sim_us: Cell::new(0.0),
+            seed,
+        }
+    }
+
+    /// The latency model this backend serves from.
+    pub fn simulator(&self) -> &Simulator {
+        &self.sim
+    }
+
+    /// Simulated VCU128 µs consumed by every prefill/decode served so
+    /// far — the backend-side latency meter.
+    pub fn sim_time_us(&self) -> f64 {
+        self.sim_us.get()
+    }
+
+    /// Deterministic pseudo-logits for (fed token, its position).
+    /// History beyond the position is deliberately ignored — this
+    /// backend models time, not language.
+    fn logits_at(&self, token: i32, pos: usize) -> Vec<f32> {
+        let t = token.rem_euclid(self.info.vocab as i32) as u64;
+        let mut rng = Rng::new(self.seed ^ (t << 32) ^ pos as u64);
+        (0..self.info.vocab).map(|_| rng.normal() as f32).collect()
+    }
+}
+
+impl Backend for SimBackend {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+        let Some(&last) = prompt.last() else {
+            bail!("empty prompt");
+        };
+        if prompt.len() > self.info.max_tokens {
+            bail!(
+                "prompt of {} exceeds max_tokens {}",
+                prompt.len(),
+                self.info.max_tokens
+            );
+        }
+        let mut session = Session::new([0, 0, 0, 0]);
+        session.pos = prompt.len();
+        let cost = self.sim.prefill(prompt.len()).breakdown.total_us();
+        self.sim_us.set(self.sim_us.get() + cost);
+        Ok((self.logits_at(last, prompt.len() - 1), session))
+    }
+
+    fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        if session.pos >= self.info.max_tokens {
+            bail!("KV cache full (max_tokens={})", self.info.max_tokens);
+        }
+        let cost = self.sim.decode_step(session.pos).breakdown.total_us();
+        self.sim_us.set(self.sim_us.get() + cost);
+        let logits = self.logits_at(token, session.pos);
+        session.pos += 1;
+        Ok(logits)
+    }
+
+    // supports_batched_decode stays at the default `false`: a latency
+    // model has no weight stream to share, so a round is honestly a
+    // stepped sequence of per-session charges.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{DENSE, GLM_6B, TINY};
+
+    fn sim_tiny() -> SimBackend {
+        SimBackend::new(&TINY, &DENSE, Memory::Hbm, 64, 0xC0FFEE)
+    }
+
+    #[test]
+    fn sim_backend_is_deterministic() {
+        let a = sim_tiny();
+        let b = sim_tiny();
+        let (la, mut sa) = a.prefill(&[1, 2, 3]).unwrap();
+        let (lb, mut sb) = b.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(a.decode(&mut sa, 7).unwrap(), b.decode(&mut sb, 7).unwrap());
+        assert_eq!(sa.pos, 4);
+    }
+
+    #[test]
+    fn sim_backend_meters_simulated_time() {
+        let s = sim_tiny();
+        assert_eq!(s.sim_time_us(), 0.0);
+        let (_l, mut sess) = s.prefill(&[1, 2, 3]).unwrap();
+        let after_prefill = s.sim_time_us();
+        assert!(after_prefill > 0.0, "prefill must charge simulated time");
+        s.decode(&mut sess, 4).unwrap();
+        let after_decode = s.sim_time_us();
+        assert!(after_decode > after_prefill, "decode must charge on top");
+        // the meter matches the wrapped Simulator's own arithmetic
+        let expect = s.simulator().prefill(3).breakdown.total_us()
+            + s.simulator().decode_step(3).breakdown.total_us();
+        assert!((after_decode - expect).abs() < 1e-9, "{after_decode} vs {expect}");
+    }
+
+    #[test]
+    fn sim_backend_logits_depend_on_position_and_token() {
+        let s = sim_tiny();
+        assert_ne!(s.logits_at(1, 0), s.logits_at(1, 1));
+        assert_ne!(s.logits_at(1, 0), s.logits_at(2, 0));
+        assert!(s.logits_at(5, 3).iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn sim_backend_respects_kv_budget() {
+        let s = SimBackend::new(&TINY, &DENSE, Memory::Hbm, 4, 1);
+        let (_l, mut sess) = s.prefill(&[1, 2]).unwrap();
+        s.decode(&mut sess, 3).unwrap();
+        s.decode(&mut sess, 4).unwrap();
+        assert!(s.decode(&mut sess, 5).is_err(), "cache-full must error");
+        assert!(s.prefill(&[0; 5]).is_err(), "oversized prompt must error");
+    }
+
+    #[test]
+    fn sim_backend_scales_to_glm() {
+        // the whole point: serving-stack shapes at 6B scale, instantly
+        let s = SimBackend::new(&GLM_6B, &DENSE, Memory::Hbm, 2048, 2);
+        assert_eq!(s.info().d_model, 4096);
+        assert!(s.info().n_params > 5_000_000_000);
+        let (l, sess) = s.prefill(&[10; 128]).unwrap();
+        assert_eq!(l.len(), 256);
+        assert_eq!(sess.pos, 128);
+        assert_eq!(*s.prefill_buckets().last().unwrap(), 2048);
+    }
+
+    #[test]
+    fn default_decode_batch_steps_sessions() {
+        let s = sim_tiny();
+        let (_l, mut a) = s.prefill(&[1]).unwrap();
+        let (_l, mut b) = s.prefill(&[2, 3]).unwrap();
+        let (_l, mut a2) = s.prefill(&[1]).unwrap();
+        let (_l, mut b2) = s.prefill(&[2, 3]).unwrap();
+        let la = s.decode(&mut a, 9).unwrap();
+        let lb = s.decode(&mut b, 8).unwrap();
+        let mut batch = [&mut a2, &mut b2];
+        let out = Backend::decode_batch(&s, &mut batch, &[9, 8]).unwrap();
+        assert_eq!(out[0], la);
+        assert_eq!(out[1], lb);
+    }
+}

@@ -1,17 +1,22 @@
 //! Model runtime: execute the LLM forward pass for the serving engine.
 //!
-//! Two backends live here:
+//! The serving scheduler drives one object-safe [`backend::Backend`]
+//! trait; [`model::LlmRuntime`] is the thin validating wrapper around a
+//! `Box<dyn Backend>`. Backends in-tree:
 //!
+//! * **Reference** (always built): a small pure-Rust transformer with
+//!   real KV-cache semantics ([`reference`]), used by the serving /
+//!   continuous-batching tests and the offline examples so the decode
+//!   loop is exercised without artifacts.
+//! * **Sim** ([`backend::SimBackend`], always built): the VCU128 latency
+//!   model served as a functional backend — deterministic pseudo-tokens,
+//!   no compute, any architecture size.
 //! * **PJRT** (feature `pjrt`): load AOT-compiled HLO artifacts and run
 //!   them through the `xla` crate — `PjRtClient::cpu()` →
 //!   `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //!   The python side (`python/compile/aot.py`) lowers the JAX/Pallas
 //!   model to HLO *text* (see `/opt/xla-example/README.md` for why text,
 //!   not proto). Needs a vendored `xla` crate + libxla, hence the gate.
-//! * **Reference** (always built): a small pure-Rust transformer with
-//!   real KV-cache semantics ([`reference`]), used by the serving /
-//!   continuous-batching tests and the offline examples so the decode
-//!   loop is exercised without artifacts.
 
 #[cfg(feature = "pjrt")]
 use anyhow::Result;
@@ -102,6 +107,7 @@ pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
         .map_err(|e| anyhow::anyhow!("literal to_vec f32: {e:?}"))
 }
 
+pub mod backend;
 pub mod kernels;
 pub mod model;
 pub mod reference;

@@ -1,16 +1,21 @@
-//! LLM runtime facade: one `LlmRuntime` type over two backends.
+//! `LlmRuntime`: a thin, validating wrapper around one `Box<dyn Backend>`.
 //!
-//! * `pjrt` feature: manifest + weights + compiled HLO executables.
-//!   Weights are uploaded to the PJRT device **once** at load time
-//!   (`execute_b` with persistent `PjRtBuffer`s); the per-step inputs
-//!   (token id, position, KV cache) are tiny. Python never runs here.
-//! * default build: the pure-Rust [`reference`](super::reference) model,
-//!   so the serving engine, scheduler, and protocol are fully exercised
-//!   offline.
+//! Backend selection happens **only** in the constructors —
 //!
-//! Both backends share [`Session`] (host-side KV cache + position) and
-//! the `prefill` / `decode` / `decode_batch` entry points the
-//! continuous-batching scheduler drives.
+//! * [`LlmRuntime::reference`] — the pure-Rust batched quantized engine
+//!   ([`super::reference`]), always built; tests/CI/examples use this.
+//! * [`LlmRuntime::simulator`] — the VCU128 latency model served as a
+//!   functional backend ([`super::backend::SimBackend`]).
+//! * [`LlmRuntime::load`] — AOT HLO artifacts through PJRT (feature
+//!   `pjrt`): manifest + weights + compiled executables, weights
+//!   uploaded to the device once at load time.
+//! * [`LlmRuntime::from_backend`] — any other [`Backend`] impl (mocks,
+//!   future FPGA bridge, sharded backends).
+//!
+//! — after construction the scheduler path is `cfg`-free: every call
+//! dispatches through the object-safe [`Backend`] trait, and the
+//! wrapper owns the generic entry-point validation (prompt bounds,
+//! batch arity, KV budget) so every backend inherits it.
 
 use anyhow::{anyhow, bail, Result};
 use std::path::Path;
@@ -22,7 +27,10 @@ use std::path::PathBuf;
 
 #[cfg(feature = "pjrt")]
 use super::weights::{self, DType, Tensor};
+use super::backend::Backend;
 use super::reference::{RefLlm, ReferenceConfig};
+use crate::models::{LlmArch, SparseStrategy};
+use crate::sim::Memory;
 use crate::util::json::Json;
 
 /// Model architecture constants mirrored from the python ModelConfig.
@@ -41,28 +49,15 @@ pub struct ModelInfo {
     pub cache_shape: [usize; 4], // [L, max_tokens, kvh, head_dim]
 }
 
-/// A loaded, weight-resident model ready to serve.
+/// A loaded, weight-resident model ready to serve: `ModelInfo` + bucket
+/// table cached on the wrapper (so the scheduler reads slices, not
+/// virtual calls) over the trait object that executes.
 pub struct LlmRuntime {
     pub info: ModelInfo,
     /// prefill bucket lengths, ascending — cached here so the scheduler
     /// reads a slice instead of cloning a Vec every admission
     buckets: Vec<usize>,
-    backend: Backend,
-}
-
-enum Backend {
-    Reference(RefLlm),
-    #[cfg(feature = "pjrt")]
-    Pjrt(PjrtModel),
-}
-
-#[cfg(feature = "pjrt")]
-struct PjrtModel {
-    client: xla::PjRtClient,
-    decode_exe: xla::PjRtLoadedExecutable,
-    /// (bucket_len, executable) sorted ascending by bucket.
-    prefill_exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
-    weight_bufs: Vec<xla::PjRtBuffer>,
+    backend: Box<dyn Backend>,
 }
 
 /// Mutable per-request state: the KV cache (host copy) and position.
@@ -70,6 +65,8 @@ struct PjrtModel {
 /// One `Session` per live request; the continuous-batching scheduler
 /// keeps up to `max_active` of these in flight at once. `Clone` snapshots
 /// the full KV state (used by the benches to reset between samples).
+/// Backends that keep no host KV tensors (latency models, mocks) mint
+/// sessions with an all-zero shape and only advance `pos`.
 #[derive(Clone)]
 pub struct Session {
     pub pos: usize,
@@ -78,6 +75,22 @@ pub struct Session {
     /// only the PJRT backend re-uploads the cache and needs its dims
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     pub(crate) cache_dims: Vec<usize>,
+}
+
+impl Session {
+    /// Fresh zeroed session for a model whose per-layer KV cache has the
+    /// given shape `[layers, max_tokens, kv_heads, head_dim]`. Public so
+    /// out-of-crate [`Backend`] implementations can mint sessions; a
+    /// stateless backend passes `[0, 0, 0, 0]`.
+    pub fn new(cache_shape: [usize; 4]) -> Self {
+        let n: usize = cache_shape.iter().product();
+        Session {
+            pos: 0,
+            k_cache: vec![0.0; n],
+            v_cache: vec![0.0; n],
+            cache_dims: cache_shape.to_vec(),
+        }
+    }
 }
 
 fn parse_manifest(dir: &Path, name: &str) -> Result<(Json, ModelInfo)> {
@@ -118,19 +131,38 @@ fn parse_manifest(dir: &Path, name: &str) -> Result<(Json, ModelInfo)> {
 }
 
 impl LlmRuntime {
+    /// Wrap any backend. The single construction path every other
+    /// constructor funnels through — and the extension point for
+    /// backends defined outside this crate (mocks, bridges).
+    pub fn from_backend(backend: Box<dyn Backend>) -> Self {
+        let info = backend.info().clone();
+        let buckets = backend.prefill_buckets().to_vec();
+        LlmRuntime { info, buckets, backend }
+    }
+
     /// Build the pure-Rust reference model (no artifacts required).
     pub fn reference(cfg: ReferenceConfig) -> Self {
-        let model = RefLlm::new(cfg);
-        LlmRuntime {
-            info: model.info().clone(),
-            buckets: model.prefill_buckets().to_vec(),
-            backend: Backend::Reference(model),
-        }
+        Self::from_backend(Box::new(RefLlm::new(cfg)))
     }
 
     /// Reference model with default (tiny) dimensions.
     pub fn reference_tiny() -> Self {
         Self::reference(ReferenceConfig::default())
+    }
+
+    /// Serve from the VCU128 latency model: deterministic pseudo-tokens,
+    /// no functional compute, any architecture size. See
+    /// [`super::backend::SimBackend`].
+    pub fn simulator(
+        arch: &LlmArch,
+        strat: &SparseStrategy,
+        mem: Memory,
+        max_tokens: usize,
+        seed: u64,
+    ) -> Self {
+        Self::from_backend(Box::new(super::backend::SimBackend::new(
+            arch, strat, mem, max_tokens, seed,
+        )))
     }
 
     /// Try the AOT artifacts at `<dir>/<name>.*`; fall back to the
@@ -154,7 +186,116 @@ impl LlmRuntime {
     /// Load `<dir>/<name>.*` artifacts, compile, and upload weights.
     #[cfg(feature = "pjrt")]
     pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
+        Ok(Self::from_backend(Box::new(PjrtBackend::load(
+            dir.as_ref(),
+            name,
+        )?)))
+    }
+
+    /// Without the `pjrt` feature, artifacts cannot be executed; the
+    /// manifest is still validated so errors stay informative.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
         let dir = dir.as_ref();
+        let (_manifest, info) = parse_manifest(dir, name)?;
+        bail!(
+            "artifacts for '{}' found but this build has no PJRT backend \
+             (rebuild with --features pjrt, or use LlmRuntime::reference())",
+            info.name
+        )
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|t| *t >= len)
+    }
+
+    /// Prefill bucket lengths, ascending (no allocation).
+    pub fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Capability flag: does the backend execute `decode_batch` as a
+    /// genuinely shared round (weights streamed once per round)?
+    pub fn supports_batched_decode(&self) -> bool {
+        self.backend.supports_batched_decode()
+    }
+
+    /// Resident quantized-FFN weight bytes, when the backend exposes
+    /// them — the stream the batched decode round amortizes.
+    pub fn ffn_weight_bytes(&self) -> Option<usize> {
+        self.backend.ffn_weight_bytes()
+    }
+
+    /// Run prefill over `prompt` (padded to a bucket); returns the logits
+    /// of the last real token plus a fresh session.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > self.info.max_tokens {
+            bail!(
+                "prompt of {} exceeds max_tokens {}",
+                prompt.len(),
+                self.info.max_tokens
+            );
+        }
+        self.backend.prefill(prompt)
+    }
+
+    /// One decode step: feed `token`, advance the session, return logits.
+    pub fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        if session.pos >= self.info.max_tokens {
+            bail!("KV cache full (max_tokens={})", self.info.max_tokens);
+        }
+        self.backend.decode(session, token)
+    }
+
+    /// One batched decode round: feed `tokens[i]` to `sessions[i]` for
+    /// every live session and return each session's next-token logits.
+    ///
+    /// This is the scheduler's single entry point per round. The KV
+    /// budget is validated for the *whole* batch up front, so a full
+    /// cache never aborts a round mid-batch regardless of whether the
+    /// backend executes a shared round or steps session by session.
+    pub fn decode_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        if sessions.len() != tokens.len() {
+            bail!(
+                "decode_batch: {} sessions vs {} tokens",
+                sessions.len(),
+                tokens.len()
+            );
+        }
+        for s in sessions.iter() {
+            if s.pos >= self.info.max_tokens {
+                bail!("KV cache full (max_tokens={})", self.info.max_tokens);
+            }
+        }
+        self.backend.decode_batch(sessions, tokens)
+    }
+}
+
+/// The PJRT/XLA artifact backend: compiled batch-1 HLO executables with
+/// device-resident weights. `decode_batch` keeps the trait's default
+/// stepping implementation (the artifacts are compiled at batch 1).
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    info: ModelInfo,
+    buckets: Vec<usize>,
+    client: xla::PjRtClient,
+    decode_exe: xla::PjRtLoadedExecutable,
+    /// (bucket_len, executable) sorted ascending by bucket.
+    prefill_exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    fn load(dir: &Path, name: &str) -> Result<Self> {
         let (manifest, info) = parse_manifest(dir, name)?;
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
@@ -216,131 +357,29 @@ impl LlmRuntime {
             }
             weight_bufs.push(upload(&client, t)?);
         }
-        Ok(LlmRuntime {
+        let buckets = prefill_exes.iter().map(|(t, _)| *t).collect();
+        Ok(PjrtBackend {
             info,
-            buckets: prefill_exes.iter().map(|(t, _)| *t).collect(),
-            backend: Backend::Pjrt(PjrtModel {
-                client,
-                decode_exe,
-                prefill_exes,
-                weight_bufs,
-            }),
+            buckets,
+            client,
+            decode_exe,
+            prefill_exes,
+            weight_bufs,
         })
-    }
-
-    /// Without the `pjrt` feature, artifacts cannot be executed; the
-    /// manifest is still validated so errors stay informative.
-    #[cfg(not(feature = "pjrt"))]
-    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
-        let dir = dir.as_ref();
-        let (_manifest, info) = parse_manifest(dir, name)?;
-        bail!(
-            "artifacts for '{}' found but this build has no PJRT backend \
-             (rebuild with --features pjrt, or use LlmRuntime::reference())",
-            info.name
-        )
-    }
-
-    /// Smallest prefill bucket that fits `len` tokens.
-    pub fn bucket_for(&self, len: usize) -> Option<usize> {
-        self.buckets.iter().copied().find(|t| *t >= len)
-    }
-
-    /// Prefill bucket lengths, ascending (no allocation).
-    pub fn prefill_buckets(&self) -> &[usize] {
-        &self.buckets
-    }
-
-    /// Resident quantized-FFN weight bytes (reference backend only) —
-    /// the stream the batched decode round amortizes.
-    pub fn ffn_weight_bytes(&self) -> Option<usize> {
-        match &self.backend {
-            Backend::Reference(m) => Some(m.ffn_weight_bytes()),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(_) => None,
-        }
-    }
-
-    /// Run prefill over `prompt` (padded to a bucket); returns the logits
-    /// of the last real token plus a fresh session.
-    pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
-        if prompt.is_empty() {
-            bail!("empty prompt");
-        }
-        if prompt.len() > self.info.max_tokens {
-            bail!(
-                "prompt of {} exceeds max_tokens {}",
-                prompt.len(),
-                self.info.max_tokens
-            );
-        }
-        match &self.backend {
-            Backend::Reference(m) => m.prefill(prompt),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(m) => m.prefill(&self.info, prompt),
-        }
-    }
-
-    /// One decode step: feed `token`, advance the session, return logits.
-    pub fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
-        if session.pos >= self.info.max_tokens {
-            bail!("KV cache full (max_tokens={})", self.info.max_tokens);
-        }
-        match &self.backend {
-            Backend::Reference(m) => m.decode(session, token),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(m) => m.decode(session, token),
-        }
-    }
-
-    /// One batched decode round: feed `tokens[i]` to `sessions[i]` for
-    /// every live session and return each session's next-token logits.
-    ///
-    /// This is the scheduler's single entry point per round. The
-    /// reference backend executes it as a *true* batched round — each
-    /// weight matrix is streamed once for the whole batch, the same
-    /// accounting `sim::engine::Simulator::decode_round` charges the
-    /// accelerator — and is bit-identical to scalar decode per session.
-    /// The PJRT backend (batch-1 compiled artifacts) falls back to
-    /// stepping the sessions one after another.
-    pub fn decode_batch(
-        &self,
-        sessions: &mut [&mut Session],
-        tokens: &[i32],
-    ) -> Result<Vec<Vec<f32>>> {
-        if sessions.len() != tokens.len() {
-            bail!(
-                "decode_batch: {} sessions vs {} tokens",
-                sessions.len(),
-                tokens.len()
-            );
-        }
-        match &self.backend {
-            Backend::Reference(m) => m.decode_batch(sessions, tokens),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(m) => {
-                // validate the KV-budget precondition up front so a
-                // full cache never aborts the round mid-batch (a device
-                // error during stepping can still do so — the batch-1
-                // executor offers no rollback)
-                for s in sessions.iter() {
-                    if s.pos >= self.info.max_tokens {
-                        bail!("KV cache full (max_tokens={})", self.info.max_tokens);
-                    }
-                }
-                sessions
-                    .iter_mut()
-                    .zip(tokens.iter())
-                    .map(|(s, &t)| m.decode(s, t))
-                    .collect()
-            }
-        }
     }
 }
 
 #[cfg(feature = "pjrt")]
-impl PjrtModel {
-    fn prefill(&self, info: &ModelInfo, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+impl Backend for PjrtBackend {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
         let (bucket, exe) = self
             .prefill_exes
             .iter()
@@ -375,14 +414,14 @@ impl PjrtModel {
         let all_logits = logits
             .to_vec::<f32>()
             .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
-        let v = info.vocab;
+        let v = self.info.vocab;
         let last = prompt.len() - 1;
         let last_logits = all_logits[last * v..(last + 1) * v].to_vec();
         let session = Session {
             pos: prompt.len(),
             k_cache: kc.to_vec::<f32>().map_err(|e| anyhow!("kc to_vec: {e:?}"))?,
             v_cache: vc.to_vec::<f32>().map_err(|e| anyhow!("vc to_vec: {e:?}"))?,
-            cache_dims: info.cache_shape.to_vec(),
+            cache_dims: self.info.cache_shape.to_vec(),
         };
         Ok((last_logits, session))
     }
@@ -521,5 +560,27 @@ mod tests {
         assert_eq!(batched[0], la);
         assert_eq!(batched[1], lb);
         assert_eq!(a.pos, a2.pos);
+    }
+
+    #[test]
+    fn wrapper_equals_direct_backend_construction() {
+        let cfg = ReferenceConfig::default();
+        let direct = LlmRuntime::from_backend(Box::new(RefLlm::new(cfg.clone())));
+        let wrapped = LlmRuntime::reference(cfg);
+        let (ld, _) = direct.prefill(&[7, 8, 9]).unwrap();
+        let (lw, _) = wrapped.prefill(&[7, 8, 9]).unwrap();
+        assert_eq!(ld, lw);
+        assert!(direct.supports_batched_decode());
+        assert!(direct.ffn_weight_bytes().unwrap() > 0);
+        assert_eq!(direct.prefill_buckets(), wrapped.prefill_buckets());
+    }
+
+    #[test]
+    fn session_new_has_requested_shape() {
+        let s = Session::new([2, 8, 1, 4]);
+        assert_eq!(s.pos, 0);
+        assert_eq!(s.k_cache.len(), 2 * 8 * 4);
+        let empty = Session::new([0, 0, 0, 0]);
+        assert!(empty.k_cache.is_empty());
     }
 }

@@ -38,6 +38,7 @@ use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
+use super::backend::Backend;
 use super::kernels::{attend_into, gelu, gemm_into, matvec_into, q4_gemm_into, q4_sparse_gemm_into};
 use super::model::{ModelInfo, Session};
 use crate::pack::layout::PackedQ4;
@@ -290,13 +291,7 @@ impl RefLlm {
     }
 
     fn fresh_session(&self) -> Session {
-        let [l, t, h, d] = self.info.cache_shape;
-        Session {
-            pos: 0,
-            k_cache: vec![0.0; l * t * h * d],
-            v_cache: vec![0.0; l * t * h * d],
-            cache_dims: self.info.cache_shape.to_vec(),
-        }
+        Session::new(self.info.cache_shape)
     }
 
     /// Grow the scratch arena to hold `rows` activation rows.
@@ -549,6 +544,44 @@ impl RefLlm {
                     .sum::<usize>()
             })
             .sum()
+    }
+}
+
+/// The reference engine is the always-built [`Backend`]: batched rounds
+/// are genuinely shared (weights streamed once per round), so
+/// `supports_batched_decode` is true and the quantized FFN footprint is
+/// exposed for the throughput benches.
+impl Backend for RefLlm {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+        RefLlm::prefill(self, prompt)
+    }
+
+    fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        RefLlm::decode(self, session, token)
+    }
+
+    fn decode_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        RefLlm::decode_batch(self, sessions, tokens)
+    }
+
+    fn supports_batched_decode(&self) -> bool {
+        true
+    }
+
+    fn ffn_weight_bytes(&self) -> Option<usize> {
+        Some(RefLlm::ffn_weight_bytes(self))
     }
 }
 

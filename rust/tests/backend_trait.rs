@@ -1,0 +1,360 @@
+//! Backend-trait surface tests: a mock backend proves the trait is
+//! object-safe and makes the scheduler testable without any model, and
+//! a deliberately *slow* mock makes the v2 streaming/cancellation
+//! protocol deterministic over real TCP.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use edgellm::coordinator::engine::{Engine, EngineConfig, Event};
+use edgellm::coordinator::sampler::Sampling;
+use edgellm::coordinator::server;
+use edgellm::runtime::backend::Backend;
+use edgellm::runtime::model::{LlmRuntime, ModelInfo, Session};
+use edgellm::util::json::Json;
+
+/// A model-free backend: greedy decoding walks the byte ring
+/// `t → (t+1) mod 256`. No weights, no KV tensors, no RNG — pure
+/// scheduler fuel. `decode_delay` throttles each decode call so tests
+/// can observe (and interrupt) generation mid-flight.
+struct MockBackend {
+    info: ModelInfo,
+    buckets: Vec<usize>,
+    decode_delay: Duration,
+    decodes: Arc<AtomicUsize>,
+}
+
+impl MockBackend {
+    fn new(max_tokens: usize, decode_delay: Duration) -> Self {
+        let info = ModelInfo {
+            name: "mock".to_string(),
+            vocab: 256,
+            d_model: 1,
+            n_layers: 1,
+            n_heads: 1,
+            n_kv_heads: 1,
+            d_ffn: 1,
+            max_tokens,
+            head_dim: 1,
+            n_params: 0,
+            cache_shape: [0, 0, 0, 0],
+        };
+        MockBackend {
+            info,
+            buckets: vec![max_tokens],
+            decode_delay,
+            decodes: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Logits whose argmax is `(token + 1) mod 256`.
+    fn ring_logits(token: i32) -> Vec<f32> {
+        let mut l = vec![0.0f32; 256];
+        l[(token.rem_euclid(256) as usize + 1) % 256] = 1.0;
+        l
+    }
+}
+
+impl Backend for MockBackend {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+        let mut s = Session::new([0, 0, 0, 0]);
+        s.pos = prompt.len();
+        Ok((Self::ring_logits(*prompt.last().expect("validated")), s))
+    }
+
+    fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        self.decodes.fetch_add(1, Ordering::Relaxed);
+        if !self.decode_delay.is_zero() {
+            std::thread::sleep(self.decode_delay);
+        }
+        session.pos += 1;
+        Ok(Self::ring_logits(token))
+    }
+}
+
+fn mock_engine(max_active: usize, delay: Duration) -> (Engine, Arc<AtomicUsize>) {
+    let mock = MockBackend::new(4096, delay);
+    let decodes = Arc::clone(&mock.decodes);
+    let eng = Engine::new(
+        LlmRuntime::from_backend(Box::new(mock)),
+        EngineConfig {
+            max_active,
+            ..EngineConfig::default()
+        },
+    );
+    (eng, decodes)
+}
+
+#[test]
+fn trait_is_object_safe_and_wrapper_validates() {
+    // Box<dyn Backend> through the LlmRuntime wrapper: the mock never
+    // sees invalid input because the wrapper validates
+    let boxed: Box<dyn Backend> = Box::new(MockBackend::new(8, Duration::ZERO));
+    let rt = LlmRuntime::from_backend(boxed);
+    assert!(!rt.supports_batched_decode(), "mock keeps the default flag");
+    assert!(rt.ffn_weight_bytes().is_none());
+    assert!(rt.prefill(&[]).is_err(), "wrapper rejects empty prompts");
+    assert!(rt.prefill(&[0; 9]).is_err(), "wrapper rejects oversized prompts");
+
+    let (logits, mut s) = rt.prefill(&[65]).unwrap();
+    assert_eq!(logits.len(), 256);
+    assert_eq!(s.pos, 1);
+    // default decode_batch steps sessions one by one
+    let (_l, mut s2) = rt.prefill(&[70]).unwrap();
+    let mut batch = vec![&mut s, &mut s2];
+    let out = rt.decode_batch(&mut batch, &[65, 70]).unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0][66], 1.0, "ring argmax moved one byte forward");
+    assert_eq!(out[1][71], 1.0);
+
+    // wrapper enforces the KV budget for the whole batch
+    s.pos = 8;
+    let mut full = vec![&mut s];
+    assert!(rt.decode_batch(&mut full, &[1]).is_err());
+}
+
+#[test]
+fn scheduler_runs_on_a_mock_backend() {
+    // the whole continuous-batching scheduler, zero model involved
+    let (mut eng, decodes) = mock_engine(4, Duration::ZERO);
+    let mut want = Vec::new();
+    for i in 0..6 {
+        let max_new = 3 + i;
+        let h = eng.submit(&format!("req {i}"), max_new, Sampling::Greedy);
+        want.push((h.id(), max_new));
+    }
+    let done = eng.run_all().unwrap();
+    let mut got: Vec<(u64, usize)> = done.iter().map(|c| (c.id, c.n_generated)).collect();
+    got.sort_unstable();
+    assert_eq!(got, want);
+    // greedy on the byte ring: consecutive bytes after the prompt's last
+    let c0 = done.iter().find(|c| c.id == want[0].0).unwrap();
+    let last = *c0.prompt.as_bytes().last().unwrap() as i32;
+    let expect: Vec<u8> = (1..=c0.n_generated as i32)
+        .map(|k| ((last + k).rem_euclid(256)) as u8)
+        .collect();
+    assert_eq!(c0.text.as_bytes(), expect.as_slice());
+    assert!(decodes.load(Ordering::Relaxed) > 0);
+    assert_eq!(eng.metrics().completed, 6);
+}
+
+#[test]
+fn cancellation_mid_decode_frees_slot_and_is_counted() {
+    let (mut eng, _) = mock_engine(1, Duration::ZERO);
+    let ha = eng.submit("aaaa", 50, Sampling::Greedy);
+    let hb = eng.submit("bbbb", 5, Sampling::Greedy);
+    // with max_active=1, B waits in the queue behind A
+    for _ in 0..3 {
+        assert!(eng.step_round().unwrap().is_empty());
+    }
+    assert_eq!(eng.active_sessions(), 1);
+    assert_eq!(eng.pending(), 1);
+
+    ha.cancel();
+    // next round: A is reaped before admission, B takes the slot
+    eng.step_round().unwrap();
+    assert_eq!(eng.metrics().cancelled, 1);
+    assert_eq!(eng.pending(), 0);
+    assert_eq!(eng.active_sessions(), 1, "slot reused by B in the same round");
+
+    let done = eng.run_all().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, hb.id());
+    assert_eq!(done[0].n_generated, 5);
+    assert_eq!(eng.metrics().completed, 1);
+
+    // A's stream: some tokens, then the terminal cancellation error
+    let mut a_tokens = 0;
+    let mut a_terminal = None;
+    while let Some(ev) = ha.try_recv() {
+        match ev {
+            Event::Token(_) => a_tokens += 1,
+            other => a_terminal = Some(other),
+        }
+    }
+    assert!(a_tokens >= 2, "A decoded before cancellation ({a_tokens})");
+    assert!(
+        matches!(a_terminal, Some(Event::Error(ref m)) if m == "cancelled"),
+        "{a_terminal:?}"
+    );
+}
+
+#[test]
+fn queued_request_cancelled_by_id_never_prefills() {
+    let (mut eng, decodes) = mock_engine(1, Duration::ZERO);
+    let _ha = eng.submit("live", 4, Sampling::Greedy);
+    let hb = eng.submit("never admitted", 4, Sampling::Greedy);
+    assert!(eng.cancel(hb.id()), "queued request found by id");
+    let done = eng.run_all().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(eng.metrics().cancelled, 1);
+    assert!(matches!(hb.wait(), Err(ref m) if m == "cancelled"));
+    // only the live request's tokens were ever decoded
+    assert_eq!(decodes.load(Ordering::Relaxed), 4);
+}
+
+// ---------------------------------------------------------------- TCP v2
+
+fn read_json_line(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.is_empty(), "connection closed early");
+    Json::parse(line.trim()).unwrap()
+}
+
+/// Acceptance: a TCP client receives ≥2 token events before the final
+/// line, and the final line is the v1 completion plus done:true.
+#[test]
+fn tcp_streaming_yields_token_events_then_final_line() {
+    let (eng, _) = mock_engine(4, Duration::ZERO);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = server::spawn_on(eng, listener).unwrap();
+
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+    writeln!(
+        stream,
+        r#"{{"prompt": "stream me", "max_new_tokens": 6, "stream": true}}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let ack = read_json_line(&mut reader);
+    assert_eq!(ack.get("stream").and_then(|v| v.as_bool()), Some(true));
+    let id = ack.get("id").unwrap().as_usize().unwrap();
+
+    let mut tokens = Vec::new();
+    let final_line = loop {
+        let line = read_json_line(&mut reader);
+        if line.get("done").is_some() {
+            break line;
+        }
+        assert_eq!(line.get("id").unwrap().as_usize(), Some(id));
+        assert_eq!(line.get("index").unwrap().as_usize(), Some(tokens.len()));
+        tokens.push(line.get("token").unwrap().as_usize().unwrap());
+    };
+    assert!(tokens.len() >= 2, "want ≥2 token events, got {}", tokens.len());
+    assert_eq!(tokens.len(), 6);
+    assert_eq!(final_line.get("n_generated").unwrap().as_usize(), Some(6));
+    assert!(final_line.get("error").is_none(), "{final_line}");
+    // token ids reconstruct the final text (byte vocab)
+    let bytes: Vec<u8> = tokens.iter().map(|&t| t as u8).collect();
+    assert_eq!(
+        final_line.get("text").unwrap().as_str().unwrap(),
+        String::from_utf8_lossy(&bytes)
+    );
+
+    handle.shutdown();
+}
+
+/// Acceptance: `{"cancel": id}` from a second connection terminates an
+/// in-flight stream early, and the freed slot serves a later request.
+#[test]
+fn tcp_cancel_terminates_stream_and_slot_is_reused() {
+    // 10 ms per decode: ~3 s uncancelled, so an early terminal line can
+    // only come from the cancel path
+    let (eng, _) = mock_engine(1, Duration::from_millis(10));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = server::spawn_on(eng, listener).unwrap();
+
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+    writeln!(
+        stream,
+        r#"{{"prompt": "long one", "max_new_tokens": 300, "stream": true}}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream);
+    let ack = read_json_line(&mut reader);
+    let id = ack.get("id").unwrap().as_usize().unwrap();
+
+    // let at least two tokens stream before cancelling
+    let mut seen = 0;
+    while seen < 2 {
+        let line = read_json_line(&mut reader);
+        assert!(line.get("done").is_none(), "finished before cancel: {line}");
+        seen += 1;
+    }
+
+    // cancel from a *different* connection
+    let mut side = TcpStream::connect(handle.addr()).unwrap();
+    writeln!(side, r#"{{"cancel": {id}}}"#).unwrap();
+    let mut side_reader = BufReader::new(side);
+    let reply = read_json_line(&mut side_reader);
+    assert_eq!(reply.get("cancelled").unwrap().as_usize(), Some(id));
+    assert_eq!(reply.get("found").unwrap().as_bool(), Some(true));
+
+    // the stream terminates early with the cancellation error
+    let terminal = loop {
+        let line = read_json_line(&mut reader);
+        if line.get("done").is_some() {
+            break line;
+        }
+        seen += 1;
+    };
+    assert_eq!(terminal.get("error").and_then(|v| v.as_str()), Some("cancelled"));
+    assert!(seen < 300, "cancel must cut generation short ({seen} tokens)");
+
+    // the freed slot (max_active = 1) serves a fresh request to completion
+    let side2 = TcpStream::connect(handle.addr()).unwrap();
+    let mut w = side2.try_clone().unwrap();
+    writeln!(w, r#"{{"prompt": "after cancel", "max_new_tokens": 3}}"#).unwrap();
+    let mut r2 = BufReader::new(side2);
+    let done = read_json_line(&mut r2);
+    assert!(done.get("error").is_none(), "{done}");
+    assert_eq!(done.get("n_generated").unwrap().as_usize(), Some(3));
+
+    // server-side counters saw the cancellation
+    let mut stats_conn = TcpStream::connect(handle.addr()).unwrap();
+    writeln!(stats_conn, r#"{{"stats": true}}"#).unwrap();
+    let mut rs = BufReader::new(stats_conn);
+    let stats = read_json_line(&mut rs);
+    assert_eq!(stats.get("cancelled").unwrap().as_usize(), Some(1));
+
+    handle.shutdown();
+}
+
+/// The shutdown signal reaps the scheduler and accept threads — no test
+/// relies on process exit.
+#[test]
+fn server_shutdown_reaps_threads_and_fails_inflight_requests() {
+    let (eng, _) = mock_engine(1, Duration::from_millis(10));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = server::spawn_on(eng, listener).unwrap();
+    let addr = handle.addr();
+
+    // park a slow streaming request in flight
+    let mut stream = TcpStream::connect(addr).unwrap();
+    writeln!(
+        stream,
+        r#"{{"prompt": "doomed", "max_new_tokens": 300, "stream": true}}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream);
+    let _ack = read_json_line(&mut reader);
+    let _first_token = read_json_line(&mut reader);
+
+    // shutdown() joins the scheduler + acceptor; returning at all is the
+    // reaping guarantee
+    handle.shutdown();
+
+    // the in-flight stream was failed, not wedged: a terminal line with
+    // done:true arrives (either the abort error or a just-finished round)
+    let terminal = loop {
+        let line = read_json_line(&mut reader);
+        if line.get("done").is_some() {
+            break line;
+        }
+    };
+    assert!(terminal.get("error").is_some(), "{terminal}");
+}

@@ -179,6 +179,60 @@ fn random_expr(rng: &mut Rng, depth: usize) -> std::rc::Rc<Expr> {
 }
 
 #[test]
+fn prop_stream_events_reconstruct_completion() {
+    // for any engine seed and sampling policy, the streamed token events
+    // are a lossless, ordered view of the completion: token ids rebuild
+    // the final text, indices are dense, and the terminal event is Done
+    // with the same counts
+    use edgellm::coordinator::engine::{Engine, EngineConfig, Event};
+    use edgellm::coordinator::sampler::Sampling;
+    use edgellm::coordinator::tokenizer;
+    use edgellm::runtime::model::LlmRuntime;
+    use edgellm::runtime::reference::ReferenceConfig;
+
+    for case in 0..6u64 {
+        let policy = match case % 3 {
+            0 => Sampling::Greedy,
+            1 => Sampling::Temperature(1.1),
+            _ => Sampling::TopP { p: 0.9, temperature: 1.0 },
+        };
+        let mut eng = Engine::new(
+            LlmRuntime::reference(ReferenceConfig::default()),
+            EngineConfig {
+                seed: 900 + case,
+                max_active: 3,
+                ..EngineConfig::default()
+            },
+        );
+        let h = eng.submit("prop stream", 8, Sampling::Greedy);
+        let h2 = eng.submit("second session", 5, policy);
+        eng.run_all().unwrap();
+        for (handle, want_n) in [(h, 8usize), (h2, 5usize)] {
+            let mut tokens = Vec::new();
+            let mut done = None;
+            while let Some(ev) = handle.try_recv() {
+                match ev {
+                    Event::Token(t) => {
+                        assert_eq!(t.index, tokens.len(), "case {case}: dense indices");
+                        tokens.push(t.token);
+                    }
+                    Event::Done(c) => done = Some(c),
+                    Event::Error(e) => panic!("case {case}: {e}"),
+                }
+            }
+            let c = done.expect("terminal Done");
+            assert_eq!(tokens.len(), want_n, "case {case}");
+            assert_eq!(c.n_generated, want_n, "case {case}");
+            assert_eq!(
+                tokenizer::decode(&tokens),
+                c.text,
+                "case {case}: token ids must rebuild the text"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_rng_choose_indices_uniformish() {
     // sanity on the test harness itself: chosen index sets cover the range
     let mut rng = Rng::new(808);

@@ -1,11 +1,12 @@
 //! Continuous-batching scheduler tests: admission, interleaved decode,
-//! retirement, metrics, and the multi-client TCP server.
+//! retirement, streaming events, cancellation, metrics, and the
+//! multi-client TCP server.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::thread;
 
-use edgellm::coordinator::engine::{Engine, EngineConfig};
+use edgellm::coordinator::engine::{Engine, EngineConfig, Event};
 use edgellm::coordinator::sampler::Sampling;
 use edgellm::coordinator::server;
 use edgellm::runtime::model::LlmRuntime;
@@ -34,7 +35,7 @@ fn concurrent_requests_complete_with_correct_token_counts() {
     let mut want = Vec::new();
     for (i, p) in prompts.iter().enumerate() {
         let max_new = 3 + i; // 3..=12, all within the KV budget
-        let id = eng.submit(p, max_new, Sampling::Greedy);
+        let id = eng.submit(p, max_new, Sampling::Greedy).id();
         want.push((id, max_new));
     }
     assert_eq!(eng.pending(), 10);
@@ -158,6 +159,66 @@ fn metrics_counters_are_consistent() {
     assert!(m.sim_decode_us > 0.0);
     assert_eq!(eng.pending(), 0);
     assert_eq!(eng.active_sessions(), 0);
+}
+
+/// Streaming is an *observation* of the same trajectory, not a second
+/// code path: the token events reconstruct exactly the non-streaming
+/// final text for the same seed/config.
+#[test]
+fn streaming_events_match_nonstreaming_text() {
+    let run_plain = || -> String {
+        let mut eng = engine_with(4);
+        eng.submit("stream equivalence", 12, Sampling::Greedy);
+        eng.run_all().unwrap()[0].text.clone()
+    };
+    let run_streamed = || -> (Vec<i32>, String, String) {
+        let mut eng = engine_with(4);
+        let h = eng.submit("stream equivalence", 12, Sampling::Greedy);
+        eng.run_all().unwrap();
+        let mut tokens = Vec::new();
+        let mut done_text = None;
+        while let Some(ev) = h.try_recv() {
+            match ev {
+                Event::Token(t) => {
+                    assert_eq!(t.index, tokens.len(), "indices are dense and ordered");
+                    tokens.push(t.token);
+                }
+                Event::Done(c) => done_text = Some(c.text),
+                Event::Error(e) => panic!("unexpected error event: {e}"),
+            }
+        }
+        let reconstructed = edgellm::coordinator::tokenizer::decode(&tokens);
+        (tokens, reconstructed, done_text.expect("terminal Done event"))
+    };
+    let plain = run_plain();
+    let (tokens, reconstructed, done_text) = run_streamed();
+    assert_eq!(tokens.len(), 12);
+    assert_eq!(reconstructed, plain, "token events must rebuild the text");
+    assert_eq!(done_text, plain, "Done carries the same completion");
+}
+
+/// Cancellation on the real reference backend: the KV slot frees up,
+/// the `cancelled` counter moves, and the remaining request is unharmed.
+#[test]
+fn cancellation_frees_kv_slot_for_queued_request() {
+    let mut eng = engine_with(1);
+    let ha = eng.submit("goes forever", 40, Sampling::Greedy);
+    let hb = eng.submit("patiently waiting", 6, Sampling::Greedy);
+    for _ in 0..4 {
+        eng.step_round().unwrap();
+    }
+    assert_eq!(eng.active_sessions(), 1);
+    assert_eq!(eng.pending(), 1);
+    ha.cancel();
+    let done = eng.run_all().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, hb.id());
+    assert_eq!(done[0].n_generated, 6);
+    let m = eng.metrics();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.submitted, 2);
+    assert!(matches!(ha.wait(), Err(ref msg) if msg == "cancelled"));
 }
 
 fn send_request(addr: std::net::SocketAddr, body: String) -> Json {

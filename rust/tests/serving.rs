@@ -109,7 +109,33 @@ fn protocol_stats_reply() {
     let stats = process_line(&mut eng, r#"{"stats": true}"#);
     assert_eq!(stats.get("completed").unwrap().as_usize(), Some(1));
     assert_eq!(stats.get("decode_tokens").unwrap().as_usize(), Some(4));
+    assert_eq!(stats.get("cancelled").unwrap().as_usize(), Some(0));
     assert!(stats.get("sim_tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// v2 requests on the synchronous path: `stream` is accepted (answered
+/// with the whole v1 reply — line streaming lives in the threaded
+/// server), `cancel` answers found:false with nothing in flight, and a
+/// malformed cancel id is a structured error.
+#[test]
+fn protocol_v2_on_sync_path() {
+    let mut eng = engine();
+    let reply = process_line(
+        &mut eng,
+        r#"{"prompt": "Hi", "max_new_tokens": 3, "stream": true}"#,
+    );
+    assert!(reply.get("error").is_none(), "{reply}");
+    assert_eq!(reply.get("n_generated").unwrap().as_usize(), Some(3));
+
+    let reply = process_line(&mut eng, r#"{"prompt": "Hi", "stream": "yes"}"#);
+    assert!(reply.get("error").unwrap().as_str().unwrap().contains("stream"));
+
+    let reply = process_line(&mut eng, r#"{"cancel": 999}"#);
+    assert_eq!(reply.get("cancelled").unwrap().as_usize(), Some(999));
+    assert_eq!(reply.get("found").unwrap().as_bool(), Some(false));
+
+    let reply = process_line(&mut eng, r#"{"cancel": "one"}"#);
+    assert!(reply.get("error").unwrap().as_str().unwrap().contains("cancel"));
 }
 
 #[test]
