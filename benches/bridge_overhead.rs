@@ -1,0 +1,242 @@
+//! Bridge overhead: the same reference backend driven in-process vs
+//! through a loopback device daemon, plus transport bytes/token from
+//! the bridge's `TransferMeter` — tokens/s *and* transport traffic,
+//! the way the paper reports decode speed next to HBM bandwidth
+//! utilization.
+//!
+//! The model is kept small on purpose: a small model makes compute
+//! cheap, so the measured gap is an *upper bound* on the bridge's
+//! per-call cost (a production-size model amortizes the same frames
+//! over far more FLOPs). Correctness is asserted bitwise — the bridged
+//! logits must equal the in-process logits — so the record never
+//! reports the speed of a wrong answer.
+//!
+//! Writes `BENCH_bridge.json` (per-batch tok/s for both paths, the
+//! overhead ratio, and tx/rx bytes per token); CI archives it next to
+//! `BENCH_backend.json`.
+//!
+//! `cargo bench --bench bridge_overhead`
+
+use std::net::TcpListener;
+use std::time::Instant;
+
+use edgellm::bridge::client::BridgeBackend;
+use edgellm::bridge::device::{self, DeviceConfig};
+use edgellm::runtime::backend::ReferenceBackend;
+use edgellm::runtime::model::{LlmRuntime, Session};
+use edgellm::runtime::reference::ReferenceConfig;
+use edgellm::util::bench::{fmt_secs, Table};
+use edgellm::util::json::Json;
+
+const PROMPT_LEN: usize = 32;
+const ROUNDS: usize = 64;
+/// measured samples per configuration (plus one warmup)
+const SAMPLES: usize = 3;
+const BATCHES: [usize; 2] = [1, 4];
+
+fn bench_cfg() -> ReferenceConfig {
+    ReferenceConfig {
+        name: "ref-bridge-bench".to_string(),
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        max_tokens: 128,
+        seed: 0xB71D6E,
+        ..ReferenceConfig::default()
+    }
+}
+
+fn prompt(lane: usize) -> Vec<i32> {
+    (0..PROMPT_LEN)
+        .map(|i| ((i * 31 + lane * 67 + 5) % 256) as i32)
+        .collect()
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Aggregate decode tokens/s over `ROUNDS` batched rounds at batch `b`
+/// (backend_throughput methodology, generic over the runtime so both
+/// paths run the exact same loop).
+///
+/// Unlike backend_throughput, each sample prefills *fresh* sessions and
+/// retires them afterwards instead of cloning a pristine host session:
+/// a bridged session's KV state lives on the device, where cloning the
+/// host handle cannot reset it. Prefill and retirement sit outside the
+/// timed region.
+fn decode_tps(rt: &LlmRuntime, b: usize) -> (f64, f64) {
+    let mut times = Vec::new();
+    for sample in 0..SAMPLES + 1 {
+        let mut sessions: Vec<Session> =
+            (0..b).map(|s| rt.prefill(&prompt(s)).expect("prefill").1).collect();
+        let t0 = Instant::now();
+        for round in 0..ROUNDS {
+            let tokens: Vec<i32> =
+                (0..b).map(|s| ((round * 13 + s * 7) % 256) as i32).collect();
+            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+            let logits = rt.decode_batch(&mut refs, &tokens).expect("decode round");
+            std::hint::black_box(&logits);
+        }
+        if sample > 0 {
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        for s in sessions.iter_mut() {
+            rt.end_session(s); // frees the device-side session eagerly
+        }
+    }
+    let t = median(times);
+    ((b * ROUNDS) as f64 / t, t / ROUNDS as f64)
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    println!(
+        "== bridge overhead: d={} L={} prompt {PROMPT_LEN}, {ROUNDS} rounds, \
+         loopback daemon ==",
+        cfg.d_model, cfg.n_layers
+    );
+
+    // in-process path and the daemon host the *same* weights (same seed)
+    let local = LlmRuntime::reference(cfg.clone());
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let dev = device::spawn_on(
+        Box::new(ReferenceBackend::new(cfg)),
+        listener,
+        DeviceConfig::default(),
+    )
+    .expect("spawn device daemon");
+    let bridged = LlmRuntime::from_backend(Box::new(
+        BridgeBackend::connect(&dev.addr().to_string()).expect("connect bridge"),
+    ));
+
+    // correctness gate: never benchmark a wrong answer
+    let (ll, mut sl) = local.prefill(&prompt(0)).expect("local prefill");
+    let (lb, mut sb) = bridged.prefill(&prompt(0)).expect("bridged prefill");
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&ll), bits(&lb), "bridged logits must be bit-identical");
+    local.end_session(&mut sl);
+    bridged.end_session(&mut sb);
+
+    // prefill latency, both paths (sessions retired outside the timer)
+    let prefill_s = |rt: &LlmRuntime| {
+        let mut times = Vec::new();
+        for sample in 0..SAMPLES + 1 {
+            let t0 = Instant::now();
+            let (logits, mut s) = rt.prefill(&prompt(sample)).expect("prefill");
+            std::hint::black_box(&logits);
+            if sample > 0 {
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            rt.end_session(&mut s);
+        }
+        median(times)
+    };
+    let pre_local = prefill_s(&local);
+    let pre_bridged = prefill_s(&bridged);
+
+    let mut table = Table::new(&[
+        "batch",
+        "in-process tok/s",
+        "bridged tok/s",
+        "bridge/in-proc",
+        "tx B/tok",
+        "rx B/tok",
+    ]);
+    let mut rows = Vec::new();
+    for &b in &BATCHES {
+        let (tps_local, _) = decode_tps(&local, b);
+        let m0 = bridged.transfer_meter().expect("bridge meters transfers");
+        let (tps_bridged, round_s) = decode_tps(&bridged, b);
+        let m1 = bridged.transfer_meter().expect("bridge meters transfers");
+        // bytes across every round of this batch size (warmup and the
+        // per-sample prefill/close frames included — a few % of the
+        // decode traffic at these settings)
+        let tokens = ((SAMPLES + 1) * ROUNDS * b) as f64;
+        let tx_per_tok = (m1.tx_bytes - m0.tx_bytes) as f64 / tokens;
+        let rx_per_tok = (m1.rx_bytes - m0.rx_bytes) as f64 / tokens;
+        table.rowv(vec![
+            b.to_string(),
+            format!("{tps_local:.1}"),
+            format!("{tps_bridged:.1}"),
+            format!("{:.2}x", tps_bridged / tps_local),
+            format!("{tx_per_tok:.1}"),
+            format!("{rx_per_tok:.1}"),
+        ]);
+        rows.push((b, tps_local, tps_bridged, round_s, tx_per_tok, rx_per_tok));
+    }
+    table.print();
+    println!(
+        "prefill: {} in-process, {} bridged",
+        fmt_secs(pre_local),
+        fmt_secs(pre_bridged)
+    );
+    let meter = bridged.transfer_meter().expect("meter");
+    println!(
+        "transport total: {} B up, {} B down over {} calls",
+        meter.tx_bytes, meter.rx_bytes, meter.calls
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("bridge_overhead".into())),
+        (
+            "model",
+            Json::obj(vec![
+                ("name", Json::Str(local.info.name.clone())),
+                ("d_model", Json::Num(local.info.d_model as f64)),
+                ("n_layers", Json::Num(local.info.n_layers as f64)),
+                ("vocab", Json::Num(local.info.vocab as f64)),
+            ]),
+        ),
+        ("prompt_len", Json::Num(PROMPT_LEN as f64)),
+        ("rounds", Json::Num(ROUNDS as f64)),
+        (
+            "prefill",
+            Json::obj(vec![
+                ("in_process_s", Json::Num(pre_local)),
+                ("bridged_s", Json::Num(pre_bridged)),
+            ]),
+        ),
+        (
+            "decode",
+            Json::Arr(
+                rows.iter()
+                    .map(|&(b, tl, tb, round_s, tx, rx)| {
+                        Json::obj(vec![
+                            ("batch", Json::Num(b as f64)),
+                            ("in_process_tokens_per_s", Json::Num(tl)),
+                            ("bridged_tokens_per_s", Json::Num(tb)),
+                            ("bridged_round_latency_s", Json::Num(round_s)),
+                            ("overhead_ratio", Json::Num(tb / tl)),
+                            ("tx_bytes_per_token", Json::Num(tx)),
+                            ("rx_bytes_per_token", Json::Num(rx)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "transport_total",
+            Json::obj(vec![
+                ("tx_bytes", Json::Num(meter.tx_bytes as f64)),
+                ("rx_bytes", Json::Num(meter.rx_bytes as f64)),
+                ("calls", Json::Num(meter.calls as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_bridge.json", format!("{json}\n")).expect("write BENCH_bridge.json");
+    println!("wrote BENCH_bridge.json");
+
+    // smoke floors only — loopback latency on a contended runner must
+    // not turn a load dip into a red build
+    for &(b, _tl, tb, _r, tx, rx) in &rows {
+        assert!(tb > 0.0, "bridged decode at batch {b} must make progress");
+        // every decoded token moved at least its logits row back
+        assert!(rx >= (local.info.vocab * 4) as f64, "rx {rx} B/tok at batch {b}");
+        assert!(tx > 0.0);
+    }
+    // every session the bench opened was retired over the wire
+    assert_eq!(dev.active_sessions(), 0, "bench leaked device sessions");
+    dev.shutdown();
+}

@@ -1,0 +1,106 @@
+//! The full CPU↔device split in one process: a device daemon hosting
+//! the reference backend on loopback (the "FPGA side"), a serving
+//! engine driving it through `BridgeBackend` (the CPU side), and a
+//! protocol-v2 TCP client streaming tokens that were computed on the
+//! other end of the wire — then a clean shutdown of both layers.
+//!
+//! Run: `cargo run --release --example bridge_serving`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use edgellm::bridge::client::BridgeBackend;
+use edgellm::bridge::device::{self, DeviceConfig};
+use edgellm::coordinator::engine::{Engine, EngineConfig};
+use edgellm::coordinator::server;
+use edgellm::runtime::backend::ReferenceBackend;
+use edgellm::runtime::model::LlmRuntime;
+use edgellm::runtime::reference::ReferenceConfig;
+use edgellm::util::json::Json;
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Json> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+}
+
+fn main() -> anyhow::Result<()> {
+    // -- 1. the device side: a daemon hosting real compute --------------
+    let dev = device::spawn_on(
+        Box::new(ReferenceBackend::new(ReferenceConfig {
+            max_tokens: 128,
+            ..ReferenceConfig::default()
+        })),
+        TcpListener::bind("127.0.0.1:0")?,
+        DeviceConfig::default(),
+    )?;
+    println!("device daemon on {}", dev.addr());
+
+    // -- 2. the CPU side: scheduler + TCP server over the bridge --------
+    let backend = BridgeBackend::connect(&dev.addr().to_string())?;
+    let runtime = LlmRuntime::from_backend(Box::new(backend));
+    println!(
+        "bridged model: {} (remote: {}, batched decode: {})",
+        runtime.info.name,
+        runtime.is_remote(),
+        if runtime.supports_batched_decode() { "shared round" } else { "stepped" },
+    );
+    let engine = Engine::new(
+        runtime,
+        EngineConfig { max_active: 4, max_queued: 64, ..EngineConfig::default() },
+    );
+    let srv = server::spawn_on(engine, TcpListener::bind("127.0.0.1:0")?)?;
+
+    // -- 3. a protocol-v2 client: every token crossed the wire twice ----
+    let mut stream = TcpStream::connect(srv.addr())?;
+    writeln!(
+        stream,
+        r#"{{"prompt": "stream across the bridge", "max_new_tokens": 24, "stream": true}}"#
+    )?;
+    let mut reader = BufReader::new(stream);
+    let ack = read_line(&mut reader)?;
+    println!(
+        "streaming request id {}",
+        ack.get("id").and_then(|v| v.as_usize()).unwrap_or(0)
+    );
+    print!("tokens: ");
+    loop {
+        let line = read_line(&mut reader)?;
+        if line.get("done").is_some() {
+            println!();
+            println!(
+                "final: {} tokens, {:.0} tok/s measured",
+                line.get("n_generated").and_then(|v| v.as_usize()).unwrap_or(0),
+                line.get("tokens_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+            break;
+        }
+        print!(
+            "{}",
+            line.get("text").and_then(|v| v.as_str()).unwrap_or("").escape_debug()
+        );
+        std::io::stdout().flush()?;
+    }
+
+    // -- 4. transport accounting via the serving stats line -------------
+    let mut stats_conn = TcpStream::connect(srv.addr())?;
+    writeln!(stats_conn, r#"{{"stats": true}}"#)?;
+    let stats = read_line(&mut BufReader::new(stats_conn))?;
+    println!(
+        "device transport: {} B up, {} B down over {} calls",
+        stats.get("device_tx_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+        stats.get("device_rx_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+        stats.get("device_calls").and_then(|v| v.as_usize()).unwrap_or(0),
+    );
+
+    // -- 5. orderly teardown: serving layer first, then the daemon ------
+    srv.shutdown();
+    assert_eq!(
+        dev.active_sessions(),
+        0,
+        "retirement closed every device session over the wire"
+    );
+    dev.shutdown();
+    println!("both layers shut down cleanly");
+    Ok(())
+}

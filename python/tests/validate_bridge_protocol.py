@@ -1,0 +1,289 @@
+"""Independent Python mirror of the bridge wire format.
+
+The bridge protocol (rust/src/bridge/protocol.rs) is a contract: a
+length-prefixed binary command stream, little-endian, with payloads in
+the flat row layout the rest of the system uses. This script
+re-implements the codec from the *specification* (docs/bridge.md), not
+from the Rust source, and checks:
+
+  1. golden byte vectors — identical literals are asserted by the Rust
+     unit test `protocol::tests::golden_bytes`, so the two
+     implementations can only agree by implementing the same format;
+  2. encode→decode round trips for every frame kind, including f32
+     bit-exactness (NaN payloads included);
+  3. framing properties: length prefix counts opcode+payload, truncated
+     payloads and trailing bytes are rejected, counts that overrun the
+     payload are rejected before allocation.
+
+Run: python3 python/tests/validate_bridge_protocol.py
+"""
+
+import math
+import struct
+
+PROTOCOL_VERSION = 1
+MAX_FRAME_BYTES = 16 << 20
+
+OPS = {
+    "Info": 0x01,
+    "OpenSession": 0x02,
+    "Prefill": 0x03,
+    "Decode": 0x04,
+    "DecodeBatch": 0x05,
+    "CloseSession": 0x06,
+    "InfoResp": 0x81,
+    "SessionOpened": 0x82,
+    "Logits": 0x83,
+    "LogitsBatch": 0x84,
+    "Closed": 0x85,
+    "Error": 0xEE,
+}
+ERR_CODES = {"Protocol": 1, "Session": 2, "Backend": 3, "Busy": 4, "Version": 5}
+
+MODEL_INFO_FIELDS = [
+    "vocab", "d_model", "n_layers", "n_heads", "n_kv_heads",
+    "d_ffn", "max_tokens", "head_dim",
+]
+
+
+def _u8(v): return struct.pack("<B", v)
+def _u16(v): return struct.pack("<H", v)
+def _u32(v): return struct.pack("<I", v)
+def _u64(v): return struct.pack("<Q", v)
+def _i32(v): return struct.pack("<i", v)
+def _f32(v): return struct.pack("<f", v)
+
+
+def _str16(s):
+    b = s.encode("utf-8")
+    assert len(b) <= 0xFFFF
+    return _u16(len(b)) + b
+
+
+def encode(kind, **f):
+    """Encode one frame (payload only; see frame() for the prefix)."""
+    out = _u8(OPS[kind])
+    if kind == "Info":
+        out += _u8(f["version"])
+    elif kind in ("OpenSession", "CloseSession", "SessionOpened", "Closed"):
+        out += _u32(f["session"])
+    elif kind == "Prefill":
+        out += _u32(f["session"]) + _u32(len(f["prompt"]))
+        out += b"".join(_i32(t) for t in f["prompt"])
+    elif kind == "Decode":
+        out += _u32(f["session"]) + _i32(f["token"])
+    elif kind == "DecodeBatch":
+        assert len(f["sessions"]) == len(f["tokens"])
+        out += _u32(len(f["sessions"]))
+        out += b"".join(_u32(s) for s in f["sessions"])
+        out += b"".join(_i32(t) for t in f["tokens"])
+    elif kind == "InfoResp":
+        info = f["info"]
+        out += _u8(f["version"]) + _str16(info["name"])
+        out += b"".join(_u32(info[k]) for k in MODEL_INFO_FIELDS)
+        out += _u64(info["n_params"])
+        out += b"".join(_u32(d) for d in info["cache_shape"])
+        out += _u32(len(f["buckets"])) + b"".join(_u32(b) for b in f["buckets"])
+        out += _u8(1 if f["supports_batched_decode"] else 0)
+        out += _u64(f["ffn_weight_bytes"])
+    elif kind == "Logits":
+        out += _u32(f["session"]) + _u32(f["pos"]) + _u32(len(f["logits"]))
+        out += b"".join(_f32(x) for x in f["logits"])
+    elif kind == "LogitsBatch":
+        out += _u32(len(f["rows"]))
+        for session, pos, logits in f["rows"]:
+            out += _u32(session) + _u32(pos) + _u32(len(logits))
+            out += b"".join(_f32(x) for x in logits)
+    elif kind == "Error":
+        out += _u8(ERR_CODES[f["code"]]) + _str16(f["message"])
+    else:
+        raise ValueError(kind)
+    return out
+
+
+def frame(kind, **f):
+    payload = encode(kind, **f)
+    assert 1 <= len(payload) <= MAX_FRAME_BYTES
+    return _u32(len(payload)) + payload
+
+
+class Dec:
+    def __init__(self, b):
+        self.b, self.at = b, 0
+
+    def take(self, n):
+        if self.at + n > len(self.b):
+            raise ValueError(f"payload truncated at {self.at}")
+        s = self.b[self.at:self.at + n]
+        self.at += n
+        return s
+
+    def u8(self): return self.take(1)[0]
+    def u16(self): return struct.unpack("<H", self.take(2))[0]
+    def u32(self): return struct.unpack("<I", self.take(4))[0]
+    def u64(self): return struct.unpack("<Q", self.take(8))[0]
+    def i32(self): return struct.unpack("<i", self.take(4))[0]
+    def f32(self): return struct.unpack("<f", self.take(4))[0]
+
+    def count(self, elem_bytes):
+        n = self.u32()
+        if n * elem_bytes > len(self.b) - self.at:
+            raise ValueError(f"count {n} exceeds payload")
+        return n
+
+    def str16(self):
+        return self.take(self.u16()).decode("utf-8")
+
+    def finish(self):
+        if self.at != len(self.b):
+            raise ValueError(f"{len(self.b) - self.at} trailing bytes")
+
+
+def decode(buf):
+    """Decode one framed message; returns (kind, fields)."""
+    (length,) = struct.unpack("<I", buf[:4])
+    if not (1 <= length <= MAX_FRAME_BYTES):
+        raise ValueError("desync: bad frame length")
+    if len(buf) - 4 != length:
+        raise ValueError("frame byte count does not match its prefix")
+    d = Dec(buf[4:])
+    op = d.u8()
+    kinds = {v: k for k, v in OPS.items()}
+    kind = kinds.get(op)
+    if kind is None:
+        raise ValueError(f"unknown opcode {op:#x}")
+    f = {}
+    if kind == "Info":
+        f["version"] = d.u8()
+    elif kind in ("OpenSession", "CloseSession", "SessionOpened", "Closed"):
+        f["session"] = d.u32()
+    elif kind == "Prefill":
+        f["session"] = d.u32()
+        f["prompt"] = [d.i32() for _ in range(d.count(4))]
+    elif kind == "Decode":
+        f["session"], f["token"] = d.u32(), d.i32()
+    elif kind == "DecodeBatch":
+        n = d.count(8)
+        f["sessions"] = [d.u32() for _ in range(n)]
+        f["tokens"] = [d.i32() for _ in range(n)]
+    elif kind == "InfoResp":
+        f["version"] = d.u8()
+        info = {"name": d.str16()}
+        for k in MODEL_INFO_FIELDS:
+            info[k] = d.u32()
+        info["n_params"] = d.u64()
+        info["cache_shape"] = [d.u32() for _ in range(4)]
+        f["info"] = info
+        f["buckets"] = [d.u32() for _ in range(d.count(4))]
+        f["supports_batched_decode"] = d.u8() != 0
+        f["ffn_weight_bytes"] = d.u64()
+    elif kind == "Logits":
+        f["session"], f["pos"] = d.u32(), d.u32()
+        f["logits"] = [d.f32() for _ in range(d.count(4))]
+    elif kind == "LogitsBatch":
+        rows = []
+        for _ in range(d.count(12)):
+            session, pos = d.u32(), d.u32()
+            rows.append((session, pos, [d.f32() for _ in range(d.count(4))]))
+        f["rows"] = rows
+    elif kind == "Error":
+        codes = {v: k for k, v in ERR_CODES.items()}
+        f["code"] = codes[d.u8()]
+        f["message"] = d.str16()
+    d.finish()
+    return kind, f
+
+
+checks = 0
+
+
+def check(cond, msg):
+    global checks
+    checks += 1
+    if not cond:
+        raise AssertionError(msg)
+
+
+def main():
+    global checks
+    # 1. golden vectors — byte-for-byte the literals asserted by the
+    # Rust unit test protocol::tests::golden_bytes
+    check(frame("Info", version=1) == bytes([2, 0, 0, 0, 0x01, 1]), "golden Info")
+    check(
+        frame("OpenSession", session=3) == bytes([5, 0, 0, 0, 0x02, 3, 0, 0, 0]),
+        "golden OpenSession",
+    )
+    check(
+        frame("Decode", session=7, token=42)
+        == bytes([9, 0, 0, 0, 0x04, 7, 0, 0, 0, 42, 0, 0, 0]),
+        "golden Decode",
+    )
+    check(
+        frame("Prefill", session=1, prompt=[5, -1])
+        == bytes([17, 0, 0, 0, 0x03, 1, 0, 0, 0, 2, 0, 0, 0, 5, 0, 0, 0,
+                  0xFF, 0xFF, 0xFF, 0xFF]),
+        "golden Prefill",
+    )
+    check(
+        frame("Error", code="Session", message="x")
+        == bytes([5, 0, 0, 0, 0xEE, 2, 1, 0, 0x78]),
+        "golden Error",
+    )
+
+    # 2. round trips, every frame kind
+    info = {
+        "name": "ref-tiny", "vocab": 256, "d_model": 32, "n_layers": 2,
+        "n_heads": 2, "n_kv_heads": 2, "d_ffn": 128, "max_tokens": 64,
+        "head_dim": 16, "n_params": 123456, "cache_shape": [2, 64, 2, 16],
+    }
+    cases = [
+        ("Info", {"version": PROTOCOL_VERSION}),
+        ("OpenSession", {"session": 7}),
+        ("Prefill", {"session": 1, "prompt": [5, -1, 255, 0]}),
+        ("Decode", {"session": 9, "token": -3}),
+        ("DecodeBatch", {"sessions": [1, 2, 3], "tokens": [10, 20, 30]}),
+        ("CloseSession", {"session": 4}),
+        ("InfoResp", {"version": 1, "info": info, "buckets": [8, 16, 32, 64],
+                      "supports_batched_decode": True,
+                      "ffn_weight_bytes": 1 << 20}),
+        ("SessionOpened", {"session": 2}),
+        ("Logits", {"session": 3, "pos": 17, "logits": [0.5, -1.25, 3.75e8]}),
+        ("LogitsBatch", {"rows": [(1, 4, [1.0, 2.0]), (2, 9, [-0.5])]}),
+        ("Closed", {"session": 11}),
+        ("Error", {"code": "Busy", "message": "session table full"}),
+    ]
+    for kind, fields in cases:
+        out_kind, out = decode(frame(kind, **fields))
+        check(out_kind == kind, f"roundtrip kind {kind}")
+        check(out == fields, f"roundtrip fields {kind}: {out} != {fields}")
+
+    # 3. f32 bits survive, NaN included
+    weird = [float("nan"), float("inf"), -0.0, 1.0000001]
+    _, out = decode(frame("Logits", session=0, pos=1, logits=weird))
+    for a, b in zip(weird, out["logits"]):
+        check(struct.pack("<f", a) == struct.pack("<f", b), "f32 bits")
+    check(math.isnan(out["logits"][0]), "NaN crosses the wire")
+
+    # 4. framing properties
+    buf = frame("Decode", session=7, token=42)
+    check(struct.unpack("<I", buf[:4])[0] == len(buf) - 4,
+          "length prefix counts opcode+payload")
+    for bad in (buf[:-1], buf + b"\x00"):
+        try:
+            decode(bad)
+            raise AssertionError("mis-framed bytes must be rejected")
+        except ValueError:
+            checks += 1
+    # a count field that overruns the payload is rejected
+    overrun = _u32(9) + _u8(OPS["Prefill"]) + _u32(1) + _u32(0xFFFFFFFF)
+    try:
+        decode(overrun)
+        raise AssertionError("overrunning count must be rejected")
+    except ValueError:
+        checks += 1
+
+    print(f"bridge protocol: all {checks} checks pass")
+
+
+if __name__ == "__main__":
+    main()

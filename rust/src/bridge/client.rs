@@ -1,0 +1,357 @@
+//! [`BridgeBackend`]: the [`Backend`] trait implemented over the bridge
+//! transport — the CPU-side coordinator's view of a remote device.
+//!
+//! Construction connects, performs the `Info` handshake, and caches the
+//! device's architecture + capability flags, so to the scheduler a
+//! remote device is indistinguishable from an in-process backend: same
+//! trait, same validation (the local [`LlmRuntime`] wrapper still
+//! guards every call), bit-identical logits — f32 rows cross the wire
+//! as raw little-endian bits, never reformatted.
+//!
+//! Call mapping (each is one transport round trip):
+//!
+//! * `prefill` → `OpenSession` + `Prefill`, pipelined in one flush; the
+//!   remote session id rides home in [`Session::tag`];
+//! * `decode` → `Decode`; `decode_batch` → a single `DecodeBatch` frame
+//!   for the whole round (the weight-stream-once batching argument
+//!   applies to the wire, too: one round trip per round, not per
+//!   session);
+//! * scheduler retirement → `end_session` → `CloseSession`, so the
+//!   device frees KV state as soon as the coordinator does — not when
+//!   the connection eventually closes.
+//!
+//! Every frame is counted by a [`TransferMeter`] (host→device tx,
+//! device→host rx, per-call), the transport analogue of the paper's
+//! HBM-bandwidth-utilization metric; `benches/bridge_overhead.rs`
+//! reports bytes/token from it, and the serving stats line exposes it
+//! when the engine's backend is remote.
+//!
+//! A refused connection maps to a structured error naming the address
+//! and the fix (`edgellm device-serve`) — the first thing an operator
+//! sees when the daemon is down, so it must not be a bare os error.
+//!
+//! [`Backend`]: crate::runtime::backend::Backend
+//! [`LlmRuntime`]: crate::runtime::model::LlmRuntime
+//! [`TransferMeter`]: crate::runtime::backend::TransferMeter
+
+use std::cell::{Cell, RefCell};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::protocol::{self, Frame, PROTOCOL_VERSION};
+use crate::runtime::backend::{Backend, TransferMeter};
+use crate::runtime::model::{ModelInfo, Session};
+
+/// The connection: buffered halves of one TCP stream plus the meter.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    meter: TransferMeter,
+}
+
+impl Conn {
+    fn send(&mut self, f: &Frame) -> Result<()> {
+        let n = protocol::write_frame(&mut self.writer, f)
+            .map_err(|e| anyhow!("device write failed: {e}"))?;
+        self.meter.tx_bytes += n as u64;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.writer.flush().map_err(|e| anyhow!("device write failed: {e}"))
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        match protocol::read_frame(&mut self.reader) {
+            Ok(Some((f, n))) => {
+                self.meter.rx_bytes += n as u64;
+                Ok(f)
+            }
+            Ok(None) => bail!("device closed the connection"),
+            Err(e) => bail!("device read failed: {e}"),
+        }
+    }
+}
+
+/// Turn an unexpected reply into the error the caller reports: device
+/// error frames keep their structured code, anything else names the
+/// frame kinds involved (never payloads).
+fn unexpected(frame: Frame, want: &str) -> anyhow::Error {
+    match frame {
+        Frame::Error { code, message } => anyhow!("device error ({code:?}): {message}"),
+        other => anyhow!("bridge protocol error: expected {want}, got {}", other.name()),
+    }
+}
+
+/// `Backend` over the bridge transport. See the module docs.
+pub struct BridgeBackend {
+    addr: String,
+    info: ModelInfo,
+    buckets: Vec<usize>,
+    supports_batched: bool,
+    ffn_weight_bytes: Option<usize>,
+    /// interior mutability: `Backend` methods take `&self`; the engine
+    /// serializes calls externally (it lives behind the server's mutex)
+    conn: RefCell<Conn>,
+    /// next client-chosen remote session id; 0 is reserved as "no
+    /// remote session" so `Session::tag` can mark closed sessions
+    next_session: Cell<u32>,
+}
+
+impl BridgeBackend {
+    /// Connect to a device daemon at `addr` ("host:port") and perform
+    /// the `Info` handshake. Connection refusal and version mismatch
+    /// are structured errors, not panics — they are the two failures an
+    /// operator hits first.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).map_err(|e| {
+            anyhow!(
+                "device unreachable at {addr}: {e} \
+                 (start one with `edgellm device-serve --addr {addr}`)"
+            )
+        })?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        let mut conn = Conn { reader, writer, meter: TransferMeter::default() };
+        conn.meter.calls += 1;
+        conn.send(&Frame::Info { version: PROTOCOL_VERSION })?;
+        conn.flush()?;
+        let (version, info, buckets, supports_batched_decode, ffn_weight_bytes) =
+            match conn.recv()? {
+                Frame::InfoResp {
+                    version,
+                    info,
+                    buckets,
+                    supports_batched_decode,
+                    ffn_weight_bytes,
+                } => (version, info, buckets, supports_batched_decode, ffn_weight_bytes),
+                other => return Err(unexpected(other, "InfoResp")),
+            };
+        if version != PROTOCOL_VERSION {
+            bail!("device at {addr} speaks protocol v{version}, this client v{PROTOCOL_VERSION}");
+        }
+        Ok(BridgeBackend {
+            addr: addr.to_string(),
+            info,
+            buckets,
+            supports_batched: supports_batched_decode,
+            ffn_weight_bytes: (ffn_weight_bytes > 0).then_some(ffn_weight_bytes as usize),
+            conn: RefCell::new(conn),
+            next_session: Cell::new(1),
+        })
+    }
+
+    /// The device address this backend talks to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Snapshot of the transport counters.
+    pub fn meter(&self) -> TransferMeter {
+        self.conn.borrow().meter
+    }
+
+    fn fresh_session_id(&self) -> u32 {
+        let id = self.next_session.get();
+        // skip the reserved 0 on wrap-around
+        self.next_session.set(id.checked_add(1).unwrap_or(1));
+        id
+    }
+}
+
+impl Backend for BridgeBackend {
+    fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+        let id = self.fresh_session_id();
+        let mut conn = self.conn.borrow_mut();
+        conn.meter.calls += 1;
+        // pipeline OpenSession + Prefill in one flush (one round trip);
+        // BOTH replies are drained before either is inspected, so an
+        // error on the first never leaves the second unread in the pipe
+        conn.send(&Frame::OpenSession { session: id })?;
+        conn.send(&Frame::Prefill { session: id, prompt: prompt.to_vec() })?;
+        conn.flush()?;
+        let opened = conn.recv()?;
+        let logits_frame = conn.recv()?;
+        let session = match opened {
+            Frame::SessionOpened { session } => session,
+            other => return Err(unexpected(other, "SessionOpened")),
+        };
+        let (s2, pos, logits) = match logits_frame {
+            Frame::Logits { session, pos, logits } => (session, pos, logits),
+            other => {
+                // the slot WAS opened but never prefilled — release it,
+                // or every failed prefill would consume one of the
+                // connection's session-table slots for good
+                let _ = conn.send(&Frame::CloseSession { session: id });
+                let _ = conn.flush();
+                let _ = conn.recv(); // drain the Closed/Error reply
+                return Err(unexpected(other, "Logits"));
+            }
+        };
+        if session != id || s2 != id {
+            bail!("bridge protocol error: session id mismatch in prefill replies");
+        }
+        if logits.len() != self.info.vocab {
+            bail!(
+                "bridge protocol error: logits row of {} for vocab {}",
+                logits.len(),
+                self.info.vocab
+            );
+        }
+        // the host session carries no KV tensors — the device owns the
+        // cache; only position and the remote id live here
+        let mut sess = Session::new([0, 0, 0, 0]);
+        sess.pos = pos as usize;
+        sess.tag = id as u64;
+        Ok((logits, sess))
+    }
+
+    fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        let id = session.tag as u32;
+        if id == 0 {
+            bail!("bridge: session has no remote id (already closed?)");
+        }
+        let mut conn = self.conn.borrow_mut();
+        conn.meter.calls += 1;
+        conn.send(&Frame::Decode { session: id, token })?;
+        conn.flush()?;
+        let (sid, pos, logits) = match conn.recv()? {
+            Frame::Logits { session, pos, logits } => (session, pos, logits),
+            other => return Err(unexpected(other, "Logits")),
+        };
+        if sid != id {
+            bail!("bridge protocol error: logits for session {sid}, asked for {id}");
+        }
+        session.pos = pos as usize;
+        Ok(logits)
+    }
+
+    fn decode_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let ids: Vec<u32> = sessions.iter().map(|s| s.tag as u32).collect();
+        if ids.iter().any(|&id| id == 0) {
+            bail!("bridge: a batched session has no remote id (already closed?)");
+        }
+        let mut conn = self.conn.borrow_mut();
+        conn.meter.calls += 1;
+        conn.send(&Frame::DecodeBatch { sessions: ids.clone(), tokens: tokens.to_vec() })?;
+        conn.flush()?;
+        let rows = match conn.recv()? {
+            Frame::LogitsBatch { rows } => rows,
+            other => return Err(unexpected(other, "LogitsBatch")),
+        };
+        if rows.len() != sessions.len() {
+            bail!(
+                "bridge protocol error: {} logits rows for a batch of {}",
+                rows.len(),
+                sessions.len()
+            );
+        }
+        let mut out = Vec::with_capacity(rows.len());
+        for ((row, s), &id) in rows.into_iter().zip(sessions.iter_mut()).zip(ids.iter()) {
+            if row.session != id {
+                bail!(
+                    "bridge protocol error: row for session {} in the slot of {}",
+                    row.session,
+                    id
+                );
+            }
+            s.pos = row.pos as usize;
+            out.push(row.logits);
+        }
+        Ok(out)
+    }
+
+    fn supports_batched_decode(&self) -> bool {
+        // the *device's* capability: a shared round there is a shared
+        // round end-to-end, because the whole batch rides one frame
+        self.supports_batched
+    }
+
+    fn ffn_weight_bytes(&self) -> Option<usize> {
+        self.ffn_weight_bytes
+    }
+
+    fn end_session(&self, session: &mut Session) {
+        let id = session.tag as u32;
+        if id == 0 {
+            return; // never opened remotely, or already closed
+        }
+        session.tag = 0;
+        // Deliberately synchronous (one round trip per *session
+        // lifetime*, not per round): waiting for the reply keeps the
+        // device's session gauge deterministic — retirement returns ⇒
+        // the slot is free. Pipelining the close into the next round's
+        // flush is the ROADMAP follow-on, paid for with deferred-reply
+        // bookkeeping.
+        // Best effort: the daemon also reclaims sessions on disconnect,
+        // so a failure here must not fail scheduler retirement.
+        let Ok(mut conn) = self.conn.try_borrow_mut() else {
+            return;
+        };
+        conn.meter.calls += 1;
+        let mut close = || -> Result<Frame> {
+            conn.send(&Frame::CloseSession { session: id })?;
+            conn.flush()?;
+            conn.recv()
+        };
+        match close() {
+            // Closed, or a structured error (e.g. daemon restarted):
+            // either way the device holds no state for `id` any more
+            Ok(Frame::Closed { .. }) | Ok(Frame::Error { .. }) => {}
+            Ok(other) => {
+                eprintln!("bridge: closing session {id}: unexpected {} reply", other.name())
+            }
+            Err(e) => eprintln!("bridge: closing session {id}: {e:#}"),
+        }
+    }
+
+    fn is_remote(&self) -> bool {
+        true
+    }
+
+    fn transfer_meter(&self) -> Option<TransferMeter> {
+        Some(self.conn.borrow().meter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_refused_is_a_structured_error() {
+        // bind-then-drop yields a local port that refuses connections
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let err = BridgeBackend::connect(&format!("127.0.0.1:{port}")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("device unreachable at 127.0.0.1:"), "{msg}");
+        assert!(msg.contains("device-serve"), "{msg}");
+    }
+
+    #[test]
+    fn session_id_allocation_skips_zero() {
+        // pure arithmetic on the Cell, no connection needed
+        let c = Cell::new(u32::MAX);
+        let id = c.get();
+        c.set(id.checked_add(1).unwrap_or(1));
+        assert_eq!(c.get(), 1, "wrap-around skips the reserved 0");
+    }
+}

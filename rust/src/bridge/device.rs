@@ -1,0 +1,513 @@
+//! The device daemon: any [`Backend`] served over the bridge protocol.
+//!
+//! `edgellm device-serve` (or [`spawn_on`] from tests/examples) puts a
+//! backend behind a TCP listener and speaks the command-stream protocol
+//! of [`super::protocol`]. This is the "FPGA side" of the paper's
+//! deployment: the coordinator machine runs the scheduler, the device
+//! machine runs the datapath — [`SimBackend`] to model the VCU128,
+//! [`ReferenceBackend`] for real compute, and eventually a thin daemon
+//! in front of real accelerator drivers.
+//!
+//! Design points:
+//!
+//! * **Validation is hosted, not duplicated.** The daemon wraps its
+//!   backend in [`LlmRuntime`], so every wire call inherits the same
+//!   prompt/budget/arity validation in-process callers get; a hostile
+//!   frame can produce an error frame, never a panicked daemon.
+//! * **Sessions are connection-scoped.** Each connection owns a session
+//!   table (client-chosen `u32` ids, bounded by
+//!   [`DeviceConfig::max_sessions_per_conn`]); when the connection dies
+//!   — cleanly, or mid-frame — every session in it is reclaimed. A
+//!   crashing coordinator can therefore never leak device memory.
+//! * **Structured failure.** Malformed payloads get an
+//!   [`ErrCode::Protocol`] error frame and the connection continues
+//!   (the length prefix kept the stream framed); an untrustworthy
+//!   length prefix gets one final error frame and a close; backend
+//!   errors map to [`ErrCode::Backend`] with the session left intact.
+//!
+//! [`Backend`]: crate::runtime::backend::Backend
+//! [`SimBackend`]: crate::runtime::backend::SimBackend
+//! [`ReferenceBackend`]: crate::runtime::backend::ReferenceBackend
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+
+use anyhow::Result;
+
+use super::protocol::{self, ErrCode, Frame, FrameError, LogitsRow, PROTOCOL_VERSION};
+use crate::runtime::backend::Backend;
+use crate::runtime::model::{LlmRuntime, Session};
+
+/// Daemon limits.
+pub struct DeviceConfig {
+    /// Max sessions one connection may hold open; `OpenSession` beyond
+    /// it is answered with `ErrCode::Busy`. One coordinator connection
+    /// needs `max_active` + in-flight-admission sessions, so the
+    /// default is far above any sane scheduler pool.
+    pub max_sessions_per_conn: usize,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig { max_sessions_per_conn: 256 }
+    }
+}
+
+/// State shared between the acceptor and connection threads.
+struct DeviceShared {
+    runtime: Mutex<LlmRuntime>,
+    cfg: DeviceConfig,
+    shutdown: AtomicBool,
+    /// open sessions across all live connections (observability + the
+    /// no-leak test hook)
+    open_sessions: AtomicUsize,
+}
+
+/// Running daemon: address, session gauge, and the acceptor to reap.
+pub struct DeviceHandle {
+    addr: SocketAddr,
+    shared: Arc<DeviceShared>,
+    acceptor: JoinHandle<()>,
+}
+
+impl DeviceHandle {
+    /// The bound address (useful with an ephemeral port 0 listener).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Device-side sessions currently open across all connections.
+    pub fn active_sessions(&self) -> usize {
+        self.shared.open_sessions.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting connections and join the acceptor thread. Live
+    /// connection threads exit when their client hangs up (their
+    /// sessions are reclaimed then) — the coordinator side shuts down
+    /// first in an orderly teardown.
+    pub fn shutdown(self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if crate::util::poke_acceptor(self.addr) {
+            let _ = self.acceptor.join();
+        } else {
+            eprintln!(
+                "device shutdown: could not poke {}, leaving acceptor parked",
+                self.addr
+            );
+        }
+    }
+}
+
+/// Host `backend` on `addr`, blocking the calling thread — the
+/// `edgellm device-serve` entry point.
+pub fn serve(backend: Box<dyn Backend>, addr: &str, cfg: DeviceConfig) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let handle = spawn_on(backend, listener, cfg)?;
+    let _ = handle.acceptor.join();
+    Ok(())
+}
+
+/// Host `backend` on an already-bound listener in the background and
+/// return the daemon's [`DeviceHandle`].
+pub fn spawn_on(
+    backend: Box<dyn Backend>,
+    listener: TcpListener,
+    cfg: DeviceConfig,
+) -> Result<DeviceHandle> {
+    let addr = listener.local_addr()?;
+    let name = backend.info().name.clone();
+    eprintln!(
+        "edgellm device daemon on {addr} (bridge protocol v{PROTOCOL_VERSION}, backend {name})"
+    );
+    let shared = Arc::new(DeviceShared {
+        runtime: Mutex::new(LlmRuntime::from_backend(backend)),
+        cfg,
+        shutdown: AtomicBool::new(false),
+        open_sessions: AtomicUsize::new(0),
+    });
+    let acceptor = {
+        let shared = Arc::clone(&shared);
+        thread::spawn(move || accept_loop(&shared, listener))
+    };
+    Ok(DeviceHandle { addr, shared, acceptor })
+}
+
+fn accept_loop(shared: &Arc<DeviceShared>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match stream {
+            Ok(stream) => {
+                let shared = Arc::clone(shared);
+                thread::spawn(move || handle_conn(&shared, stream));
+            }
+            Err(e) => eprintln!("device accept error: {e}"),
+        }
+    }
+}
+
+/// One connection: run the frame loop, then reclaim whatever sessions
+/// it still holds — on *every* exit path, including transport errors.
+fn handle_conn(shared: &DeviceShared, stream: TcpStream) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    let mut sessions: HashMap<u32, Option<Session>> = HashMap::new();
+    let result = conn_loop(shared, stream, &mut sessions);
+    shared.open_sessions.fetch_sub(sessions.len(), Ordering::Relaxed);
+    if let Err(e) = result {
+        eprintln!("device client {peer}: {e:#}");
+    }
+}
+
+fn conn_loop(
+    shared: &DeviceShared,
+    stream: TcpStream,
+    sessions: &mut HashMap<u32, Option<Session>>,
+) -> Result<()> {
+    // per-call round trips live on the latency of small frames
+    stream.set_nodelay(true)?;
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream);
+    loop {
+        match protocol::read_frame(&mut reader) {
+            Ok(None) => return Ok(()), // clean hangup
+            Ok(Some((frame, _bytes))) => {
+                let reply = respond(shared, sessions, frame);
+                match protocol::write_frame(&mut writer, &reply) {
+                    Ok(_) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                        // reply exceeded the frame cap (huge-vocab backend
+                        // at a large batch): nothing hit the wire, so the
+                        // stream is intact — answer structurally instead
+                        let reply = Frame::Error {
+                            code: ErrCode::Protocol,
+                            message: format!("reply unsendable: {e}"),
+                        };
+                        protocol::write_frame(&mut writer, &reply)?;
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+                writer.flush()?;
+            }
+            Err(FrameError::Malformed(m)) => {
+                // length prefix was honored: the stream is still framed,
+                // answer and keep serving this connection
+                let reply = Frame::Error { code: ErrCode::Protocol, message: m };
+                protocol::write_frame(&mut writer, &reply)?;
+                writer.flush()?;
+            }
+            Err(FrameError::Desync(m)) => {
+                // framing is gone; one best-effort error frame, then close
+                let reply = Frame::Error { code: ErrCode::Protocol, message: m };
+                let _ = protocol::write_frame(&mut writer, &reply);
+                let _ = writer.flush();
+                return Ok(());
+            }
+            Err(FrameError::Io(e)) => {
+                // client died mid-frame — routine, not an error to log
+                return if e.kind() == std::io::ErrorKind::UnexpectedEof
+                    || e.kind() == std::io::ErrorKind::ConnectionReset
+                {
+                    Ok(())
+                } else {
+                    Err(e.into())
+                };
+            }
+        }
+    }
+}
+
+fn err(code: ErrCode, message: String) -> Frame {
+    Frame::Error { code, message }
+}
+
+/// Map one request frame to its response frame. Pure with respect to
+/// the transport — every outcome, including failure, is a frame.
+fn respond(
+    shared: &DeviceShared,
+    sessions: &mut HashMap<u32, Option<Session>>,
+    frame: Frame,
+) -> Frame {
+    match frame {
+        Frame::Info { version } => {
+            if version != PROTOCOL_VERSION {
+                return err(
+                    ErrCode::Version,
+                    format!("client speaks protocol v{version}, device v{PROTOCOL_VERSION}"),
+                );
+            }
+            let rt = shared.runtime.lock().unwrap();
+            Frame::InfoResp {
+                version: PROTOCOL_VERSION,
+                info: rt.info.clone(),
+                buckets: rt.prefill_buckets().to_vec(),
+                supports_batched_decode: rt.supports_batched_decode(),
+                ffn_weight_bytes: rt.ffn_weight_bytes().unwrap_or(0) as u64,
+            }
+        }
+        Frame::OpenSession { session } => {
+            if sessions.contains_key(&session) {
+                return err(ErrCode::Session, format!("session {session} is already open"));
+            }
+            if sessions.len() >= shared.cfg.max_sessions_per_conn {
+                return err(
+                    ErrCode::Busy,
+                    format!(
+                        "session table full ({} open, max {})",
+                        sessions.len(),
+                        shared.cfg.max_sessions_per_conn
+                    ),
+                );
+            }
+            sessions.insert(session, None);
+            shared.open_sessions.fetch_add(1, Ordering::Relaxed);
+            Frame::SessionOpened { session }
+        }
+        Frame::Prefill { session, prompt } => {
+            let Some(slot) = sessions.get_mut(&session) else {
+                return err(ErrCode::Session, format!("session {session} is not open"));
+            };
+            match shared.runtime.lock().unwrap().prefill(&prompt) {
+                Ok((logits, s)) => {
+                    let pos = s.pos as u32;
+                    // re-prefill resets the slot: device-side slot reuse
+                    *slot = Some(s);
+                    Frame::Logits { session, pos, logits }
+                }
+                Err(e) => err(ErrCode::Backend, format!("prefill: {e:#}")),
+            }
+        }
+        Frame::Decode { session, token } => {
+            let Some(Some(s)) = sessions.get_mut(&session) else {
+                return err(
+                    ErrCode::Session,
+                    format!("session {session} is not open or not prefilled"),
+                );
+            };
+            match shared.runtime.lock().unwrap().decode(s, token) {
+                Ok(logits) => Frame::Logits { session, pos: s.pos as u32, logits },
+                Err(e) => err(ErrCode::Backend, format!("decode: {e:#}")),
+            }
+        }
+        Frame::DecodeBatch { sessions: ids, tokens } => {
+            decode_batch(shared, sessions, &ids, &tokens)
+        }
+        Frame::CloseSession { session } => {
+            if sessions.remove(&session).is_some() {
+                shared.open_sessions.fetch_sub(1, Ordering::Relaxed);
+                Frame::Closed { session }
+            } else {
+                err(ErrCode::Session, format!("session {session} is not open"))
+            }
+        }
+        // response-shaped frames have no business arriving here
+        other => err(
+            ErrCode::Protocol,
+            format!("unexpected {} frame on the device side", other.name()),
+        ),
+    }
+}
+
+/// One batched decode round over the connection's session table. The
+/// sessions are temporarily taken out of the table so the runtime can
+/// hold `&mut` to all of them at once; they are put back whatever the
+/// outcome (a backend error must not eat the batch).
+fn decode_batch(
+    shared: &DeviceShared,
+    table: &mut HashMap<u32, Option<Session>>,
+    ids: &[u32],
+    tokens: &[i32],
+) -> Frame {
+    let mut taken: Vec<(u32, Session)> = Vec::with_capacity(ids.len());
+    for &id in ids {
+        match table.get_mut(&id).and_then(|slot| slot.take()) {
+            Some(s) => taken.push((id, s)),
+            None => {
+                for (tid, s) in taken {
+                    *table.get_mut(&tid).expect("slot survived the take") = Some(s);
+                }
+                return err(
+                    ErrCode::Session,
+                    format!("session {id} is not prefilled (or repeated in the batch)"),
+                );
+            }
+        }
+    }
+    let result = {
+        let mut refs: Vec<&mut Session> = taken.iter_mut().map(|(_, s)| s).collect();
+        shared.runtime.lock().unwrap().decode_batch(&mut refs, tokens)
+    };
+    let reply = match result {
+        Ok(logits) => Frame::LogitsBatch {
+            rows: taken
+                .iter()
+                .zip(logits)
+                .map(|(&(id, ref s), l)| LogitsRow { session: id, pos: s.pos as u32, logits: l })
+                .collect(),
+        },
+        Err(e) => err(ErrCode::Backend, format!("decode_batch: {e:#}")),
+    };
+    for (id, s) in taken {
+        *table.get_mut(&id).expect("slot survived the take") = Some(s);
+    }
+    reply
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::ReferenceBackend;
+    use crate::runtime::reference::ReferenceConfig;
+
+    fn spawn_tiny(cfg: DeviceConfig) -> DeviceHandle {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        spawn_on(
+            Box::new(ReferenceBackend::new(ReferenceConfig::default())),
+            listener,
+            cfg,
+        )
+        .unwrap()
+    }
+
+    fn ask(stream: &mut TcpStream, f: &Frame) -> Frame {
+        protocol::write_frame(stream, f).unwrap();
+        protocol::read_frame(stream).unwrap().expect("reply").0
+    }
+
+    #[test]
+    fn info_open_prefill_decode_close_lifecycle() {
+        let dev = spawn_tiny(DeviceConfig::default());
+        let mut c = TcpStream::connect(dev.addr()).unwrap();
+
+        let (info, supports_batched_decode) =
+            match ask(&mut c, &Frame::Info { version: PROTOCOL_VERSION }) {
+                Frame::InfoResp { info, supports_batched_decode, .. } => {
+                    (info, supports_batched_decode)
+                }
+                other => panic!("want InfoResp, got {}", other.name()),
+            };
+        assert_eq!(info.vocab, 256);
+        assert!(supports_batched_decode, "reference backend shares rounds");
+
+        assert!(matches!(
+            ask(&mut c, &Frame::OpenSession { session: 5 }),
+            Frame::SessionOpened { session: 5 }
+        ));
+        assert_eq!(dev.active_sessions(), 1);
+
+        let pre = ask(&mut c, &Frame::Prefill { session: 5, prompt: vec![1, 2, 3] });
+        match &pre {
+            Frame::Logits { session: 5, pos: 3, logits } => assert_eq!(logits.len(), 256),
+            other => panic!("want Logits(pos 3), got {other:?}"),
+        }
+
+        let dec = ask(&mut c, &Frame::Decode { session: 5, token: 9 });
+        assert!(matches!(dec, Frame::Logits { session: 5, pos: 4, .. }), "{dec:?}");
+
+        assert!(matches!(
+            ask(&mut c, &Frame::CloseSession { session: 5 }),
+            Frame::Closed { session: 5 }
+        ));
+        assert_eq!(dev.active_sessions(), 0);
+        dev.shutdown();
+    }
+
+    #[test]
+    fn session_errors_are_structured_and_nonfatal() {
+        let dev = spawn_tiny(DeviceConfig { max_sessions_per_conn: 2 });
+        let mut c = TcpStream::connect(dev.addr()).unwrap();
+
+        // decode before open / before prefill
+        let r = ask(&mut c, &Frame::Decode { session: 1, token: 0 });
+        assert!(matches!(r, Frame::Error { code: ErrCode::Session, .. }), "{r:?}");
+        ask(&mut c, &Frame::OpenSession { session: 1 });
+        let r = ask(&mut c, &Frame::Decode { session: 1, token: 0 });
+        assert!(matches!(r, Frame::Error { code: ErrCode::Session, .. }), "{r:?}");
+
+        // duplicate open
+        let r = ask(&mut c, &Frame::OpenSession { session: 1 });
+        assert!(matches!(r, Frame::Error { code: ErrCode::Session, .. }), "{r:?}");
+
+        // table cap → Busy; closing frees capacity
+        ask(&mut c, &Frame::OpenSession { session: 2 });
+        let r = ask(&mut c, &Frame::OpenSession { session: 3 });
+        assert!(matches!(r, Frame::Error { code: ErrCode::Busy, .. }), "{r:?}");
+        ask(&mut c, &Frame::CloseSession { session: 2 });
+        assert!(matches!(
+            ask(&mut c, &Frame::OpenSession { session: 3 }),
+            Frame::SessionOpened { session: 3 }
+        ));
+
+        // oversized prompt → Backend error, session intact
+        ask(&mut c, &Frame::Prefill { session: 1, prompt: vec![0; 4096] });
+        let r = ask(&mut c, &Frame::Prefill { session: 1, prompt: vec![0; 4096] });
+        assert!(matches!(r, Frame::Error { code: ErrCode::Backend, .. }), "{r:?}");
+        let r = ask(&mut c, &Frame::Prefill { session: 1, prompt: vec![1, 2] });
+        assert!(matches!(r, Frame::Logits { session: 1, pos: 2, .. }), "{r:?}");
+
+        // version mismatch
+        let r = ask(&mut c, &Frame::Info { version: 99 });
+        assert!(matches!(r, Frame::Error { code: ErrCode::Version, .. }), "{r:?}");
+
+        // a response-shaped frame from a confused client
+        let r = ask(&mut c, &Frame::Closed { session: 1 });
+        assert!(matches!(r, Frame::Error { code: ErrCode::Protocol, .. }), "{r:?}");
+
+        dev.shutdown();
+    }
+
+    #[test]
+    fn disconnect_reclaims_sessions() {
+        let dev = spawn_tiny(DeviceConfig::default());
+        {
+            let mut c = TcpStream::connect(dev.addr()).unwrap();
+            ask(&mut c, &Frame::OpenSession { session: 1 });
+            ask(&mut c, &Frame::OpenSession { session: 2 });
+            ask(&mut c, &Frame::Prefill { session: 1, prompt: vec![1] });
+            assert_eq!(dev.active_sessions(), 2);
+        } // dropped without CloseSession
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while dev.active_sessions() != 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "disconnect leaked {} sessions",
+                dev.active_sessions()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        dev.shutdown();
+    }
+
+    #[test]
+    fn batched_round_keeps_sessions_on_error() {
+        let dev = spawn_tiny(DeviceConfig::default());
+        let mut c = TcpStream::connect(dev.addr()).unwrap();
+        for id in [1u32, 2] {
+            ask(&mut c, &Frame::OpenSession { session: id });
+            ask(&mut c, &Frame::Prefill { session: id, prompt: vec![id as i32 + 1] });
+        }
+        // a batch naming an unknown session fails whole, harming nobody
+        let r = ask(&mut c, &Frame::DecodeBatch { sessions: vec![1, 9], tokens: vec![4, 5] });
+        assert!(matches!(r, Frame::Error { code: ErrCode::Session, .. }), "{r:?}");
+        // a duplicated session id fails the same way
+        let r = ask(&mut c, &Frame::DecodeBatch { sessions: vec![1, 1], tokens: vec![4, 5] });
+        assert!(matches!(r, Frame::Error { code: ErrCode::Session, .. }), "{r:?}");
+        // both sessions still decode afterwards
+        let good = Frame::DecodeBatch { sessions: vec![1, 2], tokens: vec![4, 5] };
+        let rows = match ask(&mut c, &good) {
+            Frame::LogitsBatch { rows } => rows,
+            other => panic!("want LogitsBatch, got {}", other.name()),
+        };
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].session, rows[0].pos), (1, 2));
+        assert_eq!((rows[1].session, rows[1].pos), (2, 2));
+        dev.shutdown();
+    }
+}

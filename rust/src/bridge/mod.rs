@@ -1,0 +1,36 @@
+//! The CPU↔device bridge: a wire between the coordinator and any
+//! [`Backend`](crate::runtime::backend::Backend).
+//!
+//! EdgeLLM is a *heterogeneous* system: the CPU-side coordinator streams
+//! a unified command/data layout to the accelerator and reads results
+//! back. Everything above the [`Backend`] trait — scheduler, streaming
+//! protocol, cancellation — is already transport-agnostic; this module
+//! supplies the transport, so "the FPGA is on the other end of a wire"
+//! stops being a simulation detail and becomes a deployment shape:
+//!
+//! * [`protocol`] — the length-prefixed binary command-stream protocol.
+//!   Frames carry the same flat rows the paper's universal data-parallel
+//!   layout mandates (token ids one `i32` each, logits one `f32` per
+//!   vocab entry, little-endian), so no reshaping happens at either end.
+//! * [`device`] — the device daemon: a TCP listener hosting any
+//!   `Box<dyn Backend>` (`SimBackend` to model the VCU128,
+//!   `ReferenceBackend` for real compute) behind per-connection session
+//!   tables, with structured error frames and clean shutdown.
+//! * [`client`] — [`client::BridgeBackend`]: `Backend` implemented over
+//!   the transport, with a [`TransferMeter`] counting host→device /
+//!   device→host bytes per call so benches report transport-bandwidth
+//!   utilization next to tokens/s, the way the paper reports HBM
+//!   utilization.
+//!
+//! Because both ends speak through `Backend`, the serving stack composes
+//! freely: `edgellm device-serve` hosts the device side, `edgellm serve
+//! --backend bridge --device host:port` runs the full continuous-batching
+//! scheduler against it, and completions are bit-identical to running the
+//! same backend in-process (`rust/tests/bridge.rs`).
+//!
+//! [`Backend`]: crate::runtime::backend::Backend
+//! [`TransferMeter`]: crate::runtime::backend::TransferMeter
+
+pub mod client;
+pub mod device;
+pub mod protocol;

@@ -1,0 +1,782 @@
+//! The bridge wire format: a length-prefixed binary command stream.
+//!
+//! Every frame is `[u32 len][u8 opcode][payload]`, all integers and
+//! floats little-endian; `len` counts the opcode byte plus the payload.
+//! Payloads are the flat 1×row layout the rest of the system already
+//! uses — prompts as `i32` token rows, logits as `f32` vocab rows — so
+//! neither end reshapes anything: bytes received from the wire are the
+//! bytes handed to the kernels (the paper's unified data-parallel
+//! layout, applied to the transport).
+//!
+//! Request frames (host → device): [`Frame::Info`],
+//! [`Frame::OpenSession`], [`Frame::Prefill`], [`Frame::Decode`],
+//! [`Frame::DecodeBatch`], [`Frame::CloseSession`]. Response frames
+//! (device → host): [`Frame::InfoResp`], [`Frame::SessionOpened`],
+//! [`Frame::Logits`], [`Frame::LogitsBatch`], [`Frame::Closed`], and the
+//! structured [`Frame::Error`] (an [`ErrCode`] plus a message). The
+//! device answers every request frame with exactly one response frame,
+//! in order — the client may pipeline requests and read the replies
+//! back-to-back.
+//!
+//! Failure taxonomy ([`FrameError`]):
+//!
+//! * [`FrameError::Malformed`] — the length prefix was honored but the
+//!   payload didn't parse (unknown opcode, truncated fields, trailing
+//!   bytes). The stream is **still framed**: the reader consumed exactly
+//!   `len` bytes, so the daemon replies with an error frame and the
+//!   connection keeps working.
+//! * [`FrameError::Desync`] — the length prefix itself is untrustworthy
+//!   (zero, or beyond [`MAX_FRAME_BYTES`]). Nothing after it can be
+//!   framed; the daemon sends one final error frame and closes.
+//! * [`FrameError::Io`] — the transport died (including EOF in the
+//!   middle of a frame). Connection over; the daemon frees the
+//!   connection's sessions.
+//!
+//! The format is mirrored (golden bytes included) by
+//! `python/tests/validate_bridge_protocol.py`.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+use crate::runtime::model::ModelInfo;
+
+/// Wire protocol version, exchanged in `Info`/`InfoResp`. A device
+/// refuses mismatched clients with `ErrCode::Version` rather than
+/// guessing at frame shapes.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Upper bound on `len` (opcode + payload). Large enough for a
+/// 4096-session batch of 256-vocab logits rows with room to spare;
+/// small enough that a hostile length prefix cannot balloon the
+/// daemon's memory.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+// Opcodes: requests in 0x01.., responses in 0x81.., error at 0xEE.
+const OP_INFO: u8 = 0x01;
+const OP_OPEN_SESSION: u8 = 0x02;
+const OP_PREFILL: u8 = 0x03;
+const OP_DECODE: u8 = 0x04;
+const OP_DECODE_BATCH: u8 = 0x05;
+const OP_CLOSE_SESSION: u8 = 0x06;
+const OP_INFO_RESP: u8 = 0x81;
+const OP_SESSION_OPENED: u8 = 0x82;
+const OP_LOGITS: u8 = 0x83;
+const OP_LOGITS_BATCH: u8 = 0x84;
+const OP_CLOSED: u8 = 0x85;
+const OP_ERROR: u8 = 0xEE;
+
+/// Structured error classes carried by [`Frame::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// malformed, desynced, or out-of-place frame
+    Protocol,
+    /// unknown, duplicate, or not-yet-prefilled session id
+    Session,
+    /// the hosted backend failed the call (KV budget, compute error)
+    Backend,
+    /// the device is at capacity (session table full)
+    Busy,
+    /// protocol version mismatch between client and device
+    Version,
+}
+
+impl ErrCode {
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrCode::Protocol => 1,
+            ErrCode::Session => 2,
+            ErrCode::Backend => 3,
+            ErrCode::Busy => 4,
+            ErrCode::Version => 5,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<ErrCode> {
+        Some(match v {
+            1 => ErrCode::Protocol,
+            2 => ErrCode::Session,
+            3 => ErrCode::Backend,
+            4 => ErrCode::Busy,
+            5 => ErrCode::Version,
+            _ => return None,
+        })
+    }
+}
+
+/// One logits row inside a [`Frame::LogitsBatch`]: the session it
+/// belongs to, its position *after* the decode step, and the vocab row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogitsRow {
+    pub session: u32,
+    pub pos: u32,
+    pub logits: Vec<f32>,
+}
+
+/// Every frame of the bridge protocol, requests and responses alike
+/// (both ends share one parser; a daemon receiving a response-shaped
+/// frame answers `ErrCode::Protocol`).
+#[derive(Debug, Clone)]
+pub enum Frame {
+    /// handshake: the client announces its protocol version
+    Info { version: u8 },
+    /// allocate `session` (a client-chosen id) in the connection's table
+    OpenSession { session: u32 },
+    /// run prefill over `prompt` into an open session
+    Prefill { session: u32, prompt: Vec<i32> },
+    /// one decode step: feed `token` to a prefilled session
+    Decode { session: u32, token: i32 },
+    /// one batched decode round: feed `tokens[i]` to `sessions[i]`
+    DecodeBatch { sessions: Vec<u32>, tokens: Vec<i32> },
+    /// release a session's device-side state
+    CloseSession { session: u32 },
+
+    /// handshake reply: model architecture + serving capabilities
+    InfoResp {
+        version: u8,
+        info: ModelInfo,
+        buckets: Vec<usize>,
+        supports_batched_decode: bool,
+        /// 0 when the backend does not expose the figure
+        ffn_weight_bytes: u64,
+    },
+    /// `OpenSession` acknowledged
+    SessionOpened { session: u32 },
+    /// logits row for one `Prefill`/`Decode`; `pos` is the session
+    /// position after the call
+    Logits { session: u32, pos: u32, logits: Vec<f32> },
+    /// one row per batch lane, in request order
+    LogitsBatch { rows: Vec<LogitsRow> },
+    /// `CloseSession` acknowledged
+    Closed { session: u32 },
+    /// structured failure reply
+    Error { code: ErrCode, message: String },
+}
+
+impl Frame {
+    /// Short frame-kind name for error messages (never the payload —
+    /// logits rows don't belong in error strings).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Info { .. } => "Info",
+            Frame::OpenSession { .. } => "OpenSession",
+            Frame::Prefill { .. } => "Prefill",
+            Frame::Decode { .. } => "Decode",
+            Frame::DecodeBatch { .. } => "DecodeBatch",
+            Frame::CloseSession { .. } => "CloseSession",
+            Frame::InfoResp { .. } => "InfoResp",
+            Frame::SessionOpened { .. } => "SessionOpened",
+            Frame::Logits { .. } => "Logits",
+            Frame::LogitsBatch { .. } => "LogitsBatch",
+            Frame::Closed { .. } => "Closed",
+            Frame::Error { .. } => "Error",
+        }
+    }
+}
+
+/// Why a frame could not be read. See the module docs for which
+/// variants leave the stream usable.
+#[derive(Debug)]
+pub enum FrameError {
+    /// transport failure, including EOF in the middle of a frame
+    Io(std::io::Error),
+    /// length prefix invalid — stream desynced, connection must close
+    Desync(String),
+    /// payload failed to parse — the stream itself is still framed
+    Malformed(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "transport: {e}"),
+            FrameError::Desync(m) => write!(f, "desynced: {m}"),
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+// ---------------------------------------------------------------- encode
+
+struct Enc {
+    b: Vec<u8>,
+}
+
+impl Enc {
+    fn new(op: u8) -> Enc {
+        Enc { b: vec![op] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.b.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32(&mut self, v: i32) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// u16 byte length + UTF-8 bytes; clipped at a char boundary if the
+    /// string somehow exceeds 64 KiB (error messages, model names).
+    fn str16(&mut self, s: &str) {
+        let mut end = s.len().min(u16::MAX as usize);
+        while !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        self.u16(end as u16);
+        self.b.extend_from_slice(&s.as_bytes()[..end]);
+    }
+
+    fn vec_u32(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    fn vec_i32(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.i32(x);
+        }
+    }
+
+    fn vec_f32(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+}
+
+fn enc_model_info(e: &mut Enc, i: &ModelInfo) {
+    e.str16(&i.name);
+    e.u32(i.vocab as u32);
+    e.u32(i.d_model as u32);
+    e.u32(i.n_layers as u32);
+    e.u32(i.n_heads as u32);
+    e.u32(i.n_kv_heads as u32);
+    e.u32(i.d_ffn as u32);
+    e.u32(i.max_tokens as u32);
+    e.u32(i.head_dim as u32);
+    e.u64(i.n_params as u64);
+    for d in i.cache_shape {
+        e.u32(d as u32);
+    }
+}
+
+/// Serialize one frame to its on-wire payload (opcode + body, no length
+/// prefix).
+fn encode_payload(f: &Frame) -> Vec<u8> {
+    let mut e;
+    match f {
+        Frame::Info { version } => {
+            e = Enc::new(OP_INFO);
+            e.u8(*version);
+        }
+        Frame::OpenSession { session } => {
+            e = Enc::new(OP_OPEN_SESSION);
+            e.u32(*session);
+        }
+        Frame::Prefill { session, prompt } => {
+            e = Enc::new(OP_PREFILL);
+            e.u32(*session);
+            e.vec_i32(prompt);
+        }
+        Frame::Decode { session, token } => {
+            e = Enc::new(OP_DECODE);
+            e.u32(*session);
+            e.i32(*token);
+        }
+        Frame::DecodeBatch { sessions, tokens } => {
+            debug_assert_eq!(sessions.len(), tokens.len());
+            e = Enc::new(OP_DECODE_BATCH);
+            // one shared count keeps the arity equal by construction
+            e.u32(sessions.len() as u32);
+            for &s in sessions {
+                e.u32(s);
+            }
+            for &t in tokens {
+                e.i32(t);
+            }
+        }
+        Frame::CloseSession { session } => {
+            e = Enc::new(OP_CLOSE_SESSION);
+            e.u32(*session);
+        }
+        Frame::InfoResp {
+            version,
+            info,
+            buckets,
+            supports_batched_decode,
+            ffn_weight_bytes,
+        } => {
+            e = Enc::new(OP_INFO_RESP);
+            e.u8(*version);
+            enc_model_info(&mut e, info);
+            let b: Vec<u32> = buckets.iter().map(|&x| x as u32).collect();
+            e.vec_u32(&b);
+            e.u8(u8::from(*supports_batched_decode));
+            e.u64(*ffn_weight_bytes);
+        }
+        Frame::SessionOpened { session } => {
+            e = Enc::new(OP_SESSION_OPENED);
+            e.u32(*session);
+        }
+        Frame::Logits { session, pos, logits } => {
+            e = Enc::new(OP_LOGITS);
+            e.u32(*session);
+            e.u32(*pos);
+            e.vec_f32(logits);
+        }
+        Frame::LogitsBatch { rows } => {
+            e = Enc::new(OP_LOGITS_BATCH);
+            e.u32(rows.len() as u32);
+            for r in rows {
+                e.u32(r.session);
+                e.u32(r.pos);
+                e.vec_f32(&r.logits);
+            }
+        }
+        Frame::Closed { session } => {
+            e = Enc::new(OP_CLOSED);
+            e.u32(*session);
+        }
+        Frame::Error { code, message } => {
+            e = Enc::new(OP_ERROR);
+            e.u8(code.to_u8());
+            e.str16(message);
+        }
+    }
+    e.b
+}
+
+/// Write one frame (length prefix + payload). Returns the total bytes
+/// put on the wire — the figure the client's `TransferMeter` records.
+/// The caller owns flushing.
+///
+/// A frame exceeding [`MAX_FRAME_BYTES`] (a huge-vocab hosted backend
+/// at a large batch) fails with `InvalidData` *before* any byte is
+/// written, so the stream is never desynced by an unsendable frame;
+/// the daemon turns that into a structured error reply.
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> std::io::Result<usize> {
+    let payload = encode_payload(f);
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!(
+                "{} frame of {} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})",
+                f.name(),
+                payload.len()
+            ),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    Ok(4 + payload.len())
+}
+
+// ---------------------------------------------------------------- decode
+
+struct Dec<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.at + n > self.b.len() {
+            return Err(format!(
+                "payload truncated: need {n} bytes at offset {}, have {}",
+                self.at,
+                self.b.len() - self.at
+            ));
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn i32(&mut self) -> Result<i32, String> {
+        Ok(self.u32()? as i32)
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Element count for a vector of `elem_bytes`-wide items, rejected
+    /// *before* allocation when the payload cannot possibly hold it.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize, String> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.b.len() - self.at {
+            return Err(format!(
+                "count {n} exceeds payload ({} bytes left)",
+                self.b.len() - self.at
+            ));
+        }
+        Ok(n)
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    fn vec_i32(&mut self) -> Result<Vec<i32>, String> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.i32()).collect()
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    fn str16(&mut self) -> Result<String, String> {
+        let n = self.u16()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| "invalid utf-8 in string".to_string())
+    }
+
+    fn finish(&self) -> Result<(), String> {
+        if self.at != self.b.len() {
+            return Err(format!("{} trailing bytes after the payload", self.b.len() - self.at));
+        }
+        Ok(())
+    }
+}
+
+fn dec_model_info(d: &mut Dec) -> Result<ModelInfo, String> {
+    Ok(ModelInfo {
+        name: d.str16()?,
+        vocab: d.u32()? as usize,
+        d_model: d.u32()? as usize,
+        n_layers: d.u32()? as usize,
+        n_heads: d.u32()? as usize,
+        n_kv_heads: d.u32()? as usize,
+        d_ffn: d.u32()? as usize,
+        max_tokens: d.u32()? as usize,
+        head_dim: d.u32()? as usize,
+        n_params: d.u64()? as usize,
+        cache_shape: [
+            d.u32()? as usize,
+            d.u32()? as usize,
+            d.u32()? as usize,
+            d.u32()? as usize,
+        ],
+    })
+}
+
+/// Parse one payload (opcode + body) into a frame.
+fn decode_payload(payload: &[u8]) -> Result<Frame, String> {
+    let mut d = Dec { b: payload, at: 0 };
+    let op = d.u8()?;
+    let frame = match op {
+        OP_INFO => Frame::Info { version: d.u8()? },
+        OP_OPEN_SESSION => Frame::OpenSession { session: d.u32()? },
+        OP_PREFILL => Frame::Prefill {
+            session: d.u32()?,
+            prompt: d.vec_i32()?,
+        },
+        OP_DECODE => Frame::Decode {
+            session: d.u32()?,
+            token: d.i32()?,
+        },
+        OP_DECODE_BATCH => {
+            let n = d.count(8)?;
+            let sessions = (0..n).map(|_| d.u32()).collect::<Result<Vec<_>, _>>()?;
+            let tokens = (0..n).map(|_| d.i32()).collect::<Result<Vec<_>, _>>()?;
+            Frame::DecodeBatch { sessions, tokens }
+        }
+        OP_CLOSE_SESSION => Frame::CloseSession { session: d.u32()? },
+        OP_INFO_RESP => Frame::InfoResp {
+            version: d.u8()?,
+            info: dec_model_info(&mut d)?,
+            buckets: d.vec_u32()?.into_iter().map(|x| x as usize).collect(),
+            supports_batched_decode: d.u8()? != 0,
+            ffn_weight_bytes: d.u64()?,
+        },
+        OP_SESSION_OPENED => Frame::SessionOpened { session: d.u32()? },
+        OP_LOGITS => Frame::Logits {
+            session: d.u32()?,
+            pos: d.u32()?,
+            logits: d.vec_f32()?,
+        },
+        OP_LOGITS_BATCH => {
+            let n = d.count(12)?;
+            let mut rows = Vec::with_capacity(n);
+            for _ in 0..n {
+                rows.push(LogitsRow {
+                    session: d.u32()?,
+                    pos: d.u32()?,
+                    logits: d.vec_f32()?,
+                });
+            }
+            Frame::LogitsBatch { rows }
+        }
+        OP_CLOSED => Frame::Closed { session: d.u32()? },
+        OP_ERROR => {
+            let code = ErrCode::from_u8(d.u8()?).ok_or("unknown error code")?;
+            Frame::Error {
+                code,
+                message: d.str16()?,
+            }
+        }
+        other => return Err(format!("unknown opcode 0x{other:02x}")),
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+/// Read one frame. `Ok(None)` is a clean disconnect (EOF at a frame
+/// boundary). On success the second tuple element is the total bytes
+/// consumed (length prefix included) — the `TransferMeter` figure.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(Frame, usize)>, FrameError> {
+    // the length prefix is read byte-wise so EOF *between* frames (a
+    // normal hangup) is distinguishable from EOF *inside* one (an error)
+    let mut len4 = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(FrameError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof inside a frame length prefix",
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(FrameError::Desync(format!(
+            "frame length {len} outside 1..={MAX_FRAME_BYTES}"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(FrameError::Io)?;
+    match decode_payload(&payload) {
+        Ok(f) => Ok(Some((f, 4 + len))),
+        Err(m) => Err(FrameError::Malformed(m)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn sample_info() -> ModelInfo {
+        ModelInfo {
+            name: "ref-tiny".to_string(),
+            vocab: 256,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ffn: 128,
+            max_tokens: 64,
+            head_dim: 16,
+            n_params: 123_456,
+            cache_shape: [2, 64, 2, 16],
+        }
+    }
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, f).unwrap();
+        assert_eq!(n, buf.len());
+        let mut cur = Cursor::new(buf);
+        let (out, consumed) = read_frame(&mut cur).unwrap().expect("frame");
+        assert_eq!(consumed, n);
+        out
+    }
+
+    #[test]
+    fn every_frame_roundtrips() {
+        let frames = vec![
+            Frame::Info { version: PROTOCOL_VERSION },
+            Frame::OpenSession { session: 7 },
+            Frame::Prefill {
+                session: 1,
+                prompt: vec![5, -1, 255, 0],
+            },
+            Frame::Decode { session: 9, token: -3 },
+            Frame::DecodeBatch {
+                sessions: vec![1, 2, 3],
+                tokens: vec![10, 20, 30],
+            },
+            Frame::CloseSession { session: 4 },
+            Frame::InfoResp {
+                version: PROTOCOL_VERSION,
+                info: sample_info(),
+                buckets: vec![8, 16, 32, 64],
+                supports_batched_decode: true,
+                ffn_weight_bytes: 1 << 20,
+            },
+            Frame::SessionOpened { session: 2 },
+            Frame::Logits {
+                session: 3,
+                pos: 17,
+                logits: vec![0.5, -1.25, f32::MIN_POSITIVE, 3.75e8],
+            },
+            Frame::LogitsBatch {
+                rows: vec![
+                    LogitsRow { session: 1, pos: 4, logits: vec![1.0, 2.0] },
+                    LogitsRow { session: 2, pos: 9, logits: vec![-0.5] },
+                ],
+            },
+            Frame::Closed { session: 11 },
+            Frame::Error {
+                code: ErrCode::Session,
+                message: "session 7 is not open".to_string(),
+            },
+        ];
+        for f in &frames {
+            let out = roundtrip(f);
+            // Frame holds ModelInfo (no PartialEq); Debug output is a
+            // faithful field-by-field rendering for all these payloads
+            assert_eq!(format!("{out:?}"), format!("{f:?}"));
+        }
+    }
+
+    #[test]
+    fn float_bits_survive_the_wire() {
+        let weird = vec![f32::NAN, f32::INFINITY, -0.0, 1.0000001];
+        let out = roundtrip(&Frame::Logits { session: 0, pos: 1, logits: weird.clone() });
+        let Frame::Logits { logits, .. } = out else { panic!("wrong frame") };
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&logits), bits(&weird));
+    }
+
+    /// Golden bytes, mirrored by python/tests/validate_bridge_protocol.py
+    /// — the wire format is a contract, not an implementation detail.
+    #[test]
+    fn golden_bytes() {
+        let enc = |f: &Frame| {
+            let mut b = Vec::new();
+            write_frame(&mut b, f).unwrap();
+            b
+        };
+        assert_eq!(enc(&Frame::Info { version: 1 }), [2, 0, 0, 0, 0x01, 1]);
+        assert_eq!(
+            enc(&Frame::OpenSession { session: 3 }),
+            [5, 0, 0, 0, 0x02, 3, 0, 0, 0]
+        );
+        assert_eq!(
+            enc(&Frame::Decode { session: 7, token: 42 }),
+            [9, 0, 0, 0, 0x04, 7, 0, 0, 0, 42, 0, 0, 0]
+        );
+        assert_eq!(
+            enc(&Frame::Prefill { session: 1, prompt: vec![5, -1] }),
+            [
+                17, 0, 0, 0, // len
+                0x03, // opcode
+                1, 0, 0, 0, // session
+                2, 0, 0, 0, // count
+                5, 0, 0, 0, // token 5
+                0xFF, 0xFF, 0xFF, 0xFF, // token -1
+            ]
+        );
+        assert_eq!(
+            enc(&Frame::Error { code: ErrCode::Session, message: "x".into() }),
+            [5, 0, 0, 0, 0xEE, 2, 1, 0, 0x78]
+        );
+    }
+
+    #[test]
+    fn bad_length_prefixes_are_desync() {
+        let mut cur = Cursor::new(vec![0u8, 0, 0, 0]);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Desync(_))));
+        let mut cur = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Desync(_))));
+    }
+
+    #[test]
+    fn eof_inside_a_frame_is_io_clean_eof_is_none() {
+        let mut empty = Cursor::new(Vec::<u8>::new());
+        assert!(matches!(read_frame(&mut empty), Ok(None)));
+        // length says 10, only 3 payload bytes present
+        let mut cut = Cursor::new(vec![10u8, 0, 0, 0, 0x04, 1, 2]);
+        assert!(matches!(read_frame(&mut cut), Err(FrameError::Io(_))));
+        // eof splitting the length prefix itself
+        let mut half = Cursor::new(vec![9u8, 0]);
+        assert!(matches!(read_frame(&mut half), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn malformed_payload_keeps_the_stream_framed() {
+        let mut bytes = vec![1u8, 0, 0, 0, 0x7F]; // unknown opcode, valid framing
+        write_frame(&mut bytes, &Frame::Info { version: 1 }).unwrap();
+        let mut cur = Cursor::new(bytes);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Malformed(_))));
+        // the next frame on the same stream still parses
+        let (f, _) = read_frame(&mut cur).unwrap().expect("frame after malformed");
+        assert!(matches!(f, Frame::Info { version: 1 }));
+    }
+
+    #[test]
+    fn truncated_fields_and_trailing_bytes_are_malformed() {
+        // Decode payload missing its token field
+        let mut cur = Cursor::new(vec![5u8, 0, 0, 0, 0x04, 7, 0, 0, 0]);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Malformed(_))));
+        // valid Info plus a stray trailing byte inside the frame
+        let mut cur = Cursor::new(vec![3u8, 0, 0, 0, 0x01, 1, 9]);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Malformed(_))));
+        // vector count pointing past the payload must fail before allocating
+        let mut bogus = vec![9u8, 0, 0, 0, 0x03, 1, 0, 0, 0];
+        bogus.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut cur = Cursor::new(bogus);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Malformed(_))));
+    }
+
+    #[test]
+    fn long_strings_are_clipped_at_char_boundaries() {
+        let long = "é".repeat(40_000); // 80 000 bytes of 2-byte chars
+        let out = roundtrip(&Frame::Error { code: ErrCode::Protocol, message: long });
+        let Frame::Error { message, .. } = out else { panic!("wrong frame") };
+        assert!(message.len() <= u16::MAX as usize);
+        assert!(!message.is_empty());
+    }
+}

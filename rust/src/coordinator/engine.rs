@@ -157,6 +157,13 @@ pub struct EngineConfig {
     pub seed: u64,
     /// continuous batching: max sessions decoded per round
     pub max_active: usize,
+    /// admission control: max requests waiting in the queue. `submit`
+    /// beyond this bound refuses the request immediately — its handle
+    /// receives a terminal "server busy" `Event::Error`, which both
+    /// protocol paths surface as a structured error (v1 `{"error": ...}`,
+    /// v2 `{"id": .., "error": .., "done": true}`). `0` refuses all new
+    /// work (drain mode).
+    pub max_queued: usize,
     /// max admissions (prefills) per round, bounding head-of-line
     /// blocking of in-flight decodes behind long prefills
     pub prefills_per_round: usize,
@@ -172,6 +179,7 @@ impl Default for EngineConfig {
             sim_strategy: DENSE,
             seed: 0,
             max_active: 8,
+            max_queued: 1024,
             prefills_per_round: 2,
             eos_token: None,
         }
@@ -185,6 +193,9 @@ pub struct EngineMetrics {
     pub completed: u64,
     /// requests dropped by cancellation (queued or live)
     pub cancelled: u64,
+    /// requests refused at `submit` because the queue was full
+    /// (not counted in `submitted`)
+    pub rejected: u64,
     /// batched decode rounds executed
     pub rounds: u64,
     /// decode tokens emitted across all sessions
@@ -262,6 +273,7 @@ pub struct Engine {
     runtime: LlmRuntime,
     sim: Simulator,
     cfg_max_active: usize,
+    cfg_max_queued: usize,
     cfg_prefills_per_round: usize,
     eos_token: Option<i32>,
     queue: VecDeque<QueuedRequest>,
@@ -285,6 +297,7 @@ impl Engine {
             runtime,
             sim,
             cfg_max_active: cfg.max_active.max(1),
+            cfg_max_queued: cfg.max_queued,
             cfg_prefills_per_round: cfg.prefills_per_round.max(1),
             eos_token: cfg.eos_token,
             queue: VecDeque::new(),
@@ -314,9 +327,22 @@ impl Engine {
     ) -> RequestHandle {
         let id = self.next_id;
         self.next_id += 1;
-        self.metrics.submitted += 1;
         let (tx, rx) = mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
+        // bounded admission: refuse rather than queue without bound.
+        // The refusal is the request's terminal event, so every
+        // consumption shape (wait, streaming, try_recv) sees a
+        // structured "server busy" instead of a silent hang.
+        if self.queue.len() >= self.cfg_max_queued {
+            self.metrics.rejected += 1;
+            let _ = tx.send(Event::Error(format!(
+                "server busy: queue full ({} queued, max_queued={})",
+                self.queue.len(),
+                self.cfg_max_queued
+            )));
+            return RequestHandle { id, cancel, events: rx };
+        }
+        self.metrics.submitted += 1;
         self.queue.push_back(QueuedRequest {
             req: Request {
                 id,
@@ -372,7 +398,8 @@ impl Engine {
         for q in self.queue.drain(..) {
             let _ = q.events.send(Event::Error(msg.to_string()));
         }
-        for a in self.active.drain(..) {
+        for mut a in self.active.drain(..) {
+            self.runtime.end_session(&mut a.session);
             let _ = a.events.send(Event::Error(msg.to_string()));
         }
     }
@@ -400,6 +427,7 @@ impl Engine {
             if self.active[i].cancel.load(Ordering::Relaxed) {
                 let mut a = self.active.remove(i);
                 self.metrics.cancelled += 1;
+                self.runtime.end_session(&mut a.session);
                 a.send(Event::Error("cancelled".to_string()));
             } else {
                 i += 1;
@@ -486,6 +514,9 @@ impl Engine {
                     || Some(a.next_token) == self.eos_token
                     || !budget_left;
                 if done {
+                    // release backend-side state (the bridge closes the
+                    // device session) before the completion is built
+                    self.runtime.end_session(&mut a.session);
                     retired.push(Self::finish(a));
                 } else {
                     still_active.push(a);
@@ -551,6 +582,8 @@ impl Engine {
             cancel,
         };
         if max_new == 0 || Some(next_token) == self.eos_token {
+            let mut a = a;
+            self.runtime.end_session(&mut a.session);
             return Ok(Admitted::Done(Self::finish(a)));
         }
         Ok(Admitted::Active(Box::new(a)))

@@ -45,7 +45,7 @@
 //! process exit to reap threads.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
@@ -202,18 +202,27 @@ fn cancel_json(id: u64, found: bool) -> Json {
 
 fn stats_json(engine: &Engine) -> Json {
     let m = engine.metrics();
-    Json::obj(vec![
+    let mut pairs = vec![
         ("queue_depth", Json::Num(engine.pending() as f64)),
         ("active_sessions", Json::Num(engine.active_sessions() as f64)),
         ("submitted", Json::Num(m.submitted as f64)),
         ("completed", Json::Num(m.completed as f64)),
         ("cancelled", Json::Num(m.cancelled as f64)),
+        ("rejected", Json::Num(m.rejected as f64)),
         ("rounds", Json::Num(m.rounds as f64)),
         ("decode_tokens", Json::Num(m.decode_tokens as f64)),
         ("peak_active", Json::Num(m.peak_active as f64)),
         ("tokens_per_s", Json::Num(m.tokens_per_s())),
         ("sim_tokens_per_s", Json::Num(m.sim_tokens_per_s())),
-    ])
+    ];
+    // transport counters when the backend sits across a device bridge:
+    // the serving-level view of bytes/token next to tokens/s
+    if let Some(t) = engine.runtime().transfer_meter() {
+        pairs.push(("device_tx_bytes", Json::Num(t.tx_bytes as f64)));
+        pairs.push(("device_rx_bytes", Json::Num(t.rx_bytes as f64)));
+        pairs.push(("device_calls", Json::Num(t.calls as f64)));
+    }
+    Json::obj(pairs)
 }
 
 /// Synchronous protocol entry point: parse one request line, run it on a
@@ -239,11 +248,17 @@ pub fn process_line(engine: &mut Engine, line: &str) -> Json {
             sampling,
             stream: _,
         }) => {
-            engine.submit(&prompt, max_new_tokens, sampling);
-            match engine.step() {
-                Ok(Some(c)) => completion_json(&c),
-                Ok(None) => error_json("queue empty after submit"),
-                Err(e) => error_json(format!("{e:#}")),
+            // consume through the handle, not step()'s return value: a
+            // bounded-queue refusal never enqueues, so its structured
+            // "server busy" error exists only as the handle's terminal
+            // event
+            let handle = engine.submit(&prompt, max_new_tokens, sampling);
+            if let Err(e) = engine.run_all() {
+                return error_json(format!("{e:#}"));
+            }
+            match handle.wait() {
+                Ok(c) => completion_json(&c),
+                Err(msg) => error_json(msg),
             }
         }
     }
@@ -290,24 +305,20 @@ impl ServerHandle {
             self.shared.shutdown.store(true, Ordering::SeqCst);
             self.shared.work.notify_all();
         }
-        // unblock the accept loop with a throwaway connection; a
-        // 0.0.0.0/:: bind is not connectable on every platform, so aim
-        // at loopback on the same port
-        let mut target = self.addr;
-        if target.ip().is_unspecified() {
-            target.set_ip(match target.ip() {
-                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
-                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
-            });
-        }
-        let unblocked = TcpStream::connect(target).is_ok();
+        // unblock the accept loop with a throwaway connection
+        // (util::poke_acceptor rewrites an unspecified bind address to
+        // loopback, which is what is actually connectable)
+        let unblocked = crate::util::poke_acceptor(self.addr);
         let _ = self.scheduler.join();
         if unblocked {
             let _ = self.acceptor.join();
         } else {
             // the acceptor may still be parked in accept(); leak it
             // rather than hang the caller — it holds no engine state
-            eprintln!("server shutdown: could not poke {target}, leaving acceptor parked");
+            eprintln!(
+                "server shutdown: could not poke {}, leaving acceptor parked",
+                self.addr
+            );
         }
     }
 }

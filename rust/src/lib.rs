@@ -1,5 +1,6 @@
 //! EdgeLLM reproduction: rust coordinator + simulator over AOT JAX/Pallas compute.
 pub mod baselines;
+pub mod bridge;
 pub mod compiler;
 pub mod coordinator;
 pub mod fp;

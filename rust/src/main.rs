@@ -1,29 +1,39 @@
 //! edgellm — CLI for the EdgeLLM reproduction.
 //!
 //! Subcommands:
-//!   serve     --addr HOST:PORT [--backend auto|ref|sim|artifacts]
-//!             [--artifacts DIR --model NAME] [--max-active N]
-//!   generate  --prompt TEXT [--max-new N] [--temperature T] [--stream]
-//!             [--backend auto|ref|sim|artifacts] [--artifacts DIR --model NAME]
-//!   simulate  --arch glm|qwen|tiny --strategy dense|s1|s2|s3 --mem hbm|ddr
-//!             [--ctx N] [--prefill N] [--batch B]
-//!   info      [--backend auto|ref|sim|artifacts] [--artifacts DIR --model NAME]
+//!   serve        --addr HOST:PORT [--backend auto|ref|sim|bridge|artifacts]
+//!                [--device HOST:PORT] [--artifacts DIR --model NAME]
+//!                [--max-active N] [--max-queued N]
+//!   device-serve --addr HOST:PORT [--backend ref|sim] [--max-sessions N]
+//!                (host a backend behind the bridge command-stream protocol)
+//!   generate     --prompt TEXT [--max-new N] [--temperature T] [--stream]
+//!                [--backend auto|ref|sim|bridge|artifacts] [--device HOST:PORT]
+//!   simulate     --arch glm|qwen|tiny --strategy dense|s1|s2|s3 --mem hbm|ddr
+//!                [--ctx N] [--prefill N] [--batch B]
+//!   info         [--backend auto|ref|sim|bridge|artifacts] [--device HOST:PORT]
 
+use edgellm::bridge::client::BridgeBackend;
+use edgellm::bridge::device::{self, DeviceConfig};
 use edgellm::coordinator::engine::{Engine, EngineConfig, Event};
 use edgellm::coordinator::sampler::Sampling;
 use edgellm::coordinator::server;
 use edgellm::models::{self, LlmArch, SparseStrategy};
+use edgellm::runtime::backend::{Backend, ReferenceBackend, SimBackend};
 use edgellm::runtime::model::LlmRuntime;
 use edgellm::runtime::reference::ReferenceConfig;
 use edgellm::sim::engine::Simulator;
 use edgellm::sim::Memory;
 use edgellm::util::Args;
 
+/// Default port for the device daemon (the serving port + 1).
+const DEFAULT_DEVICE_ADDR: &str = "127.0.0.1:7078";
+
 fn main() {
     let args = Args::parse();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "serve" => cmd_serve(&args),
+        "device-serve" => cmd_device_serve(&args),
         "generate" => cmd_generate(&args),
         "simulate" => cmd_simulate(&args),
         "info" => cmd_info(&args),
@@ -41,15 +51,18 @@ fn main() {
 fn print_help() {
     println!(
         "edgellm — CPU-FPGA heterogeneous LLM accelerator (reproduction)\n\n\
-         USAGE:\n  edgellm serve    --addr 127.0.0.1:7077 --max-active 8\n  \
+         USAGE:\n  edgellm serve    --addr 127.0.0.1:7077 --max-active 8 --max-queued 1024\n  \
+         edgellm device-serve --addr {DEFAULT_DEVICE_ADDR} --backend sim\n  \
          edgellm generate --prompt \"Hello\" --max-new 32\n  \
          edgellm simulate --arch glm --strategy s3 --ctx 128 --batch 8\n  \
          edgellm info\n\n\
          Backends: --backend ref (pure-Rust reference model, default when\n\
          no artifacts are present), --backend sim (VCU128 latency model\n\
          serving deterministic pseudo-tokens; --sim-arch glm|qwen|tiny,\n\
-         --max-tokens N), --backend artifacts (AOT PJRT artifacts from\n\
-         --artifacts/--model; needs the pjrt feature)."
+         --max-tokens N), --backend bridge (a remote device daemon over\n\
+         the command-stream protocol; --device HOST:PORT, start one with\n\
+         `edgellm device-serve`), --backend artifacts (AOT PJRT artifacts\n\
+         from --artifacts/--model; needs the pjrt feature)."
     );
 }
 
@@ -71,6 +84,10 @@ fn load_runtime(args: &Args) -> anyhow::Result<LlmRuntime> {
                 args.get_usize("seed", 0xED6E) as u64,
             )
         }
+        "bridge" => {
+            let dev = args.get_or("device", DEFAULT_DEVICE_ADDR);
+            LlmRuntime::from_backend(Box::new(BridgeBackend::connect(&dev)?))
+        }
         "artifacts" | "pjrt" => LlmRuntime::load(&dir, &model)?,
         _ => LlmRuntime::load_or_reference(&dir, &model, ReferenceConfig::default()),
     };
@@ -79,13 +96,46 @@ fn load_runtime(args: &Args) -> anyhow::Result<LlmRuntime> {
     } else {
         "stepped"
     };
+    let remote = if runtime.is_remote() { ", remote device" } else { "" };
     eprintln!(
-        "loaded {} ({:.1}M params, max_tokens={}, batched decode: {decode_mode})",
+        "loaded {} ({:.1}M params, max_tokens={}, batched decode: {decode_mode}{remote})",
         runtime.info.name,
         runtime.info.n_params as f64 / 1e6,
         runtime.info.max_tokens,
     );
     Ok(runtime)
+}
+
+/// Backend hosted by `device-serve` — the device side of the bridge.
+/// `ref` serves real compute, `sim` the VCU128 latency model (the
+/// shape a thin daemon in front of real FPGA drivers would take).
+fn device_backend(args: &Args) -> anyhow::Result<Box<dyn Backend>> {
+    match args.get_or("backend", "ref").as_str() {
+        "ref" => Ok(Box::new(ReferenceBackend::new(ReferenceConfig::default()))),
+        "sim" => {
+            let (arch, strat) = sim_arch_strategy(args);
+            Ok(Box::new(SimBackend::new(
+                &arch,
+                &strat,
+                Memory::Hbm,
+                args.get_usize("max-tokens", 512),
+                args.get_usize("seed", 0xED6E) as u64,
+            )))
+        }
+        other => anyhow::bail!(
+            "device-serve hosts --backend ref|sim (got {other}); \
+             artifacts need the pjrt feature and load in-process"
+        ),
+    }
+}
+
+fn cmd_device_serve(args: &Args) -> anyhow::Result<()> {
+    let backend = device_backend(args)?;
+    let addr = args.get_or("addr", DEFAULT_DEVICE_ADDR);
+    let cfg = DeviceConfig {
+        max_sessions_per_conn: args.get_usize("max-sessions", 256),
+    };
+    device::serve(backend, &addr, cfg)
 }
 
 /// The architecture/strategy pair behind `--sim-arch` / `--strategy`.
@@ -106,6 +156,7 @@ fn sim_arch_strategy(args: &Args) -> (LlmArch, SparseStrategy) {
 fn engine_config(args: &Args) -> EngineConfig {
     let mut cfg = EngineConfig {
         max_active: args.get_usize("max-active", 8),
+        max_queued: args.get_usize("max-queued", 1024),
         ..EngineConfig::default()
     };
     // latency-model serving: the engine's VCU128 accounting must
@@ -139,8 +190,13 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     if args.has("stream") {
         return stream_generate(&mut engine, &prompt, max_new, sampling);
     }
-    engine.submit(&prompt, max_new, sampling);
-    let c = engine.step()?.expect("request queued");
+    // keep the handle: a bounded-queue refusal (--max-queued 0) arrives
+    // as its terminal error event, not as a queued completion
+    let handle = engine.submit(&prompt, max_new, sampling);
+    engine.run_all()?;
+    let c = handle
+        .wait()
+        .map_err(|msg| anyhow::anyhow!("generation failed: {msg}"))?;
     println!("prompt       : {:?}", c.prompt);
     println!("generated    : {:?}", c.text);
     println!("tokens       : {} prompt + {} new", c.n_prompt, c.n_generated);

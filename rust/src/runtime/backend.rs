@@ -21,6 +21,11 @@
 //!   (seeded), so the full serving stack — scheduler, sampler, streaming
 //!   protocol, cancellation — runs end-to-end with zero functional
 //!   compute, at any architecture size (GLM-6B included).
+//! * [`BridgeBackend`](crate::bridge::client::BridgeBackend) — the
+//!   trait over a wire: every call becomes a command-stream frame to a
+//!   device daemon (`edgellm device-serve`) hosting any other backend.
+//!   The remote-capability hooks below ([`Backend::end_session`],
+//!   [`Backend::is_remote`], [`Backend::transfer_meter`]) exist for it.
 //! * Mock backends in `rust/tests/backend_trait.rs` — the trait is the
 //!   scheduler's test seam: a backend needs no weights, no model, not
 //!   even a KV cache.
@@ -40,6 +45,19 @@ use crate::util::rng::Rng;
 /// The reference backend is `RefLlm` itself; re-exported under the name
 /// the serving layer uses for it.
 pub use super::reference::RefLlm as ReferenceBackend;
+
+/// Cumulative host↔device transport counters reported by remote
+/// backends — the transport analogue of the paper's HBM-bandwidth
+/// utilization metric. `tx_bytes` is host→device (commands, tokens),
+/// `rx_bytes` device→host (logits rows), `calls` the number of
+/// metered backend entry points served (handshake, prefill, decode,
+/// batched round, session close).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferMeter {
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    pub calls: u64,
+}
 
 /// An LLM execution backend the continuous-batching scheduler can drive.
 ///
@@ -100,6 +118,27 @@ pub trait Backend: Send {
     /// Resident quantized-FFN weight bytes — the stream a batched round
     /// amortizes — when the backend exposes them (reference engine).
     fn ffn_weight_bytes(&self) -> Option<usize> {
+        None
+    }
+
+    /// The scheduler is done with `session` (retired, cancelled, or
+    /// aborted). In-process backends keep session state on the host and
+    /// free it on drop — the default no-op. Remote backends override
+    /// this to release device-side state eagerly (the bridge sends
+    /// `CloseSession`). Best-effort by contract: it must never fail the
+    /// caller, and a backend must tolerate the call being skipped (the
+    /// engine being dropped mid-flight) by also reclaiming on
+    /// disconnect.
+    fn end_session(&self, _session: &mut Session) {}
+
+    /// True when calls cross a transport to a device daemon — lets the
+    /// serving layer surface transport stats and pick error wording.
+    fn is_remote(&self) -> bool {
+        false
+    }
+
+    /// Cumulative transport counters, when the backend is remote.
+    fn transfer_meter(&self) -> Option<TransferMeter> {
         None
     }
 }

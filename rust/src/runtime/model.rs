@@ -27,7 +27,7 @@ use std::path::PathBuf;
 
 #[cfg(feature = "pjrt")]
 use super::weights::{self, DType, Tensor};
-use super::backend::Backend;
+use super::backend::{Backend, TransferMeter};
 use super::reference::{RefLlm, ReferenceConfig};
 use crate::models::{LlmArch, SparseStrategy};
 use crate::sim::Memory;
@@ -70,6 +70,11 @@ pub struct LlmRuntime {
 #[derive(Clone)]
 pub struct Session {
     pub pos: usize,
+    /// Backend-private correlation tag, carried opaquely by the
+    /// scheduler. Remote backends store their device-side session id
+    /// here (the bridge reserves 0 for "no remote session"); in-process
+    /// backends leave it at 0.
+    pub tag: u64,
     pub(crate) k_cache: Vec<f32>,
     pub(crate) v_cache: Vec<f32>,
     /// only the PJRT backend re-uploads the cache and needs its dims
@@ -86,6 +91,7 @@ impl Session {
         let n: usize = cache_shape.iter().product();
         Session {
             pos: 0,
+            tag: 0,
             k_cache: vec![0.0; n],
             v_cache: vec![0.0; n],
             cache_dims: cache_shape.to_vec(),
@@ -225,6 +231,24 @@ impl LlmRuntime {
     /// them — the stream the batched decode round amortizes.
     pub fn ffn_weight_bytes(&self) -> Option<usize> {
         self.backend.ffn_weight_bytes()
+    }
+
+    /// Notify the backend that `session` is leaving the scheduler
+    /// (retired, cancelled, or aborted). No-op for in-process backends;
+    /// remote backends release device-side state. Best-effort — never
+    /// fails the caller.
+    pub fn end_session(&self, session: &mut Session) {
+        self.backend.end_session(session);
+    }
+
+    /// True when backend calls cross a transport to a device daemon.
+    pub fn is_remote(&self) -> bool {
+        self.backend.is_remote()
+    }
+
+    /// Cumulative host↔device transport counters (remote backends).
+    pub fn transfer_meter(&self) -> Option<TransferMeter> {
+        self.backend.transfer_meter()
     }
 
     /// Run prefill over `prompt` (padded to a bucket); returns the logits
@@ -419,6 +443,7 @@ impl Backend for PjrtBackend {
         let last_logits = all_logits[last * v..(last + 1) * v].to_vec();
         let session = Session {
             pos: prompt.len(),
+            tag: 0,
             k_cache: kc.to_vec::<f32>().map_err(|e| anyhow!("kc to_vec: {e:?}"))?,
             v_cache: vc.to_vec::<f32>().map_err(|e| anyhow!("vc to_vec: {e:?}"))?,
             cache_dims: self.info.cache_shape.to_vec(),

@@ -5,6 +5,24 @@ pub mod bench;
 pub mod json;
 pub mod rng;
 
+/// Unblock a thread parked in `TcpListener::accept` by making one
+/// throwaway connection to its address. An unspecified bind address
+/// (0.0.0.0 / ::) is not connectable on every platform, so it is
+/// rewritten to the matching loopback first. Returns false when the
+/// poke could not connect — the acceptor may still be parked and the
+/// caller should not join it unconditionally.
+pub fn poke_acceptor(addr: std::net::SocketAddr) -> bool {
+    use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, TcpStream};
+    let mut target = addr;
+    if target.ip().is_unspecified() {
+        target.set_ip(match target.ip() {
+            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        });
+    }
+    TcpStream::connect(target).is_ok()
+}
+
 /// Minimal CLI flag parser: `--key value` and `--flag` forms.
 pub struct Args {
     pub positional: Vec<String>,
