@@ -53,10 +53,16 @@ fn median(mut xs: Vec<f64>) -> f64 {
 
 /// Aggregate decode tokens/s over `ROUNDS` batched rounds at batch `b`.
 /// Batch 1 *is* the scalar path (`decode` delegates to a batch of one).
-fn decode_tps(rt: &LlmRuntime, pristine: &[Session], b: usize) -> (f64, f64) {
+///
+/// Each sample prefills fresh sessions and retires them afterwards
+/// (`end_session` returns their arena blocks, so every sample after the
+/// first decodes on *recycled* KV blocks — the serving steady state).
+/// Prefill and retirement sit outside the timed region.
+fn decode_tps(rt: &LlmRuntime, b: usize) -> (f64, f64) {
     let mut times = Vec::new();
     for sample in 0..SAMPLES + 1 {
-        let mut sessions: Vec<Session> = pristine[..b].to_vec();
+        let mut sessions: Vec<Session> =
+            (0..b).map(|s| rt.prefill(&prompt(s)).expect("prefill").1).collect();
         let t0 = Instant::now();
         for round in 0..ROUNDS {
             let tokens: Vec<i32> =
@@ -67,6 +73,9 @@ fn decode_tps(rt: &LlmRuntime, pristine: &[Session], b: usize) -> (f64, f64) {
         }
         if sample > 0 {
             times.push(t0.elapsed().as_secs_f64());
+        }
+        for s in sessions.iter_mut() {
+            rt.end_session(s);
         }
     }
     let t = median(times);
@@ -95,26 +104,21 @@ fn main() {
     let mut prefill_times = Vec::new();
     for sample in 0..SAMPLES + 1 {
         let t0 = Instant::now();
-        let (logits, session) = rt.prefill(&prompt(sample)).expect("prefill");
+        let (logits, mut session) = rt.prefill(&prompt(sample)).expect("prefill");
         std::hint::black_box((&logits, &session));
         if sample > 0 {
             prefill_times.push(t0.elapsed().as_secs_f64());
         }
+        rt.end_session(&mut session); // return the arena blocks
     }
     let prefill_s = median(prefill_times);
     let prefill_tps = PROMPT_LEN as f64 / prefill_s;
-
-    // one pristine post-prefill session per batch lane, cloned per sample
-    let max_b = *BATCHES.iter().max().unwrap();
-    let pristine: Vec<Session> = (0..max_b)
-        .map(|s| rt.prefill(&prompt(s)).expect("prefill").1)
-        .collect();
 
     let mut table = Table::new(&["batch", "round latency", "aggregate tok/s", "vs batch 1"]);
     let mut decode_rows = Vec::new();
     let mut tps1 = 0.0;
     for &b in &BATCHES {
-        let (tps, round_s) = decode_tps(&rt, &pristine, b);
+        let (tps, round_s) = decode_tps(&rt, b);
         if b == 1 {
             tps1 = tps;
         }

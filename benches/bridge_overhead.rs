@@ -61,11 +61,10 @@ fn median(mut xs: Vec<f64>) -> f64 {
 /// (backend_throughput methodology, generic over the runtime so both
 /// paths run the exact same loop).
 ///
-/// Unlike backend_throughput, each sample prefills *fresh* sessions and
-/// retires them afterwards instead of cloning a pristine host session:
-/// a bridged session's KV state lives on the device, where cloning the
-/// host handle cannot reset it. Prefill and retirement sit outside the
-/// timed region.
+/// Each sample prefills *fresh* sessions and retires them afterwards —
+/// a bridged session's KV state lives on the device (and an in-process
+/// session's in the backend's arena), so sessions are not cloneable
+/// resets. Prefill and retirement sit outside the timed region.
 fn decode_tps(rt: &LlmRuntime, b: usize) -> (f64, f64) {
     let mut times = Vec::new();
     for sample in 0..SAMPLES + 1 {
@@ -236,7 +235,10 @@ fn main() {
         assert!(rx >= (local.info.vocab * 4) as f64, "rx {rx} B/tok at batch {b}");
         assert!(tx > 0.0);
     }
-    // every session the bench opened was retired over the wire
+    // every session the bench opened was retired over the wire; closes
+    // are pipelined, so one stats round trip flushes the stragglers and
+    // proves (by reply ordering) they were applied
+    let _ = bridged.memory();
     assert_eq!(dev.active_sessions(), 0, "bench leaked device sessions");
     dev.shutdown();
 }

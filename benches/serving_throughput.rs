@@ -9,13 +9,23 @@
 //! aggregate tokens/s — that is the whole argument for replacing the
 //! run-to-completion FIFO.
 //!
+//! The second section measures the **paged KV arena** on a mixed
+//! request-length workload: aggregate tokens/s plus peak resident KV
+//! bytes, against the pre-arena per-request allocation baseline (every
+//! admitted session pinning a full `max_tokens` cache for its whole
+//! lifetime). Written machine-readable to `BENCH_kv.json`; CI archives
+//! it next to the other bench records.
+//!
 //! `cargo bench --bench serving_throughput`
+
+use std::time::Instant;
 
 use edgellm::coordinator::engine::{Engine, EngineConfig};
 use edgellm::coordinator::sampler::Sampling;
 use edgellm::runtime::model::LlmRuntime;
 use edgellm::runtime::reference::ReferenceConfig;
 use edgellm::util::bench::Table;
+use edgellm::util::json::Json;
 
 const N_REQUESTS: usize = 16;
 const MAX_NEW: usize = 32;
@@ -54,6 +64,100 @@ fn run_workload(max_active: usize) -> Run {
         rounds: m.rounds,
         peak: m.peak_active,
     }
+}
+
+/// Paged-KV serving record: a mixed-length workload through a pool
+/// sized for 4 concurrent full-length sessions. Reports tokens/s, peak
+/// resident KV bytes (sampled from the arena every round), block reuse,
+/// and the per-request-allocation baseline the arena replaces.
+fn kv_arena_record() -> Json {
+    const MAX_TOKENS: usize = 128;
+    const BLOCK_TOKENS: usize = 32;
+    const POOL_SESSIONS: usize = 4;
+    const REQUESTS: usize = 16;
+    // short / medium / long / near-full generation budgets
+    const LENGTHS: [usize; 4] = [8, 24, 64, 96];
+
+    let blocks_per_session = MAX_TOKENS / BLOCK_TOKENS;
+    let runtime = LlmRuntime::reference(ReferenceConfig {
+        max_tokens: MAX_TOKENS,
+        kv_block_tokens: BLOCK_TOKENS,
+        kv_pool_blocks: POOL_SESSIONS * blocks_per_session,
+        ..ReferenceConfig::default()
+    });
+    let info = runtime.info.clone();
+    let mut engine = Engine::new(
+        runtime,
+        EngineConfig {
+            max_active: 8, // cap only; the arena is the allocator
+            ..EngineConfig::default()
+        },
+    );
+    for i in 0..REQUESTS {
+        engine.submit(
+            &format!("kv arena request {i}"),
+            LENGTHS[i % LENGTHS.len()],
+            Sampling::Greedy,
+        );
+    }
+    let t0 = Instant::now();
+    let mut completed = 0usize;
+    while engine.has_work() {
+        completed += engine.step_round().expect("kv workload").len();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = engine.metrics().clone();
+    let mem = engine.runtime().memory().expect("reference backend reports its arena");
+    // the arena's own high-water mark — not a post-round sample, which
+    // would miss blocks a retiring session released inside the round
+    let peak_kv_bytes = mem.peak_reserved_bytes;
+    assert_eq!(completed, REQUESTS, "every request must complete");
+    assert!(mem.reuse_hits > 0, "the full pool must recycle blocks: {mem:?}");
+    assert_eq!(m.preempted, 0, "admission accounting must prevent preemption");
+    assert_eq!(mem.blocks_free, mem.blocks_total, "blocks leaked: {mem:?}");
+
+    // pre-arena baseline: every session held L * max_tokens * d K+V f32
+    // rows from admission to retirement, so peak bytes = peak concurrent
+    // sessions * one full cache
+    let full_session_bytes =
+        (info.n_layers * info.max_tokens * info.n_kv_heads.max(1) * info.head_dim * 4 * 2) as u64;
+    let baseline_peak = m.peak_active as u64 * full_session_bytes;
+
+    println!(
+        "kv arena: {REQUESTS} mixed-length requests, pool {} blocks x {BLOCK_TOKENS} tokens — \
+         {:.0} tok/s, peak KV {} B vs per-request baseline {} B ({:.2}x), {} reuse hits",
+        POOL_SESSIONS * blocks_per_session,
+        m.tokens_per_s(),
+        peak_kv_bytes,
+        baseline_peak,
+        baseline_peak as f64 / peak_kv_bytes.max(1) as f64,
+        mem.reuse_hits
+    );
+
+    Json::obj(vec![
+        ("bench", Json::Str("serving_kv_arena".into())),
+        ("max_tokens", Json::Num(MAX_TOKENS as f64)),
+        ("block_tokens", Json::Num(BLOCK_TOKENS as f64)),
+        ("pool_blocks", Json::Num((POOL_SESSIONS * blocks_per_session) as f64)),
+        ("requests", Json::Num(REQUESTS as f64)),
+        (
+            "request_lengths",
+            Json::Arr(LENGTHS.iter().map(|&l| Json::Num(l as f64)).collect()),
+        ),
+        ("wall_s", Json::Num(wall_s)),
+        ("tokens_per_s", Json::Num(m.tokens_per_s())),
+        ("sim_tokens_per_s", Json::Num(m.sim_tokens_per_s())),
+        ("decode_tokens", Json::Num(m.decode_tokens as f64)),
+        ("peak_active", Json::Num(m.peak_active as f64)),
+        ("peak_kv_bytes_arena", Json::Num(peak_kv_bytes as f64)),
+        ("peak_kv_bytes_per_request_baseline", Json::Num(baseline_peak as f64)),
+        (
+            "baseline_over_arena",
+            Json::Num(baseline_peak as f64 / peak_kv_bytes.max(1) as f64),
+        ),
+        ("kv_reuse_hits", Json::Num(mem.reuse_hits as f64)),
+        ("preempted", Json::Num(m.preempted as f64)),
+    ])
 }
 
 fn main() {
@@ -104,4 +208,9 @@ fn main() {
               truly batched decode since PR 2 — benches/backend_throughput.rs \
               measures it on a cache-overflowing model); the VCU128 column \
               models the shared weight stream of the accelerator datapath.");
+
+    // paged-KV arena record (mixed lengths, memory-aware admission)
+    let kv = kv_arena_record();
+    std::fs::write("BENCH_kv.json", format!("{kv}\n")).expect("write BENCH_kv.json");
+    println!("wrote BENCH_kv.json");
 }

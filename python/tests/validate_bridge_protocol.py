@@ -45,6 +45,13 @@ MODEL_INFO_FIELDS = [
     "d_ffn", "max_tokens", "head_dim",
 ]
 
+# KV-arena accounting carried in the InfoResp backward-compatible tail,
+# in wire order (all u64)
+MEMORY_FIELDS = [
+    "total_bytes", "free_bytes", "reserved_bytes", "block_tokens",
+    "blocks_total", "blocks_free", "reuse_hits", "peak_reserved_bytes",
+]
+
 
 def _u8(v): return struct.pack("<B", v)
 def _u16(v): return struct.pack("<H", v)
@@ -86,6 +93,14 @@ def encode(kind, **f):
         out += _u32(len(f["buckets"])) + b"".join(_u32(b) for b in f["buckets"])
         out += _u8(1 if f["supports_batched_decode"] else 0)
         out += _u64(f["ffn_weight_bytes"])
+        # backward-compatible tail (paged-KV extension): presence flag +
+        # eight u64 arena figures; pre-paging frames end before the flag
+        mem = f.get("memory")
+        if mem is None:
+            out += _u8(0)
+        else:
+            out += _u8(1)
+            out += b"".join(_u64(mem[k]) for k in MEMORY_FIELDS)
     elif kind == "Logits":
         out += _u32(f["session"]) + _u32(f["pos"]) + _u32(len(f["logits"]))
         out += b"".join(_f32(x) for x in f["logits"])
@@ -177,6 +192,13 @@ def decode(buf):
         f["buckets"] = [d.u32() for _ in range(d.count(4))]
         f["supports_batched_decode"] = d.u8() != 0
         f["ffn_weight_bytes"] = d.u64()
+        # optional memory tail: absent entirely on pre-paging frames
+        if d.at == len(d.b):
+            f["memory"] = None
+        elif d.u8() != 0:
+            f["memory"] = {k: d.u64() for k in MEMORY_FIELDS}
+        else:
+            f["memory"] = None
     elif kind == "Logits":
         f["session"], f["pos"] = d.u32(), d.u32()
         f["logits"] = [d.f32() for _ in range(d.count(4))]
@@ -245,7 +267,15 @@ def main():
         ("CloseSession", {"session": 4}),
         ("InfoResp", {"version": 1, "info": info, "buckets": [8, 16, 32, 64],
                       "supports_batched_decode": True,
-                      "ffn_weight_bytes": 1 << 20}),
+                      "ffn_weight_bytes": 1 << 20, "memory": None}),
+        ("InfoResp", {"version": 1, "info": info, "buckets": [8, 16, 32, 64],
+                      "supports_batched_decode": True,
+                      "ffn_weight_bytes": 1 << 20,
+                      "memory": {"total_bytes": 1 << 24, "free_bytes": 3 << 20,
+                                 "reserved_bytes": (1 << 24) - (3 << 20),
+                                 "block_tokens": 64, "blocks_total": 128,
+                                 "blocks_free": 24, "reuse_hits": 7,
+                                 "peak_reserved_bytes": 1 << 23}}),
         ("SessionOpened", {"session": 2}),
         ("Logits", {"session": 3, "pos": 17, "logits": [0.5, -1.25, 3.75e8]}),
         ("LogitsBatch", {"rows": [(1, 4, [1.0, 2.0]), (2, 9, [-0.5])]}),
@@ -281,6 +311,18 @@ def main():
         raise AssertionError("overrunning count must be rejected")
     except ValueError:
         checks += 1
+
+    # 5. backward compatibility: a pre-paging InfoResp (no memory tail at
+    # all) must decode as memory=None — strip the tail and re-frame
+    new = frame("InfoResp", version=1, info=info, buckets=[8],
+                supports_batched_decode=False, ffn_weight_bytes=9,
+                memory=None)
+    legacy_payload = new[4:-1]  # drop the 1-byte None flag
+    legacy = _u32(len(legacy_payload)) + legacy_payload
+    kind, out = decode(legacy)
+    check(kind == "InfoResp" and out["memory"] is None,
+          "legacy InfoResp decodes with memory=None")
+    check(out["ffn_weight_bytes"] == 9, "legacy tail fields intact")
 
     print(f"bridge protocol: all {checks} checks pass")
 

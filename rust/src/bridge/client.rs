@@ -16,9 +16,14 @@
 //!   for the whole round (the weight-stream-once batching argument
 //!   applies to the wire, too: one round trip per round, not per
 //!   session);
-//! * scheduler retirement → `end_session` → `CloseSession`, so the
-//!   device frees KV state as soon as the coordinator does — not when
-//!   the connection eventually closes.
+//! * scheduler retirement → `end_session` → a *pipelined*
+//!   `CloseSession`: the frame is buffered and flushed with the next
+//!   request (in steady state the next round's `DecodeBatch`), and its
+//!   reply is drained in front of that request's reply — retirement
+//!   costs zero round trips. The device session gauge is
+//!   eventually-consistent; any later request/reply exchange (or a
+//!   [`Backend::memory`] stats query) proves the closes were applied,
+//!   and disconnect still reclaims everything.
 //!
 //! Every frame is counted by a [`TransferMeter`] (host→device tx,
 //! device→host rx, per-call), the transport analogue of the paper's
@@ -42,6 +47,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::protocol::{self, Frame, PROTOCOL_VERSION};
 use crate::runtime::backend::{Backend, TransferMeter};
+use crate::runtime::kv::MemoryStats;
 use crate::runtime::model::{ModelInfo, Session};
 
 /// The connection: buffered halves of one TCP stream plus the meter.
@@ -49,6 +55,12 @@ struct Conn {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     meter: TransferMeter,
+    /// `CloseSession` frames written but whose replies have not been
+    /// read yet (close pipelining): the frames sit in the write buffer
+    /// until the next request flushes them, and their replies — which
+    /// the device sends strictly in request order — are drained in
+    /// front of that request's reply by [`Conn::recv_reply`].
+    pending_closes: usize,
 }
 
 impl Conn {
@@ -72,6 +84,26 @@ impl Conn {
             Ok(None) => bail!("device closed the connection"),
             Err(e) => bail!("device read failed: {e}"),
         }
+    }
+
+    /// Read the reply to the request just flushed, draining any
+    /// pipelined `CloseSession` replies queued in front of it first.
+    /// Closes are best-effort by contract, so their replies are only
+    /// sanity-checked, never failed on.
+    fn recv_reply(&mut self) -> Result<Frame> {
+        while self.pending_closes > 0 {
+            self.pending_closes -= 1;
+            match self.recv()? {
+                // Closed, or a structured error (daemon restarted, id
+                // unknown): the device holds no state either way
+                Frame::Closed { .. } | Frame::Error { .. } => {}
+                other => eprintln!(
+                    "bridge: unexpected {} reply to a pipelined close",
+                    other.name()
+                ),
+            }
+        }
+        self.recv()
     }
 }
 
@@ -115,7 +147,12 @@ impl BridgeBackend {
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
         let writer = BufWriter::new(stream);
-        let mut conn = Conn { reader, writer, meter: TransferMeter::default() };
+        let mut conn = Conn {
+            reader,
+            writer,
+            meter: TransferMeter::default(),
+            pending_closes: 0,
+        };
         conn.meter.calls += 1;
         conn.send(&Frame::Info { version: PROTOCOL_VERSION })?;
         conn.flush()?;
@@ -127,6 +164,9 @@ impl BridgeBackend {
                     buckets,
                     supports_batched_decode,
                     ffn_weight_bytes,
+                    // handshake-time arena stats go stale immediately;
+                    // `memory()` re-queries for a fresh snapshot
+                    memory: _,
                 } => (version, info, buckets, supports_batched_decode, ffn_weight_bytes),
                 other => return Err(unexpected(other, "InfoResp")),
             };
@@ -181,7 +221,7 @@ impl Backend for BridgeBackend {
         conn.send(&Frame::OpenSession { session: id })?;
         conn.send(&Frame::Prefill { session: id, prompt: prompt.to_vec() })?;
         conn.flush()?;
-        let opened = conn.recv()?;
+        let opened = conn.recv_reply()?;
         let logits_frame = conn.recv()?;
         let session = match opened {
             Frame::SessionOpened { session } => session,
@@ -226,7 +266,7 @@ impl Backend for BridgeBackend {
         conn.meter.calls += 1;
         conn.send(&Frame::Decode { session: id, token })?;
         conn.flush()?;
-        let (sid, pos, logits) = match conn.recv()? {
+        let (sid, pos, logits) = match conn.recv_reply()? {
             Frame::Logits { session, pos, logits } => (session, pos, logits),
             other => return Err(unexpected(other, "Logits")),
         };
@@ -250,7 +290,7 @@ impl Backend for BridgeBackend {
         conn.meter.calls += 1;
         conn.send(&Frame::DecodeBatch { sessions: ids.clone(), tokens: tokens.to_vec() })?;
         conn.flush()?;
-        let rows = match conn.recv()? {
+        let rows = match conn.recv_reply()? {
             Frame::LogitsBatch { rows } => rows,
             other => return Err(unexpected(other, "LogitsBatch")),
         };
@@ -292,31 +332,49 @@ impl Backend for BridgeBackend {
             return; // never opened remotely, or already closed
         }
         session.tag = 0;
-        // Deliberately synchronous (one round trip per *session
-        // lifetime*, not per round): waiting for the reply keeps the
-        // device's session gauge deterministic — retirement returns ⇒
-        // the slot is free. Pipelining the close into the next round's
-        // flush is the ROADMAP follow-on, paid for with deferred-reply
-        // bookkeeping.
-        // Best effort: the daemon also reclaims sessions on disconnect,
-        // so a failure here must not fail scheduler retirement.
+        // Close pipelining (the ROADMAP follow-on to PR 4's synchronous
+        // close): the CloseSession frame is *buffered*, not flushed, and
+        // its reply is not awaited — retirement costs zero round trips
+        // and zero syscalls. The frame rides the next request's flush
+        // (in steady state, the next round's DecodeBatch), and its reply
+        // is drained by `recv_reply` in front of that request's reply.
+        // The device session gauge is therefore eventually-consistent:
+        // any subsequent request/reply exchange (a decode round, a
+        // `memory()` stats query) proves all prior closes were applied,
+        // and a disconnect still reclaims everything server-side.
+        // Best effort by contract: a failure must not fail retirement.
         let Ok(mut conn) = self.conn.try_borrow_mut() else {
             return;
         };
         conn.meter.calls += 1;
-        let mut close = || -> Result<Frame> {
-            conn.send(&Frame::CloseSession { session: id })?;
-            conn.flush()?;
-            conn.recv()
-        };
-        match close() {
-            // Closed, or a structured error (e.g. daemon restarted):
-            // either way the device holds no state for `id` any more
-            Ok(Frame::Closed { .. }) | Ok(Frame::Error { .. }) => {}
-            Ok(other) => {
-                eprintln!("bridge: closing session {id}: unexpected {} reply", other.name())
-            }
+        match conn.send(&Frame::CloseSession { session: id }) {
+            Ok(()) => conn.pending_closes += 1,
             Err(e) => eprintln!("bridge: closing session {id}: {e:#}"),
+        }
+    }
+
+    /// The *device's* arena accounting, fetched fresh per call: `Info`
+    /// doubles as the stats query and its flush carries any pipelined
+    /// closes, so the figures already reflect every prior retirement.
+    fn memory(&self) -> Option<MemoryStats> {
+        let Ok(mut conn) = self.conn.try_borrow_mut() else {
+            return None;
+        };
+        conn.meter.calls += 1;
+        let fetch = |conn: &mut Conn| -> Result<Option<MemoryStats>> {
+            conn.send(&Frame::Info { version: PROTOCOL_VERSION })?;
+            conn.flush()?;
+            match conn.recv_reply()? {
+                Frame::InfoResp { memory, .. } => Ok(memory),
+                other => Err(unexpected(other, "InfoResp")),
+            }
+        };
+        match fetch(&mut *conn) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("bridge: memory stats query failed: {e:#}");
+                None
+            }
         }
     }
 

@@ -250,6 +250,10 @@ fn respond(
                 buckets: rt.prefill_buckets().to_vec(),
                 supports_batched_decode: rt.supports_batched_decode(),
                 ffn_weight_bytes: rt.ffn_weight_bytes().unwrap_or(0) as u64,
+                // a point-in-time arena snapshot: `Info` doubles as the
+                // client's memory-stats query, so the coordinator's
+                // admission gate sees current device-side figures
+                memory: rt.memory(),
             }
         }
         Frame::OpenSession { session } => {

@@ -38,6 +38,7 @@
 use std::fmt;
 use std::io::{Read, Write};
 
+use crate::runtime::kv::MemoryStats;
 use crate::runtime::model::ModelInfo;
 
 /// Wire protocol version, exchanged in `Info`/`InfoResp`. A device
@@ -130,7 +131,19 @@ pub enum Frame {
     /// release a session's device-side state
     CloseSession { session: u32 },
 
-    /// handshake reply: model architecture + serving capabilities
+    /// handshake reply: model architecture + serving capabilities,
+    /// plus (since the paged-KV extension) a point-in-time snapshot of
+    /// the device's KV-arena accounting. `Info` doubles as the stats
+    /// query: `BridgeBackend::memory()` re-sends it and reads `memory`
+    /// out of the fresh reply. The field is a *backward-compatible
+    /// tail*: frames from pre-paging devices simply end after
+    /// `ffn_weight_bytes` and decode as `memory: None`. Compatibility
+    /// is one-directional — a current coordinator reads pre-tail
+    /// devices, but a pre-tail coordinator's strict decoder rejects the
+    /// extra bytes — so in a rolling upgrade, update **coordinators
+    /// before devices** (exact version matching leaves no room to
+    /// negotiate the tail per-connection without refusing old peers
+    /// outright).
     InfoResp {
         version: u8,
         info: ModelInfo,
@@ -138,6 +151,8 @@ pub enum Frame {
         supports_batched_decode: bool,
         /// 0 when the backend does not expose the figure
         ffn_weight_bytes: u64,
+        /// `None` when the hosted backend has no paged KV arena
+        memory: Option<MemoryStats>,
     },
     /// `OpenSession` acknowledged
     SessionOpened { session: u32 },
@@ -326,6 +341,7 @@ fn encode_payload(f: &Frame) -> Vec<u8> {
             buckets,
             supports_batched_decode,
             ffn_weight_bytes,
+            memory,
         } => {
             e = Enc::new(OP_INFO_RESP);
             e.u8(*version);
@@ -334,6 +350,21 @@ fn encode_payload(f: &Frame) -> Vec<u8> {
             e.vec_u32(&b);
             e.u8(u8::from(*supports_batched_decode));
             e.u64(*ffn_weight_bytes);
+            // backward-compatible tail: presence flag + arena figures
+            match memory {
+                None => e.u8(0),
+                Some(m) => {
+                    e.u8(1);
+                    e.u64(m.total_bytes);
+                    e.u64(m.free_bytes);
+                    e.u64(m.reserved_bytes);
+                    e.u64(m.block_tokens);
+                    e.u64(m.blocks_total);
+                    e.u64(m.blocks_free);
+                    e.u64(m.reuse_hits);
+                    e.u64(m.peak_reserved_bytes);
+                }
+            }
         }
         Frame::SessionOpened { session } => {
             e = Enc::new(OP_SESSION_OPENED);
@@ -476,6 +507,12 @@ impl<'a> Dec<'a> {
         String::from_utf8(s.to_vec()).map_err(|_| "invalid utf-8 in string".to_string())
     }
 
+    /// True when the payload is fully consumed — how optional trailing
+    /// extensions (the `InfoResp` memory tail) detect an older peer.
+    fn at_end(&self) -> bool {
+        self.at == self.b.len()
+    }
+
     fn finish(&self) -> Result<(), String> {
         if self.at != self.b.len() {
             return Err(format!("{} trailing bytes after the payload", self.b.len() - self.at));
@@ -527,13 +564,39 @@ fn decode_payload(payload: &[u8]) -> Result<Frame, String> {
             Frame::DecodeBatch { sessions, tokens }
         }
         OP_CLOSE_SESSION => Frame::CloseSession { session: d.u32()? },
-        OP_INFO_RESP => Frame::InfoResp {
-            version: d.u8()?,
-            info: dec_model_info(&mut d)?,
-            buckets: d.vec_u32()?.into_iter().map(|x| x as usize).collect(),
-            supports_batched_decode: d.u8()? != 0,
-            ffn_weight_bytes: d.u64()?,
-        },
+        OP_INFO_RESP => {
+            let version = d.u8()?;
+            let info = dec_model_info(&mut d)?;
+            let buckets = d.vec_u32()?.into_iter().map(|x| x as usize).collect();
+            let supports_batched_decode = d.u8()? != 0;
+            let ffn_weight_bytes = d.u64()?;
+            // pre-paging peers end the payload here; the memory tail is
+            // a flagged optional extension
+            let memory = if d.at_end() {
+                None
+            } else if d.u8()? != 0 {
+                Some(MemoryStats {
+                    total_bytes: d.u64()?,
+                    free_bytes: d.u64()?,
+                    reserved_bytes: d.u64()?,
+                    block_tokens: d.u64()?,
+                    blocks_total: d.u64()?,
+                    blocks_free: d.u64()?,
+                    reuse_hits: d.u64()?,
+                    peak_reserved_bytes: d.u64()?,
+                })
+            } else {
+                None
+            };
+            Frame::InfoResp {
+                version,
+                info,
+                buckets,
+                supports_batched_decode,
+                ffn_weight_bytes,
+                memory,
+            }
+        }
         OP_SESSION_OPENED => Frame::SessionOpened { session: d.u32()? },
         OP_LOGITS => Frame::Logits {
             session: d.u32()?,
@@ -654,6 +717,24 @@ mod tests {
                 buckets: vec![8, 16, 32, 64],
                 supports_batched_decode: true,
                 ffn_weight_bytes: 1 << 20,
+                memory: None,
+            },
+            Frame::InfoResp {
+                version: PROTOCOL_VERSION,
+                info: sample_info(),
+                buckets: vec![8, 16, 32, 64],
+                supports_batched_decode: true,
+                ffn_weight_bytes: 1 << 20,
+                memory: Some(MemoryStats {
+                    total_bytes: 1 << 24,
+                    free_bytes: 3 << 20,
+                    reserved_bytes: (1 << 24) - (3 << 20),
+                    block_tokens: 64,
+                    blocks_total: 128,
+                    blocks_free: 24,
+                    reuse_hits: 7,
+                    peak_reserved_bytes: 1 << 23,
+                }),
             },
             Frame::SessionOpened { session: 2 },
             Frame::Logits {
@@ -723,6 +804,89 @@ mod tests {
             enc(&Frame::Error { code: ErrCode::Session, message: "x".into() }),
             [5, 0, 0, 0, 0xEE, 2, 1, 0, 0x78]
         );
+        // InfoResp with the paged-KV memory tail — the literal produced
+        // and asserted by the Python mirror (fields 1..17 in wire order)
+        let golden_info = Frame::InfoResp {
+            version: 1,
+            info: ModelInfo {
+                name: "m".to_string(),
+                vocab: 1,
+                d_model: 2,
+                n_layers: 3,
+                n_heads: 4,
+                n_kv_heads: 5,
+                d_ffn: 6,
+                max_tokens: 7,
+                head_dim: 8,
+                n_params: 9,
+                cache_shape: [1, 2, 3, 4],
+            },
+            buckets: vec![7],
+            supports_batched_decode: true,
+            ffn_weight_bytes: 10,
+            memory: Some(MemoryStats {
+                total_bytes: 11,
+                free_bytes: 12,
+                reserved_bytes: 13,
+                block_tokens: 14,
+                blocks_total: 15,
+                blocks_free: 16,
+                reuse_hits: 17,
+                peak_reserved_bytes: 18,
+            }),
+        };
+        let want: Vec<u8> = vec![
+            143, 0, 0, 0, // length prefix
+            0x81, // opcode
+            1, // version
+            1, 0, 109, // name "m"
+            1, 0, 0, 0, 2, 0, 0, 0, 3, 0, 0, 0, 4, 0, 0, 0, // vocab..n_heads
+            5, 0, 0, 0, 6, 0, 0, 0, 7, 0, 0, 0, 8, 0, 0, 0, // n_kv_heads..head_dim
+            9, 0, 0, 0, 0, 0, 0, 0, // n_params
+            1, 0, 0, 0, 2, 0, 0, 0, 3, 0, 0, 0, 4, 0, 0, 0, // cache_shape
+            1, 0, 0, 0, 7, 0, 0, 0, // buckets [7]
+            1, // supports_batched_decode
+            10, 0, 0, 0, 0, 0, 0, 0, // ffn_weight_bytes
+            1, // memory present
+            11, 0, 0, 0, 0, 0, 0, 0, // total_bytes
+            12, 0, 0, 0, 0, 0, 0, 0, // free_bytes
+            13, 0, 0, 0, 0, 0, 0, 0, // reserved_bytes
+            14, 0, 0, 0, 0, 0, 0, 0, // block_tokens
+            15, 0, 0, 0, 0, 0, 0, 0, // blocks_total
+            16, 0, 0, 0, 0, 0, 0, 0, // blocks_free
+            17, 0, 0, 0, 0, 0, 0, 0, // reuse_hits
+            18, 0, 0, 0, 0, 0, 0, 0, // peak_reserved_bytes
+        ];
+        assert_eq!(enc(&golden_info), want);
+    }
+
+    /// A pre-paging peer's `InfoResp` ends right after
+    /// `ffn_weight_bytes`; the decoder must accept it as `memory: None`
+    /// instead of rejecting the shorter payload.
+    #[test]
+    fn info_resp_without_memory_tail_still_decodes() {
+        // encode the new frame, then strip the 1-byte `memory: None`
+        // flag to reconstruct the legacy payload byte-for-byte
+        let f = Frame::InfoResp {
+            version: PROTOCOL_VERSION,
+            info: sample_info(),
+            buckets: vec![8, 16],
+            supports_batched_decode: false,
+            ffn_weight_bytes: 42,
+            memory: None,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let payload_len = buf.len() - 4 - 1; // minus prefix, minus flag byte
+        let mut legacy = Vec::new();
+        legacy.extend_from_slice(&(payload_len as u32).to_le_bytes());
+        legacy.extend_from_slice(&buf[4..4 + payload_len]);
+        let mut cur = Cursor::new(legacy);
+        let (out, _) = read_frame(&mut cur).unwrap().expect("legacy frame");
+        match out {
+            Frame::InfoResp { ffn_weight_bytes: 42, memory: None, .. } => {}
+            other => panic!("want legacy InfoResp with memory: None, got {other:?}"),
+        }
     }
 
     #[test]

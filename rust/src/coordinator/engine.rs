@@ -41,6 +41,7 @@ use anyhow::Result;
 use super::sampler::{sample, Sampling};
 use super::tokenizer;
 use crate::models::{LlmArch, SparseStrategy, DENSE};
+use crate::runtime::kv::{KvExhausted, MemoryStats, KV_EXHAUSTED_MARKER};
 use crate::runtime::model::{LlmRuntime, Session};
 use crate::sim::engine::Simulator;
 use crate::sim::Memory;
@@ -193,9 +194,14 @@ pub struct EngineMetrics {
     pub completed: u64,
     /// requests dropped by cancellation (queued or live)
     pub cancelled: u64,
-    /// requests refused at `submit` because the queue was full
-    /// (not counted in `submitted`)
+    /// requests refused outright: at `submit` because the queue was
+    /// full (not counted in `submitted`), or at admission because their
+    /// worst-case KV block count exceeds the whole arena
     pub rejected: u64,
+    /// live sessions evicted mid-decode because the KV arena was
+    /// exhausted (their stream terminates with a "preempted" error);
+    /// stays 0 whenever admission's worst-case accounting holds
+    pub preempted: u64,
     /// batched decode rounds executed
     pub rounds: u64,
     /// decode tokens emitted across all sessions
@@ -231,6 +237,11 @@ struct QueuedRequest {
     req: Request,
     events: mpsc::Sender<Event>,
     cancel: Arc<AtomicBool>,
+    /// tokenized-and-clamped admission plan `(tokens, max_new)`,
+    /// computed once when the request first reaches the head of the
+    /// queue — a head waiting at the memory gate is not re-tokenized
+    /// every round, and a requeued request keeps its plan
+    plan: Option<(Vec<i32>, usize)>,
 }
 
 /// A live session inside the scheduler's active pool.
@@ -240,6 +251,10 @@ struct ActiveSession {
     sampling: Sampling,
     max_new: usize,
     n_prompt: usize,
+    /// worst-case KV footprint in tokens (`n_prompt + max_new`, already
+    /// clamped to the model budget) — what the memory-aware admission
+    /// gate holds against the arena for sessions still growing
+    worst_tokens: usize,
     session: Session,
     generated: Vec<i32>,
     /// sampled but not yet emitted/fed token
@@ -267,6 +282,18 @@ enum Admitted {
     Active(Box<ActiveSession>),
     /// retired at admission (zero token budget, or immediate EOS)
     Done(Completion),
+    /// prefill could not reserve KV blocks (arena shared with work the
+    /// gate cannot see, or a stale stats snapshot): hand the request
+    /// back so it retries after retirements — one transient per-request
+    /// condition must not fail the whole round
+    Requeue(QueuedRequest),
+}
+
+/// True when `e` is the arena's typed exhaustion error — directly
+/// (in-process backends return [`KvExhausted`] un-wrapped) or flattened
+/// to its stable `Display` string by the bridge's error frames.
+fn is_kv_exhausted(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<KvExhausted>().is_some() || format!("{e:#}").contains(KV_EXHAUSTED_MARKER)
 }
 
 pub struct Engine {
@@ -352,6 +379,7 @@ impl Engine {
             },
             events: tx,
             cancel: Arc::clone(&cancel),
+            plan: None,
         });
         RequestHandle { id, cancel, events: rx }
     }
@@ -435,6 +463,43 @@ impl Engine {
         }
     }
 
+    /// Tokenize and clamp one queued request the way admission will:
+    /// prompt truncated to the largest prefill bucket, `max_new` to the
+    /// KV budget. Used by the admission gate (worst-case block count)
+    /// and by `admit` itself, so the two can never disagree.
+    fn plan_request(&self, req: &Request) -> (Vec<i32>, usize) {
+        let mut tokens = tokenizer::encode(&req.prompt);
+        if tokens.is_empty() {
+            tokens.push(0);
+        }
+        let max_prompt = self
+            .runtime
+            .prefill_buckets()
+            .last()
+            .copied()
+            .unwrap_or(self.runtime.info.max_tokens);
+        if tokens.len() > max_prompt {
+            tokens.truncate(max_prompt);
+        }
+        let budget = self.runtime.info.max_tokens.saturating_sub(tokens.len());
+        let max_new = req.max_new_tokens.min(budget);
+        (tokens, max_new)
+    }
+
+    /// Arena blocks still owed to the live pool: every active session
+    /// may grow to its worst case, and admission must leave those
+    /// blocks untouched or decode-time growth would collide.
+    fn outstanding_growth_blocks(&self, block_tokens: usize) -> usize {
+        self.active
+            .iter()
+            .map(|a| {
+                let worst = a.worst_tokens.div_ceil(block_tokens);
+                let held = a.session.pos.max(1).div_ceil(block_tokens);
+                worst.saturating_sub(held)
+            })
+            .sum()
+    }
+
     /// One scheduler round: reap cancellations, admit, batch-decode,
     /// retire.
     ///
@@ -447,20 +512,113 @@ impl Engine {
         // 0. cancellation: free slots before admitting new work
         self.reap_cancelled();
 
-        // 1. admission: fill free decode slots from the queue
+        // 1. admission: fill free decode slots from the queue. When the
+        // backend reports a paged KV arena, admission is *memory-aware*:
+        // a request enters the pool only while the arena can still cover
+        // its worst-case block count on top of what the live pool may
+        // still grow into — `max_active` is a cap, the arena is the
+        // allocator. Backends without memory accounting (mocks, latency
+        // models) keep the pure slot-counting behavior.
+        // one stats snapshot per round, and only when admission can
+        // actually happen — for a bridged backend every fetch is a
+        // device round trip, so a full pool or an empty queue costs none
+        let mut mem: Option<MemoryStats> =
+            if self.queue.is_empty() || self.active.len() >= self.cfg_max_active {
+                None
+            } else {
+                self.runtime.memory().filter(|m| m.block_tokens > 0)
+            };
         let mut admitted = 0;
         while self.active.len() < self.cfg_max_active && admitted < self.cfg_prefills_per_round {
-            let Some(q) = self.queue.pop_front() else { break };
-            if q.cancel.load(Ordering::Relaxed) {
+            let Some(front) = self.queue.front() else { break };
+            if front.cancel.load(Ordering::Relaxed) {
                 // cancelled while queued: never prefilled, costs nothing
+                let q = self.queue.pop_front().expect("front exists");
                 self.metrics.cancelled += 1;
                 let _ = q.events.send(Event::Error("cancelled".to_string()));
                 continue;
             }
+            if front.plan.is_none() {
+                let plan = self.plan_request(&front.req);
+                self.queue.front_mut().expect("front exists").plan = Some(plan);
+            }
+            let front = self.queue.front().expect("front exists");
+            let (prompt_len, max_new) = {
+                let (tokens, max_new) = front.plan.as_ref().expect("just planned");
+                (tokens.len(), *max_new)
+            };
+            if let Some(m) = &mem {
+                let bt = m.block_tokens as usize;
+                let needed = (prompt_len + max_new).max(1).div_ceil(bt);
+                if needed as u64 > m.blocks_total {
+                    // can never fit, at any load: structured refusal
+                    let q = self.queue.pop_front().expect("front exists");
+                    self.metrics.rejected += 1;
+                    let _ = q.events.send(Event::Error(format!(
+                        "request needs {needed} KV blocks but the arena holds {} \
+                         (raise --kv-pool-blocks or lower max_new_tokens)",
+                        m.blocks_total
+                    )));
+                    continue;
+                }
+                let outstanding = self.outstanding_growth_blocks(bt);
+                if (m.blocks_free as usize) < needed + outstanding {
+                    if self.active.is_empty() {
+                        // blocks are held by work the engine does not
+                        // own (another coordinator on a shared device,
+                        // a directly-driven session): nothing the
+                        // engine does will free them, so waiting would
+                        // spin forever — refuse this request instead
+                        // and let smaller queued requests try
+                        let q = self.queue.pop_front().expect("front exists");
+                        self.metrics.rejected += 1;
+                        let _ = q.events.send(Event::Error(format!(
+                            "request needs {needed} KV blocks but only {} are \
+                             free and no live sessions will retire; retry later",
+                            m.blocks_free
+                        )));
+                        continue;
+                    }
+                    // FIFO head waits for retirements to free blocks
+                    break;
+                }
+            }
+            let mut q = self.queue.pop_front().expect("front exists");
             admitted += 1;
-            match self.admit(q)? {
-                Admitted::Active(a) => self.active.push(*a),
+            let (tokens, max_new) = q.plan.take().expect("planned above");
+            match self.admit(q, tokens, max_new)? {
+                Admitted::Active(a) => {
+                    self.active.push(*a);
+                    if let Some(m) = &mut mem {
+                        // prefill materialized exactly ceil(prompt/bt)
+                        // blocks; decrement the snapshot locally instead
+                        // of re-querying (a wire round trip per admit on
+                        // a bridged backend)
+                        let held = prompt_len.max(1).div_ceil(m.block_tokens as usize) as u64;
+                        m.blocks_free = m.blocks_free.saturating_sub(held);
+                    }
+                }
+                // instant retirement released its blocks; snapshot holds
                 Admitted::Done(c) => retired.push(c),
+                Admitted::Requeue(q) => {
+                    // the arena refused prefill despite the gate (blocks
+                    // held by work the gate cannot see, or a stale
+                    // snapshot). With sessions live, retirements will
+                    // free blocks — put the request back and retry next
+                    // round. With nothing live, nothing the engine does
+                    // will ever free blocks: refuse rather than wedge.
+                    if self.active.is_empty() {
+                        self.metrics.rejected += 1;
+                        let _ = q.events.send(Event::Error(
+                            "kv arena exhausted at prefill with no live sessions \
+                             to wait for; retry later"
+                                .to_string(),
+                        ));
+                    } else {
+                        self.queue.push_front(q);
+                    }
+                    break;
+                }
             }
         }
         self.metrics.peak_active = self.metrics.peak_active.max(self.active.len());
@@ -490,39 +648,83 @@ impl Engine {
             }
 
             let t0 = Instant::now();
-            let mut sessions: Vec<&mut Session> =
-                self.active.iter_mut().map(|a| &mut a.session).collect();
-            let logits = self.runtime.decode_batch(&mut sessions, &self.round_tokens)?;
+            // decode with a preemption loop: a KV-exhausted round (the
+            // arena could not grow a session — only reachable when the
+            // arena is over-committed behind the admission gate's back)
+            // evicts the youngest session with a structured error and
+            // retries. Growth is all-or-nothing *before* any compute, so
+            // the retry recomputes the identical round for the survivors.
+            let logits = loop {
+                let result = {
+                    let mut sessions: Vec<&mut Session> =
+                        self.active.iter_mut().map(|a| &mut a.session).collect();
+                    self.runtime.decode_batch(&mut sessions, &self.round_tokens)
+                };
+                match result {
+                    Ok(l) => break l,
+                    Err(e) if is_kv_exhausted(&e) => {
+                        // the paged-KV contract (Backend::decode_batch
+                        // docs) says a failed round advanced nobody —
+                        // verify rather than trust, because retrying
+                        // after a partial advance would silently
+                        // double-feed the surviving sessions
+                        if self
+                            .active
+                            .iter()
+                            .zip(&self.round_ctxs)
+                            .any(|(a, &ctx)| a.session.pos != ctx)
+                        {
+                            return Err(e.context(
+                                "backend advanced sessions before reporting KV \
+                                 exhaustion; the round cannot be retried",
+                            ));
+                        }
+                        let mut victim =
+                            self.active.pop().expect("non-empty batch reported exhaustion");
+                        self.round_tokens.pop();
+                        self.round_ctxs.pop();
+                        self.metrics.preempted += 1;
+                        self.runtime.end_session(&mut victim.session);
+                        victim.send(Event::Error(format!("preempted: {e:#}")));
+                        if self.active.is_empty() {
+                            break Vec::new();
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
             let round_wall = t0.elapsed().as_secs_f64();
 
-            // simulated VCU128 cost: one shared round for the batch
-            let round = self.sim.decode_round(&self.round_ctxs);
-            let round_us = round.total_us();
-            self.metrics.rounds += 1;
-            self.metrics.decode_tokens += self.round_tokens.len() as u64;
-            self.metrics.decode_wall_s += round_wall;
-            self.metrics.sim_decode_us += round_us;
+            if !self.active.is_empty() {
+                // simulated VCU128 cost: one shared round for the batch
+                let round = self.sim.decode_round(&self.round_ctxs);
+                let round_us = round.total_us();
+                self.metrics.rounds += 1;
+                self.metrics.decode_tokens += self.round_tokens.len() as u64;
+                self.metrics.decode_wall_s += round_wall;
+                self.metrics.sim_decode_us += round_us;
 
-            // 3. sample next tokens, retire finished sessions
-            let mut still_active = Vec::with_capacity(self.active.len());
-            for (mut a, l) in self.active.drain(..).zip(logits) {
-                a.decode_wall_s += round_wall;
-                a.sim_decode_us += round_us;
-                a.next_token = sample(&l, a.sampling, &mut self.rng);
-                let budget_left = a.session.pos < self.runtime.info.max_tokens;
-                let done = a.generated.len() >= a.max_new
-                    || Some(a.next_token) == self.eos_token
-                    || !budget_left;
-                if done {
-                    // release backend-side state (the bridge closes the
-                    // device session) before the completion is built
-                    self.runtime.end_session(&mut a.session);
-                    retired.push(Self::finish(a));
-                } else {
-                    still_active.push(a);
+                // 3. sample next tokens, retire finished sessions
+                let mut still_active = Vec::with_capacity(self.active.len());
+                for (mut a, l) in self.active.drain(..).zip(logits) {
+                    a.decode_wall_s += round_wall;
+                    a.sim_decode_us += round_us;
+                    a.next_token = sample(&l, a.sampling, &mut self.rng);
+                    let budget_left = a.session.pos < self.runtime.info.max_tokens;
+                    let done = a.generated.len() >= a.max_new
+                        || Some(a.next_token) == self.eos_token
+                        || !budget_left;
+                    if done {
+                        // release backend-side state (the bridge closes the
+                        // device session) before the completion is built
+                        self.runtime.end_session(&mut a.session);
+                        retired.push(Self::finish(a));
+                    } else {
+                        still_active.push(a);
+                    }
                 }
+                self.active = still_active;
             }
-            self.active = still_active;
         }
 
         retired.sort_by_key(|c| c.id);
@@ -531,29 +733,25 @@ impl Engine {
     }
 
     /// Prefill one request and stage it for decoding (or retire it
-    /// immediately if it has no token budget / instant EOS).
-    fn admit(&mut self, q: QueuedRequest) -> Result<Admitted> {
+    /// immediately if it has no token budget / instant EOS). `tokens` /
+    /// `max_new` come from [`Engine::plan_request`] on the same request.
+    fn admit(&mut self, q: QueuedRequest, tokens: Vec<i32>, max_new: usize) -> Result<Admitted> {
         let QueuedRequest { req, events, cancel } = q;
-        let mut tokens = tokenizer::encode(&req.prompt);
-        if tokens.is_empty() {
-            tokens.push(0);
-        }
-        // clamp prompt to the largest prefill bucket
-        let max_prompt = self
-            .runtime
-            .prefill_buckets()
-            .last()
-            .copied()
-            .unwrap_or(self.runtime.info.max_tokens);
-        if tokens.len() > max_prompt {
-            tokens.truncate(max_prompt);
-        }
-        let budget = self.runtime.info.max_tokens.saturating_sub(tokens.len());
-        let max_new = req.max_new_tokens.min(budget);
 
         let t0 = Instant::now();
         let (logits, session) = match self.runtime.prefill(&tokens) {
             Ok(v) => v,
+            Err(e) if is_kv_exhausted(&e) => {
+                // out of blocks right now, not broken: requeue instead
+                // of erroring the client or poisoning the round (the
+                // plan rides along so the retry does not re-tokenize)
+                return Ok(Admitted::Requeue(QueuedRequest {
+                    req,
+                    events,
+                    cancel,
+                    plan: Some((tokens, max_new)),
+                }));
+            }
             Err(e) => {
                 // tell the waiting client before failing the round
                 let _ = events.send(Event::Error(format!("prefill failed: {e:#}")));
@@ -570,6 +768,7 @@ impl Engine {
             sampling: req.sampling,
             max_new,
             n_prompt: tokens.len(),
+            worst_tokens: tokens.len() + max_new,
             session,
             generated: Vec::with_capacity(max_new),
             next_token,

@@ -209,12 +209,24 @@ fn stats_json(engine: &Engine) -> Json {
         ("completed", Json::Num(m.completed as f64)),
         ("cancelled", Json::Num(m.cancelled as f64)),
         ("rejected", Json::Num(m.rejected as f64)),
+        ("preempted", Json::Num(m.preempted as f64)),
         ("rounds", Json::Num(m.rounds as f64)),
         ("decode_tokens", Json::Num(m.decode_tokens as f64)),
         ("peak_active", Json::Num(m.peak_active as f64)),
         ("tokens_per_s", Json::Num(m.tokens_per_s())),
         ("sim_tokens_per_s", Json::Num(m.sim_tokens_per_s())),
     ];
+    // KV-arena accounting when the backend pages its session memory
+    // (for a bridged backend these are the *device's* arena figures,
+    // fetched over the wire; the query also flushes any pipelined
+    // CloseSession frames, so the numbers it returns are current)
+    if let Some(k) = engine.runtime().memory() {
+        pairs.push(("kv_blocks_total", Json::Num(k.blocks_total as f64)));
+        pairs.push(("kv_blocks_free", Json::Num(k.blocks_free as f64)));
+        pairs.push(("kv_block_tokens", Json::Num(k.block_tokens as f64)));
+        pairs.push(("kv_reuse_hits", Json::Num(k.reuse_hits as f64)));
+        pairs.push(("kv_reserved_bytes", Json::Num(k.reserved_bytes as f64)));
+    }
     // transport counters when the backend sits across a device bridge:
     // the serving-level view of bytes/token next to tokens/s
     if let Some(t) = engine.runtime().transfer_meter() {

@@ -57,13 +57,25 @@ fn print_help() {
          edgellm simulate --arch glm --strategy s3 --ctx 128 --batch 8\n  \
          edgellm info\n\n\
          Backends: --backend ref (pure-Rust reference model, default when\n\
-         no artifacts are present), --backend sim (VCU128 latency model\n\
-         serving deterministic pseudo-tokens; --sim-arch glm|qwen|tiny,\n\
-         --max-tokens N), --backend bridge (a remote device daemon over\n\
-         the command-stream protocol; --device HOST:PORT, start one with\n\
-         `edgellm device-serve`), --backend artifacts (AOT PJRT artifacts\n\
-         from --artifacts/--model; needs the pjrt feature)."
+         no artifacts are present; paged KV arena via --kv-block-tokens N\n\
+         [64] and --kv-pool-blocks N [0 = auto]), --backend sim (VCU128\n\
+         latency model serving deterministic pseudo-tokens; --sim-arch\n\
+         glm|qwen|tiny, --max-tokens N), --backend bridge (a remote device\n\
+         daemon over the command-stream protocol; --device HOST:PORT, start\n\
+         one with `edgellm device-serve`), --backend artifacts (AOT PJRT\n\
+         artifacts from --artifacts/--model; needs the pjrt feature)."
     );
+}
+
+/// Reference-backend config with the KV-arena flags threaded in:
+/// `--kv-block-tokens` (tokens per arena block, default 64) and
+/// `--kv-pool-blocks` (pool capacity in blocks, 0 = auto).
+fn ref_config(args: &Args) -> ReferenceConfig {
+    ReferenceConfig {
+        kv_block_tokens: args.get_usize("kv-block-tokens", 64),
+        kv_pool_blocks: args.get_usize("kv-pool-blocks", 0),
+        ..ReferenceConfig::default()
+    }
 }
 
 /// Load the functional runtime: AOT artifacts when requested/available,
@@ -73,7 +85,7 @@ fn load_runtime(args: &Args) -> anyhow::Result<LlmRuntime> {
     let dir = args.get_or("artifacts", "artifacts");
     let model = args.get_or("model", "tiny");
     let runtime = match backend.as_str() {
-        "ref" => LlmRuntime::reference(ReferenceConfig::default()),
+        "ref" => LlmRuntime::reference(ref_config(args)),
         "sim" => {
             let (arch, strat) = sim_arch_strategy(args);
             LlmRuntime::simulator(
@@ -89,7 +101,7 @@ fn load_runtime(args: &Args) -> anyhow::Result<LlmRuntime> {
             LlmRuntime::from_backend(Box::new(BridgeBackend::connect(&dev)?))
         }
         "artifacts" | "pjrt" => LlmRuntime::load(&dir, &model)?,
-        _ => LlmRuntime::load_or_reference(&dir, &model, ReferenceConfig::default()),
+        _ => LlmRuntime::load_or_reference(&dir, &model, ref_config(args)),
     };
     let decode_mode = if runtime.supports_batched_decode() {
         "shared round"
@@ -111,7 +123,7 @@ fn load_runtime(args: &Args) -> anyhow::Result<LlmRuntime> {
 /// shape a thin daemon in front of real FPGA drivers would take).
 fn device_backend(args: &Args) -> anyhow::Result<Box<dyn Backend>> {
     match args.get_or("backend", "ref").as_str() {
-        "ref" => Ok(Box::new(ReferenceBackend::new(ReferenceConfig::default()))),
+        "ref" => Ok(Box::new(ReferenceBackend::new(ref_config(args)))),
         "sim" => {
             let (arch, strat) = sim_arch_strategy(args);
             Ok(Box::new(SimBackend::new(
@@ -206,6 +218,12 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         "sim (VCU128) : first {:.2} ms, {:.1} token/s",
         c.sim_first_token_ms, c.sim_tokens_per_s
     );
+    if let Some(m) = engine.runtime().memory() {
+        println!(
+            "kv arena     : {}/{} blocks free, {} reuse hits",
+            m.blocks_free, m.blocks_total, m.reuse_hits
+        );
+    }
     Ok(())
 }
 
@@ -331,5 +349,15 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     println!("d_ffn       : {}", i.d_ffn);
     println!("max_tokens  : {}", i.max_tokens);
     println!("prefill     : buckets {:?}", rt.prefill_buckets());
+    if let Some(m) = rt.memory() {
+        println!(
+            "kv arena    : {} blocks x {} tokens ({:.1} MiB pool, {} free, {} reused)",
+            m.blocks_total,
+            m.block_tokens,
+            m.total_bytes as f64 / (1 << 20) as f64,
+            m.blocks_free,
+            m.reuse_hits
+        );
+    }
     Ok(())
 }

@@ -38,6 +38,10 @@ use anyhow::{bail, Result};
 
 use super::model::{ModelInfo, Session};
 use crate::models::{LlmArch, SparseStrategy};
+
+/// Re-exported so backend implementations and the serving layer can
+/// name the arena accounting type from one place.
+pub use super::kv::MemoryStats;
 use crate::sim::engine::Simulator;
 use crate::sim::Memory;
 use crate::util::rng::Rng;
@@ -97,6 +101,17 @@ pub trait Backend: Send {
     /// executors (PJRT artifacts). Backends that can amortize the weight
     /// stream across the batch (the reference engine) override this and
     /// report it via [`Backend::supports_batched_decode`].
+    ///
+    /// **Paged-KV contract:** a backend that can fail a round with
+    /// [`kv::KvExhausted`](super::kv::KvExhausted) must perform all KV
+    /// growth *before* advancing any session (all-or-nothing), so a
+    /// failed round leaves every session unadvanced. The scheduler's
+    /// preemption path relies on this to retry the identical round
+    /// after evicting a victim; a paging backend that kept this default
+    /// sequential implementation would advance early sessions before a
+    /// later one fails, and the retry would double-feed them. The
+    /// reference engine reserves every session's blocks up front for
+    /// exactly this reason.
     fn decode_batch(
         &self,
         sessions: &mut [&mut Session],
@@ -139,6 +154,18 @@ pub trait Backend: Send {
 
     /// Cumulative transport counters, when the backend is remote.
     fn transfer_meter(&self) -> Option<TransferMeter> {
+        None
+    }
+
+    /// KV-arena accounting (total/free/reserved bytes plus block
+    /// counters), when the backend pages its session memory through a
+    /// [`KvArena`](super::kv::KvArena). The default `None` keeps
+    /// stateless backends (latency models, mocks) and out-of-crate
+    /// implementations compiling unchanged — the scheduler then falls
+    /// back to slot-counting admission. The reference backend reports
+    /// its arena; the bridge forwards the *device's* arena stats (one
+    /// round trip per query).
+    fn memory(&self) -> Option<MemoryStats> {
         None
     }
 }

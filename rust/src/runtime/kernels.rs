@@ -34,6 +34,7 @@
 //! lives in `fp::mixpe`; these kernels are the fast functional
 //! counterpart.
 
+use super::kv::PagedRows;
 use crate::pack::layout::{nibble_i8, PackedQ4};
 use crate::quant::sparse::SparseMatrix;
 use crate::quant::QBLOCK;
@@ -200,13 +201,42 @@ pub fn q4_sparse_gemm_into(
 /// `q.len() = d`. Writes softmax(q·Kᵀ/√d)·V into `ctx`; `scores` is
 /// scratch. Identical operation order at any batch size (each session
 /// attends over its own cache, so there is nothing to share).
+///
+/// A contiguous cache is the degenerate paged layout (one block holding
+/// every position), so this delegates to [`attend_paged_into`] through
+/// an identity block table — bit-identity between the two paths holds
+/// by construction, not by keeping two loop bodies in sync.
 pub fn attend_into(q: &[f32], keys: &[f32], vals: &[f32], scores: &mut [f32], ctx: &mut [f32]) {
     let d = q.len();
     let len = scores.len();
     debug_assert!(keys.len() >= len * d && vals.len() >= len * d);
+    let blocks = [0u32];
+    let kr = PagedRows::new(keys, &blocks, len.max(1), 0, 0, d);
+    let vr = PagedRows::new(vals, &blocks, len.max(1), 0, 0, d);
+    attend_paged_into(q, &kr, &vr, scores, ctx);
+}
+
+/// Causal attention over a *paged* KV cache: the gather-path twin of
+/// [`attend_into`]. `keys`/`vals` are block-table views
+/// ([`PagedRows`]); `scores.len()` is the number of cached positions.
+///
+/// The loop structure, per-row [`dot4`] arithmetic, softmax, and
+/// accumulation order are identical to the contiguous kernel — only the
+/// row *addressing* goes through the block table — so for the same
+/// logical rows the output is **bit-identical** to [`attend_into`]
+/// (asserted in the unit tests below and end-to-end in
+/// `rust/tests/backend_equivalence.rs`).
+pub fn attend_paged_into(
+    q: &[f32],
+    keys: &PagedRows,
+    vals: &PagedRows,
+    scores: &mut [f32],
+    ctx: &mut [f32],
+) {
+    let d = q.len();
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
     for (i, s) in scores.iter_mut().enumerate() {
-        *s = dot4(&keys[i * d..(i + 1) * d], q) * inv_sqrt_d;
+        *s = dot4(keys.row(i), q) * inv_sqrt_d;
     }
     let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let mut wsum = 0.0f32;
@@ -217,7 +247,7 @@ pub fn attend_into(q: &[f32], keys: &[f32], vals: &[f32], scores: &mut [f32], ct
     ctx.fill(0.0);
     for (i, s) in scores.iter().enumerate() {
         let a = s / wsum;
-        let vi = &vals[i * d..(i + 1) * d];
+        let vi = vals.row(i);
         for (c, x) in ctx.iter_mut().zip(vi.iter()) {
             *c += a * x;
         }
@@ -451,6 +481,44 @@ mod tests {
         attend_into(&q, &k, &v, &mut scores, &mut ctx);
         for i in 0..d {
             assert!((ctx[i] - i as f32).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attend_paged_is_bitwise_identical_to_contiguous() {
+        // same logical rows, addressed (a) contiguously and (b) through a
+        // deliberately shuffled block table — outputs must match bit for bit
+        let (d, len, block_tokens) = (8usize, 13, 4);
+        let n_blocks = len.div_ceil(block_tokens);
+        let keys = random(len * d, 31);
+        let vals = random(len * d, 32);
+        let q = random(d, 33);
+
+        // paged storage: one layer, blocks laid out in reverse order so the
+        // table is non-trivial
+        let block_stride = block_tokens * d;
+        let blocks: Vec<u32> = (0..n_blocks as u32).rev().collect();
+        let mut kdata = vec![0f32; n_blocks * block_stride];
+        let mut vdata = vec![0f32; n_blocks * block_stride];
+        for pos in 0..len {
+            let b = blocks[pos / block_tokens] as usize;
+            let off = b * block_stride + (pos % block_tokens) * d;
+            kdata[off..off + d].copy_from_slice(&keys[pos * d..(pos + 1) * d]);
+            vdata[off..off + d].copy_from_slice(&vals[pos * d..(pos + 1) * d]);
+        }
+        let kr = PagedRows::new(&kdata, &blocks, block_tokens, block_stride, 0, d);
+        let vr = PagedRows::new(&vdata, &blocks, block_tokens, block_stride, 0, d);
+
+        for cached in [1usize, 4, 5, 13] {
+            let mut s1 = vec![0f32; cached];
+            let mut c1 = vec![0f32; d];
+            attend_into(&q, &keys[..cached * d], &vals[..cached * d], &mut s1, &mut c1);
+            let mut s2 = vec![0f32; cached];
+            let mut c2 = vec![0f32; d];
+            attend_paged_into(&q, &kr, &vr, &mut s2, &mut c2);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&c1), bits(&c2), "ctx diverged at {cached} cached positions");
+            assert_eq!(bits(&s1), bits(&s2), "scores diverged at {cached} cached positions");
         }
     }
 

@@ -1,0 +1,515 @@
+//! Paged KV storage: a block-granular arena shared by every session of
+//! a backend, replacing per-request contiguous `Vec` caches.
+//!
+//! EdgeLLM's premise is that KV/weight memory traffic — not FLOPs —
+//! bounds edge serving. The old session model worked against that:
+//! every admitted request zero-allocated a full `max_tokens` K/V cache
+//! and dropped it at retirement, so a short request paid for the
+//! longest possible one and a retired session's memory was never
+//! reused. The arena fixes both:
+//!
+//! * **Block-granular ownership.** All KV storage lives in one pool of
+//!   fixed-size *token blocks* (default [`DEFAULT_BLOCK_TOKENS`] = 64
+//!   tokens; each block holds, per layer, `block_tokens` rows of
+//!   `[kv_heads, head_dim]`). A session holds a [`KvHandle`] — a block
+//!   table plus nothing else — and grows one block at a time as it
+//!   decodes, so resident bytes track *actual* context lengths.
+//! * **Free-list recycling without re-zeroing.** Released blocks go on
+//!   a free list and are handed out again as-is; every position a
+//!   reader can reach (`< pos`) is written by prefill/decode before it
+//!   is read, so stale bytes are unobservable and the recycle path
+//!   costs no memset. [`MemoryStats::reuse_hits`] counts each recycled
+//!   block — the figure the serving stats line surfaces as
+//!   `kv_reuse_hits`.
+//! * **Memory-aware admission.** [`MemoryStats`] (total/free/reserved
+//!   bytes plus block-granular counters) is what
+//!   [`Backend::memory`](super::backend::Backend::memory) reports and
+//!   what the scheduler's admission gate consumes: a request is
+//!   admitted while the arena can still cover its *worst-case* block
+//!   count (prompt + `max_new_tokens`), so `max_active` becomes a cap,
+//!   not the allocator.
+//! * **Structured exhaustion.** Growth past the pool fails with the
+//!   typed [`KvExhausted`] error; the scheduler turns that into a
+//!   preemption (`Event::Error("preempted: …")`) of the youngest
+//!   session instead of failing the whole round.
+//!
+//! Layout of one block (`block_stride` f32 elements, identical for K
+//! and V):
+//!
+//! ```text
+//! block b:  [layer 0: block_tokens rows of `row` floats]
+//!           [layer 1: block_tokens rows]
+//!           ...
+//!           [layer L-1: block_tokens rows]
+//! position p of a session lives in  block_table[p / block_tokens]
+//! at row offset                     (p % block_tokens) * row
+//! ```
+//!
+//! The gather path ([`PagedRows`] + `kernels::attend_paged_into`) walks
+//! positions in the same order and with the same per-row arithmetic as
+//! the contiguous kernels, so paged attention is **bit-identical** to
+//! the contiguous path — asserted in `rust/tests/backend_equivalence.rs`
+//! and the kernel unit tests.
+
+use std::fmt;
+
+/// Default tokens per block. 64 keeps the block table tiny while
+/// bounding per-request overallocation to < 64 tokens of KV rows.
+pub const DEFAULT_BLOCK_TOKENS: usize = 64;
+
+/// Arena accounting reported by [`Backend::memory`] and surfaced on the
+/// serving stats line (`kv_blocks_total`, `kv_blocks_free`,
+/// `kv_reuse_hits`). Byte figures count K **and** V storage.
+///
+/// [`Backend::memory`]: super::backend::Backend::memory
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoryStats {
+    /// pool capacity in bytes (`blocks_total * block bytes`)
+    pub total_bytes: u64,
+    /// bytes not held by any live handle
+    pub free_bytes: u64,
+    /// bytes held by live handles (`total_bytes - free_bytes`)
+    pub reserved_bytes: u64,
+    /// tokens per block — what converts a token budget into blocks
+    pub block_tokens: u64,
+    pub blocks_total: u64,
+    pub blocks_free: u64,
+    /// blocks handed out from the free list (recycled without zeroing)
+    pub reuse_hits: u64,
+    /// high-water mark of `reserved_bytes` over the arena's lifetime —
+    /// the true peak KV residency, including blocks that were released
+    /// again before any caller could sample `reserved_bytes`
+    pub peak_reserved_bytes: u64,
+}
+
+/// The stable marker every rendering of [`KvExhausted`] starts with —
+/// what the scheduler matches when the error crossed the bridge as a
+/// `Frame::Error` string and the typed downcast is unavailable. One
+/// constant shared by the `Display` impl and the matcher, so the two
+/// cannot drift apart (a reworded message would otherwise silently turn
+/// bridged preemptions into whole-round failures).
+pub const KV_EXHAUSTED_MARKER: &str = "kv arena exhausted";
+
+/// Typed "the pool is out of blocks" error. The scheduler downcasts it
+/// (or matches [`KV_EXHAUSTED_MARKER`] when it crossed the bridge as a
+/// string) to drive the preemption path instead of failing the whole
+/// round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvExhausted {
+    pub needed_blocks: usize,
+    pub blocks_free: usize,
+}
+
+impl fmt::Display for KvExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{KV_EXHAUSTED_MARKER}: need {} block(s), {} free",
+            self.needed_blocks, self.blocks_free
+        )
+    }
+}
+
+impl std::error::Error for KvExhausted {}
+
+/// A session's share of the arena: the ordered block table. Positions
+/// `[0, blocks.len() * block_tokens)` are addressable; `Session::pos`
+/// tracks how many are live. Deliberately not `Clone` — two handles
+/// naming the same blocks would alias KV state and double-free on
+/// release.
+#[derive(Debug, Default)]
+pub struct KvHandle {
+    blocks: Vec<u32>,
+}
+
+impl KvHandle {
+    /// The block table (ids into the owning arena), in position order.
+    pub fn blocks(&self) -> &[u32] {
+        &self.blocks
+    }
+
+    /// True for sessions that hold no arena storage (stateless/remote
+    /// backends, or already released).
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Token positions this handle can address.
+    pub fn capacity_tokens(&self, block_tokens: usize) -> usize {
+        self.blocks.len() * block_tokens
+    }
+}
+
+/// Read-only view of one layer's K (or V) rows through a block table —
+/// the gather side of the paged path, consumed by
+/// `kernels::attend_paged_into`. Constructed by [`KvArena::k_rows`] /
+/// [`KvArena::v_rows`] (or [`PagedRows::new`] for custom storage).
+pub struct PagedRows<'a> {
+    data: &'a [f32],
+    blocks: &'a [u32],
+    block_tokens: usize,
+    block_stride: usize,
+    layer_off: usize,
+    row: usize,
+}
+
+impl<'a> PagedRows<'a> {
+    pub fn new(
+        data: &'a [f32],
+        blocks: &'a [u32],
+        block_tokens: usize,
+        block_stride: usize,
+        layer_off: usize,
+        row: usize,
+    ) -> Self {
+        PagedRows { data, blocks, block_tokens, block_stride, layer_off, row }
+    }
+
+    /// The `row`-float K/V row of position `pos`. One block-table
+    /// lookup plus an offset — the paged analogue of `&cache[pos*d..]`.
+    #[inline(always)]
+    pub fn row(&self, pos: usize) -> &'a [f32] {
+        let off = row_offset(
+            self.blocks,
+            self.block_tokens,
+            self.block_stride,
+            self.layer_off,
+            self.row,
+            pos,
+        );
+        &self.data[off..off + self.row]
+    }
+}
+
+/// The one block/layer/row addressing formula, shared by the gather
+/// view and the arena's mutable accessors so the two can never diverge.
+#[inline(always)]
+fn row_offset(
+    blocks: &[u32],
+    block_tokens: usize,
+    block_stride: usize,
+    layer_off: usize,
+    row: usize,
+    pos: usize,
+) -> usize {
+    let b = blocks[pos / block_tokens] as usize;
+    b * block_stride + layer_off + (pos % block_tokens) * row
+}
+
+/// The pool. Owns all K/V storage of one backend as `max_blocks`
+/// fixed-size blocks; storage is materialized lazily (first use of a
+/// fresh block grows the backing `Vec` by one `block_stride`), so a
+/// generous cap costs nothing until blocks are actually touched.
+pub struct KvArena {
+    block_tokens: usize,
+    max_blocks: usize,
+    /// f32 elements per block (per K and per V): `layers * block_tokens * row`
+    block_stride: usize,
+    row: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// released blocks, handed out again without re-zeroing
+    free: Vec<u32>,
+    /// blocks whose storage exists (`k.len() == materialized * stride`)
+    materialized: usize,
+    /// blocks currently held by live handles
+    in_use: usize,
+    /// high-water mark of `in_use`
+    peak_in_use: usize,
+    reuse_hits: u64,
+}
+
+impl KvArena {
+    /// `row` is the per-token, per-layer KV row width in f32 elements
+    /// (`kv_heads * head_dim`).
+    pub fn new(n_layers: usize, row: usize, block_tokens: usize, max_blocks: usize) -> Self {
+        let block_tokens = block_tokens.max(1);
+        KvArena {
+            block_tokens,
+            max_blocks,
+            block_stride: n_layers * block_tokens * row,
+            row,
+            k: Vec::new(),
+            v: Vec::new(),
+            free: Vec::new(),
+            materialized: 0,
+            in_use: 0,
+            peak_in_use: 0,
+            reuse_hits: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn blocks_total(&self) -> usize {
+        self.max_blocks
+    }
+
+    pub fn blocks_free(&self) -> usize {
+        self.max_blocks - self.in_use
+    }
+
+    /// Blocks needed to address `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.max(1).div_ceil(self.block_tokens)
+    }
+
+    fn take_block(&mut self) -> u32 {
+        if let Some(b) = self.free.pop() {
+            // recycled as-is: every reachable position is written before
+            // it is read, so stale bytes are unobservable
+            self.reuse_hits += 1;
+            return b;
+        }
+        let b = self.materialized as u32;
+        self.materialized += 1;
+        self.k.resize(self.materialized * self.block_stride, 0.0);
+        self.v.resize(self.materialized * self.block_stride, 0.0);
+        b
+    }
+
+    /// Allocate a handle covering `tokens` positions, or fail whole —
+    /// a partial reservation is never handed out.
+    pub fn reserve(&mut self, tokens: usize) -> Result<KvHandle, KvExhausted> {
+        let need = self.blocks_for(tokens);
+        if need > self.blocks_free() {
+            return Err(KvExhausted { needed_blocks: need, blocks_free: self.blocks_free() });
+        }
+        let mut h = KvHandle::default();
+        for _ in 0..need {
+            let b = self.take_block();
+            self.in_use += 1;
+            h.blocks.push(b);
+        }
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        Ok(h)
+    }
+
+    /// Grow `h` until it addresses `tokens` positions (lazy decode-time
+    /// growth: one extra block per `block_tokens` generated tokens).
+    pub fn ensure(&mut self, h: &mut KvHandle, tokens: usize) -> Result<(), KvExhausted> {
+        let need_total = self.blocks_for(tokens);
+        while h.blocks.len() < need_total {
+            if self.blocks_free() == 0 {
+                return Err(KvExhausted {
+                    needed_blocks: need_total - h.blocks.len(),
+                    blocks_free: 0,
+                });
+            }
+            let b = self.take_block();
+            self.in_use += 1;
+            h.blocks.push(b);
+        }
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        Ok(())
+    }
+
+    /// Return every block of `h` to the free list. Draining the handle
+    /// makes a second release (or a release after `end_session` already
+    /// ran) a structural no-op — no double-free is representable.
+    pub fn release(&mut self, h: &mut KvHandle) {
+        self.in_use -= h.blocks.len();
+        self.free.append(&mut h.blocks);
+    }
+
+    fn offset(&self, h: &KvHandle, layer: usize, pos: usize) -> usize {
+        row_offset(
+            &h.blocks,
+            self.block_tokens,
+            self.block_stride,
+            layer * self.block_tokens * self.row,
+            self.row,
+            pos,
+        )
+    }
+
+    /// Mutable K row of `pos` — the scatter side of the paged path.
+    pub fn k_row_mut(&mut self, h: &KvHandle, layer: usize, pos: usize) -> &mut [f32] {
+        let o = self.offset(h, layer, pos);
+        &mut self.k[o..o + self.row]
+    }
+
+    /// Mutable V row of `pos`.
+    pub fn v_row_mut(&mut self, h: &KvHandle, layer: usize, pos: usize) -> &mut [f32] {
+        let o = self.offset(h, layer, pos);
+        &mut self.v[o..o + self.row]
+    }
+
+    /// Gather view over `h`'s K rows of one layer.
+    pub fn k_rows<'a>(&'a self, h: &'a KvHandle, layer: usize) -> PagedRows<'a> {
+        PagedRows::new(
+            &self.k,
+            &h.blocks,
+            self.block_tokens,
+            self.block_stride,
+            layer * self.block_tokens * self.row,
+            self.row,
+        )
+    }
+
+    /// Gather view over `h`'s V rows of one layer.
+    pub fn v_rows<'a>(&'a self, h: &'a KvHandle, layer: usize) -> PagedRows<'a> {
+        PagedRows::new(
+            &self.v,
+            &h.blocks,
+            self.block_tokens,
+            self.block_stride,
+            layer * self.block_tokens * self.row,
+            self.row,
+        )
+    }
+
+    pub fn stats(&self) -> MemoryStats {
+        let block_bytes = (self.block_stride * 2 * std::mem::size_of::<f32>()) as u64;
+        MemoryStats {
+            total_bytes: self.max_blocks as u64 * block_bytes,
+            free_bytes: self.blocks_free() as u64 * block_bytes,
+            reserved_bytes: self.in_use as u64 * block_bytes,
+            block_tokens: self.block_tokens as u64,
+            blocks_total: self.max_blocks as u64,
+            blocks_free: self.blocks_free() as u64,
+            reuse_hits: self.reuse_hits,
+            peak_reserved_bytes: self.peak_in_use as u64 * block_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> KvArena {
+        // 2 layers, 4-float rows, 8-token blocks, 4-block pool
+        KvArena::new(2, 4, 8, 4)
+    }
+
+    #[test]
+    fn reserve_rounds_up_to_blocks() {
+        let mut a = tiny();
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(8), 1);
+        assert_eq!(a.blocks_for(9), 2);
+        let h = a.reserve(9).unwrap();
+        assert_eq!(h.blocks().len(), 2);
+        assert_eq!(h.capacity_tokens(a.block_tokens()), 16);
+        assert_eq!(a.blocks_free(), 2);
+    }
+
+    #[test]
+    fn reserve_fails_whole_when_short() {
+        let mut a = tiny();
+        let _h = a.reserve(32).unwrap(); // all 4 blocks
+        let err = a.reserve(1).unwrap_err();
+        assert_eq!(err.blocks_free, 0);
+        assert_eq!(a.blocks_free(), 0, "failed reserve must not hold blocks");
+        assert!(format!("{err}").contains("kv arena exhausted"));
+    }
+
+    #[test]
+    fn ensure_grows_one_block_at_a_time() {
+        let mut a = tiny();
+        let mut h = a.reserve(3).unwrap();
+        assert_eq!(h.blocks().len(), 1);
+        a.ensure(&mut h, 8).unwrap();
+        assert_eq!(h.blocks().len(), 1, "still inside the first block");
+        a.ensure(&mut h, 9).unwrap();
+        assert_eq!(h.blocks().len(), 2);
+        a.ensure(&mut h, 32).unwrap();
+        assert_eq!(h.blocks().len(), 4);
+        assert!(a.ensure(&mut h, 33).is_err(), "pool holds only 4 blocks");
+    }
+
+    #[test]
+    fn release_recycles_without_rezeroing_and_counts_reuse() {
+        let mut a = tiny();
+        let mut h = a.reserve(8).unwrap();
+        a.k_row_mut(&h, 0, 3).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let block = h.blocks()[0];
+        a.release(&mut h);
+        assert!(h.is_empty());
+        assert_eq!(a.blocks_free(), 4);
+        assert_eq!(a.stats().reuse_hits, 0);
+
+        let h2 = a.reserve(8).unwrap();
+        assert_eq!(h2.blocks()[0], block, "free list hands the block back");
+        assert_eq!(a.stats().reuse_hits, 1);
+        // recycled as-is: the stale row is still there (and would be
+        // overwritten before any reader could reach it)
+        assert_eq!(a.k_rows(&h2, 0).row(3), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn double_release_is_a_noop() {
+        let mut a = tiny();
+        let mut h = a.reserve(8).unwrap();
+        a.release(&mut h);
+        a.release(&mut h);
+        assert_eq!(a.blocks_free(), 4);
+        assert_eq!(a.stats().blocks_free, a.stats().blocks_total);
+    }
+
+    #[test]
+    fn paged_rows_address_across_shuffled_blocks() {
+        let mut a = tiny();
+        // force a non-identity block table: reserve, release the first
+        // handle, reserve again so the free list reverses the order
+        let mut h0 = a.reserve(16).unwrap();
+        let mut h1 = a.reserve(16).unwrap();
+        a.release(&mut h0);
+        a.release(&mut h1);
+        let h = a.reserve(32).unwrap();
+        // write a recognizable value at every position/layer, then read
+        // it back through the gather view
+        for layer in 0..2 {
+            for pos in 0..32 {
+                let val = (layer * 100 + pos) as f32;
+                a.k_row_mut(&h, layer, pos).fill(val);
+                a.v_row_mut(&h, layer, pos).fill(-val);
+            }
+        }
+        for layer in 0..2 {
+            let kr = a.k_rows(&h, layer);
+            let vr = a.v_rows(&h, layer);
+            for pos in 0..32 {
+                let val = (layer * 100 + pos) as f32;
+                assert!(kr.row(pos).iter().all(|&x| x == val), "k layer {layer} pos {pos}");
+                assert!(vr.row(pos).iter().all(|&x| x == -val), "v layer {layer} pos {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_are_internally_consistent() {
+        let mut a = tiny();
+        let s0 = a.stats();
+        assert_eq!(s0.total_bytes, s0.free_bytes);
+        assert_eq!(s0.reserved_bytes, 0);
+        assert_eq!(s0.block_tokens, 8);
+        let mut h = a.reserve(20).unwrap(); // 3 blocks
+        let s1 = a.stats();
+        assert_eq!(s1.blocks_total, 4);
+        assert_eq!(s1.blocks_free, 1);
+        assert_eq!(s1.free_bytes + s1.reserved_bytes, s1.total_bytes);
+        // one block = 2 layers * 8 tokens * 4 floats * 4 bytes * (K+V)
+        assert_eq!(s1.total_bytes, 4 * (2 * 8 * 4 * 4 * 2) as u64);
+        // the watermark survives a release that a later sample would miss
+        assert_eq!(s1.peak_reserved_bytes, s1.reserved_bytes);
+        a.release(&mut h);
+        let s2 = a.stats();
+        assert_eq!(s2.reserved_bytes, 0);
+        assert_eq!(s2.peak_reserved_bytes, s1.reserved_bytes, "peak must not reset");
+    }
+
+    #[test]
+    fn storage_materializes_lazily() {
+        let mut a = KvArena::new(1, 4, 8, 1024);
+        assert_eq!(a.k.len(), 0, "no storage before first use");
+        let mut h = a.reserve(8).unwrap();
+        assert_eq!(a.k.len(), a.block_stride, "one block materialized");
+        a.release(&mut h);
+        let _h2 = a.reserve(8).unwrap();
+        assert_eq!(a.k.len(), a.block_stride, "recycling allocates nothing");
+    }
+}

@@ -109,6 +109,7 @@ pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
 
 pub mod backend;
 pub mod kernels;
+pub mod kv;
 pub mod model;
 pub mod reference;
 pub mod weights;

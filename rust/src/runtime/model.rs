@@ -28,6 +28,7 @@ use std::path::PathBuf;
 #[cfg(feature = "pjrt")]
 use super::weights::{self, DType, Tensor};
 use super::backend::{Backend, TransferMeter};
+use super::kv::{KvHandle, MemoryStats};
 use super::reference::{RefLlm, ReferenceConfig};
 use crate::models::{LlmArch, SparseStrategy};
 use crate::sim::Memory;
@@ -60,14 +61,23 @@ pub struct LlmRuntime {
     backend: Box<dyn Backend>,
 }
 
-/// Mutable per-request state: the KV cache (host copy) and position.
+/// Mutable per-request state: position plus a handle to whatever KV
+/// storage the owning backend keeps for it.
 ///
 /// One `Session` per live request; the continuous-batching scheduler
-/// keeps up to `max_active` of these in flight at once. `Clone` snapshots
-/// the full KV state (used by the benches to reset between samples).
-/// Backends that keep no host KV tensors (latency models, mocks) mint
-/// sessions with an all-zero shape and only advance `pos`.
-#[derive(Clone)]
+/// keeps up to `max_active` of these in flight at once. Since the paged
+/// refactor a session no longer *owns* cache tensors: the reference
+/// backend's KV lives in its shared [`KvArena`](super::kv::KvArena) and
+/// the session carries only the block table ([`KvHandle`]). Backends
+/// that keep no host KV at all (latency models, mocks, the bridge)
+/// mint sessions with `Session::new([0, 0, 0, 0])` and only advance
+/// `pos`. Deliberately not `Clone`: two sessions naming the same arena
+/// blocks would alias KV state and double-free on release — reset a
+/// workload with a fresh `prefill` instead (the benches do).
+///
+/// A session that leaves the scheduler is handed back to its backend
+/// via [`Backend::end_session`] so arena blocks (or device-side state)
+/// are recycled, not leaked until process exit.
 pub struct Session {
     pub pos: usize,
     /// Backend-private correlation tag, carried opaquely by the
@@ -75,7 +85,14 @@ pub struct Session {
     /// here (the bridge reserves 0 for "no remote session"); in-process
     /// backends leave it at 0.
     pub tag: u64,
+    /// Block table into the owning backend's paged KV arena; empty for
+    /// stateless and remote backends.
+    pub(crate) kv: KvHandle,
+    // Legacy contiguous host KV copy — only the PJRT artifact path uses
+    // these (it re-uploads the whole cache every step).
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     pub(crate) k_cache: Vec<f32>,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     pub(crate) v_cache: Vec<f32>,
     /// only the PJRT backend re-uploads the cache and needs its dims
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
@@ -86,15 +103,33 @@ impl Session {
     /// Fresh zeroed session for a model whose per-layer KV cache has the
     /// given shape `[layers, max_tokens, kv_heads, head_dim]`. Public so
     /// out-of-crate [`Backend`] implementations can mint sessions; a
-    /// stateless backend passes `[0, 0, 0, 0]`.
+    /// stateless backend passes `[0, 0, 0, 0]`. (Backends that page
+    /// their KV through a [`KvArena`](super::kv::KvArena) use
+    /// [`Session::with_kv`] instead — this constructor allocates the
+    /// legacy contiguous host copy.)
     pub fn new(cache_shape: [usize; 4]) -> Self {
         let n: usize = cache_shape.iter().product();
         Session {
             pos: 0,
             tag: 0,
+            kv: KvHandle::default(),
             k_cache: vec![0.0; n],
             v_cache: vec![0.0; n],
             cache_dims: cache_shape.to_vec(),
+        }
+    }
+
+    /// Session whose KV state is the given arena block table (no host
+    /// tensors). The backend that reserved the handle owns the arena
+    /// and must release the handle in its `end_session`.
+    pub fn with_kv(kv: KvHandle) -> Self {
+        Session {
+            pos: 0,
+            tag: 0,
+            kv,
+            k_cache: Vec::new(),
+            v_cache: Vec::new(),
+            cache_dims: Vec::new(),
         }
     }
 }
@@ -244,6 +279,15 @@ impl LlmRuntime {
     /// True when backend calls cross a transport to a device daemon.
     pub fn is_remote(&self) -> bool {
         self.backend.is_remote()
+    }
+
+    /// KV-arena accounting, when the backend pages its session memory
+    /// (`None` for stateless backends and mocks). The scheduler's
+    /// memory-aware admission gate and the serving stats line
+    /// (`kv_blocks_total/free`, `kv_reuse_hits`) read this; for the
+    /// bridge it is one metered round trip to the device.
+    pub fn memory(&self) -> Option<MemoryStats> {
+        self.backend.memory()
     }
 
     /// Cumulative host↔device transport counters (remote backends).
@@ -444,6 +488,7 @@ impl Backend for PjrtBackend {
         let session = Session {
             pos: prompt.len(),
             tag: 0,
+            kv: KvHandle::default(),
             k_cache: kc.to_vec::<f32>().map_err(|e| anyhow!("kc to_vec: {e:?}"))?,
             v_cache: vc.to_vec::<f32>().map_err(|e| anyhow!("vc to_vec: {e:?}"))?,
             cache_dims: self.info.cache_shape.to_vec(),

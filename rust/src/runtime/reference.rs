@@ -39,7 +39,10 @@ use std::cell::RefCell;
 use anyhow::{bail, Result};
 
 use super::backend::Backend;
-use super::kernels::{attend_into, gelu, gemm_into, matvec_into, q4_gemm_into, q4_sparse_gemm_into};
+use super::kernels::{
+    attend_paged_into, gelu, gemm_into, matvec_into, q4_gemm_into, q4_sparse_gemm_into,
+};
+use super::kv::{KvArena, MemoryStats, DEFAULT_BLOCK_TOKENS};
 use super::model::{ModelInfo, Session};
 use crate::pack::layout::PackedQ4;
 use crate::quant::sparse::{pack_sparse, SparseMatrix};
@@ -61,6 +64,15 @@ pub struct ReferenceConfig {
     /// Log-scale structured sparsity applied to the FFN weights before
     /// quantization; `Sparsity::Dense` uses the dense nibble-packed path.
     pub ffn_sparsity: Sparsity,
+    /// Tokens per KV-arena block (CLI `--kv-block-tokens`). Smaller
+    /// blocks track actual context lengths more tightly at the cost of
+    /// a longer block table; `block_tokens >= max_tokens` degenerates
+    /// to one contiguous block per session.
+    pub kv_block_tokens: usize,
+    /// KV pool capacity in blocks (CLI `--kv-pool-blocks`). `0` = auto:
+    /// 64 full-length sessions' worth — storage materializes lazily, so
+    /// the generous default costs nothing until blocks are touched.
+    pub kv_pool_blocks: usize,
 }
 
 impl Default for ReferenceConfig {
@@ -73,6 +85,8 @@ impl Default for ReferenceConfig {
             max_tokens: 64,
             seed: 0x5EED,
             ffn_sparsity: Sparsity::Dense,
+            kv_block_tokens: DEFAULT_BLOCK_TOKENS,
+            kv_pool_blocks: 0,
         }
     }
 }
@@ -211,6 +225,10 @@ pub struct RefLlm {
     w_out: Vec<f32>,
     buckets: Vec<usize>,
     scratch: RefCell<Scratch>,
+    /// all session KV storage, block-granular; sessions carry only a
+    /// block table (RefCell: `Backend` methods take `&self`, and the
+    /// engine serializes calls externally)
+    arena: RefCell<KvArena>,
 }
 
 fn init(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
@@ -272,6 +290,17 @@ impl RefLlm {
             n_params,
             cache_shape: [cfg.n_layers, cfg.max_tokens, 1, d],
         };
+        // the KV arena owns all session memory as token blocks: row
+        // width is the per-layer cache row (kv_heads * head_dim = d
+        // here), pool defaults to 64 full-length sessions' worth
+        // (lazily materialized)
+        let bt = cfg.kv_block_tokens.max(1);
+        let blocks_per_session = cfg.max_tokens.max(1).div_ceil(bt);
+        let max_blocks = if cfg.kv_pool_blocks > 0 {
+            cfg.kv_pool_blocks
+        } else {
+            blocks_per_session * 64
+        };
         RefLlm {
             info,
             emb,
@@ -279,6 +308,7 @@ impl RefLlm {
             w_out,
             buckets,
             scratch: RefCell::new(Scratch::default()),
+            arena: RefCell::new(KvArena::new(cfg.n_layers, d, bt, max_blocks)),
         }
     }
 
@@ -288,10 +318,6 @@ impl RefLlm {
 
     pub fn prefill_buckets(&self) -> &[usize] {
         &self.buckets
-    }
-
-    fn fresh_session(&self) -> Session {
-        Session::new(self.info.cache_shape)
     }
 
     /// Grow the scratch arena to hold `rows` activation rows.
@@ -376,7 +402,9 @@ impl RefLlm {
 
     /// Sequence-level prefill: the whole prompt advances through each
     /// weight matrix in one GEMM; only the last position's logits are
-    /// computed. Returns those logits plus the primed session.
+    /// computed. Returns those logits plus the primed session, whose KV
+    /// rows live in arena blocks reserved here (recycled from retired
+    /// sessions when the free list has any).
     pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
         let t = prompt.len();
         if t == 0 {
@@ -387,7 +415,12 @@ impl RefLlm {
             bail!("prompt of {t} exceeds max_tokens {max_t}");
         }
         let d = self.info.d_model;
-        let mut session = self.fresh_session();
+        let kv = self
+            .arena
+            .borrow_mut()
+            .reserve(t)
+            .map_err(anyhow::Error::new)?;
+        let mut session = Session::with_kv(kv);
         let mut sc = self.scratch.borrow_mut();
         let sc = &mut *sc;
         self.reserve(sc, t);
@@ -397,19 +430,32 @@ impl RefLlm {
         }
         for (li, layer) in self.layers.iter().enumerate() {
             self.qkv(layer, t, sc);
-            // all T K/V rows land contiguously at positions 0..T
-            let base = li * max_t * d;
-            session.k_cache[base..base + t * d].copy_from_slice(&sc.k[..t * d]);
-            session.v_cache[base..base + t * d].copy_from_slice(&sc.v[..t * d]);
-            for i in 0..t {
-                let len = i + 1;
-                attend_into(
-                    &sc.q[i * d..(i + 1) * d],
-                    &session.k_cache[base..base + len * d],
-                    &session.v_cache[base..base + len * d],
-                    &mut sc.scores[..len],
-                    &mut sc.ctx[i * d..(i + 1) * d],
-                );
+            {
+                // scatter the T fresh K/V rows into the block table,
+                // then attend through the gather view — bit-identical
+                // to the old contiguous writes
+                let mut arena = self.arena.borrow_mut();
+                for i in 0..t {
+                    arena
+                        .k_row_mut(&session.kv, li, i)
+                        .copy_from_slice(&sc.k[i * d..(i + 1) * d]);
+                    arena
+                        .v_row_mut(&session.kv, li, i)
+                        .copy_from_slice(&sc.v[i * d..(i + 1) * d]);
+                }
+                let arena = &*arena;
+                let kr = arena.k_rows(&session.kv, li);
+                let vr = arena.v_rows(&session.kv, li);
+                for i in 0..t {
+                    let len = i + 1;
+                    attend_paged_into(
+                        &sc.q[i * d..(i + 1) * d],
+                        &kr,
+                        &vr,
+                        &mut sc.scores[..len],
+                        &mut sc.ctx[i * d..(i + 1) * d],
+                    );
+                }
             }
             self.mix_and_ffn(layer, t, sc);
         }
@@ -445,6 +491,19 @@ impl RefLlm {
                 bail!("KV cache full (max_tokens={max_t})");
             }
         }
+        // lazy growth, all-or-nothing *before* any compute or scatter: a
+        // session crossing a block boundary takes one block from the
+        // pool here; on exhaustion the round fails with the typed
+        // KvExhausted error while every session is still unadvanced, so
+        // the scheduler can preempt and retry the round bit-identically
+        {
+            let mut arena = self.arena.borrow_mut();
+            for sess in sessions.iter_mut() {
+                arena
+                    .ensure(&mut sess.kv, sess.pos + 1)
+                    .map_err(anyhow::Error::new)?;
+            }
+        }
         let d = self.info.d_model;
         let mut sc = self.scratch.borrow_mut();
         let sc = &mut *sc;
@@ -455,21 +514,27 @@ impl RefLlm {
         }
         for (li, layer) in self.layers.iter().enumerate() {
             self.qkv(layer, b, sc);
-            let base = li * max_t * d;
-            for (s, sess) in sessions.iter_mut().enumerate() {
-                let pos = sess.pos;
-                sess.k_cache[base + pos * d..base + (pos + 1) * d]
-                    .copy_from_slice(&sc.k[s * d..(s + 1) * d]);
-                sess.v_cache[base + pos * d..base + (pos + 1) * d]
-                    .copy_from_slice(&sc.v[s * d..(s + 1) * d]);
-                let len = pos + 1;
-                attend_into(
-                    &sc.q[s * d..(s + 1) * d],
-                    &sess.k_cache[base..base + len * d],
-                    &sess.v_cache[base..base + len * d],
-                    &mut sc.scores[..len],
-                    &mut sc.ctx[s * d..(s + 1) * d],
-                );
+            {
+                let mut arena = self.arena.borrow_mut();
+                for (s, sess) in sessions.iter_mut().enumerate() {
+                    let pos = sess.pos;
+                    arena
+                        .k_row_mut(&sess.kv, li, pos)
+                        .copy_from_slice(&sc.k[s * d..(s + 1) * d]);
+                    arena
+                        .v_row_mut(&sess.kv, li, pos)
+                        .copy_from_slice(&sc.v[s * d..(s + 1) * d]);
+                    let len = pos + 1;
+                    let kr = arena.k_rows(&sess.kv, li);
+                    let vr = arena.v_rows(&sess.kv, li);
+                    attend_paged_into(
+                        &sc.q[s * d..(s + 1) * d],
+                        &kr,
+                        &vr,
+                        &mut sc.scores[..len],
+                        &mut sc.ctx[s * d..(s + 1) * d],
+                    );
+                }
             }
             self.mix_and_ffn(layer, b, sc);
         }
@@ -524,6 +589,12 @@ impl RefLlm {
             }
         }
         out.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Current KV-arena accounting (also surfaced through
+    /// `Backend::memory` / `LlmRuntime::memory`).
+    pub fn memory_stats(&self) -> MemoryStats {
+        self.arena.borrow().stats()
     }
 
     /// Resident weight bytes of the quantized FFN stack (values +
@@ -582,6 +653,18 @@ impl Backend for RefLlm {
 
     fn ffn_weight_bytes(&self) -> Option<usize> {
         Some(RefLlm::ffn_weight_bytes(self))
+    }
+
+    /// Retirement returns the session's blocks to the free list, where
+    /// the next admission recycles them without re-zeroing — the whole
+    /// point of the arena. Draining the handle makes a repeated call a
+    /// no-op.
+    fn end_session(&self, session: &mut Session) {
+        self.arena.borrow_mut().release(&mut session.kv);
+    }
+
+    fn memory(&self) -> Option<MemoryStats> {
+        Some(self.memory_stats())
     }
 }
 
@@ -722,6 +805,91 @@ mod tests {
         let (ls, _) = sparse.prefill(&[1, 2, 3]).unwrap();
         assert_ne!(ld, ls, "pruning must change the function");
         assert!(ls.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn paged_blocks_match_contiguous_sized_blocks_bitwise() {
+        // block_tokens = max_tokens is the degenerate one-block-per-session
+        // (contiguous) layout; a 4-token block layout pages every session
+        // across many blocks. Same seed => outputs must be bit-identical.
+        let contiguous = RefLlm::new(ReferenceConfig {
+            kv_block_tokens: 64,
+            ..ReferenceConfig::default()
+        });
+        let paged = RefLlm::new(ReferenceConfig {
+            kv_block_tokens: 4,
+            ..ReferenceConfig::default()
+        });
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let (lc, mut sc) = contiguous.prefill(&[1, 2, 3, 4, 5]).unwrap();
+        let (lp, mut sp) = paged.prefill(&[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(bits(&lc), bits(&lp), "prefill diverged");
+        for t in 0..10 {
+            let dc = contiguous.decode(&mut sc, t).unwrap();
+            let dp = paged.decode(&mut sp, t).unwrap();
+            assert_eq!(bits(&dc), bits(&dp), "decode diverged at token {t}");
+        }
+        assert!(sp.kv.blocks().len() > sc.kv.blocks().len(), "paged run spans blocks");
+    }
+
+    #[test]
+    fn end_session_recycles_blocks_without_rezeroing() {
+        let m = RefLlm::new(ReferenceConfig {
+            kv_pool_blocks: 2,
+            kv_block_tokens: 64,
+            ..ReferenceConfig::default()
+        });
+        let (_, mut a) = m.prefill(&[1, 2, 3]).unwrap();
+        let (_, mut b) = m.prefill(&[4, 5]).unwrap();
+        // pool of 2 is now exhausted
+        let err = m.prefill(&[6]).unwrap_err();
+        assert!(format!("{err:#}").contains("kv arena exhausted"), "{err:#}");
+        // retiring a session makes its block reusable — and the recycled
+        // session must still compute correctly on the stale block
+        Backend::end_session(&m, &mut a);
+        assert!(a.kv.is_empty());
+        let (l1, mut c) = m.prefill(&[1, 2, 3]).unwrap();
+        let stats = Backend::memory(&m).unwrap();
+        assert_eq!(stats.reuse_hits, 1, "{stats:?}");
+        assert_eq!(stats.blocks_free, 0);
+        // the recycled block serves bit-identical logits to a fresh model
+        let fresh = RefLlm::new(ReferenceConfig {
+            kv_pool_blocks: 2,
+            kv_block_tokens: 64,
+            ..ReferenceConfig::default()
+        });
+        let (l2, _) = fresh.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(l1, l2, "stale block bytes leaked into the computation");
+        Backend::end_session(&m, &mut b);
+        Backend::end_session(&m, &mut c);
+        let stats = m.memory_stats();
+        assert_eq!(stats.blocks_free, stats.blocks_total, "blocks leaked");
+    }
+
+    #[test]
+    fn decode_growth_exhaustion_is_typed_and_leaves_sessions_unadvanced() {
+        use crate::runtime::kv::KvExhausted;
+        // one 4-token block per session, 2-block pool: two sessions fit
+        // until either needs a second block
+        let m = RefLlm::new(ReferenceConfig {
+            kv_block_tokens: 4,
+            kv_pool_blocks: 2,
+            ..ReferenceConfig::default()
+        });
+        let (_, mut a) = m.prefill(&[1, 2, 3]).unwrap();
+        let (_, mut b) = m.prefill(&[4, 5, 6]).unwrap();
+        m.decode(&mut a, 7).unwrap(); // pos 4, block full
+        let pos_a = a.pos;
+        let pos_b = b.pos;
+        let mut batch = [&mut a, &mut b];
+        let err = m.decode_batch(&mut batch, &[8, 9]).unwrap_err();
+        assert!(err.downcast_ref::<KvExhausted>().is_some(), "{err:#}");
+        assert_eq!(a.pos, pos_a, "failed growth must not advance sessions");
+        assert_eq!(b.pos, pos_b);
+        // releasing b unblocks a's growth
+        Backend::end_session(&m, &mut b);
+        m.decode(&mut a, 8).unwrap();
+        assert_eq!(a.pos, pos_a + 1);
     }
 
     #[test]

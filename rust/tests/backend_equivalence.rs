@@ -192,6 +192,54 @@ fn greedy_trajectories_identical_at_any_batch_size() {
     assert_eq!(scalar_traj, batched_traj);
 }
 
+/// Acceptance (paged KV): decoding through a block-granular arena is
+/// *bit-identical* to the contiguous cache layout for mixed-length
+/// batches — `kv_block_tokens = max_tokens` is the degenerate
+/// one-block-per-session (contiguous) layout, 8-token blocks page every
+/// session across a table, and the logits bits must agree at every
+/// round. (The bridged-backend variant of this assertion lives in
+/// rust/tests/bridge.rs::paged_device_blocks_are_bitwise_invisible_end_to_end.)
+#[test]
+fn paged_kv_decode_is_bit_identical_to_contiguous_for_mixed_batches() {
+    let contiguous = LlmRuntime::reference(ReferenceConfig {
+        kv_block_tokens: 64,
+        ..cfg(Sparsity::Dense)
+    });
+    let paged = LlmRuntime::reference(ReferenceConfig {
+        kv_block_tokens: 8,
+        ..cfg(Sparsity::Dense)
+    });
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+    let prompts: [&[i32]; 4] = [&[7], &[1, 2, 3], &[100, 90, 80, 70, 60, 50, 40], &[
+        42, 42, 42, 42, 42, 42, 42, 42, 42, 42, 42, 42,
+    ]];
+    let mut sc = Vec::new();
+    let mut sp = Vec::new();
+    for p in prompts {
+        let (lc, s1) = contiguous.prefill(p).unwrap();
+        let (lp, s2) = paged.prefill(p).unwrap();
+        assert_eq!(bits(&lc), bits(&lp), "prefill bits diverged");
+        sc.push(s1);
+        sp.push(s2);
+    }
+    // enough rounds that every session crosses at least one 8-token
+    // block boundary; later rounds read KV produced by earlier ones
+    for round in 0..10 {
+        let tokens: [i32; 4] = [round, round + 50, round + 100, round + 150];
+        let mut rc: Vec<&mut Session> = sc.iter_mut().collect();
+        let lc = contiguous.decode_batch(&mut rc, &tokens).unwrap();
+        let mut rp: Vec<&mut Session> = sp.iter_mut().collect();
+        let lp = paged.decode_batch(&mut rp, &tokens).unwrap();
+        for (i, (a, b)) in lc.iter().zip(&lp).enumerate() {
+            assert_eq!(bits(a), bits(b), "round {round} session {i} bits diverged");
+        }
+    }
+    for (a, b) in sc.iter().zip(&sp) {
+        assert_eq!(a.pos, b.pos);
+    }
+}
+
 #[test]
 fn decode_batch_rejects_full_session_without_corrupting_others() {
     let rt = LlmRuntime::reference(ReferenceConfig {

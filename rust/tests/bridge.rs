@@ -138,10 +138,13 @@ fn bridged_completions_bit_identical_to_in_process() {
         assert_eq!(x.n_prompt, y.n_prompt);
         assert_eq!(x.n_generated, y.n_generated);
     }
+    // retirement pipelines CloseSession frames; one stats round trip
+    // flushes them and proves (by reply ordering) they were applied
+    let _ = bridged.runtime().memory();
     assert_eq!(
         dev.active_sessions(),
         0,
-        "engine retirement must close device sessions eagerly"
+        "engine retirement must close device sessions (pipelined closes flushed)"
     );
     dev.shutdown();
 }
@@ -164,6 +167,9 @@ fn bridge_serves_the_sim_backend() {
     eng.submit("ping", 5, Sampling::Greedy);
     let c = eng.step().unwrap().expect("completion");
     assert_eq!(c.n_generated, 5);
+    // flush the pipelined close (sim backend: memory() returns None but
+    // the Info round trip still drains the close queue)
+    assert!(eng.runtime().memory().is_none(), "sim backend has no arena");
     assert_eq!(dev.active_sessions(), 0);
     dev.shutdown();
 }
@@ -191,10 +197,19 @@ fn transfer_meter_counts_both_directions_per_call() {
     let tx_delta = m2.tx_bytes - m1.tx_bytes;
     assert!((13..64).contains(&tx_delta), "decode tx {tx_delta}B");
 
-    // retiring the session costs one more metered call (CloseSession)
+    // retiring the session costs one metered call, but zero round trips:
+    // the CloseSession frame is buffered (pipelined), not yet on the wire
     rt.end_session(&mut s);
     let m3 = rt.transfer_meter().unwrap();
     assert_eq!(m3.calls, 4);
+    assert_eq!(m3.rx_bytes, m2.rx_bytes, "no reply awaited at close time");
+
+    // the next request's flush carries the close; its reply is drained in
+    // front, so when memory() returns, the device gauge has dropped
+    let _ = rt.memory();
+    let m4 = rt.transfer_meter().unwrap();
+    assert_eq!(m4.calls, 5);
+    assert!(m4.rx_bytes > m3.rx_bytes, "close reply + info reply drained");
     assert_eq!(dev.active_sessions(), 0);
     dev.shutdown();
 }
@@ -216,6 +231,94 @@ fn failed_prefill_releases_the_device_slot() {
     let (_l, mut s) = backend.prefill(&[1, 2, 3]).unwrap();
     assert_eq!(s.pos, 3);
     backend.end_session(&mut s);
+    assert_eq!(dev.active_sessions(), 0);
+    dev.shutdown();
+}
+
+// ------------------------------------------------------- paged KV arena
+
+/// The device's KV-arena accounting crosses the wire through the
+/// backward-compatible `InfoResp` tail, and a pipelined close is
+/// observable through it: the `memory()` query that follows retirement
+/// already sees the freed blocks (reply ordering guarantees the close
+/// was applied first).
+#[test]
+fn memory_stats_cross_the_bridge() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dev = device::spawn_on(
+        Box::new(ReferenceBackend::new(ReferenceConfig {
+            kv_block_tokens: 16,
+            kv_pool_blocks: 12,
+            ..ReferenceConfig::default()
+        })),
+        listener,
+        DeviceConfig::default(),
+    )
+    .unwrap();
+    let rt = bridge_runtime(&dev);
+
+    let m0 = rt.memory().expect("device reports arena stats over the wire");
+    assert_eq!(m0.blocks_total, 12);
+    assert_eq!(m0.block_tokens, 16);
+    assert_eq!(m0.blocks_free, 12);
+    assert_eq!(m0.free_bytes + m0.reserved_bytes, m0.total_bytes);
+
+    let (_l, mut s) = rt.prefill(&[1, 2, 3]).unwrap();
+    let m1 = rt.memory().unwrap();
+    assert_eq!(m1.blocks_free, 11, "prefill held one device-side block");
+
+    rt.end_session(&mut s);
+    let m2 = rt.memory().unwrap();
+    assert_eq!(m2.blocks_free, 12, "pipelined close applied before the stats reply");
+    assert_eq!(
+        m2.peak_reserved_bytes, m1.reserved_bytes,
+        "the peak watermark crosses the wire and survives the release"
+    );
+    assert_eq!(dev.active_sessions(), 0);
+    dev.shutdown();
+}
+
+/// Acceptance: a device paging its KV across small blocks serves
+/// bit-identical completions to a local contiguous-block engine — the
+/// block layout is invisible end to end, mixed-length batch included.
+#[test]
+fn paged_device_blocks_are_bitwise_invisible_end_to_end() {
+    let paged_cfg = ReferenceConfig {
+        kv_block_tokens: 4, // many blocks per session
+        ..ReferenceConfig::default()
+    };
+    let contiguous_cfg = ReferenceConfig {
+        kv_block_tokens: 64, // one block per session (contiguous layout)
+        ..ReferenceConfig::default()
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dev = device::spawn_on(
+        Box::new(ReferenceBackend::new(paged_cfg)),
+        listener,
+        DeviceConfig::default(),
+    )
+    .unwrap();
+    let cfg = || EngineConfig { max_active: 4, ..EngineConfig::default() };
+    let mut local = Engine::new(LlmRuntime::reference(contiguous_cfg), cfg());
+    let mut bridged = Engine::new(bridge_runtime(&dev), cfg());
+    // mixed lengths: prompts and budgets straddle several 4-token blocks
+    for (i, p) in ["a", "mixed length", "a considerably longer prompt", "zz"]
+        .iter()
+        .enumerate()
+    {
+        local.submit(p, 3 + 4 * i, Sampling::Greedy);
+        bridged.submit(p, 3 + 4 * i, Sampling::Greedy);
+    }
+    let mut a = local.run_all().unwrap();
+    let mut b = bridged.run_all().unwrap();
+    a.sort_by_key(|c| c.id);
+    b.sort_by_key(|c| c.id);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.text, y.text, "request {} diverged under paging", x.id);
+        assert_eq!(x.n_generated, y.n_generated);
+    }
+    let _ = bridged.runtime().memory();
     assert_eq!(dev.active_sessions(), 0);
     dev.shutdown();
 }

@@ -233,6 +233,91 @@ fn prop_stream_events_reconstruct_completion() {
 }
 
 #[test]
+fn prop_kv_arena_interleavings_never_leak_or_double_free() {
+    // any interleaving of reserve / grow / release must keep the arena's
+    // accounting exact: no block owned by two live handles, in-use +
+    // free == total, double release a no-op, and a full drain restores
+    // the whole pool
+    use edgellm::runtime::kv::{KvArena, KvHandle};
+    use std::collections::HashSet;
+
+    let mut rng = Rng::new(909);
+    for case in 0..30usize {
+        let block_tokens = [4usize, 8, 16][case % 3];
+        let max_blocks = 3 + case % 10;
+        let mut arena = KvArena::new(2, 4, block_tokens, max_blocks);
+        // (handle, tokens it currently addresses)
+        let mut live: Vec<(KvHandle, usize)> = Vec::new();
+
+        for step in 0..200usize {
+            match rng.below(3) {
+                0 => {
+                    let t = 1 + rng.below(3 * block_tokens as u64) as usize;
+                    match arena.reserve(t) {
+                        Ok(h) => {
+                            assert!(
+                                h.capacity_tokens(block_tokens) >= t,
+                                "case {case} step {step}: short reservation"
+                            );
+                            live.push((h, t));
+                        }
+                        Err(e) => assert!(
+                            arena.blocks_free() < e.needed_blocks,
+                            "case {case} step {step}: spurious exhaustion {e}"
+                        ),
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let (h, t) = &mut live[i];
+                        if arena.ensure(h, *t + 1).is_ok() {
+                            *t += 1;
+                        } else {
+                            assert_eq!(arena.blocks_free(), 0, "case {case} step {step}");
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let (mut h, _) = live.swap_remove(i);
+                        arena.release(&mut h);
+                        assert!(h.is_empty());
+                        arena.release(&mut h); // double release: no-op
+                    }
+                }
+            }
+
+            // invariants after every step
+            let mut seen = HashSet::new();
+            for (h, _) in &live {
+                for &b in h.blocks() {
+                    assert!(
+                        seen.insert(b),
+                        "case {case} step {step}: block {b} owned twice"
+                    );
+                    assert!((b as usize) < max_blocks, "block id out of range");
+                }
+            }
+            let stats = arena.stats();
+            assert_eq!(
+                stats.blocks_total - stats.blocks_free,
+                seen.len() as u64,
+                "case {case} step {step}: accounting drifted"
+            );
+            assert_eq!(stats.free_bytes + stats.reserved_bytes, stats.total_bytes);
+        }
+
+        for (mut h, _) in live.drain(..) {
+            arena.release(&mut h);
+        }
+        let stats = arena.stats();
+        assert_eq!(stats.blocks_free, stats.blocks_total, "case {case}: blocks leaked");
+    }
+}
+
+#[test]
 fn prop_rng_choose_indices_uniformish() {
     // sanity on the test harness itself: chosen index sets cover the range
     let mut rng = Rng::new(808);

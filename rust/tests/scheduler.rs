@@ -221,6 +221,141 @@ fn cancellation_frees_kv_slot_for_queued_request() {
     assert!(matches!(ha.wait(), Err(ref msg) if msg == "cancelled"));
 }
 
+/// Acceptance: under a KV pool sized for 4 concurrent full-length
+/// requests, a 10-request mixed-length workload completes with retired
+/// sessions' blocks observably recycled (`kv_reuse_hits` rises) and
+/// zero preemption errors — admission's worst-case accounting holds.
+#[test]
+fn retired_blocks_are_reused_under_a_full_pool() {
+    let max_tokens = 64usize;
+    let block_tokens = 16usize;
+    let blocks_per_session = max_tokens / block_tokens; // 4
+    let rt = LlmRuntime::reference(ReferenceConfig {
+        max_tokens,
+        kv_block_tokens: block_tokens,
+        kv_pool_blocks: 4 * blocks_per_session, // room for 4 long requests
+        ..ReferenceConfig::default()
+    });
+    let mut eng = Engine::new(
+        rt,
+        EngineConfig {
+            max_active: 8, // the cap; the arena is the allocator
+            ..EngineConfig::default()
+        },
+    );
+    let mut want = Vec::new();
+    for i in 0..10 {
+        // mixed lengths: worst cases of 1..4 blocks
+        let max_new = [4usize, 12, 25, 40][i % 4];
+        let id = eng.submit(&format!("request {i}"), max_new, Sampling::Greedy).id();
+        want.push((id, max_new));
+    }
+    let done = eng.run_all().unwrap();
+    assert_eq!(done.len(), 10, "every request completes");
+    let mut got: Vec<(u64, usize)> = done.iter().map(|c| (c.id, c.n_generated)).collect();
+    got.sort_unstable();
+    assert_eq!(got, want, "full per-request token counts despite the small pool");
+
+    let mem = eng.runtime().memory().expect("reference backend reports its arena");
+    assert!(mem.reuse_hits > 0, "retired blocks must be recycled: {mem:?}");
+    assert_eq!(eng.metrics().preempted, 0, "admission accounting must prevent preemption");
+    assert_eq!(
+        mem.blocks_free, mem.blocks_total,
+        "all blocks returned to the pool after the workload"
+    );
+    // the pool (16 blocks) is smaller than 10 requests' summed footprint,
+    // so completion at all proves interleaved reuse
+    let total_blocks_needed: usize = want
+        .iter()
+        .map(|(_, n)| (eng.runtime().info.max_tokens.min(n + 10)).div_ceil(block_tokens))
+        .sum();
+    assert!(total_blocks_needed > mem.blocks_total as usize);
+}
+
+/// The admission gate refuses (with a structured terminal error) a
+/// request whose worst case exceeds the whole arena, and holds back a
+/// request that merely does not fit *yet*.
+#[test]
+fn admission_is_memory_aware() {
+    let rt = LlmRuntime::reference(ReferenceConfig {
+        max_tokens: 64,
+        kv_block_tokens: 8,
+        kv_pool_blocks: 4, // 32 tokens of KV, total
+        ..ReferenceConfig::default()
+    });
+    let mut eng = Engine::new(rt, EngineConfig { max_active: 8, ..EngineConfig::default() });
+    // worst case 4 + 40 = 44 tokens = 6 blocks > 4-block arena: refused
+    let h = eng.submit("aaaa", 40, Sampling::Greedy);
+    eng.step_round().unwrap();
+    let err = h.wait().unwrap_err();
+    assert!(err.contains("KV blocks"), "{err}");
+    assert_eq!(eng.metrics().rejected, 1);
+    assert_eq!(eng.active_sessions(), 0);
+
+    // two requests of 3 blocks each: only one fits at a time — the
+    // second waits (not errors) and runs after the first retires
+    let h1 = eng.submit("bbbb", 20, Sampling::Greedy); // 24 tokens = 3 blocks
+    let h2 = eng.submit("cccc", 20, Sampling::Greedy);
+    eng.step_round().unwrap();
+    assert_eq!(eng.active_sessions(), 1, "arena gates admission below max_active");
+    assert_eq!(eng.pending(), 1);
+    let done = eng.run_all().unwrap();
+    assert_eq!(done.len(), 2);
+    assert!(h1.wait().is_ok() && h2.wait().is_ok());
+    assert_eq!(eng.metrics().preempted, 0);
+}
+
+/// True exhaustion (blocks consumed behind the admission gate's back by
+/// a session the scheduler does not own) preempts the youngest session
+/// with a structured `Event::Error` instead of failing the round — and
+/// the engine keeps serving afterwards.
+#[test]
+fn kv_exhaustion_preempts_with_structured_error() {
+    let rt = LlmRuntime::reference(ReferenceConfig {
+        max_tokens: 64,
+        kv_block_tokens: 8,
+        kv_pool_blocks: 6,
+        ..ReferenceConfig::default()
+    });
+    let mut eng = Engine::new(rt, EngineConfig { max_active: 4, ..EngineConfig::default() });
+
+    // an out-of-band session (driven directly on the backend, invisible
+    // to the scheduler's worst-case accounting) holds one block
+    let (mut logits, mut ext) = eng.runtime().prefill(&[1, 2, 3]).unwrap();
+
+    // worst case 4 + 30 = 34 tokens = 5 blocks; 5 of 6 are free → admitted
+    let ha = eng.submit("aaaa", 30, Sampling::Greedy);
+    eng.step_round().unwrap();
+    assert_eq!(eng.active_sessions(), 1);
+
+    // the hog grows until the pool is empty
+    while eng.runtime().memory().unwrap().blocks_free > 0 {
+        let t = edgellm::runtime::model::argmax(&logits);
+        logits = eng.runtime().decode(&mut ext, t).unwrap();
+    }
+
+    // the live session crosses its next block boundary → preempted
+    for _ in 0..40 {
+        eng.step_round().unwrap();
+        if eng.metrics().preempted > 0 {
+            break;
+        }
+    }
+    assert_eq!(eng.metrics().preempted, 1);
+    let err = ha.wait().unwrap_err();
+    assert!(err.contains("preempted"), "{err}");
+    assert!(err.contains("kv arena exhausted"), "{err}");
+    assert_eq!(eng.active_sessions(), 0, "victim evicted, engine alive");
+
+    // release the hog: the engine serves normally again
+    eng.runtime().end_session(&mut ext);
+    let hb = eng.submit("recovery", 4, Sampling::Greedy);
+    let done = eng.run_all().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].n_generated, 4);
+    assert!(hb.wait().is_ok());
+}
+
 fn send_request(addr: std::net::SocketAddr, body: String) -> Json {
     let mut stream = TcpStream::connect(addr).unwrap();
     writeln!(stream, "{body}").unwrap();
