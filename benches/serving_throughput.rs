@@ -160,6 +160,91 @@ fn kv_arena_record() -> Json {
     ])
 }
 
+/// Repeated-prompt serving record: the same workload twice — once with
+/// every request sharing one system prompt (the prefix index serves the
+/// full-block prefix out of a single physical copy, copy-on-write on
+/// the boundary block) and once with length-matched unique prompts
+/// (nothing shareable). Reports mean time-to-first-token and peak
+/// arena bytes per admission for both paths.
+fn prefix_sharing_record() -> Json {
+    const MAX_TOKENS: usize = 128;
+    const BLOCK_TOKENS: usize = 16;
+    const POOL_BLOCKS: usize = 64;
+    const REQUESTS: usize = 8;
+    const MAX_NEW: usize = 16;
+    const PROMPT_CHARS: usize = 48; // exactly 3 full 16-token blocks
+
+    // (mean ttft, peak arena bytes, prefix hits)
+    let run = |prompts: Vec<String>| -> (f64, u64, u64) {
+        let runtime = LlmRuntime::reference(ReferenceConfig {
+            max_tokens: MAX_TOKENS,
+            kv_block_tokens: BLOCK_TOKENS,
+            kv_pool_blocks: POOL_BLOCKS,
+            ..ReferenceConfig::default()
+        });
+        let mut engine = Engine::new(
+            runtime,
+            EngineConfig { max_active: REQUESTS, ..EngineConfig::default() },
+        );
+        for p in &prompts {
+            assert_eq!(p.len(), PROMPT_CHARS, "workloads must be length-matched");
+            engine.submit(p, MAX_NEW, Sampling::Greedy);
+        }
+        let done = engine.run_all().expect("prefix workload");
+        assert_eq!(done.len(), REQUESTS, "every request must complete");
+        assert_eq!(engine.metrics().preempted, 0);
+        let ttft = done.iter().map(|c| c.first_token_s).sum::<f64>() / done.len() as f64;
+        let mem = engine.runtime().memory().expect("reference backend reports its arena");
+        assert_eq!(mem.blocks_free, mem.blocks_total, "blocks leaked: {mem:?}");
+        (ttft, mem.peak_reserved_bytes, mem.prefix_hits)
+    };
+
+    let pad = |s: String| format!("{s:<PROMPT_CHARS$}");
+    let (ttft_shared, peak_shared, hits_shared) =
+        run(vec![pad("shared system preamble".into()); REQUESTS]);
+    let (ttft_unique, peak_unique, hits_unique) =
+        run((0..REQUESTS).map(|i| pad(format!("unique request {i}"))).collect());
+
+    assert_eq!(
+        hits_shared,
+        (REQUESTS - 1) as u64,
+        "every warm prefill must adopt the shared prefix"
+    );
+    assert_eq!(hits_unique, 0, "unique prompts must not share");
+    assert!(
+        peak_shared < peak_unique,
+        "sharing must shrink peak residency: {peak_shared} vs {peak_unique}"
+    );
+
+    let per_adm = |peak: u64| peak as f64 / REQUESTS as f64;
+    println!(
+        "prefix sharing: {REQUESTS} x {PROMPT_CHARS}-token repeated prompt — \
+         ttft {:.2} ms vs {:.2} ms unique, {:.0} B/admission vs {:.0} B \
+         ({:.2}x), {hits_shared} prefix hits",
+        ttft_shared * 1e3,
+        ttft_unique * 1e3,
+        per_adm(peak_shared),
+        per_adm(peak_unique),
+        per_adm(peak_unique) / per_adm(peak_shared).max(1.0),
+    );
+
+    Json::obj(vec![
+        ("bench", Json::Str("serving_kv_prefix_sharing".into())),
+        ("requests", Json::Num(REQUESTS as f64)),
+        ("prompt_tokens", Json::Num(PROMPT_CHARS as f64)),
+        ("max_new", Json::Num(MAX_NEW as f64)),
+        ("block_tokens", Json::Num(BLOCK_TOKENS as f64)),
+        ("pool_blocks", Json::Num(POOL_BLOCKS as f64)),
+        ("mean_ttft_s_shared", Json::Num(ttft_shared)),
+        ("mean_ttft_s_unique", Json::Num(ttft_unique)),
+        ("peak_kv_bytes_shared", Json::Num(peak_shared as f64)),
+        ("peak_kv_bytes_unique", Json::Num(peak_unique as f64)),
+        ("bytes_per_admission_shared", Json::Num(per_adm(peak_shared))),
+        ("bytes_per_admission_unique", Json::Num(per_adm(peak_unique))),
+        ("prefix_hits", Json::Num(hits_shared as f64)),
+    ])
+}
+
 fn main() {
     println!(
         "== serving throughput: {N_REQUESTS} requests x {MAX_NEW} new tokens, \
@@ -209,8 +294,13 @@ fn main() {
               measures it on a cache-overflowing model); the VCU128 column \
               models the shared weight stream of the accelerator datapath.");
 
-    // paged-KV arena record (mixed lengths, memory-aware admission)
-    let kv = kv_arena_record();
+    // paged-KV arena record (mixed lengths, memory-aware admission),
+    // with the repeated-prompt prefix-sharing workload nested alongside
+    let mut kv = kv_arena_record();
+    let sharing = prefix_sharing_record();
+    if let Json::Obj(m) = &mut kv {
+        m.insert("prefix_sharing".to_string(), sharing);
+    }
     std::fs::write("BENCH_kv.json", format!("{kv}\n")).expect("write BENCH_kv.json");
     println!("wrote BENCH_kv.json");
 }

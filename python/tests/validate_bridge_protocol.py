@@ -46,10 +46,12 @@ MODEL_INFO_FIELDS = [
 ]
 
 # KV-arena accounting carried in the InfoResp backward-compatible tail,
-# in wire order (all u64)
+# in wire order (all u64). The prefix-sharing extension appended the
+# last two fields under the same tail rule.
 MEMORY_FIELDS = [
     "total_bytes", "free_bytes", "reserved_bytes", "block_tokens",
     "blocks_total", "blocks_free", "reuse_hits", "peak_reserved_bytes",
+    "prefix_cached_blocks", "prefix_hits",
 ]
 
 
@@ -94,7 +96,7 @@ def encode(kind, **f):
         out += _u8(1 if f["supports_batched_decode"] else 0)
         out += _u64(f["ffn_weight_bytes"])
         # backward-compatible tail (paged-KV extension): presence flag +
-        # eight u64 arena figures; pre-paging frames end before the flag
+        # ten u64 arena figures; pre-paging frames end before the flag
         mem = f.get("memory")
         if mem is None:
             out += _u8(0)
@@ -251,6 +253,34 @@ def main():
         == bytes([5, 0, 0, 0, 0xEE, 2, 1, 0, 0x78]),
         "golden Error",
     )
+    golden_info = {
+        "name": "m", "vocab": 1, "d_model": 2, "n_layers": 3, "n_heads": 4,
+        "n_kv_heads": 5, "d_ffn": 6, "max_tokens": 7, "head_dim": 8,
+        "n_params": 9, "cache_shape": [1, 2, 3, 4],
+    }
+    golden_mem = {
+        "total_bytes": 11, "free_bytes": 12, "reserved_bytes": 13,
+        "block_tokens": 14, "blocks_total": 15, "blocks_free": 16,
+        "reuse_hits": 17, "peak_reserved_bytes": 18,
+        "prefix_cached_blocks": 19, "prefix_hits": 20,
+    }
+    check(
+        frame("InfoResp", version=1, info=golden_info, buckets=[7],
+              supports_batched_decode=True, ffn_weight_bytes=10,
+              memory=golden_mem)
+        == bytes(
+            [159, 0, 0, 0, 0x81, 1, 1, 0, 109]
+            + [b for v in range(1, 9) for b in _u32(v)]  # vocab..head_dim
+            + list(_u64(9))                              # n_params
+            + [b for v in (1, 2, 3, 4) for b in _u32(v)]  # cache_shape
+            + list(_u32(1) + _u32(7))                    # buckets [7]
+            + [1]                                        # batched decode
+            + list(_u64(10))                             # ffn_weight_bytes
+            + [1]                                        # memory present
+            + [b for v in range(11, 21) for b in _u64(v)]
+        ),
+        "golden InfoResp with memory tail",
+    )
 
     # 2. round trips, every frame kind
     info = {
@@ -275,7 +305,9 @@ def main():
                                  "reserved_bytes": (1 << 24) - (3 << 20),
                                  "block_tokens": 64, "blocks_total": 128,
                                  "blocks_free": 24, "reuse_hits": 7,
-                                 "peak_reserved_bytes": 1 << 23}}),
+                                 "peak_reserved_bytes": 1 << 23,
+                                 "prefix_cached_blocks": 5,
+                                 "prefix_hits": 9}}),
         ("SessionOpened", {"session": 2}),
         ("Logits", {"session": 3, "pos": 17, "logits": [0.5, -1.25, 3.75e8]}),
         ("LogitsBatch", {"rows": [(1, 4, [1.0, 2.0]), (2, 9, [-0.5])]}),

@@ -1,0 +1,498 @@
+#!/usr/bin/env python3
+"""Replay of the refcounted prefix-sharing KV arena (rust/src/runtime/kv.rs).
+
+The arena is pure discrete accounting — refcounts, free lists, a
+two-tier prefix index, copy-on-write — so this file ports those
+semantics line-for-line and replays the scenarios the Rust unit,
+doctest, equivalence and scheduler suites assert, as an independent
+check of the arithmetic (see .claude/skills/verify/SKILL.md: containers
+without a Rust toolchain validate numeric/accounting changes through a
+Python port).
+
+Fidelity notes:
+* the Rust index hashes token ids and verifies the stored tokens
+  exactly, so a collision degrades to a miss; keying these dicts on the
+  token tuple itself models every non-collision behavior identically.
+* block "contents" are modelled as one value per position slot; CoW
+  copies the whole slot dict, mirroring the block-stride memcpy.
+"""
+
+
+class Exhausted(Exception):
+    def __init__(self, needed, free):
+        super().__init__(f"kv arena exhausted: need {needed} block(s), {free} free")
+        self.needed = needed
+        self.free = free
+
+
+class Arena:
+    def __init__(self, bt, max_blocks):
+        self.bt = bt
+        self.max = max_blocks
+        self.free = []
+        self.materialized = 0
+        self.refs = []
+        self.idx_refs = []
+        self.in_use = 0
+        self.cached_only = 0
+        self.reuse_hits = 0
+        self.prefix_hits = 0
+        self.peak_pinned = 0
+        self.full = {}   # tokens tuple -> [blocks list, last_used]
+        self.whole = {}  # tokens tuple -> [blocks list, last_used]
+        self.clock = 0
+        self.content = []  # per block: {slot: value}
+
+    # ---- refcount plumbing (kv.rs add/drop_{handle,index}_ref) ----
+
+    def add_handle_ref(self, b):
+        if self.refs[b] == 0:
+            self.in_use += 1
+        elif self.refs[b] == self.idx_refs[b]:
+            self.cached_only -= 1
+        self.refs[b] += 1
+        self.peak_pinned = max(self.peak_pinned, self.in_use - self.cached_only)
+
+    def drop_handle_ref(self, b):
+        assert self.refs[b] > self.idx_refs[b], "handle ref under-count"
+        self.refs[b] -= 1
+        if self.refs[b] == 0:
+            self.in_use -= 1
+            self.free.append(b)
+        elif self.refs[b] == self.idx_refs[b]:
+            self.cached_only += 1
+
+    def add_index_ref(self, b):
+        assert self.refs[b] > self.idx_refs[b], "index ref without a handle"
+        self.refs[b] += 1
+        self.idx_refs[b] += 1
+
+    def drop_index_ref(self, b):
+        assert self.idx_refs[b] > 0, "index ref under-count"
+        was_cached = self.refs[b] == self.idx_refs[b]
+        self.refs[b] -= 1
+        self.idx_refs[b] -= 1
+        if self.refs[b] == 0:
+            self.in_use -= 1
+            if was_cached:
+                self.cached_only -= 1
+            self.free.append(b)
+
+    # ---- allocation (take_block / evict_lru_entry) ----
+
+    def take_block(self):
+        while True:
+            if self.free:
+                self.reuse_hits += 1
+                return self.free.pop()
+            if self.materialized < self.max:
+                b = self.materialized
+                self.materialized += 1
+                self.refs.append(0)
+                self.idx_refs.append(0)
+                self.content.append({})
+                return b
+            if not self.evict_lru_entry():
+                return None
+
+    def evict_lru_entry(self):
+        best = None  # (last_used, whole?, key)
+        for key, e in self.full.items():
+            if best is None or e[1] < best[0]:
+                best = (e[1], False, key)
+        for key, e in self.whole.items():
+            if best is None or e[1] < best[0]:
+                best = (e[1], True, key)
+        if best is None:
+            return False
+        _, whole, key = best
+        e = (self.whole if whole else self.full).pop(key)
+        for b in e[0]:
+            self.drop_index_ref(b)
+        return True
+
+    # ---- public surface ----
+
+    def blocks_for(self, tokens):
+        return (max(tokens, 1) + self.bt - 1) // self.bt
+
+    def blocks_free(self):
+        return self.max - self.in_use + self.cached_only
+
+    def pinned(self):
+        return self.in_use - self.cached_only
+
+    def reserve(self, tokens):
+        need = self.blocks_for(tokens)
+        if need > self.blocks_free():
+            raise Exhausted(need, self.blocks_free())
+        h = []
+        for _ in range(need):
+            b = self.take_block()
+            assert b is not None, "blocks_free() covered the need"
+            self.add_handle_ref(b)
+            h.append(b)
+        return h
+
+    def ensure(self, h, tokens):
+        need_total = self.blocks_for(tokens)
+        while len(h) < need_total:
+            b = self.take_block()
+            if b is None:
+                raise Exhausted(need_total - len(h), 0)
+            self.add_handle_ref(b)
+            h.append(b)
+
+    def ensure_writable(self, h, pos):
+        bi = pos // self.bt
+        while True:
+            b = h[bi]
+            if self.refs[b] <= 1:
+                return
+            if self.free:
+                self.reuse_hits += 1
+                self.cow_into(h, bi, self.free.pop())
+                return
+            if self.materialized < self.max:
+                nb = self.materialized
+                self.materialized += 1
+                self.refs.append(0)
+                self.idx_refs.append(0)
+                self.content.append({})
+                self.cow_into(h, bi, nb)
+                return
+            if not self.evict_lru_entry():
+                raise Exhausted(1, 0)
+
+    def cow_into(self, h, bi, nb):
+        b = h[bi]
+        assert b != nb, "a pinned block cannot come off the free list"
+        self.content[nb] = dict(self.content[b])
+        self.add_handle_ref(nb)
+        self.drop_handle_ref(b)
+        h[bi] = nb
+
+    def release(self, h):
+        for b in h:
+            self.drop_handle_ref(b)
+        h.clear()
+
+    def shared_prefix_len(self, tokens):
+        t = len(tokens)
+        if t >= 2 and tuple(tokens) in self.whole:
+            return t - 1
+        if t == 0:
+            return 0
+        k = (t - 1) // self.bt
+        while k >= 1:
+            if tuple(tokens[: k * self.bt]) in self.full:
+                return k * self.bt
+            k -= 1
+        return 0
+
+    def adopt_prefix(self, tokens):
+        t = len(tokens)
+        self.clock += 1
+        if t >= 2:
+            e = self.whole.get(tuple(tokens))
+            if e is not None:
+                e[1] = self.clock
+                return self._adopt(e[0]), t - 1
+        if t == 0:
+            return None
+        k = (t - 1) // self.bt
+        while k >= 1:
+            e = self.full.get(tuple(tokens[: k * self.bt]))
+            if e is not None:
+                e[1] = self.clock
+                return self._adopt(e[0]), k * self.bt
+            k -= 1
+        return None
+
+    def _adopt(self, blocks):
+        h = []
+        for b in blocks:
+            self.add_handle_ref(b)
+            h.append(b)
+        self.prefix_hits += 1
+        return h
+
+    def register_prefix(self, tokens, h):
+        t = len(tokens)
+        if t == 0 or len(h) * self.bt < t:
+            return
+        self.clock += 1
+        for k in range(1, t // self.bt + 1):
+            key = tuple(tokens[: k * self.bt])
+            if key in self.full:
+                self.full[key][1] = self.clock
+                continue
+            blocks = list(h[:k])
+            for b in blocks:
+                self.add_index_ref(b)
+            self.full[key] = [blocks, self.clock]
+        if t >= 2:
+            key = tuple(tokens)
+            if key in self.whole:
+                self.whole[key][1] = self.clock
+                return
+            blocks = list(h[: (t + self.bt - 1) // self.bt])
+            for b in blocks:
+                self.add_index_ref(b)
+            self.whole[key] = [blocks, self.clock]
+
+    # ---- simulated scatter/gather ----
+
+    def write(self, h, pos, val):
+        self.content[h[pos // self.bt]][pos % self.bt] = val
+
+    def read(self, h, pos):
+        return self.content[h[pos // self.bt]].get(pos % self.bt)
+
+
+# ---- the reference-backend prefill/decode shapes (reference.rs) ----
+
+def prefill(a, tokens):
+    got = a.adopt_prefix(tokens)
+    if got is not None:
+        h, start = got
+    else:
+        h, start = [], 0
+    try:
+        a.ensure(h, len(tokens))
+        for bi in range(start // a.bt, (len(tokens) - 1) // a.bt + 1):
+            a.ensure_writable(h, bi * a.bt)
+    except Exhausted:
+        a.release(h)
+        raise
+    for p in range(start, len(tokens)):
+        a.write(h, p, tokens[p])
+    a.register_prefix(tokens, h)
+    return h, len(tokens)
+
+
+def decode(a, h, pos, val):
+    a.ensure(h, pos + 1)
+    a.ensure_writable(h, pos)
+    a.write(h, pos, val)
+    return pos + 1
+
+
+CHECKS = 0
+
+
+def check(cond, msg):
+    global CHECKS
+    if not cond:
+        raise SystemExit(f"FAIL: {msg}")
+    CHECKS += 1
+
+
+def doctest_walkthrough():
+    """kv.rs module doctest: reserve, share, CoW, release."""
+    a = Arena(bt=8, max_blocks=16)
+    prompt = list(range(16))
+    ha = a.reserve(len(prompt))
+    a.register_prefix(prompt, ha)
+    got = a.adopt_prefix(prompt)
+    check(got is not None and got[1] == len(prompt) - 1, "whole hit shares all but last")
+    hb = got[0]
+    check(hb == ha, "one physical copy")
+    a.ensure_writable(hb, 15)
+    check(hb[1] != ha[1], "boundary block was copied")
+    check(hb[0] == ha[0], "full prefix block stays shared")
+    a.release(ha)
+    a.release(hb)
+    check(a.blocks_free() == 16, "cached blocks count as free")
+
+
+def unit_scenarios():
+    """kv.rs #[test] prefix-sharing suite."""
+    # whole_prompt_hit_shares_every_block
+    a = Arena(8, 16)
+    p = list(range(20))
+    h1 = a.reserve(len(p))
+    a.register_prefix(p, h1)
+    check(a.shared_prefix_len(p) == 19, "whole-prompt hit: all but last")
+    h2, shared = a.adopt_prefix(p)
+    check(shared == 19 and h1 == h2, "adoption is refcounts, not copies")
+    check(all(a.refs[b] >= 2 for b in h1), "every block is shared")
+    check(a.prefix_hits == 1, "hit counted")
+    check(a.max - a.blocks_free() == 3, "two handles pin 3 blocks, not 6")
+
+    # full_block_prefix_hit_shares_only_full_blocks
+    q = list(range(20))
+    q[18] = 99
+    check(a.shared_prefix_len(q) == 16, "full blocks only")
+    h3, shared = a.adopt_prefix(q)
+    check(shared == 16 and h3 == h1[:2], "tier-1 adopts the 2 full blocks")
+    check(a.shared_prefix_len(q[:5]) == 0 and a.adopt_prefix(q[:5]) is None,
+          "short prompts match nothing block-aligned")
+
+    # cow_copies_shared_block_and_preserves_bytes
+    a = Arena(8, 16)
+    p = list(range(12))
+    h1 = a.reserve(len(p))
+    for pos in range(12):
+        a.write(h1, pos, pos)
+    a.register_prefix(p, h1)
+    h2, shared = a.adopt_prefix(p)
+    check(shared == 11, "identical 12-token prompt shares 11")
+    boundary = h2[1]
+    a.ensure_writable(h2, 11)
+    check(h2[1] != boundary and h2[0] == h1[0], "boundary copied, full block shared")
+    check(all(a.read(h2, pos) == pos for pos in range(8, 12)), "copy carried the bytes")
+    a.write(h2, 11, 777)
+    check(a.read(h1, 11) == 11, "writes through h2 leave h1 untouched")
+
+    # cached_blocks_count_as_free_and_survive_release
+    a = Arena(8, 4)
+    p = list(range(16))
+    h = a.reserve(len(p))
+    a.register_prefix(p, h)
+    check(a.blocks_free() == 2 and a.cached_only == 0, "handle still pins the cache")
+    a.release(h)
+    check(a.cached_only == 2 and a.blocks_free() == 4 and a.pinned() == 0,
+          "cache-only blocks are reclaimable free blocks")
+    h2, shared = a.adopt_prefix(p)
+    check(shared == 15 and len(h2) == 2 and a.cached_only == 0, "adopted = pinned again")
+
+    # allocation_evicts_lru_entries_under_pressure
+    a = Arena(8, 2)
+    p1, p2 = list(range(8)), list(range(100, 108))
+    h1 = a.reserve(8)
+    a.register_prefix(p1, h1)
+    h2 = a.reserve(8)
+    a.register_prefix(p2, h2)
+    a.release(h1)
+    a.release(h2)
+    check(a.cached_only == 2, "both blocks cache-only")
+    h3 = a.reserve(16)
+    check(len(h3) == 2 and a.cached_only == 0, "eviction freed both under pressure")
+    check(a.adopt_prefix(p1) is None and a.adopt_prefix(p2) is None, "evicted entries gone")
+
+    # eviction_prefers_least_recently_used
+    a = Arena(8, 2)
+    h1 = a.reserve(8)
+    a.register_prefix(p1, h1)
+    h2 = a.reserve(8)
+    a.register_prefix(p2, h2)
+    a.release(h1)
+    a.release(h2)
+    t, _ = a.adopt_prefix(p1)
+    a.release(t)
+    a.reserve(8)
+    check(a.adopt_prefix(p1) is not None, "recently-used entry survives")
+    check(a.adopt_prefix(p2) is None, "LRU entry was evicted")
+
+    # ensure_writable_unshares_without_copy_when_eviction_frees_the_ref
+    a = Arena(8, 1)
+    p = list(range(8))
+    h = a.reserve(8)
+    a.write(h, 0, 5)
+    a.register_prefix(p, h)
+    # a block-aligned prompt registers in both tiers, so the only block
+    # carries two index refs on top of the handle's
+    check(a.refs[h[0]] == 3, "both index tiers share the only block")
+    b = h[0]
+    a.ensure_writable(h, 0)
+    check(h[0] == b and a.refs[b] == 1, "no copy — the index refs were dropped")
+    check(a.read(h, 0) == 5, "contents untouched")
+
+    # release_of_one_sharer_keeps_blocks_for_the_rest
+    a = Arena(8, 16)
+    p = list(range(16))
+    h1 = a.reserve(16)
+    for pos in range(16):
+        a.write(h1, pos, pos)
+    a.register_prefix(p, h1)
+    h2, _ = a.adopt_prefix(p)
+    a.release(h1)
+    check(all(a.read(h2, pos) == pos for pos in range(16)), "sharer still reads the rows")
+    check(a.max - a.blocks_free() == 2, "h2 pins both blocks")
+
+
+def equivalence_pinned_arithmetic():
+    """backend_equivalence.rs::shared_prefix_decode…: K sessions, one copy."""
+    a = Arena(bt=8, max_blocks=64)
+    prompt = [(i * 7 + 3) % 256 for i in range(19)]
+    check(a.shared_prefix_len(prompt) == 0, "cold prompt has no resident prefix")
+    sessions = []
+    h, pos = prefill(a, prompt)
+    sessions.append([h, pos])
+    check(a.pinned() == 3, "first prefill pins ceil(19/8) = 3 blocks")
+    for k in range(1, 4):
+        check(a.shared_prefix_len(prompt) == 18, "whole-prompt hint: all but last")
+        h, pos = prefill(a, prompt)
+        sessions.append([h, pos])
+        check(a.pinned() == 3 + k, f"session {k}: one CoW boundary block, not 3 fresh")
+        check(a.prefix_hits == k, "every re-prefill adopted")
+    check(all(s[0][0] == sessions[0][0][0] and s[0][1] == sessions[0][0][1]
+              for s in sessions), "full blocks physically shared by all K")
+    # 8 decode rounds, crossing the 24-token block boundary at pos 24
+    for rnd in range(8):
+        for s in sessions:
+            s[1] = decode(a, s[0], s[1], (rnd * 31 + 11) % 256)
+    check(all(s[1] == 27 for s in sessions), "positions advance in lockstep")
+    check(a.pinned() == 2 + 2 * 4, "shared b0+b1 plus 2 private blocks per session")
+    for s in sessions:
+        a.release(s[0])
+    check(a.pinned() == 0 and a.blocks_free() == 64, "drain leaves only cache refs")
+
+
+def scheduler_preemption_trace():
+    """scheduler.rs::preempting_a_prefix_sharer_frees_only_its_private_blocks."""
+    a = Arena(bt=8, max_blocks=8)
+    prompt = list(range(20))  # the 20-token "shared system prompt" encoding
+    elder, _ = prefill(a, prompt)
+    check(a.pinned() == 3, "elder pins 3 blocks")
+    sharer, spos = prefill(a, prompt)          # the engine-submitted session
+    check(a.pinned() == 4 and a.prefix_hits == 1, "sharer adds one CoW block")
+    hog, hpos = prefill(a, [7, 7, 7])          # out-of-band hog
+    while a.blocks_free() > 0:
+        hpos = decode(a, hog, hpos, 0)
+    check(a.blocks_free() == 0, "hog drove the pool to exhaustion")
+    # engine round: the sharer's growth at pos 24 must fail — eviction
+    # drops index refs but every block is handle-held, nothing frees
+    preempted = False
+    for _ in range(10):
+        try:
+            spos = decode(a, sharer, spos, 1)
+        except Exhausted:
+            a.release(sharer)  # engine preempts the youngest (only) session
+            preempted = True
+            break
+    check(preempted, "exhaustion preempts instead of spinning")
+    check(a.blocks_free() == 1,
+          "only the sharer's private CoW block frees — the shared prefix "
+          "(refcount > 1) is never counted reclaimable")
+    check(all(a.read(elder, p) == prompt[p] for p in range(19)),
+          "elder's shared rows survive the preemption")
+    # the elder's next decode needs no allocation: exhaustion evicted
+    # every index entry, so its boundary block is private again and the
+    # write lands in place (the Rust test asserts this decode is
+    # bit-identical to an unshared control run)
+    decode(a, elder, 20, 99)
+    check(a.blocks_free() == 1 and a.refs[elder[2]] == 1,
+          "elder decodes in place after the index was drained")
+    a.release(hog)  # end_session(hog): recovery capacity returns
+    check(a.blocks_free() == 5, "hog's 4 private blocks free on end_session")
+    rec = list(range(50, 58))  # the 8-token "recovery" prompt
+    h, pos = prefill(a, rec)
+    check(a.pinned() == 3 + 1, "cold recovery prefill takes one fresh block")
+    for i in range(4):
+        pos = decode(a, h, pos, i)
+    check(pos == 12 and len(h) == 2, "recovery decodes across a block boundary")
+    a.release(h)
+
+
+def main():
+    doctest_walkthrough()
+    unit_scenarios()
+    equivalence_pinned_arithmetic()
+    scheduler_preemption_trace()
+    print(f"kv arena: all {CHECKS} checks pass")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,8 @@
 //! The format is mirrored (golden bytes included) by
 //! `python/tests/validate_bridge_protocol.py`.
 
+#![deny(missing_docs)]
+
 use std::fmt;
 use std::io::{Read, Write};
 
@@ -108,8 +110,11 @@ impl ErrCode {
 /// belongs to, its position *after* the decode step, and the vocab row.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LogitsRow {
+    /// Session id the row belongs to.
     pub session: u32,
+    /// Session position *after* the decode step.
     pub pos: u32,
+    /// One vocab-sized logits vector.
     pub logits: Vec<f32>,
 }
 
@@ -143,7 +148,9 @@ pub enum Frame {
     /// extra bytes — so in a rolling upgrade, update **coordinators
     /// before devices** (exact version matching leaves no room to
     /// negotiate the tail per-connection without refusing old peers
-    /// outright).
+    /// outright). The prefix-sharing extension grew the tail from
+    /// eight to ten `u64`s (`prefix_cached_blocks`, `prefix_hits`)
+    /// under the same rule.
     InfoResp {
         version: u8,
         info: ModelInfo,
@@ -363,6 +370,8 @@ fn encode_payload(f: &Frame) -> Vec<u8> {
                     e.u64(m.blocks_free);
                     e.u64(m.reuse_hits);
                     e.u64(m.peak_reserved_bytes);
+                    e.u64(m.prefix_cached_blocks);
+                    e.u64(m.prefix_hits);
                 }
             }
         }
@@ -584,6 +593,8 @@ fn decode_payload(payload: &[u8]) -> Result<Frame, String> {
                     blocks_free: d.u64()?,
                     reuse_hits: d.u64()?,
                     peak_reserved_bytes: d.u64()?,
+                    prefix_cached_blocks: d.u64()?,
+                    prefix_hits: d.u64()?,
                 })
             } else {
                 None
@@ -734,6 +745,8 @@ mod tests {
                     blocks_free: 24,
                     reuse_hits: 7,
                     peak_reserved_bytes: 1 << 23,
+                    prefix_cached_blocks: 5,
+                    prefix_hits: 9,
                 }),
             },
             Frame::SessionOpened { session: 2 },
@@ -805,7 +818,7 @@ mod tests {
             [5, 0, 0, 0, 0xEE, 2, 1, 0, 0x78]
         );
         // InfoResp with the paged-KV memory tail — the literal produced
-        // and asserted by the Python mirror (fields 1..17 in wire order)
+        // and asserted by the Python mirror (fields 1..19 in wire order)
         let golden_info = Frame::InfoResp {
             version: 1,
             info: ModelInfo {
@@ -833,10 +846,12 @@ mod tests {
                 blocks_free: 16,
                 reuse_hits: 17,
                 peak_reserved_bytes: 18,
+                prefix_cached_blocks: 19,
+                prefix_hits: 20,
             }),
         };
         let want: Vec<u8> = vec![
-            143, 0, 0, 0, // length prefix
+            159, 0, 0, 0, // length prefix
             0x81, // opcode
             1, // version
             1, 0, 109, // name "m"
@@ -856,6 +871,8 @@ mod tests {
             16, 0, 0, 0, 0, 0, 0, 0, // blocks_free
             17, 0, 0, 0, 0, 0, 0, 0, // reuse_hits
             18, 0, 0, 0, 0, 0, 0, 0, // peak_reserved_bytes
+            19, 0, 0, 0, 0, 0, 0, 0, // prefix_cached_blocks
+            20, 0, 0, 0, 0, 0, 0, 0, // prefix_hits
         ];
         assert_eq!(enc(&golden_info), want);
     }

@@ -543,9 +543,12 @@ impl Engine {
                 self.queue.front_mut().expect("front exists").plan = Some(plan);
             }
             let front = self.queue.front().expect("front exists");
-            let (prompt_len, max_new) = {
+            let (prompt_len, max_new, shared) = {
                 let (tokens, max_new) = front.plan.as_ref().expect("just planned");
-                (tokens.len(), *max_new)
+                // resident-prefix length: blocks the backend already
+                // holds for this prompt are accounted once, not
+                // per-session (0 for backends without a prefix cache)
+                (tokens.len(), *max_new, self.runtime.shared_prefix_len(tokens))
             };
             if let Some(m) = &mem {
                 let bt = m.block_tokens as usize;
@@ -561,8 +564,19 @@ impl Engine {
                     )));
                     continue;
                 }
+                // full blocks covered by a resident shared prefix are
+                // already physically allocated — prefill will adopt
+                // them by refcount, not take new ones. Only the suffix
+                // (plus the CoW boundary copy, which the ceil already
+                // counts) draws on the pool, so the gate charges
+                // `needed - saved`, and K sessions sharing one system
+                // prompt are admitted against one physical copy. The
+                // whole-arena refusal above stays on the raw `needed`:
+                // a cache entry can be evicted any time, so "fits only
+                // thanks to the cache" is not "fits at any load".
+                let saved = shared / bt;
                 let outstanding = self.outstanding_growth_blocks(bt);
-                if (m.blocks_free as usize) < needed + outstanding {
+                if (m.blocks_free as usize) < needed.saturating_sub(saved) + outstanding {
                     if self.active.is_empty() {
                         // blocks are held by work the engine does not
                         // own (another coordinator on a shared device,
@@ -586,15 +600,24 @@ impl Engine {
             let mut q = self.queue.pop_front().expect("front exists");
             admitted += 1;
             let (tokens, max_new) = q.plan.take().expect("planned above");
-            match self.admit(q, tokens, max_new)? {
+            match self.admit(q, tokens, max_new, shared)? {
                 Admitted::Active(a) => {
                     self.active.push(*a);
                     if let Some(m) = &mut mem {
-                        // prefill materialized exactly ceil(prompt/bt)
-                        // blocks; decrement the snapshot locally instead
-                        // of re-querying (a wire round trip per admit on
-                        // a bridged backend)
-                        let held = prompt_len.max(1).div_ceil(m.block_tokens as usize) as u64;
+                        // prefill drew ceil(prompt/bt) blocks from the
+                        // pool, minus the full blocks it adopted from a
+                        // resident prefix; decrement the snapshot
+                        // locally instead of re-querying (a wire round
+                        // trip per admit on a bridged backend). When the
+                        // adopted prefix was cache-only (donor already
+                        // retired) this undercounts — pinning a cached
+                        // block also shrinks blocks_free — but the
+                        // snapshot is refreshed next round and a
+                        // too-optimistic admission lands in the Requeue
+                        // path, never in client-visible failure
+                        let bt = m.block_tokens as usize;
+                        let held =
+                            (prompt_len.max(1).div_ceil(bt).saturating_sub(shared / bt)) as u64;
                         m.blocks_free = m.blocks_free.saturating_sub(held);
                     }
                 }
@@ -734,12 +757,21 @@ impl Engine {
 
     /// Prefill one request and stage it for decoding (or retire it
     /// immediately if it has no token budget / instant EOS). `tokens` /
-    /// `max_new` come from [`Engine::plan_request`] on the same request.
-    fn admit(&mut self, q: QueuedRequest, tokens: Vec<i32>, max_new: usize) -> Result<Admitted> {
+    /// `max_new` come from [`Engine::plan_request`] on the same request;
+    /// `shared` is the resident-prefix length the admission gate
+    /// sampled, forwarded as the (advisory) `prefill_from` hint so a
+    /// prefix-caching backend skips straight to the divergence point.
+    fn admit(
+        &mut self,
+        q: QueuedRequest,
+        tokens: Vec<i32>,
+        max_new: usize,
+        shared: usize,
+    ) -> Result<Admitted> {
         let QueuedRequest { req, events, cancel } = q;
 
         let t0 = Instant::now();
-        let (logits, session) = match self.runtime.prefill(&tokens) {
+        let (logits, session) = match self.runtime.prefill_from(&tokens, shared) {
             Ok(v) => v,
             Err(e) if is_kv_exhausted(&e) => {
                 // out of blocks right now, not broken: requeue instead

@@ -226,6 +226,11 @@ fn stats_json(engine: &Engine) -> Json {
         pairs.push(("kv_block_tokens", Json::Num(k.block_tokens as f64)));
         pairs.push(("kv_reuse_hits", Json::Num(k.reuse_hits as f64)));
         pairs.push(("kv_reserved_bytes", Json::Num(k.reserved_bytes as f64)));
+        pairs.push(("kv_prefix_hits", Json::Num(k.prefix_hits as f64)));
+        pairs.push((
+            "kv_prefix_cached_blocks",
+            Json::Num(k.prefix_cached_blocks as f64),
+        ));
     }
     // transport counters when the backend sits across a device bridge:
     // the serving-level view of bytes/token next to tokens/s

@@ -31,6 +31,56 @@
 //!   even a KV cache.
 //!
 //! [`sim::engine::Simulator`]: crate::sim::engine::Simulator
+//!
+//! # Example: implementing a `Backend`
+//!
+//! The trait's required surface is small — five methods. A minimal
+//! stateless backend (no KV tensors, sessions track position only)
+//! looks like this:
+//!
+//! ```
+//! use anyhow::{bail, Result};
+//! use edgellm::runtime::backend::Backend;
+//! use edgellm::runtime::model::{ModelInfo, Session};
+//!
+//! struct Echo {
+//!     info: ModelInfo,
+//!     buckets: Vec<usize>,
+//! }
+//!
+//! impl Backend for Echo {
+//!     fn info(&self) -> &ModelInfo { &self.info }
+//!     fn prefill_buckets(&self) -> &[usize] { &self.buckets }
+//!     fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
+//!         let Some(&last) = prompt.last() else { bail!("empty prompt") };
+//!         let mut s = Session::new([0, 0, 0, 0]);
+//!         s.pos = prompt.len();
+//!         Ok((vec![last as f32; self.info.vocab], s))
+//!     }
+//!     fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+//!         session.pos += 1;
+//!         Ok(vec![token as f32; self.info.vocab])
+//!     }
+//! }
+//!
+//! let be = Echo {
+//!     info: ModelInfo {
+//!         name: "echo".into(),
+//!         vocab: 4, d_model: 1, n_layers: 1, n_heads: 1, n_kv_heads: 1,
+//!         d_ffn: 1, max_tokens: 16, head_dim: 1, n_params: 0,
+//!         cache_shape: [1, 16, 0, 0],
+//!     },
+//!     buckets: vec![16],
+//! };
+//! let (logits, session) = be.prefill(&[1, 2, 3]).unwrap();
+//! assert_eq!(session.pos, 3);
+//! assert_eq!(logits, vec![3.0; 4]);
+//! // defaults: no batched sharing, no prefix cache, not remote
+//! assert!(!be.supports_batched_decode());
+//! assert_eq!(be.shared_prefix_len(&[1, 2, 3]), 0);
+//! ```
+
+#![deny(missing_docs)]
 
 use std::cell::Cell;
 
@@ -58,8 +108,11 @@ pub use super::reference::RefLlm as ReferenceBackend;
 /// batched round, session close).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TransferMeter {
+    /// cumulative host→device bytes (commands, prompt/decode tokens)
     pub tx_bytes: u64,
+    /// cumulative device→host bytes (logits rows, stats)
     pub rx_bytes: u64,
+    /// metered backend entry points served
     pub calls: u64,
 }
 
@@ -168,6 +221,31 @@ pub trait Backend: Send {
     fn memory(&self) -> Option<MemoryStats> {
         None
     }
+
+    /// Length (in tokens) of the longest prompt prefix the backend
+    /// already holds KV state for — the admission gate's query, so the
+    /// scheduler can account shared blocks once instead of per-session.
+    /// Advisory: the answer may be stale by the time `prefill_from`
+    /// runs (the cache entry may have been evicted, or a better one
+    /// registered). The default `0` is always safe — it means "no
+    /// resident prefix", and the scheduler then budgets the full
+    /// prompt. Backends with a prefix-indexed arena (the reference
+    /// engine) override it.
+    fn shared_prefix_len(&self, _prompt: &[i32]) -> usize {
+        0
+    }
+
+    /// Prefill knowing that (per [`Backend::shared_prefix_len`]) the
+    /// first `shared_len` tokens of `prompt` may already be resident:
+    /// an implementation adopts the shared blocks and computes only the
+    /// suffix from the divergence point. The hint is *advisory* — the
+    /// result must be exactly what [`Backend::prefill`] would return
+    /// (the reference engine re-derives sharing from its live index and
+    /// guarantees bit-identical logits). The default ignores the hint
+    /// and runs a full prefill, which is always correct.
+    fn prefill_from(&self, prompt: &[i32], _shared_len: usize) -> Result<(Vec<f32>, Session)> {
+        self.prefill(prompt)
+    }
 }
 
 // The trait must stay object-safe: the scheduler only ever sees it
@@ -206,6 +284,11 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// Build a latency-model backend for `arch` under sparse strategy
+    /// `strat`, with the device memory system `mem` and a KV budget of
+    /// `max_tokens` positions per session. `seed` keys the
+    /// pseudo-logits stream (two backends with the same seed emit
+    /// identical tokens for identical calls).
     pub fn new(
         arch: &LlmArch,
         strat: &SparseStrategy,

@@ -1,5 +1,5 @@
-//! Paged KV storage: a block-granular arena shared by every session of
-//! a backend, replacing per-request contiguous `Vec` caches.
+//! Paged KV storage: a refcounted, block-granular arena shared by every
+//! session of a backend, with copy-on-write prefix sharing.
 //!
 //! EdgeLLM's premise is that KV/weight memory traffic — not FLOPs —
 //! bounds edge serving. The old session model worked against that:
@@ -14,6 +14,22 @@
 //!   `[kv_heads, head_dim]`). A session holds a [`KvHandle`] — a block
 //!   table plus nothing else — and grows one block at a time as it
 //!   decodes, so resident bytes track *actual* context lengths.
+//! * **Refcounted sharing.** Every block carries a reference count:
+//!   handles and the prefix index hold references, [`KvArena::release`]
+//!   decrements, and a block returns to the free list only at zero. K
+//!   sessions with the same prompt prefix hold *one* physical copy of
+//!   its full blocks; [`KvArena::ensure_writable`] copies a block on
+//!   write (CoW) when anyone else still references it, so no session
+//!   ever writes through a shared block.
+//! * **Prefix index.** Completed prefills register their prompt under
+//!   two kinds of key: a hash of the token ids covering each *full*
+//!   block (tier 1 — any later prompt sharing that block-aligned prefix
+//!   adopts the blocks), and a hash of the *whole* prompt (tier 2 — an
+//!   identical prompt re-prefills only its final token, after CoW of
+//!   the partially-filled boundary block). Index-held blocks that no
+//!   handle pins count as *reclaimable*: they stay cached while memory
+//!   is idle and are evicted LRU-entry-at-a-time the moment an
+//!   allocation needs them.
 //! * **Free-list recycling without re-zeroing.** Released blocks go on
 //!   a free list and are handed out again as-is; every position a
 //!   reader can reach (`< pos`) is written by prefill/decode before it
@@ -27,7 +43,11 @@
 //!   what the scheduler's admission gate consumes: a request is
 //!   admitted while the arena can still cover its *worst-case* block
 //!   count (prompt + `max_new_tokens`), so `max_active` becomes a cap,
-//!   not the allocator.
+//!   not the allocator. `blocks_free` counts cache-only blocks as free
+//!   (they are reclaimable on demand), and a CoW copy is *neutral* for
+//!   `blocks_free` — the copy consumes one block while the original it
+//!   un-pins becomes cache-only — so prefix sharing never invalidates
+//!   the gate's arithmetic.
 //! * **Structured exhaustion.** Growth past the pool fails with the
 //!   typed [`KvExhausted`] error; the scheduler turns that into a
 //!   preemption (`Event::Error("preempted: …")`) of the youngest
@@ -49,8 +69,46 @@
 //! positions in the same order and with the same per-row arithmetic as
 //! the contiguous kernels, so paged attention is **bit-identical** to
 //! the contiguous path — asserted in `rust/tests/backend_equivalence.rs`
-//! and the kernel unit tests.
+//! and the kernel unit tests. Shared blocks hold bytes written by a
+//! deterministic prefill, and CoW copies them verbatim, so sharing
+//! preserves that bit-identity.
+//!
+//! # Example: reserve, share, release
+//!
+//! ```
+//! use edgellm::runtime::kv::KvArena;
+//!
+//! // 2 layers, 4-float rows, 8-token blocks, 16-block pool
+//! let mut arena = KvArena::new(2, 4, 8, 16);
+//! let prompt: Vec<i32> = (0..16).collect();
+//!
+//! // first session: private blocks, then registered in the prefix index
+//! let mut a = arena.reserve(prompt.len()).unwrap();
+//! arena.k_row_mut(&a, 0, 0).fill(1.0);
+//! arena.register_prefix(&prompt, &a);
+//!
+//! // second session with the same prompt adopts the shared blocks:
+//! // both full blocks are physically shared, only the last token is
+//! // left for the caller to recompute
+//! let (mut b, shared_len) = arena.adopt_prefix(&prompt).unwrap();
+//! assert_eq!(shared_len, prompt.len() - 1);
+//! assert_eq!(a.blocks(), b.blocks());
+//!
+//! // writing into a shared block first makes it private (CoW)
+//! arena.ensure_writable(&mut b, 15).unwrap();
+//! assert_ne!(a.blocks()[1], b.blocks()[1], "boundary block was copied");
+//! assert_eq!(a.blocks()[0], b.blocks()[0], "full prefix block stays shared");
+//!
+//! // release decrements refcounts; the shared block is freed only when
+//! // the last holder (here: the prefix index itself) lets go
+//! arena.release(&mut a);
+//! arena.release(&mut b);
+//! assert_eq!(arena.stats().blocks_free, 16, "cached blocks count as free");
+//! ```
 
+#![deny(missing_docs)]
+
+use std::collections::HashMap;
 use std::fmt;
 
 /// Default tokens per block. 64 keeps the block table tiny while
@@ -66,13 +124,19 @@ pub const DEFAULT_BLOCK_TOKENS: usize = 64;
 pub struct MemoryStats {
     /// pool capacity in bytes (`blocks_total * block bytes`)
     pub total_bytes: u64,
-    /// bytes not held by any live handle
+    /// bytes not pinned by any live handle (`total_bytes -
+    /// reserved_bytes`; includes cache-only blocks, which are
+    /// reclaimable on demand)
     pub free_bytes: u64,
-    /// bytes held by live handles (`total_bytes - free_bytes`)
+    /// bytes pinned by live handles (`total_bytes - free_bytes`)
     pub reserved_bytes: u64,
     /// tokens per block — what converts a token budget into blocks
     pub block_tokens: u64,
+    /// pool capacity in blocks
     pub blocks_total: u64,
+    /// blocks an allocation could obtain right now: truly free blocks
+    /// plus cache-only blocks (held only by the prefix index, evictable
+    /// on demand)
     pub blocks_free: u64,
     /// blocks handed out from the free list (recycled without zeroing)
     pub reuse_hits: u64,
@@ -80,6 +144,12 @@ pub struct MemoryStats {
     /// the true peak KV residency, including blocks that were released
     /// again before any caller could sample `reserved_bytes`
     pub peak_reserved_bytes: u64,
+    /// blocks currently held *only* by the prefix index (no live
+    /// handle): resident prompt cache, all of it reclaimable
+    pub prefix_cached_blocks: u64,
+    /// cumulative prefix-index hits: prefills that adopted a resident
+    /// prefix instead of recomputing it
+    pub prefix_hits: u64,
 }
 
 /// The stable marker every rendering of [`KvExhausted`] starts with —
@@ -96,7 +166,10 @@ pub const KV_EXHAUSTED_MARKER: &str = "kv arena exhausted";
 /// round.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvExhausted {
+    /// blocks the failed allocation still needed
     pub needed_blocks: usize,
+    /// blocks obtainable at the time of failure (free list + evictable
+    /// cache — 0 by construction when growth fails)
     pub blocks_free: usize,
 }
 
@@ -115,8 +188,9 @@ impl std::error::Error for KvExhausted {}
 /// A session's share of the arena: the ordered block table. Positions
 /// `[0, blocks.len() * block_tokens)` are addressable; `Session::pos`
 /// tracks how many are live. Deliberately not `Clone` — two handles
-/// naming the same blocks would alias KV state and double-free on
-/// release.
+/// naming the same blocks without the arena knowing would alias KV
+/// state and double-free on release; sharing is explicit and
+/// refcounted, via [`KvArena::adopt_prefix`].
 #[derive(Debug, Default)]
 pub struct KvHandle {
     blocks: Vec<u32>,
@@ -154,6 +228,8 @@ pub struct PagedRows<'a> {
 }
 
 impl<'a> PagedRows<'a> {
+    /// View `row`-float rows of one layer (at `layer_off` floats into
+    /// each block) through `blocks` over the backing `data`.
     pub fn new(
         data: &'a [f32],
         blocks: &'a [u32],
@@ -196,6 +272,41 @@ fn row_offset(
     b * block_stride + layer_off + (pos % block_tokens) * row
 }
 
+/// FNV-1a over the token id bytes — the prefix-index key. Collisions
+/// are tolerated (entries also store the exact tokens and verify on
+/// lookup); the hash only has to spread well.
+fn hash_tokens(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for byte in t.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One resident prefix: the exact tokens it covers (collision
+/// verification), the blocks holding their KV rows (one index
+/// reference each), and an LRU stamp.
+struct IndexEntry {
+    tokens: Vec<i32>,
+    blocks: Vec<u32>,
+    last_used: u64,
+}
+
+/// The two-tier prefix index. Tier 1 (`full`) keys block-aligned
+/// prefixes — `tokens[..k*block_tokens]` for every full block `k` of a
+/// registered prompt — so any later prompt extending that prefix
+/// adopts the blocks. Tier 2 (`whole`) keys entire prompts, partial
+/// boundary block included, so an *identical* prompt recomputes only
+/// its final token (after CoW of the boundary block).
+#[derive(Default)]
+struct PrefixIndex {
+    full: HashMap<u64, IndexEntry>,
+    whole: HashMap<u64, IndexEntry>,
+}
+
 /// The pool. Owns all K/V storage of one backend as `max_blocks`
 /// fixed-size blocks; storage is materialized lazily (first use of a
 /// fresh block grows the backing `Vec` by one `block_stride`), so a
@@ -212,11 +323,24 @@ pub struct KvArena {
     free: Vec<u32>,
     /// blocks whose storage exists (`k.len() == materialized * stride`)
     materialized: usize,
-    /// blocks currently held by live handles
+    /// per-materialized-block total reference count: live handles plus
+    /// prefix-index entries. A block is freed only at zero.
+    refs: Vec<u32>,
+    /// per-materialized-block references held by the prefix index alone
+    /// (always `<= refs`); `refs == idx_refs > 0` means cache-only
+    idx_refs: Vec<u32>,
+    /// physical blocks with `refs > 0`
     in_use: usize,
-    /// high-water mark of `in_use`
-    peak_in_use: usize,
+    /// live blocks held *only* by the prefix index — reclaimable, so
+    /// they count as free for admission
+    cached_only: usize,
+    /// high-water mark of handle-pinned blocks (`in_use - cached_only`)
+    peak_pinned: usize,
     reuse_hits: u64,
+    prefix_hits: u64,
+    index: PrefixIndex,
+    /// monotone LRU clock, bumped on every index lookup/registration
+    lru_clock: u64,
 }
 
 impl KvArena {
@@ -233,22 +357,32 @@ impl KvArena {
             v: Vec::new(),
             free: Vec::new(),
             materialized: 0,
+            refs: Vec::new(),
+            idx_refs: Vec::new(),
             in_use: 0,
-            peak_in_use: 0,
+            cached_only: 0,
+            peak_pinned: 0,
             reuse_hits: 0,
+            prefix_hits: 0,
+            index: PrefixIndex::default(),
+            lru_clock: 0,
         }
     }
 
+    /// Tokens per block.
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
     }
 
+    /// Pool capacity in blocks.
     pub fn blocks_total(&self) -> usize {
         self.max_blocks
     }
 
+    /// Blocks an allocation could obtain right now: truly free blocks
+    /// plus cache-only blocks (the prefix index yields them on demand).
     pub fn blocks_free(&self) -> usize {
-        self.max_blocks - self.in_use
+        self.max_blocks - self.in_use + self.cached_only
     }
 
     /// Blocks needed to address `tokens` positions.
@@ -256,18 +390,124 @@ impl KvArena {
         tokens.max(1).div_ceil(self.block_tokens)
     }
 
-    fn take_block(&mut self) -> u32 {
-        if let Some(b) = self.free.pop() {
-            // recycled as-is: every reachable position is written before
-            // it is read, so stale bytes are unobservable
-            self.reuse_hits += 1;
-            return b;
+    /// Total references (handles + index entries) on `block` — test and
+    /// diagnostics hook for the sharing invariants.
+    pub fn block_refs(&self, block: u32) -> u32 {
+        self.refs[block as usize]
+    }
+
+    /// A handle (not the index) now references `b`.
+    fn add_handle_ref(&mut self, b: u32) {
+        let i = b as usize;
+        if self.refs[i] == 0 {
+            self.in_use += 1;
+        } else if self.refs[i] == self.idx_refs[i] {
+            // was cache-only; a handle now pins it
+            self.cached_only -= 1;
         }
-        let b = self.materialized as u32;
-        self.materialized += 1;
-        self.k.resize(self.materialized * self.block_stride, 0.0);
-        self.v.resize(self.materialized * self.block_stride, 0.0);
-        b
+        self.refs[i] += 1;
+        self.peak_pinned = self.peak_pinned.max(self.in_use - self.cached_only);
+    }
+
+    /// A handle reference on `b` goes away; free at zero.
+    fn drop_handle_ref(&mut self, b: u32) {
+        let i = b as usize;
+        debug_assert!(self.refs[i] > self.idx_refs[i], "handle ref under-count");
+        self.refs[i] -= 1;
+        if self.refs[i] == 0 {
+            self.in_use -= 1;
+            self.free.push(b);
+        } else if self.refs[i] == self.idx_refs[i] {
+            self.cached_only += 1;
+        }
+    }
+
+    /// The prefix index takes a reference on `b`. Only called while a
+    /// handle holds the block (registration happens at prefill end), so
+    /// it can never create a cache-only block.
+    fn add_index_ref(&mut self, b: u32) {
+        let i = b as usize;
+        debug_assert!(self.refs[i] > self.idx_refs[i], "index ref without a handle");
+        self.refs[i] += 1;
+        self.idx_refs[i] += 1;
+    }
+
+    /// An index reference on `b` goes away (entry eviction); free at
+    /// zero.
+    fn drop_index_ref(&mut self, b: u32) {
+        let i = b as usize;
+        debug_assert!(self.idx_refs[i] > 0, "index ref under-count");
+        let was_cached = self.refs[i] == self.idx_refs[i];
+        self.refs[i] -= 1;
+        self.idx_refs[i] -= 1;
+        if self.refs[i] == 0 {
+            self.in_use -= 1;
+            if was_cached {
+                self.cached_only -= 1;
+            }
+            self.free.push(b);
+        }
+        // still referenced: if it was cache-only it stays cache-only
+        // (both counts fell together), and a handle-pinned block cannot
+        // become cache-only by losing an *index* ref — no counter moves
+    }
+
+    /// Obtain one block with zero references: pop the free list,
+    /// materialize fresh storage, or evict LRU prefix-index entries
+    /// until one of those succeeds. `None` means truly exhausted —
+    /// every block is pinned by a live handle.
+    fn take_block(&mut self) -> Option<u32> {
+        loop {
+            if let Some(b) = self.free.pop() {
+                // recycled as-is: every reachable position is written
+                // before it is read, so stale bytes are unobservable
+                self.reuse_hits += 1;
+                return Some(b);
+            }
+            if self.materialized < self.max_blocks {
+                let b = self.materialized as u32;
+                self.materialized += 1;
+                self.k.resize(self.materialized * self.block_stride, 0.0);
+                self.v.resize(self.materialized * self.block_stride, 0.0);
+                self.refs.push(0);
+                self.idx_refs.push(0);
+                return Some(b);
+            }
+            if !self.evict_lru_entry() {
+                return None;
+            }
+            // the eviction may have freed blocks (loop pops them) or
+            // only dropped refs on blocks handles still pin (loop
+            // evicts further entries until none remain)
+        }
+    }
+
+    /// Drop the least-recently-used prefix-index entry (either tier),
+    /// releasing its block references. Returns false when the index is
+    /// empty.
+    fn evict_lru_entry(&mut self) -> bool {
+        let mut best: Option<(bool, u64, u64)> = None; // (whole?, key, last_used)
+        for (&key, e) in &self.index.full {
+            if best.map_or(true, |(_, _, lu)| e.last_used < lu) {
+                best = Some((false, key, e.last_used));
+            }
+        }
+        for (&key, e) in &self.index.whole {
+            if best.map_or(true, |(_, _, lu)| e.last_used < lu) {
+                best = Some((true, key, e.last_used));
+            }
+        }
+        let Some((whole, key, _)) = best else { return false };
+        let e = if whole {
+            self.index.whole.remove(&key)
+        } else {
+            self.index.full.remove(&key)
+        }
+        .expect("picked from a live entry");
+        for b in e.blocks {
+            self.drop_index_ref(b);
+        }
+        true
     }
 
     /// Allocate a handle covering `tokens` positions, or fail whole —
@@ -279,11 +519,12 @@ impl KvArena {
         }
         let mut h = KvHandle::default();
         for _ in 0..need {
-            let b = self.take_block();
-            self.in_use += 1;
+            // cannot fail: each taken block lowers blocks_free() by
+            // exactly one (eviction is neutral), and need was checked
+            let b = self.take_block().expect("blocks_free() covered the need");
+            self.add_handle_ref(b);
             h.blocks.push(b);
         }
-        self.peak_in_use = self.peak_in_use.max(self.in_use);
         Ok(h)
     }
 
@@ -292,26 +533,226 @@ impl KvArena {
     pub fn ensure(&mut self, h: &mut KvHandle, tokens: usize) -> Result<(), KvExhausted> {
         let need_total = self.blocks_for(tokens);
         while h.blocks.len() < need_total {
-            if self.blocks_free() == 0 {
+            let Some(b) = self.take_block() else {
                 return Err(KvExhausted {
                     needed_blocks: need_total - h.blocks.len(),
                     blocks_free: 0,
                 });
-            }
-            let b = self.take_block();
-            self.in_use += 1;
+            };
+            self.add_handle_ref(b);
             h.blocks.push(b);
         }
-        self.peak_in_use = self.peak_in_use.max(self.in_use);
         Ok(())
     }
 
-    /// Return every block of `h` to the free list. Draining the handle
+    /// Make the block holding `pos` safe for `h` to write: if anyone
+    /// else (another handle or the prefix index) still references it,
+    /// copy it — K and V contents verbatim — into a private block and
+    /// swap that into `h`'s table (copy-on-write). No-op when `h` is
+    /// the sole owner. Callers must invoke this before any scatter into
+    /// a possibly-shared block; the paged writers do.
+    ///
+    /// A CoW is *neutral* for [`KvArena::blocks_free`]: the copy
+    /// consumes one block while the original it un-pins becomes
+    /// cache-only (or stays pinned by its other holder). Eviction
+    /// inside the allocation can also simply un-share the block (the
+    /// index drops its reference), in which case no copy happens.
+    pub fn ensure_writable(&mut self, h: &mut KvHandle, pos: usize) -> Result<(), KvExhausted> {
+        let bi = pos / self.block_tokens;
+        loop {
+            let b = h.blocks[bi];
+            if self.refs[b as usize] <= 1 {
+                return Ok(()); // sole owner — writable as-is
+            }
+            // shared: try to obtain a private block without the
+            // take_block() eviction loop, because evicting may instead
+            // drop the *sharer's* reference and make b private — the
+            // re-check at the top of the loop catches that
+            if let Some(nb) = self.free.pop() {
+                self.reuse_hits += 1;
+                self.cow_into(h, bi, nb);
+                return Ok(());
+            }
+            if self.materialized < self.max_blocks {
+                let nb = self.materialized as u32;
+                self.materialized += 1;
+                self.k.resize(self.materialized * self.block_stride, 0.0);
+                self.v.resize(self.materialized * self.block_stride, 0.0);
+                self.refs.push(0);
+                self.idx_refs.push(0);
+                self.cow_into(h, bi, nb);
+                return Ok(());
+            }
+            if !self.evict_lru_entry() {
+                return Err(KvExhausted { needed_blocks: 1, blocks_free: 0 });
+            }
+        }
+    }
+
+    /// The copy half of CoW: clone block `h.blocks[bi]`'s K and V
+    /// contents into fresh block `nb` and repoint the handle.
+    fn cow_into(&mut self, h: &mut KvHandle, bi: usize, nb: u32) {
+        let b = h.blocks[bi];
+        debug_assert_ne!(b, nb, "a pinned block cannot come off the free list");
+        let src = b as usize * self.block_stride;
+        let dst = nb as usize * self.block_stride;
+        self.k.copy_within(src..src + self.block_stride, dst);
+        self.v.copy_within(src..src + self.block_stride, dst);
+        self.add_handle_ref(nb);
+        self.drop_handle_ref(b);
+        h.blocks[bi] = nb;
+    }
+
+    /// Drop every block reference `h` holds. Shared blocks only lose
+    /// one reference (the other holders keep their bytes); blocks whose
+    /// count reaches zero return to the free list. Draining the handle
     /// makes a second release (or a release after `end_session` already
     /// ran) a structural no-op — no double-free is representable.
     pub fn release(&mut self, h: &mut KvHandle) {
-        self.in_use -= h.blocks.len();
-        self.free.append(&mut h.blocks);
+        for b in h.blocks.drain(..) {
+            self.drop_handle_ref(b);
+        }
+    }
+
+    /// Longest resident prefix of `tokens`, in tokens, without adopting
+    /// it — the admission gate's read-only query. Capped at
+    /// `tokens.len() - 1` so at least one token is always recomputed
+    /// (logits must come from real compute).
+    pub fn shared_prefix_len(&self, tokens: &[i32]) -> usize {
+        let t = tokens.len();
+        if t >= 2 {
+            if let Some(e) = self.index.whole.get(&hash_tokens(tokens)) {
+                if e.tokens == tokens {
+                    return t - 1;
+                }
+            }
+        }
+        if t == 0 {
+            return 0;
+        }
+        let bt = self.block_tokens;
+        let mut k = (t - 1) / bt;
+        while k >= 1 {
+            if let Some(e) = self.index.full.get(&hash_tokens(&tokens[..k * bt])) {
+                if e.tokens == tokens[..k * bt] {
+                    return k * bt;
+                }
+            }
+            k -= 1;
+        }
+        0
+    }
+
+    /// Adopt the longest resident prefix of `tokens`: returns a handle
+    /// referencing the shared blocks (refcounts bumped) plus the number
+    /// of positions they already hold. A tier-2 (whole-prompt) hit
+    /// shares everything but the final token — the caller must
+    /// [`KvArena::ensure_writable`] the boundary block before writing
+    /// it. A tier-1 hit shares only full blocks, so the caller's writes
+    /// land in fresh private blocks. `None` when nothing is resident.
+    pub fn adopt_prefix(&mut self, tokens: &[i32]) -> Option<(KvHandle, usize)> {
+        let t = tokens.len();
+        self.lru_clock += 1;
+        let clock = self.lru_clock;
+        if t >= 2 {
+            let key = hash_tokens(tokens);
+            let blocks = self.index.whole.get_mut(&key).and_then(|e| {
+                if e.tokens == tokens {
+                    e.last_used = clock;
+                    Some(e.blocks.clone())
+                } else {
+                    None
+                }
+            });
+            if let Some(blocks) = blocks {
+                return Some((self.adopt_blocks(&blocks), t - 1));
+            }
+        }
+        if t == 0 {
+            return None;
+        }
+        let bt = self.block_tokens;
+        let mut k = (t - 1) / bt;
+        while k >= 1 {
+            let key = hash_tokens(&tokens[..k * bt]);
+            let blocks = self.index.full.get_mut(&key).and_then(|e| {
+                if e.tokens == tokens[..k * bt] {
+                    e.last_used = clock;
+                    Some(e.blocks.clone())
+                } else {
+                    None
+                }
+            });
+            if let Some(blocks) = blocks {
+                return Some((self.adopt_blocks(&blocks), k * bt));
+            }
+            k -= 1;
+        }
+        None
+    }
+
+    /// Bump handle refs on every adopted block and count the hit.
+    fn adopt_blocks(&mut self, blocks: &[u32]) -> KvHandle {
+        let mut h = KvHandle::default();
+        for &b in blocks {
+            self.add_handle_ref(b);
+            h.blocks.push(b);
+        }
+        self.prefix_hits += 1;
+        h
+    }
+
+    /// Register a completed prefill's prompt in the index: one tier-1
+    /// entry per full block of the prompt, plus a tier-2 whole-prompt
+    /// entry (prompts of at least 2 tokens — a 1-token prompt has
+    /// nothing shareable). Existing entries are refreshed, hash
+    /// collisions keep the incumbent, and only *prompt* tokens are ever
+    /// registered — decode-generated positions are private by
+    /// construction. Each entry holds one index reference per block, so
+    /// the cached rows survive the session's release.
+    pub fn register_prefix(&mut self, tokens: &[i32], h: &KvHandle) {
+        let t = tokens.len();
+        let bt = self.block_tokens;
+        if t == 0 || h.blocks.len() * bt < t {
+            return; // handle does not cover the prompt — nothing safe to share
+        }
+        self.lru_clock += 1;
+        let clock = self.lru_clock;
+        for k in 1..=(t / bt) {
+            let covered = &tokens[..k * bt];
+            let key = hash_tokens(covered);
+            if let Some(e) = self.index.full.get_mut(&key) {
+                if e.tokens == covered {
+                    e.last_used = clock;
+                }
+                continue;
+            }
+            let blocks: Vec<u32> = h.blocks[..k].to_vec();
+            for &b in &blocks {
+                self.add_index_ref(b);
+            }
+            self.index.full.insert(
+                key,
+                IndexEntry { tokens: covered.to_vec(), blocks, last_used: clock },
+            );
+        }
+        if t >= 2 {
+            let key = hash_tokens(tokens);
+            if let Some(e) = self.index.whole.get_mut(&key) {
+                if e.tokens == tokens {
+                    e.last_used = clock;
+                }
+                return;
+            }
+            let blocks: Vec<u32> = h.blocks[..t.div_ceil(bt)].to_vec();
+            for &b in &blocks {
+                self.add_index_ref(b);
+            }
+            self.index.whole.insert(
+                key,
+                IndexEntry { tokens: tokens.to_vec(), blocks, last_used: clock },
+            );
+        }
     }
 
     fn offset(&self, h: &KvHandle, layer: usize, pos: usize) -> usize {
@@ -326,6 +767,8 @@ impl KvArena {
     }
 
     /// Mutable K row of `pos` — the scatter side of the paged path.
+    /// The caller must have [`KvArena::ensure_writable`]'d the block
+    /// (prefill/decode do, before any scatter).
     pub fn k_row_mut(&mut self, h: &KvHandle, layer: usize, pos: usize) -> &mut [f32] {
         let o = self.offset(h, layer, pos);
         &mut self.k[o..o + self.row]
@@ -361,17 +804,24 @@ impl KvArena {
         )
     }
 
+    /// Current arena accounting. `free_bytes + reserved_bytes ==
+    /// total_bytes` always; cache-only blocks count as free (they are
+    /// reclaimable on demand), and `prefix_cached_blocks` says how many
+    /// of the free blocks are that cache.
     pub fn stats(&self) -> MemoryStats {
         let block_bytes = (self.block_stride * 2 * std::mem::size_of::<f32>()) as u64;
+        let pinned = (self.in_use - self.cached_only) as u64;
         MemoryStats {
             total_bytes: self.max_blocks as u64 * block_bytes,
-            free_bytes: self.blocks_free() as u64 * block_bytes,
-            reserved_bytes: self.in_use as u64 * block_bytes,
+            free_bytes: (self.max_blocks as u64 - pinned) * block_bytes,
+            reserved_bytes: pinned * block_bytes,
             block_tokens: self.block_tokens as u64,
             blocks_total: self.max_blocks as u64,
             blocks_free: self.blocks_free() as u64,
             reuse_hits: self.reuse_hits,
-            peak_reserved_bytes: self.peak_in_use as u64 * block_bytes,
+            peak_reserved_bytes: self.peak_pinned as u64 * block_bytes,
+            prefix_cached_blocks: self.cached_only as u64,
+            prefix_hits: self.prefix_hits,
         }
     }
 }
@@ -496,6 +946,8 @@ mod tests {
         assert_eq!(s1.total_bytes, 4 * (2 * 8 * 4 * 4 * 2) as u64);
         // the watermark survives a release that a later sample would miss
         assert_eq!(s1.peak_reserved_bytes, s1.reserved_bytes);
+        assert_eq!(s1.prefix_cached_blocks, 0);
+        assert_eq!(s1.prefix_hits, 0);
         a.release(&mut h);
         let s2 = a.stats();
         assert_eq!(s2.reserved_bytes, 0);
@@ -511,5 +963,193 @@ mod tests {
         a.release(&mut h);
         let _h2 = a.reserve(8).unwrap();
         assert_eq!(a.k.len(), a.block_stride, "recycling allocates nothing");
+    }
+
+    // ---- prefix sharing ----
+
+    /// 3-block prompt in an 8-token-block arena: 2 full blocks + 1
+    /// partial boundary block.
+    fn prompt20() -> Vec<i32> {
+        (0..20).collect()
+    }
+
+    #[test]
+    fn whole_prompt_hit_shares_every_block() {
+        let mut a = KvArena::new(2, 4, 8, 16);
+        let p = prompt20();
+        let h1 = a.reserve(p.len()).unwrap();
+        a.register_prefix(&p, &h1);
+        assert_eq!(a.shared_prefix_len(&p), 19, "whole-prompt hit: all but last");
+        let (h2, shared) = a.adopt_prefix(&p).unwrap();
+        assert_eq!(shared, 19);
+        assert_eq!(h1.blocks(), h2.blocks(), "one physical copy");
+        for &b in h1.blocks() {
+            assert!(a.block_refs(b) >= 2, "block {b} must be shared");
+        }
+        assert_eq!(a.stats().prefix_hits, 1);
+        // the two handles pin 3 physical blocks total, not 6
+        assert_eq!(a.stats().blocks_total - a.stats().blocks_free, 3);
+    }
+
+    #[test]
+    fn full_block_prefix_hit_shares_only_full_blocks() {
+        let mut a = KvArena::new(2, 4, 8, 16);
+        let p = prompt20();
+        let h1 = a.reserve(p.len()).unwrap();
+        a.register_prefix(&p, &h1);
+        // same 16-token (2-block) prefix, different tail
+        let mut q = prompt20();
+        q[18] = 99;
+        assert_eq!(a.shared_prefix_len(&q), 16, "full blocks only");
+        let (h2, shared) = a.adopt_prefix(&q).unwrap();
+        assert_eq!(shared, 16);
+        assert_eq!(h2.blocks(), &h1.blocks()[..2]);
+        // a 5-token prompt matches nothing block-aligned
+        assert_eq!(a.shared_prefix_len(&q[..5]), 0);
+        assert!(a.adopt_prefix(&q[..5]).is_none());
+    }
+
+    #[test]
+    fn cow_copies_shared_block_and_preserves_bytes() {
+        let mut a = KvArena::new(1, 4, 8, 16);
+        let p: Vec<i32> = (0..12).collect(); // 1 full + 1 boundary block
+        let mut h1 = a.reserve(p.len()).unwrap();
+        for pos in 0..12 {
+            a.k_row_mut(&h1, 0, pos).fill(pos as f32);
+            a.v_row_mut(&h1, 0, pos).fill(-(pos as f32));
+        }
+        a.register_prefix(&p, &h1);
+        let (mut h2, shared) = a.adopt_prefix(&p).unwrap();
+        assert_eq!(shared, 11);
+        let boundary = h2.blocks()[1];
+        // writing position 11 lands in the shared boundary block: CoW
+        a.ensure_writable(&mut h2, 11).unwrap();
+        assert_ne!(h2.blocks()[1], boundary, "boundary block must be copied");
+        assert_eq!(h2.blocks()[0], h1.blocks()[0], "full block stays shared");
+        // the copy carried the original bytes verbatim
+        for pos in 8..12 {
+            assert_eq!(a.k_rows(&h2, 0).row(pos), &[pos as f32; 4][..]);
+            assert_eq!(a.v_rows(&h2, 0).row(pos), &[-(pos as f32); 4][..]);
+        }
+        // writing through h2 leaves h1 (and the cache) untouched
+        a.ensure_writable(&mut h2, 11).unwrap(); // now a no-op
+        a.k_row_mut(&h2, 0, 11).fill(777.0);
+        assert_eq!(a.k_rows(&h1, 0).row(11), &[11.0; 4][..]);
+        a.release(&mut h1);
+        a.release(&mut h2);
+    }
+
+    #[test]
+    fn cached_blocks_count_as_free_and_survive_release() {
+        let mut a = KvArena::new(1, 4, 8, 4);
+        let p: Vec<i32> = (0..16).collect(); // 2 full blocks
+        let mut h = a.reserve(p.len()).unwrap();
+        a.register_prefix(&p, &h);
+        let s = a.stats();
+        assert_eq!(s.blocks_free, 2, "handle pins 2 of 4");
+        assert_eq!(s.prefix_cached_blocks, 0, "handle still pins the cache");
+        a.release(&mut h);
+        let s = a.stats();
+        assert_eq!(s.prefix_cached_blocks, 2, "cache-only now");
+        assert_eq!(s.blocks_free, 4, "cache-only blocks are reclaimable");
+        assert_eq!(s.reserved_bytes, 0, "nothing pinned by handles");
+        // and the cached rows are still adoptable
+        let (h2, shared) = a.adopt_prefix(&p).unwrap();
+        assert_eq!(shared, 15);
+        assert_eq!(h2.blocks().len(), 2);
+        assert_eq!(a.stats().prefix_cached_blocks, 0, "adopted = pinned again");
+    }
+
+    #[test]
+    fn allocation_evicts_lru_entries_under_pressure() {
+        let mut a = KvArena::new(1, 4, 8, 2);
+        let p1: Vec<i32> = (0..8).collect();
+        let p2: Vec<i32> = (100..108).collect();
+        let mut h1 = a.reserve(8).unwrap();
+        a.register_prefix(&p1, &h1);
+        let mut h2 = a.reserve(8).unwrap();
+        a.register_prefix(&p2, &h2);
+        a.release(&mut h1);
+        a.release(&mut h2);
+        // both blocks are cache-only; a fresh 2-block reservation must
+        // evict both entries and succeed
+        assert_eq!(a.stats().prefix_cached_blocks, 2);
+        let h3 = a.reserve(16).unwrap();
+        assert_eq!(h3.blocks().len(), 2);
+        assert_eq!(a.stats().prefix_cached_blocks, 0);
+        assert!(a.adopt_prefix(&p1).is_none(), "evicted entries are gone");
+        assert!(a.adopt_prefix(&p2).is_none());
+    }
+
+    #[test]
+    fn eviction_prefers_least_recently_used() {
+        let mut a = KvArena::new(1, 4, 8, 2);
+        let p1: Vec<i32> = (0..8).collect();
+        let p2: Vec<i32> = (100..108).collect();
+        let mut h1 = a.reserve(8).unwrap();
+        a.register_prefix(&p1, &h1);
+        let mut h2 = a.reserve(8).unwrap();
+        a.register_prefix(&p2, &h2);
+        a.release(&mut h1);
+        a.release(&mut h2);
+        // touch p1 so p2 becomes the LRU entry
+        let (mut t, _) = a.adopt_prefix(&p1).unwrap();
+        a.release(&mut t);
+        // one block of demand: p2's entry must be the one evicted
+        let h3 = a.reserve(8).unwrap();
+        assert!(a.adopt_prefix(&p1).is_some(), "recently-used entry survives");
+        assert!(a.adopt_prefix(&p2).is_none(), "LRU entry was evicted");
+        drop(h3);
+    }
+
+    #[test]
+    fn ensure_writable_unshares_without_copy_when_eviction_frees_the_ref() {
+        // 1-block pool: the only sharer of the block is the index
+        // entry itself, so CoW pressure must un-share (evict the
+        // entry) rather than copy — there is nowhere to copy to
+        let mut a = KvArena::new(1, 4, 8, 1);
+        let p: Vec<i32> = (0..8).collect();
+        let mut h = a.reserve(8).unwrap();
+        a.k_row_mut(&h, 0, 0).fill(5.0);
+        a.register_prefix(&p, &h);
+        // a block-aligned prompt registers in both tiers (a tier-1
+        // full-block entry for longer prompts extending it, a tier-2
+        // whole-prompt entry for identical prompts), so the only block
+        // carries two index refs on top of the handle's
+        assert_eq!(a.block_refs(h.blocks()[0]), 3);
+        let b = h.blocks()[0];
+        a.ensure_writable(&mut h, 0).unwrap();
+        assert_eq!(h.blocks()[0], b, "no copy — the index refs were dropped");
+        assert_eq!(a.block_refs(b), 1);
+        assert_eq!(a.k_rows(&h, 0).row(0), &[5.0; 4][..]);
+    }
+
+    #[test]
+    fn release_of_one_sharer_keeps_blocks_for_the_rest() {
+        let mut a = KvArena::new(1, 4, 8, 16);
+        let p: Vec<i32> = (0..16).collect();
+        let mut h1 = a.reserve(16).unwrap();
+        for pos in 0..16 {
+            a.k_row_mut(&h1, 0, pos).fill(pos as f32);
+        }
+        a.register_prefix(&p, &h1);
+        let (h2, _) = a.adopt_prefix(&p).unwrap();
+        a.release(&mut h1);
+        assert!(h1.is_empty());
+        // h2 still reads the shared rows — nothing was freed
+        for pos in 0..16 {
+            assert_eq!(a.k_rows(&h2, 0).row(pos), &[pos as f32; 4][..]);
+        }
+        let s = a.stats();
+        assert_eq!(s.blocks_total - s.blocks_free, 2, "h2 pins both blocks");
+    }
+
+    #[test]
+    fn one_token_prompts_are_never_indexed() {
+        let mut a = KvArena::new(1, 4, 8, 4);
+        let h = a.reserve(1).unwrap();
+        a.register_prefix(&[42], &h);
+        assert_eq!(a.shared_prefix_len(&[42]), 0);
+        assert!(a.adopt_prefix(&[42]).is_none());
     }
 }

@@ -311,6 +311,37 @@ impl LlmRuntime {
         self.backend.prefill(prompt)
     }
 
+    /// Length of the longest prefix of `prompt` the backend already
+    /// holds KV state for (0 for backends without a prefix cache). The
+    /// scheduler's admission gate uses this to account shared blocks
+    /// once instead of per-session; advisory by contract — see
+    /// [`Backend::shared_prefix_len`].
+    pub fn shared_prefix_len(&self, prompt: &[i32]) -> usize {
+        self.backend.shared_prefix_len(prompt)
+    }
+
+    /// Prefill with an advisory shared-prefix hint (see
+    /// [`Backend::prefill_from`]): a prefix-caching backend adopts the
+    /// resident blocks and computes only the suffix, bit-identically to
+    /// a full [`LlmRuntime::prefill`]. Same validation as `prefill`.
+    pub fn prefill_from(
+        &self,
+        prompt: &[i32],
+        shared_len: usize,
+    ) -> Result<(Vec<f32>, Session)> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > self.info.max_tokens {
+            bail!(
+                "prompt of {} exceeds max_tokens {}",
+                prompt.len(),
+                self.info.max_tokens
+            );
+        }
+        self.backend.prefill_from(prompt, shared_len)
+    }
+
     /// One decode step: feed `token`, advance the session, return logits.
     pub fn decode(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
         if session.pos >= self.info.max_tokens {

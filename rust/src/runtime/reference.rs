@@ -405,6 +405,16 @@ impl RefLlm {
     /// computed. Returns those logits plus the primed session, whose KV
     /// rows live in arena blocks reserved here (recycled from retired
     /// sessions when the free list has any).
+    ///
+    /// Prefix caching is always on: when the arena's prefix index holds
+    /// KV state for a prefix of `prompt` (a previous session with the
+    /// same system prompt), the shared blocks are adopted by refcount
+    /// and only the suffix from the divergence point is computed. The
+    /// result is bit-identical to a cold prefill — each output row's
+    /// accumulation order in the kernels is independent of the row
+    /// count, and adopted blocks hold exactly the bytes a cold prefill
+    /// would have written. On return the prompt is registered in the
+    /// index so later sessions can share it.
     pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
         let t = prompt.len();
         if t == 0 {
@@ -415,39 +425,59 @@ impl RefLlm {
             bail!("prompt of {t} exceeds max_tokens {max_t}");
         }
         let d = self.info.d_model;
-        let kv = self
-            .arena
-            .borrow_mut()
-            .reserve(t)
-            .map_err(anyhow::Error::new)?;
+        // adopt the longest resident prefix (refcounts bumped), then
+        // grow to the full prompt and make every block we are about to
+        // write private (CoW on the shared boundary block; a no-op on
+        // fresh blocks) — all-or-nothing, so a failure leaks nothing
+        let (mut kv, start) = {
+            let mut arena = self.arena.borrow_mut();
+            let (mut kv, start) = arena
+                .adopt_prefix(prompt)
+                .unwrap_or((Default::default(), 0));
+            let bt = arena.block_tokens();
+            let grown = arena.ensure(&mut kv, t).and_then(|()| {
+                for bi in (start / bt)..=((t - 1) / bt) {
+                    arena.ensure_writable(&mut kv, bi * bt)?;
+                }
+                Ok(())
+            });
+            if let Err(e) = grown {
+                arena.release(&mut kv);
+                return Err(anyhow::Error::new(e));
+            }
+            (kv, start)
+        };
         let mut session = Session::with_kv(kv);
+        let n = t - start; // suffix rows actually computed
         let mut sc = self.scratch.borrow_mut();
         let sc = &mut *sc;
-        self.reserve(sc, t);
-        for (i, &tok) in prompt.iter().enumerate() {
+        self.reserve(sc, n);
+        for (i, &tok) in prompt[start..].iter().enumerate() {
             let v = tok.rem_euclid(REF_VOCAB as i32) as usize;
             sc.h[i * d..(i + 1) * d].copy_from_slice(&self.emb[v * d..(v + 1) * d]);
         }
         for (li, layer) in self.layers.iter().enumerate() {
-            self.qkv(layer, t, sc);
+            self.qkv(layer, n, sc);
             {
-                // scatter the T fresh K/V rows into the block table,
-                // then attend through the gather view — bit-identical
-                // to the old contiguous writes
+                // scatter the fresh suffix K/V rows into the block
+                // table, then attend over the *full* history (adopted
+                // prefix rows + fresh rows) through the gather view —
+                // bit-identical to the cold-prefill writes
                 let mut arena = self.arena.borrow_mut();
-                for i in 0..t {
+                for i in 0..n {
+                    let pos = start + i;
                     arena
-                        .k_row_mut(&session.kv, li, i)
+                        .k_row_mut(&session.kv, li, pos)
                         .copy_from_slice(&sc.k[i * d..(i + 1) * d]);
                     arena
-                        .v_row_mut(&session.kv, li, i)
+                        .v_row_mut(&session.kv, li, pos)
                         .copy_from_slice(&sc.v[i * d..(i + 1) * d]);
                 }
                 let arena = &*arena;
                 let kr = arena.k_rows(&session.kv, li);
                 let vr = arena.v_rows(&session.kv, li);
-                for i in 0..t {
-                    let len = i + 1;
+                for i in 0..n {
+                    let len = start + i + 1;
                     attend_paged_into(
                         &sc.q[i * d..(i + 1) * d],
                         &kr,
@@ -457,11 +487,14 @@ impl RefLlm {
                     );
                 }
             }
-            self.mix_and_ffn(layer, t, sc);
+            self.mix_and_ffn(layer, n, sc);
         }
         session.pos = t;
         let mut logits = vec![0f32; REF_VOCAB];
-        matvec_into(&self.w_out, &sc.h[(t - 1) * d..t * d], &mut logits);
+        matvec_into(&self.w_out, &sc.h[(n - 1) * d..n * d], &mut logits);
+        // make this prompt's blocks adoptable by later sessions (the
+        // index takes its own refcounts, so they survive end_session)
+        self.arena.borrow_mut().register_prefix(prompt, &session.kv);
         Ok((logits, session))
     }
 
@@ -493,7 +526,10 @@ impl RefLlm {
         }
         // lazy growth, all-or-nothing *before* any compute or scatter: a
         // session crossing a block boundary takes one block from the
-        // pool here; on exhaustion the round fails with the typed
+        // pool here, and a session about to write into a block the
+        // prefix index (or another sharer) still references gets a
+        // private copy first (CoW) — no decode ever writes through a
+        // shared block. On exhaustion the round fails with the typed
         // KvExhausted error while every session is still unadvanced, so
         // the scheduler can preempt and retry the round bit-identically
         {
@@ -501,6 +537,7 @@ impl RefLlm {
             for sess in sessions.iter_mut() {
                 arena
                     .ensure(&mut sess.kv, sess.pos + 1)
+                    .and_then(|()| arena.ensure_writable(&mut sess.kv, sess.pos))
                     .map_err(anyhow::Error::new)?;
             }
         }
@@ -665,6 +702,20 @@ impl Backend for RefLlm {
 
     fn memory(&self) -> Option<MemoryStats> {
         Some(self.memory_stats())
+    }
+
+    /// The admission gate's query: longest resident prefix of `prompt`
+    /// per the arena's index, without adopting it.
+    fn shared_prefix_len(&self, prompt: &[i32]) -> usize {
+        self.arena.borrow().shared_prefix_len(prompt)
+    }
+
+    /// The hint is advisory (the index may have moved since the caller
+    /// sampled it); prefix caching is always on in this engine, so this
+    /// is exactly [`RefLlm::prefill`] — which re-derives sharing from
+    /// the live index and is bit-identical either way.
+    fn prefill_from(&self, prompt: &[i32], _shared_len: usize) -> Result<(Vec<f32>, Session)> {
+        RefLlm::prefill(self, prompt)
     }
 }
 
@@ -844,11 +895,14 @@ mod tests {
         // pool of 2 is now exhausted
         let err = m.prefill(&[6]).unwrap_err();
         assert!(format!("{err:#}").contains("kv arena exhausted"), "{err:#}");
-        // retiring a session makes its block reusable — and the recycled
-        // session must still compute correctly on the stale block
+        // retiring a session leaves its block cached (the prefix index
+        // still holds it); a *different* prompt evicts the cache entry,
+        // recycles the block without re-zeroing, and must still compute
+        // correctly on the stale bytes
         Backend::end_session(&m, &mut a);
         assert!(a.kv.is_empty());
-        let (l1, mut c) = m.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(Backend::memory(&m).unwrap().prefix_cached_blocks, 1);
+        let (l1, mut c) = m.prefill(&[9, 9, 8]).unwrap();
         let stats = Backend::memory(&m).unwrap();
         assert_eq!(stats.reuse_hits, 1, "{stats:?}");
         assert_eq!(stats.blocks_free, 0);
@@ -858,12 +912,84 @@ mod tests {
             kv_block_tokens: 64,
             ..ReferenceConfig::default()
         });
-        let (l2, _) = fresh.prefill(&[1, 2, 3]).unwrap();
+        let (l2, _) = fresh.prefill(&[9, 9, 8]).unwrap();
         assert_eq!(l1, l2, "stale block bytes leaked into the computation");
         Backend::end_session(&m, &mut b);
         Backend::end_session(&m, &mut c);
         let stats = m.memory_stats();
         assert_eq!(stats.blocks_free, stats.blocks_total, "blocks leaked");
+    }
+
+    #[test]
+    fn repeated_prompt_adopts_shared_prefix_bit_identically() {
+        // K sessions with an identical prompt: one physical copy of the
+        // prefix, bit-identical logits, and the prefix meter counts the
+        // adoptions
+        let m = RefLlm::new(ReferenceConfig {
+            kv_block_tokens: 4,
+            ..ReferenceConfig::default()
+        });
+        let prompt = [1i32, 2, 3, 4, 5, 6, 7, 8, 9, 10]; // 2 full + 1 boundary block
+        let (l0, s0) = m.prefill(&prompt).unwrap();
+        let pinned_after_one =
+            m.memory_stats().blocks_total - m.memory_stats().blocks_free;
+        let mut sessions = vec![s0];
+        for _ in 0..3 {
+            let (l, s) = m.prefill(&prompt).unwrap();
+            assert_eq!(l0, l, "adopted prefill must be bit-identical");
+            // the full 4-token blocks are physically shared
+            assert_eq!(s.kv.blocks()[..2], sessions[0].kv.blocks()[..2]);
+            sessions.push(s);
+        }
+        let stats = m.memory_stats();
+        assert_eq!(stats.prefix_hits, 3, "{stats:?}");
+        // 4 sessions over a 3-block prompt: 2 shared + 4 private
+        // boundary copies = 6 blocks, not 12
+        assert_eq!(
+            stats.blocks_total - stats.blocks_free,
+            pinned_after_one + 3,
+            "each extra session must pin only its private boundary block"
+        );
+        // shared history decodes bit-identically to the private owner
+        let mut logits = Vec::new();
+        for s in sessions.iter_mut() {
+            logits.push(m.decode(s, 42).unwrap());
+        }
+        for l in &logits[1..] {
+            assert_eq!(&logits[0], l, "shared-block decode diverged");
+        }
+        for s in sessions.iter_mut() {
+            Backend::end_session(&m, s);
+        }
+        let stats = m.memory_stats();
+        assert_eq!(stats.blocks_free, stats.blocks_total, "blocks leaked");
+    }
+
+    #[test]
+    fn shared_prefix_len_reports_resident_prefixes() {
+        let m = RefLlm::new(ReferenceConfig {
+            kv_block_tokens: 4,
+            ..ReferenceConfig::default()
+        });
+        let prompt = [1i32, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        assert_eq!(Backend::shared_prefix_len(&m, &prompt), 0, "cold index");
+        let (_, _s) = m.prefill(&prompt).unwrap();
+        // identical prompt: everything but the last token is resident
+        assert_eq!(Backend::shared_prefix_len(&m, &prompt), 9);
+        // same first 2 blocks, different tail: the full blocks are
+        let mut div = prompt;
+        div[9] = 99;
+        assert_eq!(Backend::shared_prefix_len(&m, &div), 8);
+        // unrelated prompt: nothing
+        assert_eq!(Backend::shared_prefix_len(&m, &[50, 60, 70]), 0);
+        // prefill_from with any advisory hint matches plain prefill
+        let (a, _) = Backend::prefill_from(&m, &div, 8).unwrap();
+        let fresh = RefLlm::new(ReferenceConfig {
+            kv_block_tokens: 4,
+            ..ReferenceConfig::default()
+        });
+        let (b, _) = fresh.prefill(&div).unwrap();
+        assert_eq!(a, b, "partial prefill diverged from cold prefill");
     }
 
     #[test]

@@ -240,6 +240,78 @@ fn paged_kv_decode_is_bit_identical_to_contiguous_for_mixed_batches() {
     }
 }
 
+/// Acceptance (prefix sharing): K sessions prefilled with one identical
+/// prompt hold exactly **one** physical copy of the full-block prefix —
+/// each extra session pins only its private copy-on-write boundary
+/// block — and every shared session's decode logits are *byte*-identical
+/// to a private session on a runtime that never shares anything.
+#[test]
+fn shared_prefix_decode_is_bit_identical_to_private() {
+    let paged = ReferenceConfig {
+        kv_block_tokens: 8,
+        ..cfg(Sparsity::Dense)
+    };
+    let sharing = LlmRuntime::reference(paged.clone());
+    // control: same weights/config, but each prompt is prefilled once,
+    // so nothing is ever adopted from the prefix index
+    let private = LlmRuntime::reference(paged);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+    // two full 8-token blocks plus a partially-filled boundary block
+    let prompt: Vec<i32> = (0..19).map(|i| (i * 7 + 3) % 256).collect();
+    let (lp, mut control) = private.prefill(&prompt).unwrap();
+
+    const K: usize = 4;
+    let mut sessions = Vec::new();
+    let mut pinned_after_first = 0;
+    for k in 0..K {
+        let hint = sharing.shared_prefix_len(&prompt);
+        if k == 0 {
+            assert_eq!(hint, 0, "cold index must report no shared prefix");
+        } else {
+            // whole-prompt hit: everything but the final token is resident
+            assert_eq!(hint, prompt.len() - 1);
+        }
+        let (l, s) = sharing.prefill_from(&prompt, hint).unwrap();
+        assert_eq!(bits(&l), bits(&lp), "prefill bits diverged at session {k}");
+        sessions.push(s);
+
+        let m = sharing.memory().unwrap();
+        let pinned = m.blocks_total - m.blocks_free;
+        if k == 0 {
+            pinned_after_first = pinned;
+            assert_eq!(pinned, 3, "19 tokens at bt=8 span 3 blocks");
+        } else {
+            // one physical copy of the 2 full prefix blocks; each extra
+            // session owns only its CoW'd boundary block
+            assert_eq!(
+                pinned,
+                pinned_after_first + k as u64,
+                "session {k} pinned more than its boundary block"
+            );
+        }
+    }
+    assert_eq!(
+        sharing.memory().unwrap().prefix_hits,
+        (K - 1) as u64,
+        "every warm prefill must adopt from the index"
+    );
+
+    // enough rounds that every session fills its boundary block and
+    // grows a fresh one (pos 19 -> 27 crosses the 24-token boundary)
+    for round in 0..8i32 {
+        let t = (round * 31 + 11) % 256;
+        let want = bits(&private.decode(&mut control, t).unwrap());
+        for (k, s) in sessions.iter_mut().enumerate() {
+            let got = bits(&sharing.decode(s, t).unwrap());
+            assert_eq!(got, want, "round {round} session {k} bits diverged");
+        }
+    }
+    for s in &sessions {
+        assert_eq!(s.pos, control.pos);
+    }
+}
+
 #[test]
 fn decode_batch_rejects_full_session_without_corrupting_others() {
     let rt = LlmRuntime::reference(ReferenceConfig {

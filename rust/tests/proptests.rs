@@ -318,6 +318,147 @@ fn prop_kv_arena_interleavings_never_leak_or_double_free() {
 }
 
 #[test]
+fn prop_kv_prefix_sharing_interleavings_stay_consistent() {
+    // refcounted extension of the interleaving property: any mix of
+    // adopt-or-grow prefills, single-token growth with copy-on-write,
+    // releases, and prefix re-registration must keep the accounting
+    // exact — a block a handle is about to write always ends with
+    // exactly one reference (no write-through-shared-block), pinned
+    // blocks equal the distinct blocks live handles hold (no leak, no
+    // double-free), and draining every handle frees the whole pool
+    use edgellm::runtime::kv::{KvArena, KvHandle};
+    use std::collections::HashSet;
+
+    // prompts come from 3 families; family p's sequence is
+    // p*1000, p*1000+1, ... so equal-family prompts share prefixes and
+    // cross-family prompts diverge at token 0
+    let toks = |p: i32, t: usize| (0..t as i32).map(|i| p * 1000 + i).collect::<Vec<i32>>();
+
+    let mut rng = Rng::new(1909);
+    for case in 0..30usize {
+        let bt = [4usize, 8, 16][case % 3];
+        let max_blocks = 3 + case % 10;
+        let mut arena = KvArena::new(2, 4, bt, max_blocks);
+        let mut live: Vec<(KvHandle, Vec<i32>)> = Vec::new();
+
+        for step in 0..200usize {
+            match rng.below(4) {
+                0 => {
+                    // prefill-shaped: adopt what the index holds, grow
+                    // to the full prompt, unshare every block we'd write
+                    let tokens = toks(rng.below(3) as i32, 1 + rng.below(3 * bt as u64) as usize);
+                    let t = tokens.len();
+                    let (mut h, start) =
+                        arena.adopt_prefix(&tokens).unwrap_or((KvHandle::default(), 0));
+                    assert!(start <= t, "case {case} step {step}: adopted past the prompt");
+                    assert!(
+                        h.capacity_tokens(bt) >= start,
+                        "case {case} step {step}: adopted handle shorter than its prefix"
+                    );
+                    let grown = arena.ensure(&mut h, t).and_then(|()| {
+                        for bi in (start / bt)..=((t - 1) / bt) {
+                            arena.ensure_writable(&mut h, bi * bt)?;
+                            assert_eq!(
+                                arena.block_refs(h.blocks()[bi]),
+                                1,
+                                "case {case} step {step}: writable block still shared"
+                            );
+                        }
+                        Ok(())
+                    });
+                    match grown {
+                        Ok(()) => {
+                            arena.register_prefix(&tokens, &h);
+                            live.push((h, tokens));
+                        }
+                        Err(_) => {
+                            assert_eq!(arena.blocks_free(), 0, "case {case} step {step}");
+                            arena.release(&mut h);
+                        }
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let (h, tokens) = &mut live[i];
+                        let pos = tokens.len();
+                        let grown = arena
+                            .ensure(h, pos + 1)
+                            .and_then(|()| arena.ensure_writable(h, pos));
+                        match grown {
+                            Ok(()) => {
+                                assert_eq!(
+                                    arena.block_refs(h.blocks()[pos / bt]),
+                                    1,
+                                    "case {case} step {step}: decode row still shared"
+                                );
+                                tokens.push(tokens[0] + pos as i32);
+                            }
+                            Err(_) => {
+                                assert_eq!(arena.blocks_free(), 0, "case {case} step {step}")
+                            }
+                        }
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let (mut h, _) = live.swap_remove(i);
+                        arena.release(&mut h);
+                        assert!(h.is_empty());
+                        arena.release(&mut h); // double release: no-op
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let (h, tokens) = &live[i];
+                        arena.register_prefix(tokens, h);
+                    }
+                }
+            }
+
+            // refcount-aware invariants after every step: handles never
+            // hold a block twice internally, every held block's refcount
+            // covers its holders, and pinned == distinct held blocks
+            let mut holders: std::collections::HashMap<u32, u32> = Default::default();
+            for (h, _) in &live {
+                let mut mine = HashSet::new();
+                for &b in h.blocks() {
+                    assert!(
+                        mine.insert(b),
+                        "case {case} step {step}: handle holds block {b} twice"
+                    );
+                    assert!((b as usize) < max_blocks, "block id out of range");
+                    *holders.entry(b).or_insert(0) += 1;
+                }
+            }
+            for (&b, &n) in &holders {
+                assert!(
+                    arena.block_refs(b) >= n,
+                    "case {case} step {step}: block {b} refcount {} below its {n} holders",
+                    arena.block_refs(b)
+                );
+            }
+            let stats = arena.stats();
+            assert_eq!(
+                stats.blocks_total - stats.blocks_free,
+                holders.len() as u64,
+                "case {case} step {step}: pinned blocks drifted from live handles"
+            );
+            assert_eq!(stats.free_bytes + stats.reserved_bytes, stats.total_bytes);
+        }
+
+        for (mut h, _) in live.drain(..) {
+            arena.release(&mut h);
+        }
+        let stats = arena.stats();
+        assert_eq!(stats.blocks_free, stats.blocks_total, "case {case}: blocks leaked");
+        assert_eq!(stats.reserved_bytes, 0, "case {case}: phantom reservation");
+    }
+}
+
+#[test]
 fn prop_rng_choose_indices_uniformish() {
     // sanity on the test harness itself: chosen index sets cover the range
     let mut rng = Rng::new(808);

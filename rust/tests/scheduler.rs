@@ -356,6 +356,93 @@ fn kv_exhaustion_preempts_with_structured_error() {
     assert!(hb.wait().is_ok());
 }
 
+/// A preempted session that *shares* its prefix frees only its private
+/// blocks: the full-block prefix it adopted stays resident for the
+/// other sharer (refcount > 1), so preemption must never be counted on
+/// to reclaim a shared session's whole footprint.
+#[test]
+fn preempting_a_prefix_sharer_frees_only_its_private_blocks() {
+    let cfg = ReferenceConfig {
+        max_tokens: 64,
+        kv_block_tokens: 8,
+        kv_pool_blocks: 8,
+        ..ReferenceConfig::default()
+    };
+    let mut eng = Engine::new(
+        LlmRuntime::reference(cfg.clone()),
+        EngineConfig { max_active: 4, ..EngineConfig::default() },
+    );
+
+    // an out-of-band elder sharer: 20 tokens = 2 full blocks + a
+    // boundary block, registered in the prefix index by prefill
+    let text = "shared system prompt"; // exactly 20 byte-tokens
+    let toks = edgellm::coordinator::tokenizer::encode(text);
+    assert_eq!(toks.len(), 20);
+    let (_, mut elder) = eng.runtime().prefill(&toks).unwrap();
+    let pinned = |eng: &Engine| {
+        let m = eng.runtime().memory().unwrap();
+        m.blocks_total - m.blocks_free
+    };
+    assert_eq!(pinned(&eng), 3);
+
+    // the scheduled sharer adopts the elder's two full blocks and
+    // copy-on-writes the boundary block: one private block
+    let ha = eng.submit(text, 8, Sampling::Greedy);
+    eng.step_round().unwrap();
+    assert_eq!(eng.active_sessions(), 1);
+    assert_eq!(
+        pinned(&eng),
+        4,
+        "the sharer must pin only its copy-on-write boundary block"
+    );
+    assert_eq!(eng.runtime().memory().unwrap().prefix_hits, 1);
+
+    // a hog drains the rest of the pool behind the gate's back
+    let (mut hog_logits, mut hog) = eng.runtime().prefill(&[7, 7, 7]).unwrap();
+    while eng.runtime().memory().unwrap().blocks_free > 0 {
+        let t = edgellm::runtime::model::argmax(&hog_logits);
+        hog_logits = eng.runtime().decode(&mut hog, t).unwrap();
+    }
+
+    // the sharer crosses its next block boundary -> preempted (youngest
+    // and only active session)
+    for _ in 0..10 {
+        eng.step_round().unwrap();
+        if eng.metrics().preempted > 0 {
+            break;
+        }
+    }
+    assert_eq!(eng.metrics().preempted, 1);
+    assert_eq!(eng.active_sessions(), 0);
+    let err = ha.wait().unwrap_err();
+    assert!(err.contains("preempted"), "{err}");
+
+    // the core claim: eviction returned exactly the sharer's one
+    // private block — had the shared prefix been counted reclaimable,
+    // three blocks would have come back
+    assert_eq!(
+        eng.runtime().memory().unwrap().blocks_free,
+        1,
+        "preemption must free only the victim's private blocks"
+    );
+
+    // the elder's adopted-from blocks are untouched: its next decode is
+    // bit-identical to an unshared control run
+    let control_rt = LlmRuntime::reference(cfg);
+    let (_, mut control) = control_rt.prefill(&toks).unwrap();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let le = eng.runtime().decode(&mut elder, 5).unwrap();
+    let lc = control_rt.decode(&mut control, 5).unwrap();
+    assert_eq!(bits(&le), bits(&lc), "shared prefix corrupted by preemption");
+
+    // release the hog: the engine serves again
+    eng.runtime().end_session(&mut hog);
+    let hb = eng.submit("recovery", 4, Sampling::Greedy);
+    let done = eng.run_all().unwrap();
+    assert_eq!(done.len(), 1);
+    assert!(hb.wait().is_ok());
+}
+
 fn send_request(addr: std::net::SocketAddr, body: String) -> Json {
     let mut stream = TcpStream::connect(addr).unwrap();
     writeln!(stream, "{body}").unwrap();
