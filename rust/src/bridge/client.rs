@@ -25,6 +25,26 @@
 //!   [`Backend::memory`] stats query) proves the closes were applied,
 //!   and disconnect still reclaims everything.
 //!
+//! **Failure taxonomy** ([`BridgeError`]): every wire exchange is typed
+//! `Io` (the connection is gone — retryable), `Protocol` (the device
+//! answered outside the protocol — not retryable, replaying garbage
+//! reproduces garbage), or `Backend` (the device answered with a
+//! structured error frame — the connection is healthy and the error
+//! *is* the answer). Reconnect logic matches on the kind, never on
+//! message substrings.
+//!
+//! **Resilience**: the backend keeps the full token history (prompt +
+//! every successfully fed token) of each live session. When a call
+//! fails with `Io`, it redials with capped exponential backoff plus
+//! jitter, re-verifies the device identity, re-opens every live session
+//! under its original id, re-prefills it from history (adopting
+//! whatever the device's prefix cache still holds), bumps
+//! [`TransferMeter::reconnects`], and replays the failed call. A
+//! `device-serve` restart mid-request therefore costs latency, not a
+//! failed completion. History is appended only *after* a successful
+//! reply, so a replayed round always re-feeds exactly the tokens the
+//! device lost.
+//!
 //! Every frame is counted by a [`TransferMeter`] (host→device tx,
 //! device→host rx, per-call), the transport analogue of the paper's
 //! HBM-bandwidth-utilization metric; `benches/bridge_overhead.rs`
@@ -40,15 +60,74 @@
 //! [`TransferMeter`]: crate::runtime::backend::TransferMeter
 
 use std::cell::{Cell, RefCell};
-use std::io::{BufReader, BufWriter, Write};
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{BufReader, BufWriter, ErrorKind, Write};
 use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::protocol::{self, Frame, PROTOCOL_VERSION};
+use super::protocol::{self, ErrCode, Frame, FrameError, PROTOCOL_VERSION};
 use crate::runtime::backend::{Backend, TransferMeter};
 use crate::runtime::kv::MemoryStats;
 use crate::runtime::model::{ModelInfo, Session};
+use crate::util::rng::Rng;
+
+/// Typed bridge-client error. The retry layer matches on the *kind*:
+/// only `Io` triggers reconnect-and-replay.
+#[derive(Debug)]
+pub enum BridgeError {
+    /// the transport died (refused, reset, EOF mid-frame): the
+    /// connection is gone and the call may be replayed on a fresh one
+    Io(std::io::Error),
+    /// the device answered outside the protocol (desync, wrong frame
+    /// kind, bad arity): not retryable — replaying reproduces it
+    Protocol(String),
+    /// a structured error frame from the device ([`ErrCode`] plus
+    /// message): the connection is healthy, the error is the answer
+    Backend {
+        /// the device's structured error class
+        code: ErrCode,
+        /// the device's error message (never payload bytes)
+        message: String,
+    },
+}
+
+impl fmt::Display for BridgeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BridgeError::Io(e) => write!(f, "device io error: {e}"),
+            BridgeError::Protocol(m) => write!(f, "bridge protocol error: {m}"),
+            BridgeError::Backend { code, message } => {
+                write!(f, "device error ({code:?}): {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BridgeError {}
+
+impl From<std::io::Error> for BridgeError {
+    fn from(e: std::io::Error) -> Self {
+        // a frame the client built beyond the wire cap is a local bug,
+        // not a dead connection — do not redial over it
+        if e.kind() == ErrorKind::InvalidData {
+            BridgeError::Protocol(e.to_string())
+        } else {
+            BridgeError::Io(e)
+        }
+    }
+}
+
+/// Reconnect policy: capped exponential backoff with jitter.
+const RECONNECT_ATTEMPTS: u32 = 8;
+const BACKOFF_BASE_MS: u64 = 10;
+const BACKOFF_CAP_MS: u64 = 640;
+/// Full reconnect cycles one call may burn before giving up — bounds a
+/// flapping device to a finite client-side stall.
+const RECONNECT_CYCLES_PER_CALL: u32 = 2;
 
 /// The connection: buffered halves of one TCP stream plus the meter.
 struct Conn {
@@ -64,25 +143,30 @@ struct Conn {
 }
 
 impl Conn {
-    fn send(&mut self, f: &Frame) -> Result<()> {
-        let n = protocol::write_frame(&mut self.writer, f)
-            .map_err(|e| anyhow!("device write failed: {e}"))?;
+    fn send(&mut self, f: &Frame) -> Result<(), BridgeError> {
+        let n = protocol::write_frame(&mut self.writer, f)?;
         self.meter.tx_bytes += n as u64;
         Ok(())
     }
 
-    fn flush(&mut self) -> Result<()> {
-        self.writer.flush().map_err(|e| anyhow!("device write failed: {e}"))
+    fn flush(&mut self) -> Result<(), BridgeError> {
+        self.writer.flush().map_err(BridgeError::from)
     }
 
-    fn recv(&mut self) -> Result<Frame> {
+    fn recv(&mut self) -> Result<Frame, BridgeError> {
         match protocol::read_frame(&mut self.reader) {
             Ok(Some((f, n))) => {
                 self.meter.rx_bytes += n as u64;
                 Ok(f)
             }
-            Ok(None) => bail!("device closed the connection"),
-            Err(e) => bail!("device read failed: {e}"),
+            Ok(None) => Err(BridgeError::Io(std::io::Error::new(
+                ErrorKind::UnexpectedEof,
+                "device closed the connection",
+            ))),
+            Err(FrameError::Io(e)) => Err(BridgeError::Io(e)),
+            Err(e @ (FrameError::Desync(_) | FrameError::Malformed(_))) => {
+                Err(BridgeError::Protocol(e.to_string()))
+            }
         }
     }
 
@@ -90,7 +174,7 @@ impl Conn {
     /// pipelined `CloseSession` replies queued in front of it first.
     /// Closes are best-effort by contract, so their replies are only
     /// sanity-checked, never failed on.
-    fn recv_reply(&mut self) -> Result<Frame> {
+    fn recv_reply(&mut self) -> Result<Frame, BridgeError> {
         while self.pending_closes > 0 {
             self.pending_closes -= 1;
             match self.recv()? {
@@ -110,10 +194,10 @@ impl Conn {
 /// Turn an unexpected reply into the error the caller reports: device
 /// error frames keep their structured code, anything else names the
 /// frame kinds involved (never payloads).
-fn unexpected(frame: Frame, want: &str) -> anyhow::Error {
+fn unexpected(frame: Frame, want: &str) -> BridgeError {
     match frame {
-        Frame::Error { code, message } => anyhow!("device error ({code:?}): {message}"),
-        other => anyhow!("bridge protocol error: expected {want}, got {}", other.name()),
+        Frame::Error { code, message } => BridgeError::Backend { code, message },
+        other => BridgeError::Protocol(format!("expected {want}, got {}", other.name())),
     }
 }
 
@@ -130,49 +214,73 @@ pub struct BridgeBackend {
     /// next client-chosen remote session id; 0 is reserved as "no
     /// remote session" so `Session::tag` can mark closed sessions
     next_session: Cell<u32>,
+    /// full token history (prompt + every successfully fed token) per
+    /// live remote session — what reconnection re-prefills from.
+    /// Appended only after a successful decode reply, so a replay after
+    /// reconnect restores exactly the pre-call state.
+    history: RefCell<HashMap<u32, Vec<i32>>>,
+    /// backoff jitter source (spreads the redial stampede of many
+    /// clients hitting one restarted device)
+    jitter: RefCell<Rng>,
 }
 
 impl BridgeBackend {
-    /// Connect to a device daemon at `addr` ("host:port") and perform
-    /// the `Info` handshake. Connection refusal and version mismatch
-    /// are structured errors, not panics — they are the two failures an
-    /// operator hits first.
-    pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr).map_err(|e| {
-            anyhow!(
-                "device unreachable at {addr}: {e} \
-                 (start one with `edgellm device-serve --addr {addr}`)"
-            )
-        })?;
-        stream.set_nodelay(true)?;
-        let reader = BufReader::new(stream.try_clone()?);
+    /// Dial `addr` and run the `Info` handshake on a fresh connection,
+    /// carrying `meter` forward so transport counters survive
+    /// reconnects.
+    fn handshake(
+        addr: &str,
+        meter: TransferMeter,
+    ) -> Result<(Conn, u8, ModelInfo, Vec<usize>, bool, u64), BridgeError> {
+        let stream = TcpStream::connect(addr).map_err(BridgeError::Io)?;
+        stream.set_nodelay(true).map_err(BridgeError::Io)?;
+        let reader = BufReader::new(stream.try_clone().map_err(BridgeError::Io)?);
         let writer = BufWriter::new(stream);
         let mut conn = Conn {
             reader,
             writer,
-            meter: TransferMeter::default(),
+            meter,
             pending_closes: 0,
         };
         conn.meter.calls += 1;
         conn.send(&Frame::Info { version: PROTOCOL_VERSION })?;
         conn.flush()?;
-        let (version, info, buckets, supports_batched_decode, ffn_weight_bytes) =
-            match conn.recv()? {
-                Frame::InfoResp {
-                    version,
-                    info,
-                    buckets,
-                    supports_batched_decode,
-                    ffn_weight_bytes,
-                    // handshake-time arena stats go stale immediately;
-                    // `memory()` re-queries for a fresh snapshot
-                    memory: _,
-                } => (version, info, buckets, supports_batched_decode, ffn_weight_bytes),
-                other => return Err(unexpected(other, "InfoResp")),
-            };
+        match conn.recv()? {
+            Frame::InfoResp {
+                version,
+                info,
+                buckets,
+                supports_batched_decode,
+                ffn_weight_bytes,
+                // handshake-time arena stats go stale immediately;
+                // `memory()` re-queries for a fresh snapshot
+                memory: _,
+            } => Ok((conn, version, info, buckets, supports_batched_decode, ffn_weight_bytes)),
+            other => Err(unexpected(other, "InfoResp")),
+        }
+    }
+
+    /// Connect to a device daemon at `addr` ("host:port") and perform
+    /// the `Info` handshake. Connection refusal and version mismatch
+    /// are structured errors, not panics — they are the two failures an
+    /// operator hits first.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let (conn, version, info, buckets, supports_batched_decode, ffn_weight_bytes) =
+            Self::handshake(addr, TransferMeter::default()).map_err(|e| match e {
+                BridgeError::Io(e) => anyhow!(
+                    "device unreachable at {addr}: {e} \
+                     (start one with `edgellm device-serve --addr {addr}`)"
+                ),
+                other => anyhow::Error::new(other),
+            })?;
         if version != PROTOCOL_VERSION {
             bail!("device at {addr} speaks protocol v{version}, this client v{PROTOCOL_VERSION}");
         }
+        // jitter seeded per-process/per-address so a fleet of clients
+        // redialing one restarted device fans out instead of stampeding
+        let seed = std::process::id() as u64 ^ addr.bytes().fold(0u64, |h, b| {
+            h.wrapping_mul(131).wrapping_add(b as u64)
+        });
         Ok(BridgeBackend {
             addr: addr.to_string(),
             info,
@@ -181,6 +289,8 @@ impl BridgeBackend {
             ffn_weight_bytes: (ffn_weight_bytes > 0).then_some(ffn_weight_bytes as usize),
             conn: RefCell::new(conn),
             next_session: Cell::new(1),
+            history: RefCell::new(HashMap::new()),
+            jitter: RefCell::new(Rng::new(seed | 1)),
         })
     }
 
@@ -200,6 +310,121 @@ impl BridgeBackend {
         self.next_session.set(id.checked_add(1).unwrap_or(1));
         id
     }
+
+    /// Run one wire exchange, replaying it after a reconnect when the
+    /// transport dies mid-call. `Protocol` and `Backend` errors pass
+    /// straight through — only `Io` is retryable.
+    fn call<T>(&self, mut op: impl FnMut(&mut Conn) -> Result<T, BridgeError>) -> Result<T> {
+        let mut cycles = 0;
+        loop {
+            let result = op(&mut self.conn.borrow_mut());
+            match result {
+                Ok(v) => return Ok(v),
+                Err(BridgeError::Io(e)) if cycles < RECONNECT_CYCLES_PER_CALL => {
+                    cycles += 1;
+                    self.reconnect(&e)?;
+                }
+                Err(e) => return Err(anyhow::Error::new(e)),
+            }
+        }
+    }
+
+    /// The connection is gone. Redial with capped exponential backoff
+    /// plus jitter, re-verify the device identity, and restore every
+    /// live session from its token history — so to the engine a device
+    /// restart is one slow call, not a failed completion.
+    fn reconnect(&self, cause: &std::io::Error) -> Result<()> {
+        // carry the transport counters across; the dead connection's
+        // pipelined closes died with it (the device reclaims those
+        // sessions on disconnect, and closed ids are out of `history`)
+        let meter = self.conn.borrow().meter;
+        let mut delay = BACKOFF_BASE_MS;
+        let mut last = cause.to_string();
+        for attempt in 1..=RECONNECT_ATTEMPTS {
+            let jitter = self.jitter.borrow_mut().next_u64() % (delay / 2 + 1);
+            thread::sleep(Duration::from_millis(delay + jitter));
+            match Self::handshake(&self.addr, meter) {
+                Ok((mut conn, version, info, ..)) => {
+                    if version != PROTOCOL_VERSION {
+                        bail!(
+                            "device at {} restarted speaking protocol v{version}, \
+                             this client v{PROTOCOL_VERSION}",
+                            self.addr
+                        );
+                    }
+                    if info.name != self.info.name
+                        || info.vocab != self.info.vocab
+                        || info.max_tokens != self.info.max_tokens
+                    {
+                        bail!(
+                            "device at {} restarted with a different model \
+                             ({} vs {}); refusing to resume sessions on it",
+                            self.addr,
+                            info.name,
+                            self.info.name
+                        );
+                    }
+                    match self.replay_sessions(&mut conn) {
+                        Ok(()) => {
+                            conn.meter.reconnects += 1;
+                            *self.conn.borrow_mut() = conn;
+                            eprintln!(
+                                "bridge: reconnected to {} (attempt {attempt}) after: {cause}",
+                                self.addr
+                            );
+                            return Ok(());
+                        }
+                        // died again mid-replay: keep dialing
+                        Err(BridgeError::Io(e)) => last = e.to_string(),
+                        Err(e) => {
+                            return Err(anyhow::Error::new(e)
+                                .context("restoring sessions after reconnect"))
+                        }
+                    }
+                }
+                Err(BridgeError::Io(e)) => last = e.to_string(),
+                Err(e) => return Err(anyhow::Error::new(e).context("reconnect handshake")),
+            }
+            delay = (delay * 2).min(BACKOFF_CAP_MS);
+        }
+        Err(anyhow!(
+            "device at {} unreachable after {RECONNECT_ATTEMPTS} reconnect attempts \
+             (last: {last}; original failure: {cause})",
+            self.addr
+        ))
+    }
+
+    /// Re-open and re-prefill every live session on a fresh connection,
+    /// under its original client-chosen id. The device restarted (or
+    /// reclaimed this client's sessions on disconnect), so every id is
+    /// free; re-prefill adopts whatever the device's prefix cache still
+    /// holds and must land each session exactly at `history.len()`.
+    fn replay_sessions(&self, conn: &mut Conn) -> Result<(), BridgeError> {
+        let history = self.history.borrow();
+        for (&id, tokens) in history.iter() {
+            conn.meter.calls += 1;
+            conn.send(&Frame::OpenSession { session: id })?;
+            conn.send(&Frame::Prefill { session: id, prompt: tokens.clone() })?;
+            conn.flush()?;
+            let opened = conn.recv()?;
+            let logits = conn.recv()?;
+            match opened {
+                Frame::SessionOpened { .. } => {}
+                other => return Err(unexpected(other, "SessionOpened")),
+            }
+            match logits {
+                Frame::Logits { pos, .. } if pos as usize == tokens.len() => {}
+                Frame::Logits { pos, .. } => {
+                    return Err(BridgeError::Protocol(format!(
+                        "re-prefill restored session {id} to pos {pos}, expected {}",
+                        tokens.len()
+                    )))
+                }
+                other => return Err(unexpected(other, "Logits")),
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Backend for BridgeBackend {
@@ -213,42 +438,48 @@ impl Backend for BridgeBackend {
 
     fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {
         let id = self.fresh_session_id();
-        let mut conn = self.conn.borrow_mut();
-        conn.meter.calls += 1;
-        // pipeline OpenSession + Prefill in one flush (one round trip);
-        // BOTH replies are drained before either is inspected, so an
-        // error on the first never leaves the second unread in the pipe
-        conn.send(&Frame::OpenSession { session: id })?;
-        conn.send(&Frame::Prefill { session: id, prompt: prompt.to_vec() })?;
-        conn.flush()?;
-        let opened = conn.recv_reply()?;
-        let logits_frame = conn.recv()?;
-        let session = match opened {
-            Frame::SessionOpened { session } => session,
-            other => return Err(unexpected(other, "SessionOpened")),
-        };
-        let (s2, pos, logits) = match logits_frame {
-            Frame::Logits { session, pos, logits } => (session, pos, logits),
-            other => {
-                // the slot WAS opened but never prefilled — release it,
-                // or every failed prefill would consume one of the
-                // connection's session-table slots for good
-                let _ = conn.send(&Frame::CloseSession { session: id });
-                let _ = conn.flush();
-                let _ = conn.recv(); // drain the Closed/Error reply
-                return Err(unexpected(other, "Logits"));
+        let (pos, logits) = self.call(|conn| {
+            conn.meter.calls += 1;
+            // pipeline OpenSession + Prefill in one flush (one round
+            // trip); BOTH replies are drained before either is
+            // inspected, so an error on the first never leaves the
+            // second unread in the pipe
+            conn.send(&Frame::OpenSession { session: id })?;
+            conn.send(&Frame::Prefill { session: id, prompt: prompt.to_vec() })?;
+            conn.flush()?;
+            let opened = conn.recv_reply()?;
+            let logits_frame = conn.recv()?;
+            let session = match opened {
+                Frame::SessionOpened { session } => session,
+                other => return Err(unexpected(other, "SessionOpened")),
+            };
+            let (s2, pos, logits) = match logits_frame {
+                Frame::Logits { session, pos, logits } => (session, pos, logits),
+                other => {
+                    // the slot WAS opened but never prefilled — release
+                    // it, or every failed prefill would consume one of
+                    // the connection's session-table slots for good
+                    let _ = conn.send(&Frame::CloseSession { session: id });
+                    let _ = conn.flush();
+                    let _ = conn.recv(); // drain the Closed/Error reply
+                    return Err(unexpected(other, "Logits"));
+                }
+            };
+            if session != id || s2 != id {
+                return Err(BridgeError::Protocol(
+                    "session id mismatch in prefill replies".to_string(),
+                ));
             }
-        };
-        if session != id || s2 != id {
-            bail!("bridge protocol error: session id mismatch in prefill replies");
-        }
-        if logits.len() != self.info.vocab {
-            bail!(
-                "bridge protocol error: logits row of {} for vocab {}",
-                logits.len(),
-                self.info.vocab
-            );
-        }
+            if logits.len() != self.info.vocab {
+                return Err(BridgeError::Protocol(format!(
+                    "logits row of {} for vocab {}",
+                    logits.len(),
+                    self.info.vocab
+                )));
+            }
+            Ok((pos, logits))
+        })?;
+        self.history.borrow_mut().insert(id, prompt.to_vec());
         // the host session carries no KV tensors — the device owns the
         // cache; only position and the remote id live here
         let mut sess = Session::new([0, 0, 0, 0]);
@@ -262,18 +493,22 @@ impl Backend for BridgeBackend {
         if id == 0 {
             bail!("bridge: session has no remote id (already closed?)");
         }
-        let mut conn = self.conn.borrow_mut();
-        conn.meter.calls += 1;
-        conn.send(&Frame::Decode { session: id, token })?;
-        conn.flush()?;
-        let (sid, pos, logits) = match conn.recv_reply()? {
-            Frame::Logits { session, pos, logits } => (session, pos, logits),
-            other => return Err(unexpected(other, "Logits")),
-        };
-        if sid != id {
-            bail!("bridge protocol error: logits for session {sid}, asked for {id}");
-        }
+        let (pos, logits) = self.call(|conn| {
+            conn.meter.calls += 1;
+            conn.send(&Frame::Decode { session: id, token })?;
+            conn.flush()?;
+            match conn.recv_reply()? {
+                Frame::Logits { session: sid, pos, logits } if sid == id => Ok((pos, logits)),
+                Frame::Logits { session: sid, .. } => Err(BridgeError::Protocol(format!(
+                    "logits for session {sid}, asked for {id}"
+                ))),
+                other => Err(unexpected(other, "Logits")),
+            }
+        })?;
         session.pos = pos as usize;
+        if let Some(h) = self.history.borrow_mut().get_mut(&id) {
+            h.push(token);
+        }
         Ok(logits)
     }
 
@@ -286,31 +521,42 @@ impl Backend for BridgeBackend {
         if ids.iter().any(|&id| id == 0) {
             bail!("bridge: a batched session has no remote id (already closed?)");
         }
-        let mut conn = self.conn.borrow_mut();
-        conn.meter.calls += 1;
-        conn.send(&Frame::DecodeBatch { sessions: ids.clone(), tokens: tokens.to_vec() })?;
-        conn.flush()?;
-        let rows = match conn.recv_reply()? {
-            Frame::LogitsBatch { rows } => rows,
-            other => return Err(unexpected(other, "LogitsBatch")),
-        };
-        if rows.len() != sessions.len() {
-            bail!(
-                "bridge protocol error: {} logits rows for a batch of {}",
-                rows.len(),
-                sessions.len()
-            );
-        }
-        let mut out = Vec::with_capacity(rows.len());
-        for ((row, s), &id) in rows.into_iter().zip(sessions.iter_mut()).zip(ids.iter()) {
-            if row.session != id {
-                bail!(
-                    "bridge protocol error: row for session {} in the slot of {}",
-                    row.session,
-                    id
-                );
+        let rows = self.call(|conn| {
+            conn.meter.calls += 1;
+            conn.send(&Frame::DecodeBatch { sessions: ids.clone(), tokens: tokens.to_vec() })?;
+            conn.flush()?;
+            let rows = match conn.recv_reply()? {
+                Frame::LogitsBatch { rows } => rows,
+                other => return Err(unexpected(other, "LogitsBatch")),
+            };
+            if rows.len() != ids.len() {
+                return Err(BridgeError::Protocol(format!(
+                    "{} logits rows for a batch of {}",
+                    rows.len(),
+                    ids.len()
+                )));
             }
+            for (row, &id) in rows.iter().zip(ids.iter()) {
+                if row.session != id {
+                    return Err(BridgeError::Protocol(format!(
+                        "row for session {} in the slot of {}",
+                        row.session, id
+                    )));
+                }
+            }
+            Ok(rows)
+        })?;
+        let mut history = self.history.borrow_mut();
+        let mut out = Vec::with_capacity(rows.len());
+        for ((row, s), (&id, &token)) in rows
+            .into_iter()
+            .zip(sessions.iter_mut())
+            .zip(ids.iter().zip(tokens.iter()))
+        {
             s.pos = row.pos as usize;
+            if let Some(h) = history.get_mut(&id) {
+                h.push(token);
+            }
             out.push(row.logits);
         }
         Ok(out)
@@ -332,6 +578,8 @@ impl Backend for BridgeBackend {
             return; // never opened remotely, or already closed
         }
         session.tag = 0;
+        // closed sessions must never be resurrected by a reconnect
+        self.history.borrow_mut().remove(&id);
         // Close pipelining (the ROADMAP follow-on to PR 4's synchronous
         // close): the CloseSession frame is *buffered*, not flushed, and
         // its reply is not awaited — retirement costs zero round trips
@@ -342,14 +590,16 @@ impl Backend for BridgeBackend {
         // any subsequent request/reply exchange (a decode round, a
         // `memory()` stats query) proves all prior closes were applied,
         // and a disconnect still reclaims everything server-side.
-        // Best effort by contract: a failure must not fail retirement.
+        // Best effort by contract: a failure must not fail retirement
+        // and must not trigger a reconnect (a dead connection's
+        // sessions die with it on the device anyway).
         let Ok(mut conn) = self.conn.try_borrow_mut() else {
             return;
         };
         conn.meter.calls += 1;
         match conn.send(&Frame::CloseSession { session: id }) {
             Ok(()) => conn.pending_closes += 1,
-            Err(e) => eprintln!("bridge: closing session {id}: {e:#}"),
+            Err(e) => eprintln!("bridge: closing session {id}: {e}"),
         }
     }
 
@@ -357,19 +607,20 @@ impl Backend for BridgeBackend {
     /// doubles as the stats query and its flush carries any pipelined
     /// closes, so the figures already reflect every prior retirement.
     fn memory(&self) -> Option<MemoryStats> {
-        let Ok(mut conn) = self.conn.try_borrow_mut() else {
+        // defensive re-entrancy guard (Backend methods take &self)
+        if self.conn.try_borrow_mut().is_err() {
             return None;
-        };
-        conn.meter.calls += 1;
-        let fetch = |conn: &mut Conn| -> Result<Option<MemoryStats>> {
+        }
+        let fetched = self.call(|conn| {
+            conn.meter.calls += 1;
             conn.send(&Frame::Info { version: PROTOCOL_VERSION })?;
             conn.flush()?;
             match conn.recv_reply()? {
                 Frame::InfoResp { memory, .. } => Ok(memory),
                 other => Err(unexpected(other, "InfoResp")),
             }
-        };
-        match fetch(&mut *conn) {
+        });
+        match fetched {
             Ok(m) => m,
             Err(e) => {
                 eprintln!("bridge: memory stats query failed: {e:#}");
@@ -411,5 +662,36 @@ mod tests {
         let id = c.get();
         c.set(id.checked_add(1).unwrap_or(1));
         assert_eq!(c.get(), 1, "wrap-around skips the reserved 0");
+    }
+
+    #[test]
+    fn error_frames_map_to_typed_backend_errors() {
+        let e = unexpected(
+            Frame::Error { code: ErrCode::Backend, message: "kv arena exhausted: x".into() },
+            "Logits",
+        );
+        match &e {
+            BridgeError::Backend { code, message } => {
+                assert_eq!(*code, ErrCode::Backend);
+                assert!(message.contains("kv arena exhausted"));
+            }
+            other => panic!("expected Backend, got {other:?}"),
+        }
+        // the rendering keeps the legacy "device error (Code): msg"
+        // shape operators and tests already match on
+        assert!(e.to_string().starts_with("device error (Backend):"), "{e}");
+
+        let p = unexpected(Frame::Closed { session: 1 }, "Logits");
+        assert!(matches!(p, BridgeError::Protocol(_)), "{p:?}");
+    }
+
+    #[test]
+    fn io_errors_are_the_only_retryable_kind() {
+        let io = BridgeError::from(std::io::Error::new(ErrorKind::ConnectionReset, "rst"));
+        assert!(matches!(io, BridgeError::Io(_)));
+        // InvalidData marks a locally-built oversized frame: a client
+        // bug, not a dead connection — it must not trigger redialing
+        let local = BridgeError::from(std::io::Error::new(ErrorKind::InvalidData, "too big"));
+        assert!(matches!(local, BridgeError::Protocol(_)));
     }
 }

@@ -31,8 +31,8 @@
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 
@@ -65,6 +65,11 @@ struct DeviceShared {
     /// open sessions across all live connections (observability + the
     /// no-leak test hook)
     open_sessions: AtomicUsize,
+    /// live connection streams (clones keyed by a connection id),
+    /// severed on shutdown so a daemon teardown looks exactly like a
+    /// device restart to clients: connection reset, all state gone
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn: AtomicU64,
 }
 
 /// Running daemon: address, session gauge, and the acceptor to reap.
@@ -85,12 +90,19 @@ impl DeviceHandle {
         self.shared.open_sessions.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting connections and join the acceptor thread. Live
-    /// connection threads exit when their client hangs up (their
-    /// sessions are reclaimed then) — the coordinator side shuts down
-    /// first in an orderly teardown.
+    /// Stop the daemon: refuse new connections, **sever every live
+    /// connection**, and join the acceptor thread. Severed clients see
+    /// a transport error and all their device-side sessions are
+    /// reclaimed — to a [`BridgeBackend`](super::client::BridgeBackend)
+    /// this is indistinguishable from a device power cycle, which its
+    /// reconnect-and-replay path recovers from.
     pub fn shutdown(self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
+        // sever live connections so their threads exit promptly instead
+        // of lingering until the client hangs up
+        for (_, stream) in self.shared.conns.lock().unwrap().drain() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
         if crate::util::poke_acceptor(self.addr) {
             let _ = self.acceptor.join();
         } else {
@@ -128,6 +140,8 @@ pub fn spawn_on(
         cfg,
         shutdown: AtomicBool::new(false),
         open_sessions: AtomicUsize::new(0),
+        conns: Mutex::new(HashMap::new()),
+        next_conn: AtomicU64::new(0),
     });
     let acceptor = {
         let shared = Arc::clone(&shared);
@@ -143,8 +157,16 @@ fn accept_loop(shared: &Arc<DeviceShared>, listener: TcpListener) {
         }
         match stream {
             Ok(stream) => {
+                // register a clone so shutdown can sever the connection
+                let cid = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().unwrap().insert(cid, clone);
+                }
                 let shared = Arc::clone(shared);
-                thread::spawn(move || handle_conn(&shared, stream));
+                thread::spawn(move || {
+                    handle_conn(&shared, stream);
+                    shared.conns.lock().unwrap().remove(&cid);
+                });
             }
             Err(e) => eprintln!("device accept error: {e}"),
         }

@@ -40,12 +40,27 @@ use anyhow::Result;
 
 use super::sampler::{sample, Sampling};
 use super::tokenizer;
+use crate::bridge::client::BridgeError;
 use crate::models::{LlmArch, SparseStrategy, DENSE};
 use crate::runtime::kv::{KvExhausted, MemoryStats, KV_EXHAUSTED_MARKER};
 use crate::runtime::model::{LlmRuntime, Session};
 use crate::sim::engine::Simulator;
 use crate::sim::Memory;
 use crate::util::rng::Rng;
+
+/// Scheduling class of a request. The queue is two-class: a
+/// `Latency` request is admitted ahead of earlier `Batch` requests,
+/// bounded by an anti-starvation aging rule (a `Batch` request that has
+/// waited [`EngineConfig::batch_aging_rounds`] scheduler rounds can no
+/// longer be jumped).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// interactive / latency-sensitive: jumps the batch class
+    Latency,
+    /// throughput work — the default for `submit`
+    #[default]
+    Batch,
+}
 
 /// One generation request (the queue-level descriptor).
 #[derive(Debug, Clone)]
@@ -171,6 +186,20 @@ pub struct EngineConfig {
     /// retire a session when it samples this token (None: generate to
     /// `max_new_tokens`/budget — byte-level vocab has no natural EOS)
     pub eos_token: Option<i32>,
+    /// chunked prefill: a prompt longer than this is warmed into the
+    /// prefix cache `prefill_chunk_tokens` tokens per admission slot
+    /// before the real admission, so one huge prompt cannot stall live
+    /// decodes for a whole monolithic prefill. `0` disables slicing.
+    /// Per-round prefill compute is bounded by
+    /// `prefills_per_round × prefill_chunk_tokens` only when the
+    /// backend caches prefixes at block granularity `<=` the chunk
+    /// (`--kv-block-tokens`); on cache-less backends slicing is
+    /// correct but the final prefill recomputes the whole prompt.
+    pub prefill_chunk_tokens: usize,
+    /// anti-starvation bound for the two-class queue: a batch-class
+    /// request that has waited this many scheduler rounds can no
+    /// longer be jumped by latency-class arrivals
+    pub batch_aging_rounds: u64,
 }
 
 impl Default for EngineConfig {
@@ -183,6 +212,8 @@ impl Default for EngineConfig {
             max_queued: 1024,
             prefills_per_round: 2,
             eos_token: None,
+            prefill_chunk_tokens: 0,
+            batch_aging_rounds: 32,
         }
     }
 }
@@ -199,9 +230,14 @@ pub struct EngineMetrics {
     /// worst-case KV block count exceeds the whole arena
     pub rejected: u64,
     /// live sessions evicted mid-decode because the KV arena was
-    /// exhausted (their stream terminates with a "preempted" error);
-    /// stays 0 whenever admission's worst-case accounting holds
+    /// exhausted; stays 0 whenever admission's worst-case accounting
+    /// holds. Eviction is not failure: each victim is requeued (see
+    /// `requeued`) and its stream resumes after a recompute
     pub preempted: u64,
+    /// preemption victims put back at the queue front as recompute
+    /// requests — their event channel and already-emitted tokens
+    /// survive, so the client sees a latency stall, not an error
+    pub requeued: u64,
     /// batched decode rounds executed
     pub rounds: u64,
     /// decode tokens emitted across all sessions
@@ -242,7 +278,37 @@ struct QueuedRequest {
     /// queue — a head waiting at the memory gate is not re-tokenized
     /// every round, and a requeued request keeps its plan
     plan: Option<(Vec<i32>, usize)>,
+    class: Priority,
+    /// `round_seq` when the entry (re-)entered the queue — the aging
+    /// clock for the batch class and the resume grace window
+    enqueued_seq: u64,
+    /// prompt tokens already warmed into the prefix cache by chunked
+    /// prefill; admission resumes slicing from here
+    warmed: usize,
+    /// present iff this entry is a preempted victim resuming
+    resume: Option<ResumeState>,
 }
+
+/// Decode state of a preempted victim, carried through the queue so the
+/// request *resumes* — same channel, same already-emitted tokens —
+/// instead of failing. `generated` includes the token that was streamed
+/// to the client but not yet fed to the model when the round failed.
+struct ResumeState {
+    prompt_tokens: Vec<i32>,
+    generated: Vec<i32>,
+    /// the already-clamped original budget
+    max_new: usize,
+    first_token_s: f64,
+    decode_wall_s: f64,
+    sim_first_token_ms: f64,
+    sim_decode_us: f64,
+}
+
+/// Rounds a resumed victim may wait at the admission gate with *no*
+/// live sessions before the engine gives up on outside holders
+/// releasing blocks and refuses it (a fresh request in the same spot is
+/// refused immediately — see the gate comments).
+const RESUME_GRACE_ROUNDS: u64 = 64;
 
 /// A live session inside the scheduler's active pool.
 struct ActiveSession {
@@ -256,9 +322,16 @@ struct ActiveSession {
     /// gate holds against the arena for sessions still growing
     worst_tokens: usize,
     session: Session,
+    /// the planned (tokenized, clamped) prompt — kept so a preemption
+    /// can requeue the session as a recompute request
+    prompt_tokens: Vec<i32>,
     generated: Vec<i32>,
     /// sampled but not yet emitted/fed token
     next_token: i32,
+    /// token events already streamed; a resumed session re-walks
+    /// `generated` indices below this without re-emitting them
+    emitted: usize,
+    class: Priority,
     first_token_s: f64,
     decode_wall_s: f64,
     sim_first_token_ms: f64,
@@ -290,10 +363,59 @@ enum Admitted {
 }
 
 /// True when `e` is the arena's typed exhaustion error — directly
-/// (in-process backends return [`KvExhausted`] un-wrapped) or flattened
-/// to its stable `Display` string by the bridge's error frames.
+/// (in-process backends return [`KvExhausted`] un-wrapped) or carried
+/// across the bridge as a typed [`BridgeError::Backend`] frame whose
+/// message keeps the stable marker. Both arms match on *typed* errors;
+/// no formatted-chain substring scans.
 fn is_kv_exhausted(e: &anyhow::Error) -> bool {
-    e.downcast_ref::<KvExhausted>().is_some() || format!("{e:#}").contains(KV_EXHAUSTED_MARKER)
+    if e.downcast_ref::<KvExhausted>().is_some() {
+        return true;
+    }
+    matches!(
+        e.downcast_ref::<BridgeError>(),
+        Some(BridgeError::Backend { message, .. }) if message.contains(KV_EXHAUSTED_MARKER)
+    )
+}
+
+/// Preemption victim among the live pool: the **youngest** session
+/// (fewest sunk tokens — highest index, admission order) whose
+/// remaining budget is more than one token. Evicting a session that is
+/// one round from completion trades an entire prefix recompute for a
+/// single token, so such sessions are skipped; when *every* session is
+/// about to finish, fall back to the youngest outright.
+fn pick_victim(remaining: &[usize]) -> usize {
+    remaining
+        .iter()
+        .rposition(|&r| r > 1)
+        .unwrap_or(remaining.len() - 1)
+}
+
+/// Fold a preempted live session back into a queue entry that resumes
+/// — same channel, same emitted tokens — instead of starting over.
+fn requeue_victim(victim: ActiveSession, seq: u64) -> QueuedRequest {
+    QueuedRequest {
+        req: Request {
+            id: victim.id,
+            prompt: victim.prompt,
+            max_new_tokens: victim.max_new,
+            sampling: victim.sampling,
+        },
+        events: victim.events,
+        cancel: victim.cancel,
+        plan: None,
+        class: victim.class,
+        enqueued_seq: seq,
+        warmed: 0,
+        resume: Some(ResumeState {
+            prompt_tokens: victim.prompt_tokens,
+            generated: victim.generated,
+            max_new: victim.max_new,
+            first_token_s: victim.first_token_s,
+            decode_wall_s: victim.decode_wall_s,
+            sim_first_token_ms: victim.sim_first_token_ms,
+            sim_decode_us: victim.sim_decode_us,
+        }),
+    }
 }
 
 pub struct Engine {
@@ -302,6 +424,8 @@ pub struct Engine {
     cfg_max_active: usize,
     cfg_max_queued: usize,
     cfg_prefills_per_round: usize,
+    cfg_prefill_chunk: usize,
+    cfg_batch_aging: u64,
     eos_token: Option<i32>,
     queue: VecDeque<QueuedRequest>,
     active: Vec<ActiveSession>,
@@ -314,6 +438,9 @@ pub struct Engine {
     round_ctxs: Vec<usize>,
     rng: Rng,
     next_id: u64,
+    /// scheduler-round clock (every `step_round`, decode or not) —
+    /// drives batch-class aging and the resume grace window
+    round_seq: u64,
     metrics: EngineMetrics,
 }
 
@@ -326,6 +453,8 @@ impl Engine {
             cfg_max_active: cfg.max_active.max(1),
             cfg_max_queued: cfg.max_queued,
             cfg_prefills_per_round: cfg.prefills_per_round.max(1),
+            cfg_prefill_chunk: cfg.prefill_chunk_tokens,
+            cfg_batch_aging: cfg.batch_aging_rounds.max(1),
             eos_token: cfg.eos_token,
             queue: VecDeque::new(),
             active: Vec::new(),
@@ -334,6 +463,7 @@ impl Engine {
             round_ctxs: Vec::new(),
             rng: Rng::new(cfg.seed),
             next_id: 1,
+            round_seq: 0,
             metrics: EngineMetrics::default(),
         }
     }
@@ -351,6 +481,20 @@ impl Engine {
         prompt: &str,
         max_new_tokens: usize,
         sampling: Sampling,
+    ) -> RequestHandle {
+        self.submit_with_priority(prompt, max_new_tokens, sampling, Priority::Batch)
+    }
+
+    /// [`Engine::submit`] with an explicit scheduling class:
+    /// [`Priority::Latency`] requests are admitted ahead of earlier
+    /// [`Priority::Batch`] ones, bounded by the aging rule (see
+    /// [`EngineConfig::batch_aging_rounds`]).
+    pub fn submit_with_priority(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        sampling: Sampling,
+        class: Priority,
     ) -> RequestHandle {
         let id = self.next_id;
         self.next_id += 1;
@@ -380,6 +524,10 @@ impl Engine {
             events: tx,
             cancel: Arc::clone(&cancel),
             plan: None,
+            class,
+            enqueued_seq: self.round_seq,
+            warmed: 0,
+            resume: None,
         });
         RequestHandle { id, cancel, events: rx }
     }
@@ -500,6 +648,35 @@ impl Engine {
             .sum()
     }
 
+    /// Pick the next queued entry for admission. Preempted resumees go
+    /// first regardless of class (their client is mid-stream), then the
+    /// earliest latency-class request — unless the queue head is a
+    /// batch-class request that has already waited
+    /// `batch_aging_rounds`, which can no longer be jumped — then the
+    /// plain FIFO head.
+    fn select_queued(&self) -> Option<usize> {
+        if let Some(i) = self.queue.iter().position(|q| q.resume.is_some()) {
+            return Some(i);
+        }
+        let head = self.queue.front()?;
+        let head_aged =
+            self.round_seq.saturating_sub(head.enqueued_seq) >= self.cfg_batch_aging;
+        if !head_aged {
+            if let Some(i) = self.queue.iter().position(|q| q.class == Priority::Latency) {
+                return Some(i);
+            }
+        }
+        Some(0)
+    }
+
+    /// A resumed victim stuck at the gate with nothing live waits a
+    /// bounded number of rounds for outside holders to release blocks;
+    /// a fresh request in the same spot is refused immediately.
+    fn within_resume_grace(&self, q: &QueuedRequest) -> bool {
+        q.resume.is_some()
+            && self.round_seq.saturating_sub(q.enqueued_seq) < RESUME_GRACE_ROUNDS
+    }
+
     /// One scheduler round: reap cancellations, admit, batch-decode,
     /// retire.
     ///
@@ -508,6 +685,7 @@ impl Engine {
     /// consumers observe the same round through their handles' events.
     pub fn step_round(&mut self) -> Result<Vec<Completion>> {
         let mut retired = Vec::new();
+        self.round_seq += 1;
 
         // 0. cancellation: free slots before admitting new work
         self.reap_cancelled();
@@ -530,21 +708,34 @@ impl Engine {
             };
         let mut admitted = 0;
         while self.active.len() < self.cfg_max_active && admitted < self.cfg_prefills_per_round {
-            let Some(front) = self.queue.front() else { break };
-            if front.cancel.load(Ordering::Relaxed) {
+            let Some(idx) = self.select_queued() else { break };
+            if self.queue[idx].cancel.load(Ordering::Relaxed) {
                 // cancelled while queued: never prefilled, costs nothing
-                let q = self.queue.pop_front().expect("front exists");
+                let q = self.queue.remove(idx).expect("index in bounds");
                 self.metrics.cancelled += 1;
                 let _ = q.events.send(Event::Error("cancelled".to_string()));
                 continue;
             }
-            if front.plan.is_none() {
-                let plan = self.plan_request(&front.req);
-                self.queue.front_mut().expect("front exists").plan = Some(plan);
+            if self.queue[idx].plan.is_none() {
+                let plan = match &self.queue[idx].resume {
+                    // recompute plan for a preempted victim: re-prefill
+                    // the prompt plus everything generated *except* the
+                    // emitted-but-unfed tail token, which stays budgeted
+                    // as one still-to-come token — so the worst case is
+                    // exactly the original `prompt + max_new` and the
+                    // gate needs no special-casing
+                    Some(r) => {
+                        let mut prefix = r.prompt_tokens.clone();
+                        prefix.extend_from_slice(&r.generated[..r.generated.len() - 1]);
+                        (prefix, r.max_new + 1 - r.generated.len())
+                    }
+                    None => self.plan_request(&self.queue[idx].req),
+                };
+                self.queue[idx].plan = Some(plan);
             }
-            let front = self.queue.front().expect("front exists");
+            let entry = &self.queue[idx];
             let (prompt_len, max_new, shared) = {
-                let (tokens, max_new) = front.plan.as_ref().expect("just planned");
+                let (tokens, max_new) = entry.plan.as_ref().expect("just planned");
                 // resident-prefix length: blocks the backend already
                 // holds for this prompt are accounted once, not
                 // per-session (0 for backends without a prefix cache)
@@ -555,7 +746,7 @@ impl Engine {
                 let needed = (prompt_len + max_new).max(1).div_ceil(bt);
                 if needed as u64 > m.blocks_total {
                     // can never fit, at any load: structured refusal
-                    let q = self.queue.pop_front().expect("front exists");
+                    let q = self.queue.remove(idx).expect("index in bounds");
                     self.metrics.rejected += 1;
                     let _ = q.events.send(Event::Error(format!(
                         "request needs {needed} KV blocks but the arena holds {} \
@@ -577,14 +768,17 @@ impl Engine {
                 let saved = shared / bt;
                 let outstanding = self.outstanding_growth_blocks(bt);
                 if (m.blocks_free as usize) < needed.saturating_sub(saved) + outstanding {
-                    if self.active.is_empty() {
+                    if self.active.is_empty() && !self.within_resume_grace(entry) {
                         // blocks are held by work the engine does not
                         // own (another coordinator on a shared device,
                         // a directly-driven session): nothing the
                         // engine does will free them, so waiting would
                         // spin forever — refuse this request instead
-                        // and let smaller queued requests try
-                        let q = self.queue.pop_front().expect("front exists");
+                        // and let smaller queued requests try. A
+                        // resumed victim gets a bounded grace first:
+                        // its blocks were taken by exactly such an
+                        // outside holder, which may release them.
+                        let q = self.queue.remove(idx).expect("index in bounds");
                         self.metrics.rejected += 1;
                         let _ = q.events.send(Event::Error(format!(
                             "request needs {needed} KV blocks but only {} are \
@@ -593,11 +787,56 @@ impl Engine {
                         )));
                         continue;
                     }
-                    // FIFO head waits for retirements to free blocks
+                    // selected entry waits for retirements to free blocks
                     break;
                 }
             }
-            let mut q = self.queue.pop_front().expect("front exists");
+            // chunked prefill: warm a long prompt's KV into the prefix
+            // cache one chunk per admission slot instead of paying one
+            // monolithic prefill; the real admission happens once the
+            // unwarmed tail fits in a single chunk. Resumed victims
+            // skip this — their prefix is largely cache-resident.
+            if self.cfg_prefill_chunk > 0 && self.queue[idx].resume.is_none() {
+                let (tokens, _) = self.queue[idx].plan.as_ref().expect("just planned");
+                let warmed = self.queue[idx].warmed.max(shared).min(tokens.len());
+                if tokens.len() - warmed > self.cfg_prefill_chunk {
+                    let target = warmed + self.cfg_prefill_chunk;
+                    let slice = tokens[..target].to_vec();
+                    admitted += 1;
+                    match self.runtime.prefill_from(&slice, shared.min(target)) {
+                        Ok((_, mut s)) => {
+                            // release immediately: the slice's full
+                            // blocks stay resident in the prefix index,
+                            // so the next slice (and the final
+                            // admission) adopt instead of recomputing
+                            self.runtime.end_session(&mut s);
+                            self.queue[idx].warmed = target;
+                            continue;
+                        }
+                        Err(e) if is_kv_exhausted(&e) => {
+                            if self.active.is_empty() {
+                                let q = self.queue.remove(idx).expect("index in bounds");
+                                self.metrics.rejected += 1;
+                                let _ = q.events.send(Event::Error(
+                                    "kv arena exhausted at prefill with no live \
+                                     sessions to wait for; retry later"
+                                        .to_string(),
+                                ));
+                                continue;
+                            }
+                            break;
+                        }
+                        Err(e) => {
+                            let q = self.queue.remove(idx).expect("index in bounds");
+                            let _ = q
+                                .events
+                                .send(Event::Error(format!("prefill failed: {e:#}")));
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+            let mut q = self.queue.remove(idx).expect("index in bounds");
             admitted += 1;
             let (tokens, max_new) = q.plan.take().expect("planned above");
             match self.admit(q, tokens, max_new, shared)? {
@@ -629,8 +868,10 @@ impl Engine {
                     // snapshot). With sessions live, retirements will
                     // free blocks — put the request back and retry next
                     // round. With nothing live, nothing the engine does
-                    // will ever free blocks: refuse rather than wedge.
-                    if self.active.is_empty() {
+                    // will ever free blocks: refuse rather than wedge —
+                    // except a resumed victim inside its grace window,
+                    // which keeps waiting for the outside holder.
+                    if self.active.is_empty() && !self.within_resume_grace(&q) {
                         self.metrics.rejected += 1;
                         let _ = q.events.send(Event::Error(
                             "kv arena exhausted at prefill with no live sessions \
@@ -659,14 +900,20 @@ impl Engine {
             for a in self.active.iter_mut() {
                 let index = a.generated.len();
                 a.generated.push(a.next_token);
-                if a.events_open {
-                    let ev = Event::Token(TokenEvent {
-                        request: a.id,
-                        index,
-                        token: a.next_token,
-                        text: tokenizer::decode(&[a.next_token]),
-                    });
-                    a.send(ev);
+                // a resumed session re-walks indices it streamed before
+                // preemption; only genuinely new positions emit events,
+                // so the client-visible stream stays dense and ordered
+                if index >= a.emitted {
+                    a.emitted = index + 1;
+                    if a.events_open {
+                        let ev = Event::Token(TokenEvent {
+                            request: a.id,
+                            index,
+                            token: a.next_token,
+                            text: tokenizer::decode(&[a.next_token]),
+                        });
+                        a.send(ev);
+                    }
                 }
             }
 
@@ -674,9 +921,9 @@ impl Engine {
             // decode with a preemption loop: a KV-exhausted round (the
             // arena could not grow a session — only reachable when the
             // arena is over-committed behind the admission gate's back)
-            // evicts the youngest session with a structured error and
-            // retries. Growth is all-or-nothing *before* any compute, so
-            // the retry recomputes the identical round for the survivors.
+            // evicts a victim, requeues it for resumption, and retries.
+            // Growth is all-or-nothing *before* any compute, so the
+            // retry recomputes the identical round for the survivors.
             let logits = loop {
                 let result = {
                     let mut sessions: Vec<&mut Session> =
@@ -702,13 +949,25 @@ impl Engine {
                                  exhaustion; the round cannot be retried",
                             ));
                         }
-                        let mut victim =
-                            self.active.pop().expect("non-empty batch reported exhaustion");
-                        self.round_tokens.pop();
-                        self.round_ctxs.pop();
+                        // preempt-and-requeue: release the victim's KV
+                        // and fold it back into the queue front as a
+                        // recompute request. Its channel and every
+                        // already-emitted token survive — eviction costs
+                        // the client a latency stall, never the stream.
+                        let remaining: Vec<usize> = self
+                            .active
+                            .iter()
+                            .map(|a| a.max_new.saturating_sub(a.generated.len()))
+                            .collect();
+                        let idx = pick_victim(&remaining);
+                        let mut victim = self.active.remove(idx);
+                        self.round_tokens.remove(idx);
+                        self.round_ctxs.remove(idx);
                         self.metrics.preempted += 1;
+                        self.metrics.requeued += 1;
                         self.runtime.end_session(&mut victim.session);
-                        victim.send(Event::Error(format!("preempted: {e:#}")));
+                        let seq = self.round_seq;
+                        self.queue.push_front(requeue_victim(victim, seq));
                         if self.active.is_empty() {
                             break Vec::new();
                         }
@@ -768,7 +1027,16 @@ impl Engine {
         max_new: usize,
         shared: usize,
     ) -> Result<Admitted> {
-        let QueuedRequest { req, events, cancel } = q;
+        let QueuedRequest {
+            req,
+            events,
+            cancel,
+            class,
+            enqueued_seq,
+            warmed,
+            resume,
+            plan: _,
+        } = q;
 
         let t0 = Instant::now();
         let (logits, session) = match self.runtime.prefill_from(&tokens, shared) {
@@ -776,12 +1044,17 @@ impl Engine {
             Err(e) if is_kv_exhausted(&e) => {
                 // out of blocks right now, not broken: requeue instead
                 // of erroring the client or poisoning the round (the
-                // plan rides along so the retry does not re-tokenize)
+                // plan rides along so the retry does not re-tokenize,
+                // and resume state rides along so a victim stays one)
                 return Ok(Admitted::Requeue(QueuedRequest {
                     req,
                     events,
                     cancel,
                     plan: Some((tokens, max_new)),
+                    class,
+                    enqueued_seq,
+                    warmed,
+                    resume,
                 }));
             }
             Err(e) => {
@@ -793,17 +1066,59 @@ impl Engine {
         let first_token_s = t0.elapsed().as_secs_f64();
         let sim_first_token_ms = self.sim.prefill(tokens.len()).breakdown.total_us() / 1e3;
 
+        if let Some(r) = resume {
+            // seamless resumption: the re-prefill recomputed the KV for
+            // prompt + generated[..g-1] (mostly by adopting
+            // prefix-cached blocks), and the emitted-but-unfed tail
+            // token becomes `next_token` again. The prefill logits are
+            // deliberately ignored and nothing is re-sampled: the
+            // pending token already streamed to the client, and leaving
+            // the RNG untouched keeps greedy resumption bit-identical.
+            let mut generated = r.generated;
+            let next_token = generated.pop().expect("preempted after at least one emission");
+            let emitted = generated.len() + 1;
+            let n_prompt = r.prompt_tokens.len();
+            let a = ActiveSession {
+                id: req.id,
+                prompt: req.prompt,
+                sampling: req.sampling,
+                max_new: r.max_new,
+                n_prompt,
+                worst_tokens: n_prompt + r.max_new,
+                session,
+                prompt_tokens: r.prompt_tokens,
+                generated,
+                next_token,
+                emitted,
+                class,
+                first_token_s: r.first_token_s,
+                // the recompute stall lands in decode time — the
+                // client saw its first token long ago
+                decode_wall_s: r.decode_wall_s + first_token_s,
+                sim_first_token_ms: r.sim_first_token_ms,
+                sim_decode_us: r.sim_decode_us,
+                events,
+                events_open: true,
+                cancel,
+            };
+            return Ok(Admitted::Active(Box::new(a)));
+        }
+
         let next_token = sample(&logits, req.sampling, &mut self.rng);
+        let n_prompt = tokens.len();
         let a = ActiveSession {
             id: req.id,
             prompt: req.prompt,
             sampling: req.sampling,
             max_new,
-            n_prompt: tokens.len(),
-            worst_tokens: tokens.len() + max_new,
+            n_prompt,
+            worst_tokens: n_prompt + max_new,
             session,
+            prompt_tokens: tokens,
             generated: Vec::with_capacity(max_new),
             next_token,
+            emitted: 0,
+            class,
             first_token_s,
             decode_wall_s: 0.0,
             sim_first_token_ms,
@@ -917,6 +1232,31 @@ mod tests {
         let h = eng.submit("never served", 4, Sampling::Greedy);
         drop(eng);
         assert!(h.wait().is_err());
+    }
+
+    #[test]
+    fn victim_selection_skips_sessions_one_token_from_done() {
+        // youngest (highest index) eligible session wins
+        assert_eq!(pick_victim(&[5, 3, 2]), 2);
+        // a session with <= 1 token remaining is skipped: evicting it
+        // trades a whole prefix recompute for a single token
+        assert_eq!(pick_victim(&[5, 3, 1]), 1);
+        assert_eq!(pick_victim(&[4, 1, 0]), 0);
+        // every session about to finish: fall back to the youngest
+        assert_eq!(pick_victim(&[1, 1, 0]), 2);
+        assert_eq!(pick_victim(&[1]), 0);
+    }
+
+    #[test]
+    fn latency_class_is_selected_before_batch_until_the_head_ages() {
+        let mut eng = Engine::new(LlmRuntime::reference_tiny(), EngineConfig::default());
+        eng.submit("batch head", 4, Sampling::Greedy);
+        eng.submit_with_priority("vip", 4, Sampling::Greedy, Priority::Latency);
+        assert_eq!(eng.select_queued(), Some(1), "latency jumps the batch head");
+        // once the batch head has waited out the aging bound it can no
+        // longer be jumped
+        eng.round_seq += eng.cfg_batch_aging;
+        assert_eq!(eng.select_queued(), Some(0), "aged batch head holds its turn");
     }
 
     #[test]

@@ -52,7 +52,7 @@ use std::thread::{self, JoinHandle};
 
 use anyhow::Result;
 
-use super::engine::{Completion, Engine, Event, RequestHandle, TokenEvent};
+use super::engine::{Completion, Engine, Event, Priority, RequestHandle, TokenEvent};
 use super::sampler::Sampling;
 use crate::util::json::Json;
 
@@ -69,6 +69,9 @@ pub enum ServerRequest {
         sampling: Sampling,
         /// v2: stream one JSON line per token before the final line
         stream: bool,
+        /// scheduling class: `"priority": "latency"` jumps the batch
+        /// queue (bounded by the engine's anti-starvation aging)
+        priority: Priority,
     },
     /// v2: cancel an in-flight request by id
     Cancel(u64),
@@ -131,11 +134,24 @@ pub fn parse_request(line: &str) -> Result<ServerRequest, String> {
         None if temperature <= 0.0 => Sampling::Greedy,
         None => Sampling::Temperature(temperature),
     };
+    let priority = match req.get("priority") {
+        None => Priority::Batch,
+        Some(v) => match v.as_str() {
+            Some("latency") => Priority::Latency,
+            Some("batch") => Priority::Batch,
+            _ => {
+                return Err(
+                    "'priority' must be \"latency\" or \"batch\"".to_string()
+                );
+            }
+        },
+    };
     Ok(ServerRequest::Generate {
         prompt,
         max_new_tokens,
         sampling,
         stream,
+        priority,
     })
 }
 
@@ -210,6 +226,7 @@ fn stats_json(engine: &Engine) -> Json {
         ("cancelled", Json::Num(m.cancelled as f64)),
         ("rejected", Json::Num(m.rejected as f64)),
         ("preempted", Json::Num(m.preempted as f64)),
+        ("requeued", Json::Num(m.requeued as f64)),
         ("rounds", Json::Num(m.rounds as f64)),
         ("decode_tokens", Json::Num(m.decode_tokens as f64)),
         ("peak_active", Json::Num(m.peak_active as f64)),
@@ -238,6 +255,7 @@ fn stats_json(engine: &Engine) -> Json {
         pairs.push(("device_tx_bytes", Json::Num(t.tx_bytes as f64)));
         pairs.push(("device_rx_bytes", Json::Num(t.rx_bytes as f64)));
         pairs.push(("device_calls", Json::Num(t.calls as f64)));
+        pairs.push(("device_reconnects", Json::Num(t.reconnects as f64)));
     }
     Json::obj(pairs)
 }
@@ -264,12 +282,14 @@ pub fn process_line(engine: &mut Engine, line: &str) -> Json {
             max_new_tokens,
             sampling,
             stream: _,
+            priority,
         }) => {
             // consume through the handle, not step()'s return value: a
             // bounded-queue refusal never enqueues, so its structured
             // "server busy" error exists only as the handle's terminal
             // event
-            let handle = engine.submit(&prompt, max_new_tokens, sampling);
+            let handle =
+                engine.submit_with_priority(&prompt, max_new_tokens, sampling, priority);
             if let Err(e) = engine.run_all() {
                 return error_json(format!("{e:#}"));
             }
@@ -489,6 +509,7 @@ fn handle_client(shared: &Shared, stream: TcpStream) -> Result<()> {
                 max_new_tokens,
                 sampling,
                 stream,
+                priority,
             }) => {
                 let handle = {
                     let mut engine = shared.engine.lock().unwrap();
@@ -501,7 +522,7 @@ fn handle_client(shared: &Shared, stream: TcpStream) -> Result<()> {
                         writeln!(writer, "{}", error_json("server shutting down"))?;
                         continue;
                     }
-                    let h = engine.submit(&prompt, max_new_tokens, sampling);
+                    let h = engine.submit_with_priority(&prompt, max_new_tokens, sampling, priority);
                     shared.work.notify_one();
                     h
                 };
@@ -575,6 +596,33 @@ mod tests {
         assert!(parse_request(r#"{"cancel": -1}"#).is_err());
         assert!(parse_request(r#"{"cancel": 1.5}"#).is_err());
         assert!(parse_request(r#"{"cancel": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_request_priority_classes() {
+        assert!(matches!(
+            parse_request(r#"{"prompt":"x"}"#),
+            Ok(ServerRequest::Generate {
+                priority: Priority::Batch,
+                ..
+            })
+        ));
+        assert!(matches!(
+            parse_request(r#"{"prompt":"x","priority":"latency"}"#),
+            Ok(ServerRequest::Generate {
+                priority: Priority::Latency,
+                ..
+            })
+        ));
+        assert!(matches!(
+            parse_request(r#"{"prompt":"x","priority":"batch"}"#),
+            Ok(ServerRequest::Generate {
+                priority: Priority::Batch,
+                ..
+            })
+        ));
+        assert!(parse_request(r#"{"prompt":"x","priority":"vip"}"#).is_err());
+        assert!(parse_request(r#"{"prompt":"x","priority":1}"#).is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //!   serve        --addr HOST:PORT [--backend auto|ref|sim|bridge|artifacts]
 //!                [--device HOST:PORT] [--artifacts DIR --model NAME]
 //!                [--max-active N] [--max-queued N]
+//!                [--prefill-chunk-tokens N] [--batch-aging-rounds N]
 //!   device-serve --addr HOST:PORT [--backend ref|sim] [--max-sessions N]
 //!                (host a backend behind the bridge command-stream protocol)
 //!   generate     --prompt TEXT [--max-new N] [--temperature T] [--stream]
@@ -51,7 +52,8 @@ fn main() {
 fn print_help() {
     println!(
         "edgellm — CPU-FPGA heterogeneous LLM accelerator (reproduction)\n\n\
-         USAGE:\n  edgellm serve    --addr 127.0.0.1:7077 --max-active 8 --max-queued 1024\n  \
+         USAGE:\n  edgellm serve    --addr 127.0.0.1:7077 --max-active 8 --max-queued 1024\n                   \
+         --prefill-chunk-tokens 0 --batch-aging-rounds 32\n  \
          edgellm device-serve --addr {DEFAULT_DEVICE_ADDR} --backend sim\n  \
          edgellm generate --prompt \"Hello\" --max-new 32\n  \
          edgellm simulate --arch glm --strategy s3 --ctx 128 --batch 8\n  \
@@ -169,6 +171,8 @@ fn engine_config(args: &Args) -> EngineConfig {
     let mut cfg = EngineConfig {
         max_active: args.get_usize("max-active", 8),
         max_queued: args.get_usize("max-queued", 1024),
+        prefill_chunk_tokens: args.get_usize("prefill-chunk-tokens", 0),
+        batch_aging_rounds: args.get_usize("batch-aging-rounds", 32) as u64,
         ..EngineConfig::default()
     };
     // latency-model serving: the engine's VCU128 accounting must

@@ -114,6 +114,9 @@ pub struct TransferMeter {
     pub rx_bytes: u64,
     /// metered backend entry points served
     pub calls: u64,
+    /// successful reconnect cycles after a broken device connection
+    /// (each one re-opened and re-prefilled every live session)
+    pub reconnects: u64,
 }
 
 /// An LLM execution backend the continuous-batching scheduler can drive.

@@ -235,6 +235,75 @@ fn failed_prefill_releases_the_device_slot() {
     dev.shutdown();
 }
 
+// --------------------------------------------------- restart resilience
+
+/// Acceptance: a device power cycle mid-decode costs latency, not a
+/// failed completion. The daemon is torn down between rounds — severing
+/// every live connection and wiping all device-side session state — and
+/// a fresh daemon (fresh backend, same port) takes its place. The
+/// client must reconnect, replay its sessions from token history, and
+/// finish every stream bit-identical to an uninterrupted in-process
+/// run, with zero client-visible errors.
+#[test]
+fn device_restart_mid_decode_is_invisible_to_the_client() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    // a clone of the listener keeps the port bound across the restart,
+    // so the "rebooted device" comes back at the address the client
+    // keeps dialing
+    let respawn = listener.try_clone().unwrap();
+    let dev = device::spawn_on(
+        Box::new(ReferenceBackend::new(ReferenceConfig::default())),
+        listener,
+        DeviceConfig::default(),
+    )
+    .unwrap();
+
+    let cfg = || EngineConfig { max_active: 2, ..EngineConfig::default() };
+    let mut local = Engine::new(LlmRuntime::reference(ReferenceConfig::default()), cfg());
+    let mut bridged = Engine::new(bridge_runtime(&dev), cfg());
+    for (i, p) in ["power cycle survivor", "second stream"].iter().enumerate() {
+        local.submit(p, 8 + i, Sampling::Greedy);
+        bridged.submit(p, 8 + i, Sampling::Greedy);
+    }
+
+    // a few decode rounds so the restart lands mid-stream on both
+    // sessions, with KV state the replay must reconstruct
+    for _ in 0..3 {
+        local.step_round().unwrap();
+        bridged.step_round().unwrap();
+    }
+
+    // power cycle: all connections severed, all device state gone, a
+    // *fresh* backend comes up on the same port
+    dev.shutdown();
+    let dev2 = device::spawn_on(
+        Box::new(ReferenceBackend::new(ReferenceConfig::default())),
+        respawn,
+        DeviceConfig::default(),
+    )
+    .unwrap();
+
+    let mut a = local.run_all().unwrap();
+    let mut b = bridged.run_all().unwrap();
+    a.sort_by_key(|c| c.id);
+    b.sort_by_key(|c| c.id);
+    assert_eq!(a.len(), 2);
+    assert_eq!(b.len(), 2, "every stream must complete across the restart");
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.text, y.text, "request {} diverged across the device restart", x.id);
+        assert_eq!(x.n_prompt, y.n_prompt);
+        assert_eq!(x.n_generated, y.n_generated);
+    }
+
+    let meter = bridged.runtime().transfer_meter().expect("bridge meters transfers");
+    assert!(meter.reconnects >= 1, "the restart must be visible in the meter");
+
+    // retirement closes land on the *new* daemon; flush and check
+    let _ = bridged.runtime().memory();
+    assert_eq!(dev2.active_sessions(), 0, "replayed sessions must still be retired");
+    dev2.shutdown();
+}
+
 // ------------------------------------------------------- paged KV arena
 
 /// The device's KV-arena accounting crosses the wire through the

@@ -6,7 +6,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::thread;
 
-use edgellm::coordinator::engine::{Engine, EngineConfig, Event};
+use edgellm::coordinator::engine::{Engine, EngineConfig, Event, Priority};
 use edgellm::coordinator::sampler::Sampling;
 use edgellm::coordinator::server;
 use edgellm::runtime::model::LlmRuntime;
@@ -307,18 +307,30 @@ fn admission_is_memory_aware() {
 
 /// True exhaustion (blocks consumed behind the admission gate's back by
 /// a session the scheduler does not own) preempts the youngest session
-/// with a structured `Event::Error` instead of failing the round — and
-/// the engine keeps serving afterwards.
+/// — but eviction is recovery, not failure: the victim is requeued as a
+/// recompute request, resumes off the prefix cache once blocks free up,
+/// and both its completion and its token stream are bit-identical to an
+/// unpreempted run. Zero client-visible errors.
 #[test]
-fn kv_exhaustion_preempts_with_structured_error() {
-    let rt = LlmRuntime::reference(ReferenceConfig {
+fn kv_exhaustion_preempts_then_resumes_bit_identically() {
+    let cfg = ReferenceConfig {
         max_tokens: 64,
         kv_block_tokens: 8,
         kv_pool_blocks: 6,
         ..ReferenceConfig::default()
-    });
-    let mut eng = Engine::new(rt, EngineConfig { max_active: 4, ..EngineConfig::default() });
+    };
+    // control: the same request with nobody raiding the arena
+    let mut control = Engine::new(
+        LlmRuntime::reference(cfg.clone()),
+        EngineConfig { max_active: 4, ..EngineConfig::default() },
+    );
+    control.submit("aaaa", 30, Sampling::Greedy);
+    let control_text = control.run_all().unwrap()[0].text.clone();
 
+    let mut eng = Engine::new(
+        LlmRuntime::reference(cfg),
+        EngineConfig { max_active: 4, ..EngineConfig::default() },
+    );
     // an out-of-band session (driven directly on the backend, invisible
     // to the scheduler's worst-case accounting) holds one block
     let (mut logits, mut ext) = eng.runtime().prefill(&[1, 2, 3]).unwrap();
@@ -334,7 +346,8 @@ fn kv_exhaustion_preempts_with_structured_error() {
         logits = eng.runtime().decode(&mut ext, t).unwrap();
     }
 
-    // the live session crosses its next block boundary → preempted
+    // the live session crosses its next block boundary → preempted and
+    // requeued; its channel and already-streamed tokens survive
     for _ in 0..40 {
         eng.step_round().unwrap();
         if eng.metrics().preempted > 0 {
@@ -342,18 +355,39 @@ fn kv_exhaustion_preempts_with_structured_error() {
         }
     }
     assert_eq!(eng.metrics().preempted, 1);
-    let err = ha.wait().unwrap_err();
-    assert!(err.contains("preempted"), "{err}");
-    assert!(err.contains("kv arena exhausted"), "{err}");
+    assert_eq!(eng.metrics().requeued, 1);
     assert_eq!(eng.active_sessions(), 0, "victim evicted, engine alive");
+    assert_eq!(eng.pending(), 1, "victim waits in the queue, not failed");
 
-    // release the hog: the engine serves normally again
+    // release the hog: the victim re-prefills (prompt + generated so
+    // far, adopting whatever the prefix index still holds) and finishes
     eng.runtime().end_session(&mut ext);
-    let hb = eng.submit("recovery", 4, Sampling::Greedy);
     let done = eng.run_all().unwrap();
     assert_eq!(done.len(), 1);
-    assert_eq!(done[0].n_generated, 4);
-    assert!(hb.wait().is_ok());
+    assert_eq!(done[0].n_generated, 30);
+    assert_eq!(done[0].text, control_text, "resume must be bit-identical");
+
+    // the client-visible stream: dense ordered indices, one Done, and
+    // no Error event anywhere near the preemption
+    let mut tokens = Vec::new();
+    let mut terminal = None;
+    while let Some(ev) = ha.try_recv() {
+        match ev {
+            Event::Token(t) => {
+                assert_eq!(t.index, tokens.len(), "indices dense across the preemption");
+                tokens.push(t.token);
+            }
+            Event::Done(c) => terminal = Some(c),
+            Event::Error(e) => panic!("preemption leaked a client-visible error: {e}"),
+        }
+    }
+    assert_eq!(tokens.len(), 30, "no token re-emitted, none lost");
+    assert_eq!(
+        edgellm::coordinator::tokenizer::decode(&tokens),
+        control_text,
+        "streamed tokens rebuild the unpreempted text"
+    );
+    assert_eq!(terminal.expect("terminal Done event").text, control_text);
 }
 
 /// A preempted session that *shares* its prefix frees only its private
@@ -368,6 +402,16 @@ fn preempting_a_prefix_sharer_frees_only_its_private_blocks() {
         kv_pool_blocks: 8,
         ..ReferenceConfig::default()
     };
+    // control trajectory for the sharer request (sharing and resuming
+    // must both be invisible in the output)
+    let text = "shared system prompt"; // exactly 20 byte-tokens
+    let mut control = Engine::new(
+        LlmRuntime::reference(cfg.clone()),
+        EngineConfig { max_active: 4, ..EngineConfig::default() },
+    );
+    control.submit(text, 8, Sampling::Greedy);
+    let control_text = control.run_all().unwrap()[0].text.clone();
+
     let mut eng = Engine::new(
         LlmRuntime::reference(cfg.clone()),
         EngineConfig { max_active: 4, ..EngineConfig::default() },
@@ -375,7 +419,6 @@ fn preempting_a_prefix_sharer_frees_only_its_private_blocks() {
 
     // an out-of-band elder sharer: 20 tokens = 2 full blocks + a
     // boundary block, registered in the prefix index by prefill
-    let text = "shared system prompt"; // exactly 20 byte-tokens
     let toks = edgellm::coordinator::tokenizer::encode(text);
     assert_eq!(toks.len(), 20);
     let (_, mut elder) = eng.runtime().prefill(&toks).unwrap();
@@ -413,9 +456,9 @@ fn preempting_a_prefix_sharer_frees_only_its_private_blocks() {
         }
     }
     assert_eq!(eng.metrics().preempted, 1);
+    assert_eq!(eng.metrics().requeued, 1);
     assert_eq!(eng.active_sessions(), 0);
-    let err = ha.wait().unwrap_err();
-    assert!(err.contains("preempted"), "{err}");
+    assert_eq!(eng.pending(), 1, "the sharer is requeued, not failed");
 
     // the core claim: eviction returned exactly the sharer's one
     // private block — had the shared prefix been counted reclaimable,
@@ -429,18 +472,106 @@ fn preempting_a_prefix_sharer_frees_only_its_private_blocks() {
     // the elder's adopted-from blocks are untouched: its next decode is
     // bit-identical to an unshared control run
     let control_rt = LlmRuntime::reference(cfg);
-    let (_, mut control) = control_rt.prefill(&toks).unwrap();
+    let (_, mut ctrl_elder) = control_rt.prefill(&toks).unwrap();
     let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
     let le = eng.runtime().decode(&mut elder, 5).unwrap();
-    let lc = control_rt.decode(&mut control, 5).unwrap();
+    let lc = control_rt.decode(&mut ctrl_elder, 5).unwrap();
     assert_eq!(bits(&le), bits(&lc), "shared prefix corrupted by preemption");
 
-    // release the hog: the engine serves again
+    // release the hog: the evicted sharer resumes over the elder's
+    // still-resident prefix and completes bit-identically
     eng.runtime().end_session(&mut hog);
-    let hb = eng.submit("recovery", 4, Sampling::Greedy);
     let done = eng.run_all().unwrap();
     assert_eq!(done.len(), 1);
-    assert!(hb.wait().is_ok());
+    let c = ha.wait().expect("the preempted sharer must still complete");
+    assert_eq!(c.n_generated, 8);
+    assert_eq!(c.text, control_text, "resumed sharer must match the control run");
+}
+
+/// Chunked prefill: a long prompt is warmed into the prefix cache one
+/// chunk per admission slot instead of paying a monolithic prefill, and
+/// the final admission adopts the warmed blocks — same trajectory as an
+/// unchunked run, bounded prefill work per round.
+#[test]
+fn chunked_prefill_warms_across_rounds_and_matches_unchunked() {
+    let cfg = ReferenceConfig {
+        kv_block_tokens: 8,
+        kv_pool_blocks: 32,
+        ..ReferenceConfig::default()
+    };
+    let prompt = format!("{:<40}", "long document"); // 40 byte-tokens
+    let mut control = Engine::new(LlmRuntime::reference(cfg.clone()), EngineConfig::default());
+    control.submit(&prompt, 8, Sampling::Greedy);
+    let control_text = control.run_all().unwrap()[0].text.clone();
+
+    let mut eng = Engine::new(
+        LlmRuntime::reference(cfg),
+        EngineConfig {
+            prefill_chunk_tokens: 8,
+            ..EngineConfig::default()
+        },
+    );
+    let h = eng.submit(&prompt, 8, Sampling::Greedy);
+    // the first round only warms (prefills_per_round chunks): the
+    // request stays queued and nothing is live — the bounded-work
+    // property that keeps one huge prompt from stalling live decodes
+    eng.step_round().unwrap();
+    assert_eq!(eng.active_sessions(), 0, "warming rounds admit nothing");
+    assert_eq!(eng.pending(), 1);
+    let done = eng.run_all().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].n_generated, 8);
+    assert_eq!(done[0].text, control_text, "chunking must not change the trajectory");
+    assert!(h.wait().is_ok());
+    let mem = eng.runtime().memory().unwrap();
+    assert!(
+        mem.prefix_hits > 0,
+        "the final prefill must adopt warmed blocks, not recompute: {mem:?}"
+    );
+}
+
+/// The two-class queue: a latency-class arrival jumps waiting batch
+/// work, but only until the batch head has aged past the
+/// anti-starvation bound — then it holds its turn.
+#[test]
+fn latency_class_jumps_batch_queue_with_bounded_starvation() {
+    // returns completion order (ids) for (blocker, batch, vip)
+    let order = |aging_rounds: u64| -> (u64, u64, Vec<u64>) {
+        let mut eng = Engine::new(
+            LlmRuntime::reference(ReferenceConfig::default()),
+            EngineConfig {
+                max_active: 1,
+                batch_aging_rounds: aging_rounds,
+                ..EngineConfig::default()
+            },
+        );
+        // a 6-round blocker so the queue actually waits
+        eng.submit("running", 6, Sampling::Greedy);
+        eng.step_round().unwrap();
+        let batch = eng.submit("batch work", 2, Sampling::Greedy).id();
+        let vip = eng
+            .submit_with_priority("interactive", 2, Sampling::Greedy, Priority::Latency)
+            .id();
+        let ids = eng.run_all().unwrap().iter().map(|c| c.id).collect();
+        (batch, vip, ids)
+    };
+
+    // generous bound: the blocker's 6 rounds never age the batch head,
+    // so the latency request is admitted (and so retires) first
+    let (batch, vip, ids) = order(32);
+    let pos = |id: u64, ids: &[u64]| ids.iter().position(|&x| x == id).unwrap();
+    assert!(
+        pos(vip, &ids) < pos(batch, &ids),
+        "latency class must jump waiting batch work: {ids:?}"
+    );
+
+    // tight bound: by the time a slot frees, the batch head has waited
+    // out the aging rounds and can no longer be jumped
+    let (batch, vip, ids) = order(2);
+    assert!(
+        pos(batch, &ids) < pos(vip, &ids),
+        "an aged batch head must hold its turn: {ids:?}"
+    );
 }
 
 fn send_request(addr: std::net::SocketAddr, body: String) -> Json {
