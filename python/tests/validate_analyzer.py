@@ -1,0 +1,957 @@
+#!/usr/bin/env python3
+"""Line-for-line port of tools/analyzer (the in-repo invariant linter).
+
+Containers without a Rust toolchain validate Rust changes through a
+Python port (see validate_kv_arena.py and .claude/skills/verify/
+SKILL.md); this file ports the analyzer's scanner, all five lints, and
+the allow-annotation machinery, then
+
+* replays every fixture assertion from tools/analyzer/tests/fixtures.rs
+  (bad fixtures flagged at exact lines, good fixtures clean, the
+  wire-drift tail-arity drift demonstrably failing), and
+* runs the full analyzer over the real tree, asserting zero findings —
+  the same gate CI enforces with `cargo run -p edgellm-analyzer -- check`.
+
+Fidelity notes: the scanner is a character-level state machine kept
+structurally identical to tools/analyzer/src/scan.rs (same states, same
+transition order), so any behavioral edit there should be mirrored here
+mechanically.
+"""
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+CHECKS = 0
+
+
+def check(cond, msg):
+    global CHECKS
+    CHECKS += 1
+    if not cond:
+        print(f"FAIL: {msg}")
+        sys.exit(1)
+
+
+# --------------------------------------------------------------- scanner
+
+LINTS = ["panic-path", "wire-drift", "cfg-containment", "error-discipline", "lock-hygiene"]
+
+
+class Allow:
+    def __init__(self, target_line, at_line, lint, has_reason):
+        self.target_line = target_line
+        self.at_line = at_line
+        self.lint = lint
+        self.has_reason = has_reason
+
+
+class Line:
+    def __init__(self, code, stripped, in_test, depth):
+        self.code = code
+        self.stripped = stripped
+        self.in_test = in_test
+        self.depth = depth
+
+
+class SourceFile:
+    def __init__(self, path, lines, allows):
+        self.path = path
+        self.lines = lines
+        self.allows = allows
+
+
+class Finding:
+    def __init__(self, path, line, lint, message):
+        self.path = path
+        self.line = line
+        self.lint = lint
+        self.message = message
+
+    def __repr__(self):
+        return f"{self.path}:{self.line}: [{self.lint}] {self.message}"
+
+
+def is_ident(c):
+    return (c.isascii() and c.isalnum()) or c == "_"
+
+
+def is_raw_string(s, i):
+    if i > 0 and is_ident(s[i - 1]):
+        return False
+    j = i
+    if s[j] == "b":
+        j += 1
+    if j >= len(s) or s[j] != "r":
+        return False
+    j += 1
+    while j < len(s) and s[j] == "#":
+        j += 1
+    return j < len(s) and s[j] == '"'
+
+
+def raw_string_open(s, i):
+    j = i
+    if s[j] == "b":
+        j += 1
+    j += 1  # the 'r'
+    hashes = 0
+    while s[j] == "#":
+        hashes += 1
+        j += 1
+    return hashes, j + 1 - i
+
+
+def is_char_literal(s, i):
+    if i + 1 >= len(s):
+        return False
+    if s[i + 1] == "\\":
+        return True
+    return i + 2 < len(s) and s[i + 2] == "'"
+
+
+def parse_allow(comment):
+    at = comment.find("analyzer:")
+    if at < 0:
+        return None
+    rest = comment[at + len("analyzer:"):].lstrip()
+    if not rest.startswith("allow("):
+        return None
+    rest = rest[len("allow("):]
+    close = rest.find(")")
+    if close < 0:
+        return None
+    lint = rest[:close].strip()
+    reason = rest[close + 1:].lstrip(" \t-").lstrip("—").strip()
+    return lint, bool(reason)
+
+
+def scan(path, text):
+    raw_lines = text.split("\n")
+    lines, allows, pending = [], [], []
+    st = "code"
+    block_nest = 0
+    raw_hashes = 0
+    depth = 0
+    test_pending = False
+    test_stack = []
+    for li, raw in enumerate(raw_lines):
+        code, stripped = [], []
+        line_depth = depth
+        in_test_at_start = bool(test_stack)
+        comment_text = []
+        i = 0
+        n = len(raw)
+        if st == "line_comment":
+            st = "code"
+        if st == "code" and "#[cfg(test)]" in raw:
+            test_pending = True
+        while i < n:
+            c = raw[i]
+            if st == "code":
+                if c == "/" and i + 1 < n and raw[i + 1] == "/":
+                    st = "line_comment"
+                    code.append("  ")
+                    stripped.append("  ")
+                    comment_text = []
+                    i += 2
+                elif c == "/" and i + 1 < n and raw[i + 1] == "*":
+                    st = "block"
+                    block_nest = 1
+                    code.append("  ")
+                    stripped.append("  ")
+                    i += 2
+                elif c == '"':
+                    st = "str"
+                    code.append('"')
+                    stripped.append('"')
+                    i += 1
+                elif c in "rb" and is_raw_string(raw, i):
+                    raw_hashes, skip = raw_string_open(raw, i)
+                    st = "rawstr"
+                    code.append(" " * (skip - 1) + '"')
+                    stripped.append(" " * (skip - 1) + '"')
+                    i += skip
+                elif c == "'":
+                    if is_char_literal(raw, i):
+                        st = "char"
+                        code.append("'")
+                        stripped.append("'")
+                        i += 1
+                    else:
+                        code.append(c)
+                        stripped.append(c)
+                        i += 1
+                else:
+                    if c == "{":
+                        if test_pending:
+                            test_stack.append(depth)
+                            test_pending = False
+                        depth += 1
+                    elif c == "}":
+                        depth -= 1
+                        if test_stack and depth == test_stack[-1]:
+                            test_stack.pop()
+                    elif c == ";" and test_pending and depth == line_depth:
+                        test_pending = False
+                    code.append(c)
+                    stripped.append(c)
+                    i += 1
+            elif st == "line_comment":
+                comment_text.append(c)
+                code.append(" ")
+                stripped.append(" ")
+                i += 1
+            elif st == "block":
+                if c == "*" and i + 1 < n and raw[i + 1] == "/":
+                    block_nest -= 1
+                    if block_nest == 0:
+                        st = "code"
+                    code.append("  ")
+                    stripped.append("  ")
+                    i += 2
+                elif c == "/" and i + 1 < n and raw[i + 1] == "*":
+                    block_nest += 1
+                    code.append("  ")
+                    stripped.append("  ")
+                    i += 2
+                else:
+                    code.append(" ")
+                    stripped.append(" ")
+                    i += 1
+            elif st == "str":
+                if c == "\\" and i + 1 < n:
+                    code.append("  ")
+                    stripped.append(c + raw[i + 1])
+                    i += 2
+                elif c == '"':
+                    st = "code"
+                    code.append('"')
+                    stripped.append('"')
+                    i += 1
+                else:
+                    code.append(" ")
+                    stripped.append(c)
+                    i += 1
+            elif st == "rawstr":
+                if c == '"' and raw[i + 1:i + 1 + raw_hashes] == "#" * raw_hashes:
+                    st = "code"
+                    code.append('"' + " " * raw_hashes)
+                    stripped.append('"' + " " * raw_hashes)
+                    i += 1 + raw_hashes
+                else:
+                    code.append(" ")
+                    stripped.append(c)
+                    i += 1
+            else:  # char
+                if c == "\\" and i + 1 < n:
+                    code.append("  ")
+                    stripped.append("  ")
+                    i += 2
+                elif c == "'":
+                    st = "code"
+                    code.append("'")
+                    stripped.append("'")
+                    i += 1
+                else:
+                    code.append(" ")
+                    stripped.append(" ")
+                    i += 1
+        code_s = "".join(code)
+        stripped_s = "".join(stripped)
+        has_code = bool(code_s.strip())
+        if comment_text:
+            pa = parse_allow("".join(comment_text))
+            if pa:
+                lint, has_reason = pa
+                allows.append(Allow(li + 1 if has_code else 0, li + 1, lint, has_reason))
+                if not has_code:
+                    pending.append(len(allows) - 1)
+        if has_code:
+            for ai in pending:
+                allows[ai].target_line = li + 1
+            pending = []
+        lines.append(Line(code_s, stripped_s, in_test_at_start or bool(test_stack), line_depth))
+    return SourceFile(path, lines, allows)
+
+
+# ----------------------------------------------------------------- lints
+
+
+def find_all(s, pat):
+    out, start = [], 0
+    while True:
+        p = s.find(pat, start)
+        if p < 0:
+            return out
+        out.append(p)
+        start = p + len(pat)
+
+
+def matching_bracket(s, opening):
+    depth = 0
+    for j in range(opening, len(s)):
+        if s[j] == "[":
+            depth += 1
+        elif s[j] == "]":
+            depth -= 1
+            if depth == 0:
+                return j
+    return None
+
+
+def has_toplevel_range(s):
+    depth = 0
+    for j, c in enumerate(s):
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        elif c == "." and depth == 0 and j + 1 < len(s) and s[j + 1] == ".":
+            return True
+    return False
+
+
+def panic_path(sf, out):
+    for i, line in enumerate(sf.lines):
+        if line.in_test:
+            continue
+        ln, code = i + 1, line.code
+        for pat, what in [
+            (".unwrap()", "`.unwrap()` can panic on hostile input; bubble a typed error"),
+            (".expect(", "`.expect()` can panic on hostile input; bubble a typed error"),
+        ]:
+            for _ in find_all(code, pat):
+                out.append(Finding(sf.path, ln, "panic-path", what))
+        for mac in ["panic!", "unimplemented!", "todo!", "unreachable!"]:
+            for p in find_all(code, mac):
+                if p == 0 or not is_ident(code[p - 1]):
+                    out.append(Finding(
+                        sf.path, ln, "panic-path",
+                        f"`{mac}` aborts the daemon thread; return an error frame instead"))
+        for p in range(1, len(code)):
+            if code[p] != "[":
+                continue
+            prev = code[p - 1]
+            if not (is_ident(prev) or prev in ")]?"):
+                continue
+            end = matching_bracket(code, p)
+            if end is not None and not has_toplevel_range(code[p + 1:end]):
+                out.append(Finding(
+                    sf.path, ln, "panic-path",
+                    "`[i]` indexing can panic; use `.get()` or validate the length first"))
+
+
+def cfg_containment(sf, rel, allowed_prefix, out):
+    if rel.startswith(allowed_prefix):
+        return
+    for i, line in enumerate(sf.lines):
+        compact = "".join(line.stripped.split())
+        if 'feature="pjrt"' in compact:
+            out.append(Finding(
+                sf.path, i + 1, "cfg-containment",
+                f'`cfg(feature = "pjrt")` outside `{allowed_prefix}`; '
+                "backend-specific code belongs in the runtime layer"))
+
+
+def receiver_is_errorish(code, dot):
+    if dot == 0:
+        return False
+    if code[dot - 1] == ")":
+        return code[:dot].endswith("to_string()")
+    s = dot
+    while s > 0 and is_ident(code[s - 1]):
+        s -= 1
+    name = code[s:dot].lower()
+    return (name in ("e", "err", "error", "msg", "message")
+            or name.endswith(("_err", "_error", "_msg", "_message")))
+
+
+def error_discipline(sf, out):
+    for i, line in enumerate(sf.lines):
+        if line.in_test:
+            continue
+        for pat in ['.contains("', '.starts_with("']:
+            for p in find_all(line.code, pat):
+                if receiver_is_errorish(line.code, p):
+                    out.append(Finding(
+                        sf.path, i + 1, "error-discipline",
+                        "substring match on a stringified error; use a typed error "
+                        "or the shared const marker"))
+
+
+LOCK_PATS = [".lock()", ".try_lock()", ".borrow_mut()", ".try_borrow_mut()", "lock_unpoisoned("]
+TRIGGERS = ["write_frame(", "read_frame(", "TcpStream::connect"]
+
+
+def skip_balanced(s, opening):
+    depth = 0
+    for j in range(opening, len(s)):
+        if s[j] == "(":
+            depth += 1
+        elif s[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return j
+    return None
+
+
+def guard_binding(code):
+    t = code.lstrip()
+    if not t.startswith("let "):
+        return None
+    rest = t[len("let "):]
+    if rest.startswith("mut "):
+        rest = rest[len("mut "):]
+    n = 0
+    while n < len(rest) and is_ident(rest[n]):
+        n += 1
+    if n == 0:
+        return None
+    name = rest[:n]
+    if name == "_":
+        return None
+    end = None
+    for pat in LOCK_PATS:
+        p = code.find(pat)
+        if p < 0:
+            continue
+        if pat.endswith("("):
+            close = skip_balanced(code, p + len(pat) - 1)
+            if close is None:
+                return None
+            e = close + 1
+        else:
+            e = p + len(pat)
+        end = e if end is None else max(end, e)
+    if end is None:
+        return None
+    while True:
+        r = code[end:]
+        trimmed = r.lstrip()
+        pad = len(r) - len(trimmed)
+        if trimmed.startswith(".unwrap()"):
+            end += pad + len(".unwrap()")
+        elif trimmed.startswith(".expect("):
+            close = skip_balanced(code, end + pad + len(".expect"))
+            if close is None:
+                return None
+            end = close + 1
+        elif trimmed.startswith("?"):
+            end += pad + 1
+        else:
+            break
+    tail = code[end:].strip()
+    if tail in (";", ""):
+        return name, end
+    return None
+
+
+def lock_hygiene(sf, out):
+    guards = []  # (name, depth, line)
+    for i, line in enumerate(sf.lines):
+        if line.in_test:
+            continue
+        ln, code = i + 1, line.code
+        guards = [g for g in guards if line.depth >= g[1]]
+        guards = [g for g in guards if f"drop({g[0]})" not in code]
+        trig_positions = [code.find(t) for t in TRIGGERS if code.find(t) >= 0]
+        trig = min(trig_positions) if trig_positions else None
+        if trig is not None:
+            for name, _, gline in guards:
+                out.append(Finding(
+                    sf.path, ln, "lock-hygiene",
+                    f"guard `{name}` (acquired at line {gline}) is held across "
+                    "blocking bridge I/O; drop it first"))
+        gb = guard_binding(code)
+        if gb:
+            name, lock_end = gb
+            if trig is not None and trig > lock_end:
+                out.append(Finding(
+                    sf.path, ln, "lock-hygiene",
+                    f"guard `{name}` is held across blocking bridge I/O on the same line"))
+            guards.append((name, line.depth, ln))
+
+
+# ------------------------------------------------------------- wire-drift
+
+
+def parse_int_expr(s):
+    s = s.strip().rstrip(";").strip()
+    if "<<" in s:
+        a, b = s.split("<<", 1)
+        pa, pb = parse_int_expr(a), parse_int_expr(b)
+        if pa is None or pb is None:
+            return None
+        return pa << pb
+    try:
+        return int(s, 16) if s.lower().startswith("0x") else int(s)
+    except ValueError:
+        return None
+
+
+def camel(s):
+    return "".join(seg[:1].upper() + seg[1:].lower() for seg in s.split("_"))
+
+
+def parse_rust_wire(sf):
+    w = {"version": None, "max_frame": None, "ops": [], "err_to": [],
+         "err_from": [], "enc": [], "dec": []}
+    in_dec = False
+    for i, line in enumerate(sf.lines):
+        if line.in_test:
+            continue
+        ln = i + 1
+        t = line.stripped.strip()
+        if "const PROTOCOL_VERSION" in t:
+            v = parse_int_expr(t.split("=", 1)[1]) if "=" in t else None
+            if v is not None:
+                w["version"] = (v, ln)
+        elif "const MAX_FRAME_BYTES" in t:
+            v = parse_int_expr(t.split("=", 1)[1]) if "=" in t else None
+            if v is not None:
+                w["max_frame"] = (v, ln)
+        elif t.startswith("const OP_") or t.startswith("pub const OP_"):
+            rest = t.split("OP_", 1)[1]
+            if ":" in rest and "=" in rest:
+                name = camel(rest.split(":", 1)[0].strip())
+                v = parse_int_expr(rest.split("=", 1)[1])
+                if v is not None:
+                    w["ops"].append((name, v, ln))
+        arm = t.rstrip(",")
+        if "=>" in arm:
+            lhs, rhs = (x.strip() for x in arm.split("=>", 1))
+            if lhs.startswith("ErrCode::"):
+                v = parse_int_expr(rhs)
+                if v is not None:
+                    w["err_to"].append((lhs[len("ErrCode::"):].strip(), v, ln))
+            elif rhs.startswith("ErrCode::"):
+                v = parse_int_expr(lhs)
+                if v is not None:
+                    w["err_from"].append((rhs[len("ErrCode::"):].strip(), v, ln))
+        if t.startswith("e.u64(m."):
+            rest = t[len("e.u64(m."):]
+            if ")" in rest:
+                w["enc"].append((rest.split(")", 1)[0].strip(), ln))
+        if in_dec:
+            if t.startswith("}"):
+                in_dec = False
+            elif ":" in t:
+                name, rhs = t.split(":", 1)
+                name = name.strip()
+                rhs = rhs.strip().rstrip(",")
+                if name and all(is_ident(c) for c in name) and rhs == "d.u64()?":
+                    w["dec"].append((name, ln))
+        elif not w["dec"] and "Some(MemoryStats {" in t:
+            in_dec = True
+    return w
+
+
+def py_region(text, name, opening, closing):
+    at = 0
+    while True:
+        p = text.find(name, at)
+        if p < 0:
+            return None
+        if p == 0 or text[p - 1] == "\n":
+            break
+        at = p + len(name)
+    ob = text.find(opening, p)
+    if ob < 0:
+        return None
+    depth = 0
+    for j in range(ob, len(text)):
+        if text[j] == opening:
+            depth += 1
+        elif text[j] == closing:
+            depth -= 1
+            if depth == 0:
+                return text[ob + 1:j]
+    return None
+
+
+def py_pairs(body):
+    out = []
+    for part in body.split(","):
+        if ":" in part:
+            k, v = part.split(":", 1)
+            k = k.strip().strip("\"'")
+            pv = parse_int_expr(v)
+            if k and pv is not None:
+                out.append((k, pv))
+    return out
+
+
+def py_strings(body):
+    return [s.strip().strip("\"'") for s in body.split(",") if s.strip().strip("\"'")]
+
+
+def parse_py_wire(text):
+    cleaned_lines = []
+    for line in text.split("\n"):
+        in_str = None
+        kept = []
+        for c in line:
+            if in_str:
+                if c == in_str:
+                    in_str = None
+            elif c in "\"'":
+                in_str = c
+            elif c == "#":
+                break
+            kept.append(c)
+        cleaned_lines.append("".join(kept))
+    cleaned = "\n".join(cleaned_lines)
+    w = {"version": None, "max_frame": None, "ops": [], "errs": [], "mem": []}
+    for line in cleaned.split("\n"):
+        t = line.strip()
+        if t.startswith("PROTOCOL_VERSION") and "=" in t:
+            w["version"] = parse_int_expr(t.split("=", 1)[1])
+        elif t.startswith("MAX_FRAME_BYTES") and "=" in t:
+            w["max_frame"] = parse_int_expr(t.split("=", 1)[1])
+    body = py_region(cleaned, "OPS", "{", "}")
+    if body is not None:
+        w["ops"] = py_pairs(body)
+    body = py_region(cleaned, "ERR_CODES", "{", "}")
+    if body is not None:
+        w["errs"] = py_pairs(body)
+    body = py_region(cleaned, "MEMORY_FIELDS", "[", "]")
+    if body is not None:
+        w["mem"] = py_strings(body)
+    return w
+
+
+def tail_diff(aname, a, bname, b):
+    if len(a) != len(b):
+        return (f"InfoResp memory-tail arity drift: {aname} carries {len(a)} u64s "
+                f"but {bname} carries {len(b)}")
+    i = next((j for j, (x, y) in enumerate(zip(a, b)) if x != y), 0)
+    return (f"InfoResp memory-tail field {i} is `{a[i]}` in {aname} "
+            f"but `{b[i]}` in {bname}")
+
+
+def wire_drift(proto, py_text, py_path, out):
+    rw = parse_rust_wire(proto)
+    pw = parse_py_wire(py_text)
+
+    def missing(what, path):
+        out.append(Finding(path, 1, "wire-drift",
+                           f"could not locate {what} — the wire-drift parse anchors "
+                           "rotted; update tools/analyzer"))
+
+    if rw["version"] is None:
+        missing("`const PROTOCOL_VERSION`", proto.path)
+    if rw["max_frame"] is None:
+        missing("`const MAX_FRAME_BYTES`", proto.path)
+    if not rw["ops"]:
+        missing("the `const OP_*` opcode table", proto.path)
+    if not rw["err_to"] or not rw["err_from"]:
+        missing("the `ErrCode` to_u8/from_u8 arms", proto.path)
+    if not rw["enc"]:
+        missing("the `e.u64(m.<field>)` InfoResp memory-tail encoder", proto.path)
+    if not rw["dec"]:
+        missing("the `Some(MemoryStats { .. })` decode tail", proto.path)
+    if pw["version"] is None:
+        missing("`PROTOCOL_VERSION`", py_path)
+    if pw["max_frame"] is None:
+        missing("`MAX_FRAME_BYTES`", py_path)
+    if not pw["ops"]:
+        missing("the `OPS` dict", py_path)
+    if not pw["errs"]:
+        missing("the `ERR_CODES` dict", py_path)
+    if not pw["mem"]:
+        missing("the `MEMORY_FIELDS` list", py_path)
+
+    def drift(line, message):
+        out.append(Finding(proto.path, line, "wire-drift", message))
+
+    if rw["version"] is not None and pw["version"] is not None:
+        rv, rl = rw["version"]
+        if rv != pw["version"]:
+            drift(rl, f"PROTOCOL_VERSION is {rv} here but {pw['version']} in {py_path}")
+    if rw["max_frame"] is not None and pw["max_frame"] is not None:
+        rv, rl = rw["max_frame"]
+        if rv != pw["max_frame"]:
+            drift(rl, f"MAX_FRAME_BYTES is {rv} here but {pw['max_frame']} in {py_path}")
+    py_ops = dict(pw["ops"])
+    for name, val, ln in rw["ops"]:
+        if name not in py_ops:
+            drift(ln, f"opcode `{name}` (0x{val:02X}) has no entry in {py_path}'s OPS")
+        elif py_ops[name] != val:
+            drift(ln, f"opcode `{name}` is 0x{val:02X} here but 0x{py_ops[name]:02X} in {py_path}")
+    rust_ops = {n for n, _, _ in rw["ops"]}
+    for name, val in pw["ops"]:
+        if name not in rust_ops:
+            drift(1, f"{py_path} lists opcode `{name}` (0x{val:02X}) with no Rust "
+                     "`const OP_*` counterpart")
+    from_map = {n: v for n, v, _ in rw["err_from"]}
+    py_errs = dict(pw["errs"])
+    for name, val, ln in rw["err_to"]:
+        if name not in from_map:
+            drift(ln, f"ErrCode::{name} has a to_u8 arm but no from_u8 arm")
+        elif from_map[name] != val:
+            drift(ln, f"ErrCode::{name} maps to {val} in to_u8 but {from_map[name]} in from_u8")
+        if name not in py_errs:
+            drift(ln, f"ErrCode::{name} has no entry in {py_path}'s ERR_CODES")
+        elif py_errs[name] != val:
+            drift(ln, f"ErrCode::{name} is {val} here but {py_errs[name]} in {py_path}")
+    to_names = {n for n, _, _ in rw["err_to"]}
+    for name, val, ln in rw["err_from"]:
+        if name not in to_names:
+            drift(ln, f"ErrCode::{name} has a from_u8 arm but no to_u8 arm")
+    for name, val in pw["errs"]:
+        if name not in to_names:
+            drift(1, f"{py_path} lists ErrCode `{name}` ({val}) with no Rust counterpart")
+    enc = [n for n, _ in rw["enc"]]
+    dec = [n for n, _ in rw["dec"]]
+    mem = pw["mem"]
+    enc_line = rw["enc"][0][1] if rw["enc"] else 1
+    dec_line = rw["dec"][0][1] if rw["dec"] else 1
+    if enc and dec and enc != dec:
+        drift(enc_line, tail_diff("the encode tail", enc, "the decode tail", dec))
+    if dec and mem and dec != mem:
+        drift(dec_line, tail_diff("the decode tail", dec, f"{py_path}'s MEMORY_FIELDS", mem))
+
+
+# ---------------------------------------------------------------- driver
+
+
+class Config:
+    def __init__(self, src_dir, hostile, protocol, mirror,
+                 pjrt_allowed_prefix="runtime/", marker_module="runtime/kv.rs"):
+        self.src_dir = src_dir
+        self.hostile = hostile
+        self.protocol = protocol
+        self.mirror = mirror
+        self.pjrt_allowed_prefix = pjrt_allowed_prefix
+        self.marker_module = marker_module
+
+    @staticmethod
+    def repo(root):
+        return Config(
+            src_dir=os.path.join(root, "rust", "src"),
+            hostile=["bridge/protocol.rs", "bridge/device.rs",
+                     "bridge/client.rs", "coordinator/server.rs"],
+            protocol=os.path.join(root, "rust", "src", "bridge", "protocol.rs"),
+            mirror=os.path.join(root, "python", "tests", "validate_bridge_protocol.py"),
+        )
+
+
+def apply_allows(sf, raw, out):
+    for allow in sf.allows:
+        if allow.lint not in LINTS:
+            out.append(Finding(sf.path, allow.at_line, "malformed-allow",
+                               f"unknown lint `{allow.lint}` in allow annotation "
+                               f"(known: {', '.join(LINTS)})"))
+            continue
+        if not allow.has_reason:
+            out.append(Finding(sf.path, allow.at_line, "malformed-allow",
+                               f"allow({allow.lint}) needs a reason: `// analyzer: "
+                               f"allow({allow.lint}) — <why this is safe>`"))
+            continue
+        before = len(raw)
+        raw[:] = [f for f in raw
+                  if not (f.lint == allow.lint and f.line == allow.target_line)]
+        if len(raw) == before:
+            out.append(Finding(sf.path, allow.at_line, "unused-allow",
+                               f"allow({allow.lint}) suppresses nothing on line "
+                               f"{allow.target_line}; delete it"))
+    out.extend(raw)
+
+
+def run_check(cfg):
+    rels = []
+    for dirpath, dirnames, filenames in os.walk(cfg.src_dir):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if fn.endswith(".rs"):
+                full = os.path.join(dirpath, fn)
+                rels.append(os.path.relpath(full, cfg.src_dir).replace(os.sep, "/"))
+    rels.sort()
+    with open(cfg.mirror) as fh:
+        mirror_text = fh.read()
+    findings = []
+    protocol_in_walk = False
+    for rel in rels:
+        full = os.path.join(cfg.src_dir, rel)
+        with open(full) as fh:
+            sf = scan(full, fh.read())
+        raw = []
+        if rel in cfg.hostile:
+            panic_path(sf, raw)
+        cfg_containment(sf, rel, cfg.pjrt_allowed_prefix, raw)
+        if rel != cfg.marker_module:
+            error_discipline(sf, raw)
+        lock_hygiene(sf, raw)
+        if os.path.abspath(full) == os.path.abspath(cfg.protocol):
+            protocol_in_walk = True
+            wire_drift(sf, mirror_text, cfg.mirror, raw)
+        apply_allows(sf, raw, findings)
+    if not protocol_in_walk:
+        with open(cfg.protocol) as fh:
+            sf = scan(cfg.protocol, fh.read())
+        raw = []
+        wire_drift(sf, mirror_text, cfg.mirror, raw)
+        apply_allows(sf, raw, findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.lint))
+    return len(rels), findings
+
+
+# ---------------------------------------------------------------- checks
+
+
+def scanner_unit_checks():
+    sf = scan("x.rs", 'let a = "unwrap() inside"; // unwrap() too\nlet b = s.unwrap();\n')
+    check("unwrap" not in sf.lines[0].code, "string contents blanked in code view")
+    check("unwrap() inside" in sf.lines[0].stripped, "string kept in stripped view")
+    check("unwrap() too" not in sf.lines[0].stripped, "comment blanked in stripped view")
+    check(".unwrap()" in sf.lines[1].code, "real code survives blanking")
+
+    src = ("fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n"
+           "    fn b() { y.unwrap(); }\n}\nfn c() {}\n")
+    sf = scan("x.rs", src)
+    check(not sf.lines[0].in_test, "code before cfg(test) is not test")
+    check(sf.lines[3].in_test, "cfg(test) body is test")
+    check(not sf.lines[5].in_test, "code after cfg(test) mod is not test")
+
+    sf = scan("x.rs", "fn f<'a>(x: &'a [u8]) -> &'a [u8] { &x[1..] }\nlet c = 'x';\n")
+    check("&x[1..]" in sf.lines[0].code, "lifetimes do not open char literals")
+    check("x" not in sf.lines[1].code, "char literal contents blanked")
+
+    sf = scan("x.rs", 'let s = r#"a " unwrap() b"#; s.len();\n')
+    check("unwrap" not in sf.lines[0].code, "raw string blanked without early close")
+    check("s.len()" in sf.lines[0].code, "code after raw string survives")
+
+    src = ("// analyzer: allow(panic-path) — bounds checked above\nlet x = v[0];\n"
+           "let y = w[1]; // analyzer: allow(panic-path) — same\n"
+           "// analyzer: allow(wire-drift)\nlet z = 3;\n")
+    sf = scan("x.rs", src)
+    check(len(sf.allows) == 3, "three allows parsed")
+    check(sf.allows[0].target_line == 2 and sf.allows[0].has_reason,
+          "own-line allow targets next code line")
+    check(sf.allows[1].target_line == 3, "trailing allow targets its own line")
+    check(sf.allows[2].target_line == 5 and not sf.allows[2].has_reason,
+          "reasonless allow detected")
+
+
+def lint_unit_checks():
+    check(parse_int_expr(" 1; ") == 1, "parse_int: decimal with semicolon")
+    check(parse_int_expr("0xEE") == 0xEE, "parse_int: hex")
+    check(parse_int_expr("16 << 20") == 16 << 20, "parse_int: shift expression")
+    check(parse_int_expr("wat") is None, "parse_int: garbage is None")
+    check(camel("OPEN_SESSION") == "OpenSession", "camel: OPEN_SESSION")
+    check(camel("INFO_RESP") == "InfoResp", "camel: INFO_RESP")
+
+    sf = scan("f.rs", "let a = &x[1..n];\nlet b = x[i];\nlet c = x[f(a..b)];\n")
+    out = []
+    panic_path(sf, out)
+    check([f.line for f in out] == [2, 3], "slicing is not indexing")
+
+    check(guard_binding("    let n = t.lock().unwrap().len();") is None,
+          "temporary guard (value extracted) is not held")
+    check(guard_binding("    let g = t.lock().unwrap();") is not None,
+          "bound guard is held")
+    check(guard_binding("    let g = lock_unpoisoned(&self.t);") is not None,
+          "lock_unpoisoned guard is held")
+    check(guard_binding("    let _ = t.lock();") is None, "let _ drops immediately")
+
+    sf = scan("f.rs", 'if failure.to_string().contains("boom") {}\n'
+                      "if msg.contains(MARKER) {}\n"
+                      'if v.starts_with("--") {}\n'
+                      'if last_err.contains("x") {}\n')
+    out = []
+    error_discipline(sf, out)
+    check([f.line for f in out] == [1, 4], "errorish receivers flagged, others pass")
+
+
+FIXTURES = os.path.join(REPO, "tools", "analyzer", "fixtures")
+
+
+def fixture_cfg(dirname, hostile):
+    return Config(
+        src_dir=os.path.join(FIXTURES, dirname),
+        hostile=hostile,
+        protocol=os.path.join(FIXTURES, "wire_drift", "good_protocol.rs"),
+        mirror=os.path.join(FIXTURES, "wire_drift", "good_mirror.py"),
+    )
+
+
+def hits(findings, file_suffix, lint=None):
+    return [(f.line, f.lint) for f in findings
+            if f.path.endswith(file_suffix) and (lint is None or f.lint == lint)]
+
+
+def fixture_checks():
+    _, f = run_check(fixture_cfg("panic_path", ["bad.rs", "good.rs"]))
+    check([l for l, _ in hits(f, "bad.rs", "panic-path")] == [3, 4, 5, 7, 13],
+          f"panic_path bad fixture lines: {f}")
+    check(not hits(f, "good.rs") and len(f) == 5, f"panic_path good fixture clean: {f}")
+
+    _, f = run_check(fixture_cfg("cfg_containment", []))
+    check([l for l, _ in hits(f, "bad.rs", "cfg-containment")] == [2, 5],
+          f"cfg_containment bad fixture lines: {f}")
+    check(not hits(f, "good.rs") and len(f) == 2, f"cfg_containment good fixture clean: {f}")
+
+    _, f = run_check(fixture_cfg("error_discipline", []))
+    check([l for l, _ in hits(f, "bad.rs", "error-discipline")] == [3, 7],
+          f"error_discipline bad fixture lines: {f}")
+    check(not hits(f, "good.rs") and len(f) == 2, f"error_discipline good fixture clean: {f}")
+
+    _, f = run_check(fixture_cfg("lock_hygiene", []))
+    check([l for l, _ in hits(f, "bad.rs", "lock-hygiene")] == [4],
+          f"lock_hygiene bad fixture lines: {f}")
+    check(not hits(f, "good.rs") and len(f) == 1, f"lock_hygiene good fixture clean: {f}")
+
+    _, f = run_check(fixture_cfg("allow", ["bad.rs", "good.rs"]))
+    expected = [(3, "malformed-allow"), (4, "panic-path"), (5, "malformed-allow"),
+                (6, "panic-path"), (7, "unused-allow")]
+    check(hits(f, "bad.rs") == expected, f"allow bad fixture: {f}")
+    check(not hits(f, "good.rs") and len(f) == 5, f"allow good fixture clean: {f}")
+
+    cfg = fixture_cfg("wire_drift", [])
+    _, f = run_check(cfg)
+    check(not f, f"wire_drift good pair clean: {f}")
+
+    cfg = fixture_cfg("wire_drift", [])
+    cfg.protocol = os.path.join(FIXTURES, "wire_drift", "bad_protocol.rs")
+    _, f = run_check(cfg)
+    arity = [x for x in f if x.lint == "wire-drift" and "arity" in x.message]
+    check(len(arity) == 2 and len(f) == 2,
+          f"tail-arity drift fails against encoder and mirror: {f}")
+
+    cfg = fixture_cfg("wire_drift", [])
+    cfg.mirror = os.path.join(FIXTURES, "wire_drift", "bad_mirror.py")
+    _, f = run_check(cfg)
+    check(any("`Error`" in x.message for x in f), f"opcode drift flagged: {f}")
+    check(any("arity" in x.message for x in f), f"mirror arity drift flagged: {f}")
+
+
+def real_tree_checks():
+    with open(os.path.join(REPO, "rust", "src", "bridge", "protocol.rs")) as fh:
+        sf = scan("protocol.rs", fh.read())
+    rw = parse_rust_wire(sf)
+    check(rw["version"] is not None and rw["version"][0] == 1, "real protocol version parses")
+    check(len(rw["ops"]) == 12, f"real opcode table parses (got {len(rw['ops'])})")
+    check(len(rw["err_to"]) == 5 and len(rw["err_from"]) == 5, "real ErrCode arms parse")
+    check(len(rw["enc"]) == 10 and len(rw["dec"]) == 10,
+          f"real InfoResp tail parses 10/10 (got {len(rw['enc'])}/{len(rw['dec'])})")
+
+    files, findings = run_check(Config.repo(REPO))
+    if findings:
+        for f in findings:
+            print(f"  {f}")
+    check(not findings, f"real tree must be clean ({len(findings)} findings)")
+    check(files > 20, f"walked a plausible tree ({files} files)")
+
+
+def main():
+    scanner_unit_checks()
+    lint_unit_checks()
+    fixture_checks()
+    real_tree_checks()
+    print(f"analyzer port: all {CHECKS} checks pass")
+
+
+if __name__ == "__main__":
+    main()

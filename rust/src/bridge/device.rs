@@ -100,7 +100,7 @@ impl DeviceHandle {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         // sever live connections so their threads exit promptly instead
         // of lingering until the client hangs up
-        for (_, stream) in self.shared.conns.lock().unwrap().drain() {
+        for (_, stream) in crate::util::lock_unpoisoned(&self.shared.conns).drain() {
             let _ = stream.shutdown(Shutdown::Both);
         }
         if crate::util::poke_acceptor(self.addr) {
@@ -160,12 +160,12 @@ fn accept_loop(shared: &Arc<DeviceShared>, listener: TcpListener) {
                 // register a clone so shutdown can sever the connection
                 let cid = shared.next_conn.fetch_add(1, Ordering::Relaxed);
                 if let Ok(clone) = stream.try_clone() {
-                    shared.conns.lock().unwrap().insert(cid, clone);
+                    crate::util::lock_unpoisoned(&shared.conns).insert(cid, clone);
                 }
                 let shared = Arc::clone(shared);
                 thread::spawn(move || {
                     handle_conn(&shared, stream);
-                    shared.conns.lock().unwrap().remove(&cid);
+                    crate::util::lock_unpoisoned(&shared.conns).remove(&cid);
                 });
             }
             Err(e) => eprintln!("device accept error: {e}"),
@@ -265,7 +265,7 @@ fn respond(
                     format!("client speaks protocol v{version}, device v{PROTOCOL_VERSION}"),
                 );
             }
-            let rt = shared.runtime.lock().unwrap();
+            let rt = crate::util::lock_unpoisoned(&shared.runtime);
             Frame::InfoResp {
                 version: PROTOCOL_VERSION,
                 info: rt.info.clone(),
@@ -300,7 +300,7 @@ fn respond(
             let Some(slot) = sessions.get_mut(&session) else {
                 return err(ErrCode::Session, format!("session {session} is not open"));
             };
-            match shared.runtime.lock().unwrap().prefill(&prompt) {
+            match crate::util::lock_unpoisoned(&shared.runtime).prefill(&prompt) {
                 Ok((logits, s)) => {
                     let pos = s.pos as u32;
                     // re-prefill resets the slot: device-side slot reuse
@@ -317,7 +317,7 @@ fn respond(
                     format!("session {session} is not open or not prefilled"),
                 );
             };
-            match shared.runtime.lock().unwrap().decode(s, token) {
+            match crate::util::lock_unpoisoned(&shared.runtime).decode(s, token) {
                 Ok(logits) => Frame::Logits { session, pos: s.pos as u32, logits },
                 Err(e) => err(ErrCode::Backend, format!("decode: {e:#}")),
             }
@@ -357,7 +357,9 @@ fn decode_batch(
             Some(s) => taken.push((id, s)),
             None => {
                 for (tid, s) in taken {
-                    *table.get_mut(&tid).expect("slot survived the take") = Some(s);
+                    if let Some(slot) = table.get_mut(&tid) {
+                        *slot = Some(s);
+                    }
                 }
                 return err(
                     ErrCode::Session,
@@ -368,7 +370,7 @@ fn decode_batch(
     }
     let result = {
         let mut refs: Vec<&mut Session> = taken.iter_mut().map(|(_, s)| s).collect();
-        shared.runtime.lock().unwrap().decode_batch(&mut refs, tokens)
+        crate::util::lock_unpoisoned(&shared.runtime).decode_batch(&mut refs, tokens)
     };
     let reply = match result {
         Ok(logits) => Frame::LogitsBatch {
@@ -381,7 +383,9 @@ fn decode_batch(
         Err(e) => err(ErrCode::Backend, format!("decode_batch: {e:#}")),
     };
     for (id, s) in taken {
-        *table.get_mut(&id).expect("slot survived the take") = Some(s);
+        if let Some(slot) = table.get_mut(&id) {
+            *slot = Some(s);
+        }
     }
     reply
 }

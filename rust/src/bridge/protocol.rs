@@ -454,16 +454,19 @@ impl<'a> Dec<'a> {
     }
 
     fn u8(&mut self) -> Result<u8, String> {
+        // analyzer: allow(panic-path) — take(1) returned exactly 1 byte
         Ok(self.take(1)?[0])
     }
 
     fn u16(&mut self) -> Result<u16, String> {
         let s = self.take(2)?;
+        // analyzer: allow(panic-path) — take(2) returned exactly 2 bytes
         Ok(u16::from_le_bytes([s[0], s[1]]))
     }
 
     fn u32(&mut self) -> Result<u32, String> {
         let s = self.take(4)?;
+        // analyzer: allow(panic-path) — take(4) returned exactly 4 bytes
         Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 

@@ -338,7 +338,7 @@ impl ServerHandle {
             // scheduler checks the flag with the lock held, so this
             // serializes with its predicate check and the wakeup cannot
             // be lost between "predicate evaluated" and "parked"
-            let _engine = self.shared.engine.lock().unwrap();
+            let _engine = crate::util::lock_unpoisoned(&self.shared.engine);
             self.shared.shutdown.store(true, Ordering::SeqCst);
             self.shared.work.notify_all();
         }
@@ -407,9 +407,9 @@ pub fn spawn_on(engine: Engine, listener: TcpListener) -> Result<ServerHandle> {
 /// `step_round` feeds — no routing table here.
 fn scheduler_loop(shared: &Shared) {
     loop {
-        let mut engine = shared.engine.lock().unwrap();
+        let mut engine = crate::util::lock_unpoisoned(&shared.engine);
         while !engine.has_work() && !shared.shutdown.load(Ordering::SeqCst) {
-            engine = shared.work.wait(engine).unwrap();
+            engine = crate::util::wait_unpoisoned(&shared.work, engine);
         }
         if shared.shutdown.load(Ordering::SeqCst) {
             // fail in-flight work so no connection blocks on its channel
@@ -495,13 +495,13 @@ fn handle_client(shared: &Shared, stream: TcpStream) -> Result<()> {
         match parse_request(&line) {
             Err(msg) => writeln!(writer, "{}", error_json(msg))?,
             Ok(ServerRequest::Stats) => {
-                let engine = shared.engine.lock().unwrap();
+                let engine = crate::util::lock_unpoisoned(&shared.engine);
                 let reply = stats_json(&engine);
                 drop(engine);
                 writeln!(writer, "{reply}")?;
             }
             Ok(ServerRequest::Cancel(id)) => {
-                let found = shared.engine.lock().unwrap().cancel(id);
+                let found = crate::util::lock_unpoisoned(&shared.engine).cancel(id);
                 writeln!(writer, "{}", cancel_json(id, found))?;
             }
             Ok(ServerRequest::Generate {
@@ -512,7 +512,7 @@ fn handle_client(shared: &Shared, stream: TcpStream) -> Result<()> {
                 priority,
             }) => {
                 let handle = {
-                    let mut engine = shared.engine.lock().unwrap();
+                    let mut engine = crate::util::lock_unpoisoned(&shared.engine);
                     // checked under the engine lock: shutdown() sets the
                     // flag under the same lock, so either we see it here
                     // (and refuse), or the scheduler is still alive and

@@ -23,6 +23,25 @@ pub fn poke_acceptor(addr: std::net::SocketAddr) -> bool {
     TcpStream::connect(target).is_ok()
 }
 
+/// Acquire a mutex, recovering from poison. A daemon thread that
+/// panicked while holding the lock poisons it; every *other* session
+/// thread would then panic too on `.lock().unwrap()`, taking the whole
+/// device down. The guarded state here (session tables, engine queues)
+/// stays structurally valid across a panicking operation, so recovery
+/// is sound — the poisoned marker is dropped and the data used as-is.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`lock_unpoisoned`]'s counterpart for condvar waits: re-acquires the
+/// lock on wakeup even if a sibling thread poisoned it mid-wait.
+pub fn wait_unpoisoned<'a, T>(
+    cv: &std::sync::Condvar,
+    guard: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Minimal CLI flag parser: `--key value` and `--flag` forms.
 pub struct Args {
     pub positional: Vec<String>,

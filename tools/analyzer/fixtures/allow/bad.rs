@@ -1,0 +1,10 @@
+// allow bad fixture: annotations that must themselves be flagged.
+pub fn f(v: &[u8]) -> u8 {
+    // analyzer: allow(panic-path)
+    let a = v[0];
+    // analyzer: allow(not-a-lint) — bogus name
+    let b = v[1];
+    // analyzer: allow(wire-drift) — suppresses nothing here
+    let c = 3;
+    a + b + c
+}

@@ -1,0 +1,8 @@
+// allow good fixture: justified suppressions, leading and trailing.
+pub fn f(v: &[u8]) -> u8 {
+    debug_assert!(!v.is_empty());
+    // analyzer: allow(panic-path) — caller guarantees non-empty input
+    let a = v[0];
+    let b = v[v.len() - 1]; // analyzer: allow(panic-path) — same guarantee
+    a + b
+}

@@ -1,0 +1,6 @@
+// cfg-containment bad fixture: pjrt gating outside runtime/.
+#[cfg(feature = "pjrt")]
+pub fn fast_path() {}
+
+#[cfg(not(feature = "pjrt"))]
+pub fn slow_path() {}

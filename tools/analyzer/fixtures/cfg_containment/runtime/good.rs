@@ -1,0 +1,3 @@
+// cfg-containment good fixture: gating under runtime/ is allowed.
+#[cfg(feature = "pjrt")]
+pub fn fast_path() {}

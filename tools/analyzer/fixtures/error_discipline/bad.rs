@@ -1,0 +1,8 @@
+// error-discipline bad fixture: substring-matching stringified errors.
+pub fn is_exhausted(failure: &anyhow::Error) -> bool {
+    failure.to_string().contains("out of KV blocks")
+}
+
+pub fn is_busy(msg: &str) -> bool {
+    msg.starts_with("busy:")
+}

@@ -1,0 +1,10 @@
+// error-discipline good fixture: typed checks and const markers pass.
+pub const KV_EXHAUSTED_MARKER: &str = "kv-arena-exhausted";
+
+pub fn is_exhausted(msg: &str) -> bool {
+    msg.contains(KV_EXHAUSTED_MARKER)
+}
+
+pub fn is_flag(v: &str) -> bool {
+    v.starts_with("--")
+}

@@ -1,0 +1,7 @@
+// lock-hygiene bad fixture: a guard held across bridge I/O.
+pub fn respond(t: &std::sync::Mutex<u32>, w: &mut Vec<u8>) {
+    let guard = t.lock().unwrap();
+    write_frame(w, *guard);
+}
+
+fn write_frame(_w: &mut Vec<u8>, _v: u32) {}

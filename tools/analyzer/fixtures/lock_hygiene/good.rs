@@ -1,0 +1,14 @@
+// lock-hygiene good fixture: drop before I/O, or extract and release.
+pub fn respond(t: &std::sync::Mutex<u32>, w: &mut Vec<u8>) {
+    let guard = t.lock().unwrap();
+    let v = *guard;
+    drop(guard);
+    write_frame(w, v);
+}
+
+pub fn respond_len(t: &std::sync::Mutex<Vec<u8>>, w: &mut Vec<u8>) {
+    let n = t.lock().unwrap().len() as u32;
+    write_frame(w, n);
+}
+
+fn write_frame(_w: &mut Vec<u8>, _v: u32) {}

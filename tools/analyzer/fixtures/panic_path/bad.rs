@@ -1,0 +1,14 @@
+// panic-path bad fixture: the constructs the lint must flag.
+pub fn decode(v: &[u8]) -> u8 {
+    let first = v[0];
+    let s = std::str::from_utf8(v).unwrap();
+    let n: u8 = s.parse().expect("digit");
+    if n > 9 {
+        panic!("bad digit");
+    }
+    first + n
+}
+
+pub fn later() {
+    unimplemented!()
+}

@@ -1,0 +1,16 @@
+// panic-path good fixture: checked alternatives pass clean.
+pub fn decode(v: &[u8]) -> Option<u8> {
+    let first = *v.first()?;
+    let tail = v.get(1..)?;
+    let head = &v[..2.min(v.len())];
+    let n = u8::try_from(head.len()).unwrap_or(0);
+    Some(first + n + tail.len() as u8)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(super::decode(&[1, 2]).unwrap(), 4);
+    }
+}

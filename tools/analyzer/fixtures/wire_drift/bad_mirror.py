@@ -1,0 +1,15 @@
+# wire-drift bad fixture: the mirror drifted from good_protocol.rs —
+# the Error opcode moved and MEMORY_FIELDS lost its last entry.
+PROTOCOL_VERSION = 1
+MAX_FRAME_BYTES = 16 << 20
+
+OPS = {
+    "Info": 0x01,
+    "InfoResp": 0x81,
+    "Error": 0xEF,
+}
+ERR_CODES = {"Protocol": 1, "Backend": 3}
+
+MEMORY_FIELDS = [
+    "total_bytes", "free_bytes",
+]

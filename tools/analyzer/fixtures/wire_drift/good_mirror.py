@@ -1,0 +1,14 @@
+# wire-drift good fixture: the Python mirror matching good_protocol.rs.
+PROTOCOL_VERSION = 1
+MAX_FRAME_BYTES = 16 << 20
+
+OPS = {
+    "Info": 0x01,
+    "InfoResp": 0x81,
+    "Error": 0xEE,
+}
+ERR_CODES = {"Protocol": 1, "Backend": 3}
+
+MEMORY_FIELDS = [
+    "total_bytes", "free_bytes", "reserved_bytes",
+]

@@ -1,0 +1,39 @@
+// wire-drift good fixture: a minimal codec matching good_mirror.py
+// field for field. Never compiled — only parsed by the analyzer.
+pub const PROTOCOL_VERSION: u8 = 1;
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+const OP_INFO: u8 = 0x01;
+const OP_INFO_RESP: u8 = 0x81;
+const OP_ERROR: u8 = 0xEE;
+
+impl ErrCode {
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrCode::Protocol => 1,
+            ErrCode::Backend => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<ErrCode> {
+        Some(match v {
+            1 => ErrCode::Protocol,
+            3 => ErrCode::Backend,
+            _ => return None,
+        })
+    }
+}
+
+fn encode_memory(e: &mut Enc, m: &MemoryStats) {
+    e.u64(m.total_bytes);
+    e.u64(m.free_bytes);
+    e.u64(m.reserved_bytes);
+}
+
+fn decode_memory(d: &mut Dec) -> Option<MemoryStats> {
+    Some(MemoryStats {
+        total_bytes: d.u64()?,
+        free_bytes: d.u64()?,
+        reserved_bytes: d.u64()?,
+    })
+}

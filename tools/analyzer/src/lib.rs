@@ -1,0 +1,190 @@
+//! Repo-specific invariant lints for the EdgeLLM tree.
+//!
+//! `cargo run -p edgellm-analyzer -- check` walks `rust/src`, runs the
+//! five lints (see [`lints::LINTS`] and docs/static-analysis.md), and
+//! exits non-zero on any finding. Suppress a deliberate violation at
+//! its line with
+//!
+//! ```text
+//! // analyzer: allow(<lint>) — <reason>
+//! ```
+//!
+//! (trailing on the flagged line, or on its own line directly above).
+//! A reasonless or unknown-lint annotation is itself a finding
+//! (`malformed-allow`), as is one that suppresses nothing
+//! (`unused-allow`) — annotations cannot rot silently.
+
+pub mod lints;
+pub mod scan;
+
+pub use lints::Finding;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// What to check and where. [`Config::repo`] builds the real tree's
+/// configuration; the fixture tests build their own.
+pub struct Config {
+    /// directory walked for `.rs` files
+    pub src_dir: PathBuf,
+    /// hostile-input surfaces (relative to `src_dir`) that get the
+    /// panic-path lint
+    pub hostile: Vec<String>,
+    /// the Rust wire codec (may live outside `src_dir` in fixtures)
+    pub protocol: PathBuf,
+    /// the Python mirror cross-checked against `protocol`
+    pub mirror: PathBuf,
+    /// only files under this `src_dir`-relative prefix may mention
+    /// `cfg(feature = "pjrt")`
+    pub pjrt_allowed_prefix: String,
+    /// the one module allowed to substring-match stringified errors
+    /// (it defines the shared marker)
+    pub marker_module: String,
+}
+
+impl Config {
+    /// The configuration for the real repository rooted at `root`.
+    pub fn repo(root: &Path) -> Config {
+        Config {
+            src_dir: root.join("rust").join("src"),
+            hostile: [
+                "bridge/protocol.rs",
+                "bridge/device.rs",
+                "bridge/client.rs",
+                "coordinator/server.rs",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+            protocol: root.join("rust").join("src").join("bridge").join("protocol.rs"),
+            mirror: root.join("python").join("tests").join("validate_bridge_protocol.py"),
+            pjrt_allowed_prefix: "runtime/".to_string(),
+            marker_module: "runtime/kv.rs".to_string(),
+        }
+    }
+}
+
+/// The outcome of one [`check`] run.
+pub struct Report {
+    /// `.rs` files scanned under `src_dir`
+    pub files: usize,
+    /// all findings, sorted by (path, line, lint)
+    pub findings: Vec<Finding>,
+}
+
+/// Run every lint over the configured tree. `Err` is reserved for
+/// environment problems (unreadable files, missing directories);
+/// lint violations come back as findings.
+pub fn check(cfg: &Config) -> Result<Report, String> {
+    let mut rels: Vec<String> = Vec::new();
+    walk(&cfg.src_dir, &cfg.src_dir, &mut rels)?;
+    rels.sort();
+    let mirror_text = fs::read_to_string(&cfg.mirror)
+        .map_err(|e| format!("{}: {}", cfg.mirror.display(), e))?;
+    let mirror_name = cfg.mirror.display().to_string();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut protocol_in_walk = false;
+    for rel in &rels {
+        let full = cfg.src_dir.join(rel);
+        let text =
+            fs::read_to_string(&full).map_err(|e| format!("{}: {}", full.display(), e))?;
+        let sf = scan::scan(&full.display().to_string(), &text);
+        let mut raw: Vec<Finding> = Vec::new();
+        if cfg.hostile.iter().any(|h| h == rel) {
+            lints::panic_path(&sf, &mut raw);
+        }
+        lints::cfg_containment(&sf, rel, &cfg.pjrt_allowed_prefix, &mut raw);
+        if rel != &cfg.marker_module {
+            lints::error_discipline(&sf, &mut raw);
+        }
+        lints::lock_hygiene(&sf, &mut raw);
+        if full == cfg.protocol {
+            protocol_in_walk = true;
+            lints::wire_drift(&sf, &mirror_text, &mirror_name, &mut raw);
+        }
+        apply_allows(&sf, raw, &mut findings);
+    }
+    // fixture configs point `protocol` outside the walked tree
+    if !protocol_in_walk {
+        let text = fs::read_to_string(&cfg.protocol)
+            .map_err(|e| format!("{}: {}", cfg.protocol.display(), e))?;
+        let sf = scan::scan(&cfg.protocol.display().to_string(), &text);
+        let mut raw: Vec<Finding> = Vec::new();
+        lints::wire_drift(&sf, &mirror_text, &mirror_name, &mut raw);
+        apply_allows(&sf, raw, &mut findings);
+    }
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.lint.as_str()).cmp(&(b.path.as_str(), b.line, b.lint.as_str()))
+    });
+    Ok(Report { files: rels.len(), findings })
+}
+
+/// Apply one file's allow annotations to its raw findings, emitting
+/// `malformed-allow` / `unused-allow` findings for annotations that
+/// cannot (or do not) suppress anything. Malformed annotations do not
+/// suppress — fixing the annotation is the only way to silence both.
+fn apply_allows(sf: &scan::SourceFile, mut raw: Vec<Finding>, out: &mut Vec<Finding>) {
+    for allow in &sf.allows {
+        if !lints::LINTS.contains(&allow.lint.as_str()) {
+            out.push(Finding {
+                path: sf.path.clone(),
+                line: allow.at_line,
+                lint: "malformed-allow".to_string(),
+                message: format!(
+                    "unknown lint `{}` in allow annotation (known: {})",
+                    allow.lint,
+                    lints::LINTS.join(", ")
+                ),
+            });
+            continue;
+        }
+        if !allow.has_reason {
+            out.push(Finding {
+                path: sf.path.clone(),
+                line: allow.at_line,
+                lint: "malformed-allow".to_string(),
+                message: format!(
+                    "allow({}) needs a reason: `// analyzer: allow({}) — <why this is safe>`",
+                    allow.lint, allow.lint
+                ),
+            });
+            continue;
+        }
+        let before = raw.len();
+        raw.retain(|f| !(f.lint == allow.lint && f.line == allow.target_line));
+        if raw.len() == before {
+            out.push(Finding {
+                path: sf.path.clone(),
+                line: allow.at_line,
+                lint: "unused-allow".to_string(),
+                message: format!(
+                    "allow({}) suppresses nothing on line {}; delete it",
+                    allow.lint, allow.target_line
+                ),
+            });
+        }
+    }
+    out.append(&mut raw);
+}
+
+/// Collect `src_dir`-relative paths ('/'-separated) of every `.rs`
+/// file under `dir`.
+fn walk(base: &Path, dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("{}: {}", dir.display(), e))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {}", dir.display(), e))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(base, &path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            let rel = path
+                .strip_prefix(base)
+                .map_err(|e| e.to_string())?
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}

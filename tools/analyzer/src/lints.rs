@@ -1,0 +1,781 @@
+//! The five repo lints. Each takes a scanned [`SourceFile`] (or, for
+//! wire-drift, the protocol file plus the raw Python mirror text) and
+//! appends [`Finding`]s. Lints are lexical by design: they scan the
+//! comment-and-string-blanked `code` view (or `stripped`, where a
+//! pattern lives inside a string literal), so they can be wrong only in
+//! ways a reviewer can see on the flagged line.
+
+use crate::scan::{is_ident, SourceFile};
+
+/// Lint names accepted by `// analyzer: allow(<lint>)`.
+pub const LINTS: &[&str] = &[
+    "panic-path",
+    "wire-drift",
+    "cfg-containment",
+    "error-discipline",
+    "lock-hygiene",
+];
+
+/// One diagnostic: a file, a 1-based line, the lint that fired, and a
+/// human-readable message.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub lint: String,
+    pub message: String,
+}
+
+fn push(out: &mut Vec<Finding>, sf: &SourceFile, line: usize, lint: &str, message: String) {
+    out.push(Finding { path: sf.path.clone(), line, lint: lint.to_string(), message });
+}
+
+// ---------------------------------------------------------------- panic-path
+
+/// No `unwrap`/`expect`/panicking macro/`[i]`-indexing in hostile-input
+/// surfaces outside `#[cfg(test)]`. Bounds-checked slicing (`&x[a..b]`,
+/// which the codebase validates lengths for up front) is carved out:
+/// an index expression whose top level contains `..` is a range.
+pub fn panic_path(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let ln = i + 1;
+        let code = line.code.as_str();
+        for (pat, what) in [
+            (".unwrap()", "`.unwrap()` can panic on hostile input; bubble a typed error"),
+            (".expect(", "`.expect()` can panic on hostile input; bubble a typed error"),
+        ] {
+            let mut from = 0;
+            while let Some(p) = code[from..].find(pat) {
+                push(out, sf, ln, "panic-path", what.to_string());
+                from += p + pat.len();
+            }
+        }
+        for mac in ["panic!", "unimplemented!", "todo!", "unreachable!"] {
+            let b = code.as_bytes();
+            let mut from = 0;
+            while let Some(p) = code[from..].find(mac) {
+                let at = from + p;
+                if at == 0 || !is_ident(b[at - 1]) {
+                    push(
+                        out,
+                        sf,
+                        ln,
+                        "panic-path",
+                        format!("`{mac}` aborts the daemon thread; return an error frame instead"),
+                    );
+                }
+                from = at + mac.len();
+            }
+        }
+        let b = code.as_bytes();
+        for p in 0..b.len() {
+            if b[p] != b'[' || p == 0 {
+                continue;
+            }
+            let prev = b[p - 1];
+            if !(is_ident(prev) || prev == b')' || prev == b']' || prev == b'?') {
+                continue;
+            }
+            if let Some(end) = matching_bracket(b, p) {
+                if !has_toplevel_range(&b[p + 1..end]) {
+                    push(
+                        out,
+                        sf,
+                        ln,
+                        "panic-path",
+                        "`[i]` indexing can panic; use `.get()` or validate the length first"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Index of the `]` matching the `[` at `b[open]`, same line only.
+fn matching_bracket(b: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, &c) in b.iter().enumerate().skip(open) {
+        match c {
+            b'[' => depth += 1,
+            b']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Does the bracket content contain a `..` outside any nested grouping?
+/// That makes the expression a slice, not an index.
+fn has_toplevel_range(s: &[u8]) -> bool {
+    let mut depth = 0i32;
+    for j in 0..s.len() {
+        match s[j] {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b'.' if depth == 0 && j + 1 < s.len() && s[j + 1] == b'.' => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
+// ------------------------------------------------------------ cfg-containment
+
+/// `cfg(feature = "pjrt")` may appear only under the allowed prefix
+/// (`runtime/`): the scheduler, bridge, and coordinator must stay
+/// backend-agnostic so the reference backend exercises the same paths.
+pub fn cfg_containment(sf: &SourceFile, rel: &str, allowed_prefix: &str, out: &mut Vec<Finding>) {
+    if rel.starts_with(allowed_prefix) {
+        return;
+    }
+    for (i, line) in sf.lines.iter().enumerate() {
+        let compact: String = line.stripped.chars().filter(|c| !c.is_whitespace()).collect();
+        if compact.contains("feature=\"pjrt\"") {
+            push(
+                out,
+                sf,
+                i + 1,
+                "cfg-containment",
+                format!(
+                    "`cfg(feature = \"pjrt\")` outside `{allowed_prefix}`; \
+                     backend-specific code belongs in the runtime layer"
+                ),
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------------- error-discipline
+
+/// No substring-matching on stringified error values: `.contains("...")`
+/// / `.starts_with("...")` with a string *literal* argument on an
+/// error-ish receiver (`e`, `err`, `msg`, ... or a `.to_string()`
+/// chain). Matching on a shared `const` marker (the
+/// `KV_EXHAUSTED_MARKER` pattern) does not fire — the argument is an
+/// identifier, not a literal.
+pub fn error_discipline(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        for pat in [".contains(\"", ".starts_with(\""] {
+            let mut from = 0;
+            while let Some(p) = code[from..].find(pat) {
+                let at = from + p;
+                if receiver_is_errorish(code.as_bytes(), at) {
+                    push(
+                        out,
+                        sf,
+                        i + 1,
+                        "error-discipline",
+                        "substring match on a stringified error; use a typed error \
+                         or the shared const marker"
+                            .to_string(),
+                    );
+                }
+                from = at + pat.len();
+            }
+        }
+    }
+}
+
+/// Is the receiver before the `.` at `b[dot]` an error-like identifier
+/// or a `.to_string()` chain?
+fn receiver_is_errorish(b: &[u8], dot: usize) -> bool {
+    if dot == 0 {
+        return false;
+    }
+    if b[dot - 1] == b')' {
+        let want = b"to_string()";
+        return dot >= want.len() && &b[dot - want.len()..dot] == want;
+    }
+    let mut s = dot;
+    while s > 0 && is_ident(b[s - 1]) {
+        s -= 1;
+    }
+    let name = String::from_utf8_lossy(&b[s..dot]).to_ascii_lowercase();
+    matches!(name.as_str(), "e" | "err" | "error" | "msg" | "message")
+        || name.ends_with("_err")
+        || name.ends_with("_error")
+        || name.ends_with("_msg")
+        || name.ends_with("_message")
+}
+
+// -------------------------------------------------------------- lock-hygiene
+
+const LOCK_PATS: &[&str] = &[
+    ".lock()",
+    ".try_lock()",
+    ".borrow_mut()",
+    ".try_borrow_mut()",
+    "lock_unpoisoned(",
+];
+const TRIGGERS: &[&str] = &["write_frame(", "read_frame(", "TcpStream::connect"];
+
+struct Guard {
+    name: String,
+    depth: i32,
+    line: usize,
+}
+
+/// Flag a `let`-bound lock/borrow guard that is still live when a
+/// bridge I/O call (`write_frame`/`read_frame`/`TcpStream::connect`)
+/// runs in the same lexical scope: holding the engine lock across
+/// blocking socket I/O stalls every other session. `drop(guard)`
+/// before the call, or extracting the needed value in the same
+/// statement (`...lock().unwrap().len()`), both pass.
+pub fn lock_hygiene(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let mut guards: Vec<Guard> = Vec::new();
+    for (i, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let ln = i + 1;
+        // a guard dies when its enclosing block closes
+        guards.retain(|g| line.depth >= g.depth);
+        let code = line.code.as_str();
+        guards.retain(|g| !code.contains(&format!("drop({})", g.name)));
+        let trig = TRIGGERS.iter().filter_map(|t| code.find(t)).min();
+        if trig.is_some() {
+            for g in &guards {
+                push(
+                    out,
+                    sf,
+                    ln,
+                    "lock-hygiene",
+                    format!(
+                        "guard `{}` (acquired at line {}) is held across blocking \
+                         bridge I/O; drop it first",
+                        g.name, g.line
+                    ),
+                );
+            }
+        }
+        if let Some((name, lock_end)) = guard_binding(code) {
+            if let Some(tp) = trig {
+                if tp > lock_end {
+                    push(
+                        out,
+                        sf,
+                        ln,
+                        "lock-hygiene",
+                        format!(
+                            "guard `{name}` is held across blocking bridge I/O on the \
+                             same line"
+                        ),
+                    );
+                }
+            }
+            guards.push(Guard { name, depth: line.depth, line: ln });
+        }
+    }
+}
+
+/// If this line binds a lock/borrow guard that stays live past the
+/// statement, return its name and the offset where the lock chain ends.
+/// `let n = t.lock().unwrap().len();` extracts a value from a temporary
+/// guard (dropped at the `;`) and returns `None`.
+fn guard_binding(code: &str) -> Option<(String, usize)> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let nb = rest.as_bytes();
+    let mut n = 0;
+    while n < nb.len() && is_ident(nb[n]) {
+        n += 1;
+    }
+    if n == 0 {
+        return None;
+    }
+    let name = rest[..n].to_string();
+    if name == "_" {
+        // `let _ = ...` drops the value immediately
+        return None;
+    }
+    let b = code.as_bytes();
+    let mut end: Option<usize> = None;
+    for pat in LOCK_PATS {
+        if let Some(p) = code.find(pat) {
+            let e = if pat.ends_with('(') {
+                skip_balanced(b, p + pat.len() - 1)? + 1
+            } else {
+                p + pat.len()
+            };
+            end = Some(end.map_or(e, |x: usize| x.max(e)));
+        }
+    }
+    let mut end = end?;
+    // `.unwrap()` / `.expect(..)` / `?` after the lock still yield a guard
+    loop {
+        let r = &code[end..];
+        let trimmed = r.trim_start();
+        let pad = r.len() - trimmed.len();
+        if trimmed.starts_with(".unwrap()") {
+            end += pad + ".unwrap()".len();
+        } else if trimmed.starts_with(".expect(") {
+            end = skip_balanced(b, end + pad + ".expect".len())? + 1;
+        } else if trimmed.starts_with('?') {
+            end += pad + 1;
+        } else {
+            break;
+        }
+    }
+    let tail = code[end..].trim();
+    if tail == ";" || tail.is_empty() {
+        Some((name, end))
+    } else {
+        None
+    }
+}
+
+/// Index of the `)` matching the `(` at `b[open]`, same line only.
+fn skip_balanced(b: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, &c) in b.iter().enumerate().skip(open) {
+        match c {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------- wire-drift
+
+/// What the Rust codec declares, parsed from `protocol.rs`.
+#[derive(Default)]
+struct RustWire {
+    version: Option<(u64, usize)>,
+    max_frame: Option<(u64, usize)>,
+    /// CamelCase op name → (value, line)
+    ops: Vec<(String, u64, usize)>,
+    err_to: Vec<(String, u64, usize)>,
+    err_from: Vec<(String, u64, usize)>,
+    /// InfoResp memory-tail field names in encode order
+    enc: Vec<(String, usize)>,
+    /// ... and in decode order
+    dec: Vec<(String, usize)>,
+}
+
+/// What the Python mirror declares.
+#[derive(Default)]
+struct PyWire {
+    version: Option<u64>,
+    max_frame: Option<u64>,
+    ops: Vec<(String, u64)>,
+    errs: Vec<(String, u64)>,
+    mem: Vec<String>,
+}
+
+/// Cross-check the Rust codec against the Python mirror: protocol
+/// version, frame cap, opcode table, error-code table (both `to_u8`
+/// and `from_u8` directions), and the `InfoResp` memory-tail field
+/// list — names AND order, in the encoder, the decoder, and the
+/// mirror. Any anchor the parser cannot find is itself a finding, so
+/// a refactor cannot silently disable the lint.
+pub fn wire_drift(proto: &SourceFile, py_text: &str, py_path: &str, out: &mut Vec<Finding>) {
+    let rw = parse_rust_wire(proto);
+    let pw = parse_py_wire(py_text);
+    let mut missing = |what: &str, path: &str| {
+        out.push(Finding {
+            path: path.to_string(),
+            line: 1,
+            lint: "wire-drift".to_string(),
+            message: format!(
+                "could not locate {what} — the wire-drift parse anchors rotted; \
+                 update tools/analyzer"
+            ),
+        });
+    };
+    if rw.version.is_none() {
+        missing("`const PROTOCOL_VERSION`", &proto.path);
+    }
+    if rw.max_frame.is_none() {
+        missing("`const MAX_FRAME_BYTES`", &proto.path);
+    }
+    if rw.ops.is_empty() {
+        missing("the `const OP_*` opcode table", &proto.path);
+    }
+    if rw.err_to.is_empty() || rw.err_from.is_empty() {
+        missing("the `ErrCode` to_u8/from_u8 arms", &proto.path);
+    }
+    if rw.enc.is_empty() {
+        missing("the `e.u64(m.<field>)` InfoResp memory-tail encoder", &proto.path);
+    }
+    if rw.dec.is_empty() {
+        missing("the `Some(MemoryStats { .. })` decode tail", &proto.path);
+    }
+    if pw.version.is_none() {
+        missing("`PROTOCOL_VERSION`", py_path);
+    }
+    if pw.max_frame.is_none() {
+        missing("`MAX_FRAME_BYTES`", py_path);
+    }
+    if pw.ops.is_empty() {
+        missing("the `OPS` dict", py_path);
+    }
+    if pw.errs.is_empty() {
+        missing("the `ERR_CODES` dict", py_path);
+    }
+    if pw.mem.is_empty() {
+        missing("the `MEMORY_FIELDS` list", py_path);
+    }
+
+    let mut drift = |line: usize, message: String| {
+        out.push(Finding {
+            path: proto.path.clone(),
+            line,
+            lint: "wire-drift".to_string(),
+            message,
+        });
+    };
+    if let (Some((rv, rl)), Some(pv)) = (&rw.version, pw.version) {
+        if *rv != pv {
+            drift(*rl, format!("PROTOCOL_VERSION is {rv} here but {pv} in {py_path}"));
+        }
+    }
+    if let (Some((rv, rl)), Some(pv)) = (&rw.max_frame, pw.max_frame) {
+        if *rv != pv {
+            drift(*rl, format!("MAX_FRAME_BYTES is {rv} here but {pv} in {py_path}"));
+        }
+    }
+    // opcode table, both directions
+    for (name, val, line) in &rw.ops {
+        match pw.ops.iter().find(|(n, _)| n == name) {
+            None => drift(
+                *line,
+                format!("opcode `{name}` (0x{val:02X}) has no entry in {py_path}'s OPS"),
+            ),
+            Some((_, pv)) if pv != val => drift(
+                *line,
+                format!("opcode `{name}` is 0x{val:02X} here but 0x{pv:02X} in {py_path}"),
+            ),
+            _ => {}
+        }
+    }
+    for (name, val) in &pw.ops {
+        if !rw.ops.iter().any(|(n, _, _)| n == name) {
+            drift(
+                1,
+                format!(
+                    "{py_path} lists opcode `{name}` (0x{val:02X}) with no Rust \
+                     `const OP_*` counterpart"
+                ),
+            );
+        }
+    }
+    // error codes: to_u8 vs from_u8 must agree, then vs the mirror
+    for (name, val, line) in &rw.err_to {
+        match rw.err_from.iter().find(|(n, _, _)| n == name) {
+            None => drift(*line, format!("ErrCode::{name} has a to_u8 arm but no from_u8 arm")),
+            Some((_, fv, _)) if fv != val => drift(
+                *line,
+                format!("ErrCode::{name} maps to {val} in to_u8 but {fv} in from_u8"),
+            ),
+            _ => {}
+        }
+        match pw.errs.iter().find(|(n, _)| n == name) {
+            None => drift(*line, format!("ErrCode::{name} has no entry in {py_path}'s ERR_CODES")),
+            Some((_, pv)) if pv != val => drift(
+                *line,
+                format!("ErrCode::{name} is {val} here but {pv} in {py_path}"),
+            ),
+            _ => {}
+        }
+    }
+    for (name, _, line) in &rw.err_from {
+        if !rw.err_to.iter().any(|(n, _, _)| n == name) {
+            drift(*line, format!("ErrCode::{name} has a from_u8 arm but no to_u8 arm"));
+        }
+    }
+    for (name, val) in &pw.errs {
+        if !rw.err_to.iter().any(|(n, _, _)| n == name) {
+            drift(1, format!("{py_path} lists ErrCode `{name}` ({val}) with no Rust counterpart"));
+        }
+    }
+    // InfoResp memory tail: encoder vs decoder vs mirror, names and order
+    let enc: Vec<&str> = rw.enc.iter().map(|(n, _)| n.as_str()).collect();
+    let dec: Vec<&str> = rw.dec.iter().map(|(n, _)| n.as_str()).collect();
+    let mem: Vec<&str> = pw.mem.iter().map(|s| s.as_str()).collect();
+    let enc_line = rw.enc.first().map_or(1, |(_, l)| *l);
+    let dec_line = rw.dec.first().map_or(1, |(_, l)| *l);
+    if !enc.is_empty() && !dec.is_empty() && enc != dec {
+        drift(enc_line, tail_diff("the encode tail", &enc, "the decode tail", &dec));
+    }
+    if !dec.is_empty() && !mem.is_empty() && dec != mem {
+        drift(
+            dec_line,
+            tail_diff("the decode tail", &dec, &format!("{py_path}'s MEMORY_FIELDS"), &mem),
+        );
+    }
+}
+
+fn tail_diff(aname: &str, a: &[&str], bname: &str, b: &[&str]) -> String {
+    if a.len() != b.len() {
+        format!(
+            "InfoResp memory-tail arity drift: {aname} carries {} u64s but {bname} carries {}",
+            a.len(),
+            b.len()
+        )
+    } else {
+        let i = a.iter().zip(b).position(|(x, y)| x != y).unwrap_or(0);
+        format!(
+            "InfoResp memory-tail field {} is `{}` in {aname} but `{}` in {bname}",
+            i, a[i], b[i]
+        )
+    }
+}
+
+fn parse_rust_wire(sf: &SourceFile) -> RustWire {
+    let mut w = RustWire::default();
+    let mut in_dec = false;
+    for (i, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let ln = i + 1;
+        let t = line.stripped.trim();
+        if t.contains("const PROTOCOL_VERSION") {
+            if let Some(v) = t.split('=').nth(1).and_then(parse_int) {
+                w.version = Some((v, ln));
+            }
+        } else if t.contains("const MAX_FRAME_BYTES") {
+            if let Some(v) = t.split('=').nth(1).and_then(parse_int) {
+                w.max_frame = Some((v, ln));
+            }
+        } else if let Some(rest) = t
+            .strip_prefix("const OP_")
+            .or_else(|| t.strip_prefix("pub const OP_"))
+        {
+            if let Some(colon) = rest.find(':') {
+                let name = camel(rest[..colon].trim());
+                if let Some(v) = rest.split('=').nth(1).and_then(parse_int) {
+                    w.ops.push((name, v, ln));
+                }
+            }
+        }
+        // ErrCode arms, both directions
+        let arm = t.trim_end_matches(',');
+        if let Some((lhs, rhs)) = arm.split_once("=>") {
+            let (lhs, rhs) = (lhs.trim(), rhs.trim());
+            if let Some(name) = lhs.strip_prefix("ErrCode::") {
+                if let Some(v) = parse_int(rhs) {
+                    w.err_to.push((name.trim().to_string(), v, ln));
+                }
+            } else if let (Some(v), Some(name)) = (parse_int(lhs), rhs.strip_prefix("ErrCode::")) {
+                w.err_from.push((name.trim().to_string(), v, ln));
+            }
+        }
+        // InfoResp memory tail, encode side
+        if let Some(rest) = t.strip_prefix("e.u64(m.") {
+            if let Some(close) = rest.find(')') {
+                w.enc.push((rest[..close].trim().to_string(), ln));
+            }
+        }
+        // ... and decode side (first non-test MemoryStats literal)
+        if in_dec {
+            if t.starts_with("})") || t.starts_with('}') {
+                in_dec = false;
+            } else if let Some((name, rhs)) = t.split_once(':') {
+                let name = name.trim();
+                let rhs = rhs.trim().trim_end_matches(',');
+                if !name.is_empty()
+                    && name.bytes().all(is_ident)
+                    && (rhs == "d.u64()?" || rhs == "d.u64()?,")
+                {
+                    w.dec.push((name.to_string(), ln));
+                }
+            }
+        } else if w.dec.is_empty() && t.contains("Some(MemoryStats {") {
+            in_dec = true;
+        }
+    }
+    w
+}
+
+fn parse_py_wire(text: &str) -> PyWire {
+    // blank python comments (respecting simple string quoting)
+    let mut cleaned = String::with_capacity(text.len());
+    for line in text.split('\n') {
+        let mut in_str: Option<char> = None;
+        for c in line.chars() {
+            match in_str {
+                Some(q) if c == q => in_str = None,
+                Some(_) => {}
+                None if c == '"' || c == '\'' => in_str = Some(c),
+                None if c == '#' => break,
+                None => {}
+            }
+            cleaned.push(c);
+        }
+        cleaned.push('\n');
+    }
+    let mut w = PyWire::default();
+    for line in cleaned.split('\n') {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("PROTOCOL_VERSION") {
+            if let Some(v) = rest.trim().strip_prefix('=').and_then(parse_int) {
+                w.version = Some(v);
+            }
+        } else if let Some(rest) = t.strip_prefix("MAX_FRAME_BYTES") {
+            if let Some(v) = rest.trim().strip_prefix('=').and_then(parse_int) {
+                w.max_frame = Some(v);
+            }
+        }
+    }
+    if let Some(body) = py_region(&cleaned, "OPS", '{', '}') {
+        w.ops = py_pairs(&body);
+    }
+    if let Some(body) = py_region(&cleaned, "ERR_CODES", '{', '}') {
+        w.errs = py_pairs(&body);
+    }
+    if let Some(body) = py_region(&cleaned, "MEMORY_FIELDS", '[', ']') {
+        w.mem = py_strings(&body);
+    }
+    w
+}
+
+/// The text between the `open` bracket after `NAME =` and its matching
+/// `close`, brackets excluded. Spans lines.
+fn py_region(text: &str, name: &str, open: char, close: char) -> Option<String> {
+    let mut at = 0usize;
+    // the marker must start a line (left-hand side of an assignment)
+    let start = loop {
+        let p = text[at..].find(name)? + at;
+        let line_start = p == 0 || text.as_bytes()[p - 1] == b'\n';
+        if line_start {
+            break p;
+        }
+        at = p + name.len();
+    };
+    let ob = text[start..].find(open)? + start;
+    let b = text.as_bytes();
+    let mut depth = 0i32;
+    for (j, &c) in b.iter().enumerate().skip(ob) {
+        if c == open as u8 {
+            depth += 1;
+        } else if c == close as u8 {
+            depth -= 1;
+            if depth == 0 {
+                return Some(text[ob + 1..j].to_string());
+            }
+        }
+    }
+    None
+}
+
+/// `"Name": value` pairs out of a python dict body, in order.
+fn py_pairs(body: &str) -> Vec<(String, u64)> {
+    let mut out = Vec::new();
+    for part in body.split(',') {
+        if let Some((k, v)) = part.split_once(':') {
+            let k = k.trim().trim_matches(['"', '\'']);
+            if let Some(v) = parse_int(v) {
+                if !k.is_empty() {
+                    out.push((k.to_string(), v));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Quoted strings out of a python list body, in order.
+fn py_strings(body: &str) -> Vec<String> {
+    body.split(',')
+        .map(|s| s.trim().trim_matches(['"', '\'']).to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Parse `1`, `0x83`, or `16 << 20` (with optional trailing `;`).
+fn parse_int(s: &str) -> Option<u64> {
+    let s = s.trim().trim_end_matches(';').trim();
+    if let Some((a, b)) = s.split_once("<<") {
+        return Some(parse_int(a)?.checked_shl(parse_int(b)? as u32)?);
+    }
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(h) => u64::from_str_radix(h, 16).ok(),
+        None => s.parse().ok(),
+    }
+}
+
+/// `OPEN_SESSION` → `OpenSession` (the Python mirror keys).
+fn camel(s: &str) -> String {
+    s.split('_')
+        .map(|seg| {
+            let mut c = seg.chars();
+            match c.next() {
+                Some(f) => f.to_ascii_uppercase().to_string() + &c.as_str().to_ascii_lowercase(),
+                None => String::new(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan;
+
+    #[test]
+    fn parse_int_forms() {
+        assert_eq!(parse_int(" 1; "), Some(1));
+        assert_eq!(parse_int("0xEE"), Some(0xEE));
+        assert_eq!(parse_int("16 << 20"), Some(16 << 20));
+        assert_eq!(parse_int("wat"), None);
+    }
+
+    #[test]
+    fn camel_matches_mirror_keys() {
+        assert_eq!(camel("INFO"), "Info");
+        assert_eq!(camel("OPEN_SESSION"), "OpenSession");
+        assert_eq!(camel("INFO_RESP"), "InfoResp");
+    }
+
+    #[test]
+    fn slicing_is_not_indexing() {
+        let sf = scan("f.rs", "let a = &x[1..n];\nlet b = x[i];\nlet c = x[f(a..b)];\n");
+        let mut out = Vec::new();
+        panic_path(&sf, &mut out);
+        let lines: Vec<usize> = out.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![2, 3]);
+    }
+
+    #[test]
+    fn temporary_guard_is_not_held() {
+        assert!(guard_binding("    let n = t.lock().unwrap().len();").is_none());
+        assert!(guard_binding("    let g = t.lock().unwrap();").is_some());
+        assert!(guard_binding("    let g = lock_unpoisoned(&self.t);").is_some());
+        assert!(guard_binding("    let _ = t.lock();").is_none());
+    }
+
+    #[test]
+    fn errorish_receivers() {
+        let sf = scan(
+            "f.rs",
+            "if e.to_string().contains(\"boom\") {}\nif msg.contains(MARKER) {}\n\
+             if v.starts_with(\"--\") {}\nif last_err.contains(\"x\") {}\n",
+        );
+        let mut out = Vec::new();
+        error_discipline(&sf, &mut out);
+        let lines: Vec<usize> = out.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![1, 4]);
+    }
+}

@@ -1,0 +1,78 @@
+//! CLI: `cargo run -p edgellm-analyzer -- check [--root PATH]`.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage or environment error.
+
+use std::path::PathBuf;
+use std::process::exit;
+
+fn usage() -> ! {
+    eprintln!("usage: edgellm-analyzer check [--root PATH]");
+    eprintln!();
+    eprintln!("Runs the repo invariant lints over <root>/rust/src.");
+    eprintln!("PATH defaults to the current directory (falling back to the");
+    eprintln!("workspace root when invoked from inside tools/analyzer).");
+    exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd: Option<&str> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "check" if cmd.is_none() => cmd = Some("check"),
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => root = Some(PathBuf::from(p)),
+                    None => usage(),
+                }
+            }
+            "-h" | "--help" => usage(),
+            _ => usage(),
+        }
+        i += 1;
+    }
+    if cmd != Some("check") {
+        usage();
+    }
+    let root = root.unwrap_or_else(|| {
+        let cwd = PathBuf::from(".");
+        if cwd.join("rust").join("src").is_dir() {
+            return cwd;
+        }
+        // `cargo run -p edgellm-analyzer` from inside the crate dir:
+        // the workspace root is two levels up from the manifest
+        if let Ok(m) = std::env::var("CARGO_MANIFEST_DIR") {
+            let up = PathBuf::from(m).join("..").join("..");
+            if up.join("rust").join("src").is_dir() {
+                return up;
+            }
+        }
+        cwd
+    });
+
+    let cfg = edgellm_analyzer::Config::repo(&root);
+    match edgellm_analyzer::check(&cfg) {
+        Err(e) => {
+            eprintln!("analyzer: error: {e}");
+            exit(2);
+        }
+        Ok(report) => {
+            for f in &report.findings {
+                println!("{}:{}: [{}] {}", f.path, f.line, f.lint, f.message);
+            }
+            if report.findings.is_empty() {
+                println!("analyzer: clean ({} files)", report.files);
+                exit(0);
+            }
+            println!(
+                "analyzer: {} finding(s) across {} files — see docs/static-analysis.md",
+                report.findings.len(),
+                report.files
+            );
+            exit(1);
+        }
+    }
+}

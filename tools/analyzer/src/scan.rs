@@ -1,0 +1,416 @@
+//! Source model: a lossless line-by-line view of one Rust file with the
+//! token noise removed, so the lints can do honest lexical matching.
+//!
+//! One pass over the file produces, per line:
+//!
+//! * `code` — comment text *and* string/char literal contents blanked to
+//!   spaces (delimiters kept, byte length preserved): what the
+//!   token-level lints scan, so `unwrap()` inside a doc comment or an
+//!   error message never fires;
+//! * `stripped` — comments blanked, string literals kept: what the
+//!   cfg-containment lint scans (`feature = "pjrt"` lives inside an
+//!   attribute's string literal);
+//! * `in_test` — whether the line sits inside a `#[cfg(test)]` item;
+//! * `depth` — brace depth at the start of the line (code braces only).
+//!
+//! The pass also collects `// analyzer: allow(<lint>) — <reason>`
+//! annotations out of the comments it blanks.
+
+/// One `// analyzer: allow(...)` annotation found in a comment.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// 1-based line the annotation *applies to*: the annotation's own
+    /// line when it trails code, otherwise the next line carrying code.
+    pub target_line: usize,
+    /// 1-based line the annotation was written on (for diagnostics).
+    pub at_line: usize,
+    /// the lint name inside `allow(...)`
+    pub lint: String,
+    /// whether a non-empty reason follows the closing paren
+    pub has_reason: bool,
+}
+
+/// One scanned source line. See the module docs for the fields.
+pub struct Line {
+    pub code: String,
+    pub stripped: String,
+    pub in_test: bool,
+    pub depth: i32,
+}
+
+/// A scanned file: repo-relative path, lines, annotations.
+pub struct SourceFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub allows: Vec<Allow>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum St {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+/// True for bytes that can continue an identifier.
+pub fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Scan one file's text into the [`SourceFile`] model.
+pub fn scan(path: &str, text: &str) -> SourceFile {
+    let raw_lines: Vec<&str> = text.split('\n').collect();
+    let mut lines: Vec<Line> = Vec::with_capacity(raw_lines.len());
+    let mut allows: Vec<Allow> = Vec::new();
+    // lines whose comment was annotation-only: their Allow still needs a
+    // target once the next code-carrying line appears
+    let mut pending_allows: Vec<usize> = Vec::new(); // indices into `allows`
+
+    let mut st = St::Code;
+    let mut depth: i32 = 0;
+    // #[cfg(test)] seen; the next `{` opens a test region
+    let mut test_pending = false;
+    // depths at which test regions opened
+    let mut test_stack: Vec<i32> = Vec::new();
+
+    for (li, raw) in raw_lines.iter().enumerate() {
+        let b = raw.as_bytes();
+        let mut code: Vec<u8> = Vec::with_capacity(b.len());
+        let mut stripped: Vec<u8> = Vec::with_capacity(b.len());
+        let line_depth = depth;
+        let in_test_at_start = !test_stack.is_empty();
+        let mut comment_text: Vec<u8> = Vec::new(); // this line's // text
+        let mut i = 0usize;
+        // a line comment never survives a newline
+        if st == St::LineComment {
+            st = St::Code;
+        }
+        // set BEFORE the brace walk so `#[cfg(test)] mod t { ... }` on
+        // one line still opens a test region at its own `{`. Matching on
+        // the raw text can only over-approximate (the attribute inside a
+        // string literal), which errs toward *suppressing* lints.
+        if st == St::Code && raw.contains("#[cfg(test)]") {
+            test_pending = true;
+        }
+        while i < b.len() {
+            let c = b[i];
+            match st {
+                St::Code => match c {
+                    b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                        st = St::LineComment;
+                        code.extend_from_slice(b"  ");
+                        stripped.extend_from_slice(b"  ");
+                        comment_text.clear();
+                        i += 2;
+                    }
+                    b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                        st = St::BlockComment(1);
+                        code.extend_from_slice(b"  ");
+                        stripped.extend_from_slice(b"  ");
+                        i += 2;
+                    }
+                    b'"' => {
+                        // raw/byte-string prefixes: r" r#" br" b"
+                        st = St::Str;
+                        code.push(b'"');
+                        stripped.push(b'"');
+                        i += 1;
+                    }
+                    b'r' | b'b' if is_raw_string(b, i) => {
+                        let (hashes, skip) = raw_string_open(b, i);
+                        st = St::RawStr(hashes);
+                        for _ in 0..skip {
+                            code.push(b' ');
+                            stripped.push(b' ');
+                        }
+                        // keep the opening quote visible
+                        if let Some(last) = code.last_mut() {
+                            *last = b'"';
+                        }
+                        if let Some(last) = stripped.last_mut() {
+                            *last = b'"';
+                        }
+                        i += skip;
+                    }
+                    b'\'' => {
+                        // char literal vs lifetime: a lifetime is ' +
+                        // ident NOT followed by a closing '
+                        if is_char_literal(b, i) {
+                            st = St::Char;
+                            code.push(b'\'');
+                            stripped.push(b'\'');
+                            i += 1;
+                        } else {
+                            code.push(c);
+                            stripped.push(c);
+                            i += 1;
+                        }
+                    }
+                    _ => {
+                        if c == b'{' {
+                            if test_pending {
+                                test_stack.push(depth);
+                                test_pending = false;
+                            }
+                            depth += 1;
+                        } else if c == b'}' {
+                            depth -= 1;
+                            if let Some(&d) = test_stack.last() {
+                                if depth == d {
+                                    test_stack.pop();
+                                }
+                            }
+                        } else if c == b';' && test_pending && depth == line_depth {
+                            // `#[cfg(test)] use ...;` — attribute consumed
+                            // by a braceless item
+                            test_pending = false;
+                        }
+                        code.push(c);
+                        stripped.push(c);
+                        i += 1;
+                    }
+                },
+                St::LineComment => {
+                    comment_text.push(c);
+                    code.push(b' ');
+                    stripped.push(b' ');
+                    i += 1;
+                }
+                St::BlockComment(n) => {
+                    if c == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        let n = n - 1;
+                        st = if n == 0 { St::Code } else { St::BlockComment(n) };
+                        code.extend_from_slice(b"  ");
+                        stripped.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        st = St::BlockComment(n + 1);
+                        code.extend_from_slice(b"  ");
+                        stripped.extend_from_slice(b"  ");
+                        i += 2;
+                    } else {
+                        code.push(b' ');
+                        stripped.push(b' ');
+                        i += 1;
+                    }
+                }
+                St::Str => {
+                    if c == b'\\' && i + 1 < b.len() {
+                        code.extend_from_slice(b"  ");
+                        stripped.push(c);
+                        stripped.push(b[i + 1]);
+                        i += 2;
+                    } else if c == b'"' {
+                        st = St::Code;
+                        code.push(b'"');
+                        stripped.push(b'"');
+                        i += 1;
+                    } else {
+                        code.push(b' ');
+                        stripped.push(c);
+                        i += 1;
+                    }
+                }
+                St::RawStr(hashes) => {
+                    if c == b'"' && raw_string_closes(b, i, hashes) {
+                        st = St::Code;
+                        code.push(b'"');
+                        stripped.push(b'"');
+                        for _ in 0..hashes {
+                            code.push(b' ');
+                            stripped.push(b' ');
+                        }
+                        i += 1 + hashes as usize;
+                    } else {
+                        code.push(b' ');
+                        stripped.push(c);
+                        i += 1;
+                    }
+                }
+                St::Char => {
+                    if c == b'\\' && i + 1 < b.len() {
+                        code.extend_from_slice(b"  ");
+                        stripped.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if c == b'\'' {
+                        st = St::Code;
+                        code.push(b'\'');
+                        stripped.push(b'\'');
+                        i += 1;
+                    } else {
+                        code.push(b' ');
+                        stripped.push(b' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        let code = String::from_utf8_lossy(&code).into_owned();
+        let stripped = String::from_utf8_lossy(&stripped).into_owned();
+        let has_code = !code.trim().is_empty();
+        // resolve this line's annotation, if its comment carried one
+        if !comment_text.is_empty() {
+            if let Some((lint, has_reason)) = parse_allow(&comment_text) {
+                let target = if has_code { Some(li + 1) } else { None };
+                allows.push(Allow {
+                    target_line: target.unwrap_or(0),
+                    at_line: li + 1,
+                    lint,
+                    has_reason,
+                });
+                if target.is_none() {
+                    pending_allows.push(allows.len() - 1);
+                }
+            }
+        }
+        // annotation-only lines above attach to the first code line below
+        if has_code {
+            for &ai in &pending_allows {
+                allows[ai].target_line = li + 1;
+            }
+            pending_allows.clear();
+        }
+        lines.push(Line {
+            code,
+            stripped,
+            in_test: in_test_at_start || !test_stack.is_empty(),
+            depth: line_depth,
+        });
+    }
+    SourceFile { path: path.to_string(), lines, allows }
+}
+
+/// At `b[i]` ∈ {r, b}: does a RAW string literal start here? Recognizes
+/// `r"` `r#"` `br"` `br#"` (plain `b"..."` byte strings fall through to
+/// the ordinary string state, which handles their escapes). Requires
+/// the previous byte to not be part of an identifier, so `var"` and
+/// identifiers ending in `r` never match.
+fn is_raw_string(b: &[u8], i: usize) -> bool {
+    if i > 0 && is_ident(b[i - 1]) {
+        return false;
+    }
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return false;
+    }
+    j += 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+/// Hash count and opener length (opening quote included) of the raw
+/// string starting at `b[i]`. Only called when [`is_raw_string`] held.
+fn raw_string_open(b: &[u8], i: usize) -> (u32, usize) {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    j += 1; // the 'r'
+    let mut hashes = 0u32;
+    while b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    (hashes, j + 1 - i)
+}
+
+/// In a raw string with `hashes` hashes: does the `"` at `b[i]` close it?
+fn raw_string_closes(b: &[u8], i: usize, hashes: u32) -> bool {
+    let h = hashes as usize;
+    b.len() >= i + 1 + h && b[i + 1..i + 1 + h].iter().all(|&c| c == b'#')
+}
+
+/// Char literal vs lifetime at the `'` in `b[i]`: a char literal is
+/// `'x'` or `'\..'`; a lifetime is `'ident` with no closing quote.
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    if i + 1 >= b.len() {
+        return false;
+    }
+    if b[i + 1] == b'\\' {
+        return true;
+    }
+    // 'x' — exactly one char then a quote
+    i + 2 < b.len() && b[i + 2] == b'\''
+}
+
+/// Parse `analyzer: allow(<lint>)` out of one comment's text. Returns
+/// the lint name and whether a non-empty reason follows.
+fn parse_allow(comment: &[u8]) -> Option<(String, bool)> {
+    let text = String::from_utf8_lossy(comment);
+    let at = text.find("analyzer:")?;
+    let rest = text[at + "analyzer:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let lint = rest[..close].trim().to_string();
+    let reason = rest[close + 1..]
+        .trim_start_matches([' ', '\t', '-'])
+        .trim_start_matches('—')
+        .trim();
+    Some((lint, !reason.is_empty()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let a = \"unwrap() inside\"; // unwrap() too\nlet b = s.unwrap();\n";
+        let sf = scan("x.rs", src);
+        assert!(!sf.lines[0].code.contains("unwrap"), "{}", sf.lines[0].code);
+        assert!(sf.lines[0].stripped.contains("unwrap() inside"));
+        assert!(!sf.lines[0].stripped.contains("unwrap() too"));
+        assert!(sf.lines[1].code.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_tracked() {
+        let src = concat!(
+            "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n",
+            "    fn b() { y.unwrap(); }\n}\nfn c() {}\n",
+        );
+        let sf = scan("x.rs", src);
+        assert!(!sf.lines[0].in_test);
+        assert!(sf.lines[3].in_test);
+        assert!(!sf.lines[5].in_test);
+    }
+
+    #[test]
+    fn lifetimes_do_not_open_char_literals() {
+        let sf = scan("x.rs", "fn f<'a>(x: &'a [u8]) -> &'a [u8] { &x[1..] }\nlet c = 'x';\n");
+        assert!(sf.lines[0].code.contains("&x[1..]"));
+        assert!(!sf.lines[1].code.contains('x'), "{}", sf.lines[1].code);
+    }
+
+    #[test]
+    fn allow_annotations_parse_and_target() {
+        let src = concat!(
+            "// analyzer: allow(panic-path) — bounds checked above\n",
+            "let x = v[0];\n",
+            "let y = w[1]; // analyzer: allow(panic-path) — same\n",
+            "// analyzer: allow(wire-drift)\nlet z = 3;\n",
+        );
+        let sf = scan("x.rs", src);
+        assert_eq!(sf.allows.len(), 3);
+        assert_eq!(sf.allows[0].target_line, 2);
+        assert!(sf.allows[0].has_reason);
+        assert_eq!(sf.allows[1].target_line, 3);
+        assert_eq!(sf.allows[2].target_line, 5);
+        assert!(!sf.allows[2].has_reason, "reasonless allow detected");
+    }
+
+    #[test]
+    fn raw_strings_blank_without_ending_early() {
+        let sf = scan("x.rs", "let s = r#\"a \" unwrap() b\"#; s.len();\n");
+        assert!(!sf.lines[0].code.contains("unwrap"), "{}", sf.lines[0].code);
+        assert!(sf.lines[0].code.contains("s.len()"));
+    }
+}

@@ -1,0 +1,168 @@
+//! Fixture corpus: every lint has a known-bad file that must be
+//! flagged at exact lines and a known-good file that must pass clean.
+//! The wire-drift pair additionally proves the acceptance criterion:
+//! an InfoResp tail-arity disagreement between the Rust codec and the
+//! Python mirror fails the run.
+
+use edgellm_analyzer::{check, Config, Finding};
+use std::path::{Path, PathBuf};
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+/// Config whose walked tree is one fixture directory; the wire pair
+/// points at the shared good codec/mirror so wire-drift stays quiet.
+fn cfg_for(dir: &str, hostile: &[&str]) -> Config {
+    Config {
+        src_dir: fixtures().join(dir),
+        hostile: hostile.iter().map(|s| s.to_string()).collect(),
+        protocol: fixtures().join("wire_drift").join("good_protocol.rs"),
+        mirror: fixtures().join("wire_drift").join("good_mirror.py"),
+        pjrt_allowed_prefix: "runtime/".to_string(),
+        marker_module: "runtime/kv.rs".to_string(),
+    }
+}
+
+/// (line, lint) pairs for findings in the file whose path ends with
+/// `file`, in report order.
+fn hits(findings: &[Finding], file: &str) -> Vec<(usize, String)> {
+    findings
+        .iter()
+        .filter(|f| f.path.ends_with(file))
+        .map(|f| (f.line, f.lint.clone()))
+        .collect()
+}
+
+fn lint_lines(findings: &[Finding], file: &str, lint: &str) -> Vec<usize> {
+    findings
+        .iter()
+        .filter(|f| f.path.ends_with(file) && f.lint == lint)
+        .map(|f| f.line)
+        .collect()
+}
+
+#[test]
+fn panic_path_fixture() {
+    let report = check(&cfg_for("panic_path", &["bad.rs", "good.rs"])).unwrap();
+    assert_eq!(
+        lint_lines(&report.findings, "bad.rs", "panic-path"),
+        vec![3, 4, 5, 7, 13],
+        "bad.rs: index, unwrap, expect, panic!, unimplemented!"
+    );
+    assert!(hits(&report.findings, "good.rs").is_empty(), "{:?}", report.findings);
+    assert_eq!(report.findings.len(), 5);
+}
+
+#[test]
+fn cfg_containment_fixture() {
+    let report = check(&cfg_for("cfg_containment", &[])).unwrap();
+    assert_eq!(
+        lint_lines(&report.findings, "bad.rs", "cfg-containment"),
+        vec![2, 5]
+    );
+    assert!(hits(&report.findings, "good.rs").is_empty(), "{:?}", report.findings);
+    assert_eq!(report.findings.len(), 2);
+}
+
+#[test]
+fn error_discipline_fixture() {
+    let report = check(&cfg_for("error_discipline", &[])).unwrap();
+    assert_eq!(
+        lint_lines(&report.findings, "bad.rs", "error-discipline"),
+        vec![3, 7],
+        "to_string() chain and error-ish receiver"
+    );
+    assert!(hits(&report.findings, "good.rs").is_empty(), "{:?}", report.findings);
+    assert_eq!(report.findings.len(), 2);
+}
+
+#[test]
+fn lock_hygiene_fixture() {
+    let report = check(&cfg_for("lock_hygiene", &[])).unwrap();
+    assert_eq!(
+        lint_lines(&report.findings, "bad.rs", "lock-hygiene"),
+        vec![4],
+        "guard from line 3 held across write_frame"
+    );
+    assert!(hits(&report.findings, "good.rs").is_empty(), "{:?}", report.findings);
+    assert_eq!(report.findings.len(), 1);
+}
+
+#[test]
+fn allow_machinery_fixture() {
+    let report = check(&cfg_for("allow", &["bad.rs", "good.rs"])).unwrap();
+    let expected: Vec<(usize, String)> = vec![
+        (3, "malformed-allow".to_string()), // reasonless
+        (4, "panic-path".to_string()),      // ... so the finding still fires
+        (5, "malformed-allow".to_string()), // unknown lint name
+        (6, "panic-path".to_string()),
+        (7, "unused-allow".to_string()), // valid but suppresses nothing
+    ];
+    assert_eq!(hits(&report.findings, "bad.rs"), expected);
+    // good.rs: both indexings suppressed, annotations consumed
+    assert!(hits(&report.findings, "good.rs").is_empty(), "{:?}", report.findings);
+    assert_eq!(report.findings.len(), 5);
+}
+
+#[test]
+fn wire_drift_tail_arity_fails() {
+    let mut cfg = cfg_for("wire_drift", &[]);
+    cfg.protocol = fixtures().join("wire_drift").join("bad_protocol.rs");
+    let report = check(&cfg).unwrap();
+    let arity: Vec<&Finding> = report
+        .findings
+        .iter()
+        .filter(|f| f.lint == "wire-drift" && f.message.contains("arity"))
+        .collect();
+    // decode (2) vs encode (3), and decode (2) vs MEMORY_FIELDS (3)
+    assert_eq!(arity.len(), 2, "{:?}", report.findings);
+    assert!(arity.iter().all(|f| f.path.ends_with("bad_protocol.rs")));
+    assert_eq!(report.findings.len(), 2, "{:?}", report.findings);
+}
+
+#[test]
+fn wire_drift_mirror_drift_fails() {
+    let mut cfg = cfg_for("wire_drift", &[]);
+    cfg.mirror = fixtures().join("wire_drift").join("bad_mirror.py");
+    let report = check(&cfg).unwrap();
+    assert!(
+        report
+            .findings
+            .iter()
+            .any(|f| f.lint == "wire-drift" && f.message.contains("`Error`")),
+        "opcode value drift must be flagged: {:?}",
+        report.findings
+    );
+    assert!(
+        report
+            .findings
+            .iter()
+            .any(|f| f.lint == "wire-drift" && f.message.contains("arity")),
+        "tail arity drift must be flagged: {:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn wire_drift_good_pair_is_clean() {
+    let report = check(&cfg_for("wire_drift", &[])).unwrap();
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let report = check(&Config::repo(&root)).unwrap();
+    assert!(
+        report.findings.is_empty(),
+        "the committed tree must pass its own analyzer:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| format!("{}:{}: [{}] {}", f.path, f.line, f.lint, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files > 20, "walked only {} files", report.files);
+}
