@@ -180,6 +180,11 @@ struct Scenario {
     p99_itl_ms: f64,
     completed: usize,
     requeued: u64,
+    /// the engine's own TTFT histogram p99 (median across runs) — the
+    /// pull-based obs view of the same workload the bench measured
+    /// externally, cross-checked in `main`
+    engine_p99_ttft_ms: f64,
+    engine_ttft_count: u64,
 }
 
 /// Median-of-RUNS overload scenario: fresh engine per run, same
@@ -189,8 +194,10 @@ fn run_scenario(chunk: usize, use_priority: bool, interval_s: f64) -> Scenario {
     let mut p99_ttft = [0.0; RUNS];
     let mut p50_itl = [0.0; RUNS];
     let mut p99_itl = [0.0; RUNS];
+    let mut eng_p99_ttft = [0.0; RUNS];
     let mut completed = 0;
     let mut requeued = 0;
+    let mut engine_ttft_count = 0;
     for run in 0..RUNS {
         let mut engine = overload_engine(chunk);
         let mut obs = drive(&mut engine, &workload(use_priority), interval_s);
@@ -199,6 +206,9 @@ fn run_scenario(chunk: usize, use_priority: bool, interval_s: f64) -> Scenario {
         p99_ttft[run] = percentile(&mut obs.ttfts_ms, 0.99);
         p50_itl[run] = percentile(&mut obs.itls_ms, 0.50);
         p99_itl[run] = percentile(&mut obs.itls_ms, 0.99);
+        let hist = engine.obs().ttft_us.summary();
+        eng_p99_ttft[run] = hist.p99 / 1e3;
+        engine_ttft_count = hist.count;
         completed = obs.completed;
         requeued = obs.requeued;
     }
@@ -209,6 +219,8 @@ fn run_scenario(chunk: usize, use_priority: bool, interval_s: f64) -> Scenario {
         p99_itl_ms: median3(p99_itl),
         completed,
         requeued,
+        engine_p99_ttft_ms: median3(eng_p99_ttft),
+        engine_ttft_count,
     }
 }
 
@@ -221,7 +233,30 @@ fn scenario_json(s: &Scenario) -> Json {
         ("completed", Json::Num(s.completed as f64)),
         ("requeued", Json::Num(s.requeued as f64)),
         ("errors", Json::Num(0.0)), // drive() panics on any Error event
+        ("engine_hist_p99_ttft_ms", Json::Num(s.engine_p99_ttft_ms)),
+        ("engine_hist_ttft_count", Json::Num(s.engine_ttft_count as f64)),
     ])
+}
+
+/// The engine's histogram p99 must track the bench's externally
+/// measured p99. They are not the same estimator — the histogram has
+/// log2 buckets and its TTFT ends at prefill completion while the
+/// bench's ends when the driver *observes* the token event one round
+/// later — so the bound is relative (the smaller must stay within 4×
+/// of the larger: one bucket of quantization plus one round of skew)
+/// with a 25 ms floor for scheduling noise on loaded CI machines.
+fn assert_hist_tracks_bench(name: &str, s: &Scenario) {
+    assert_eq!(
+        s.engine_ttft_count as usize, N_REQUESTS,
+        "{name}: engine TTFT histogram must see every admission"
+    );
+    let (a, b) = (s.engine_p99_ttft_ms, s.p99_ttft_ms);
+    let tol = (a.max(b) * 0.75).max(25.0);
+    assert!(
+        (a - b).abs() <= tol,
+        "{name}: engine histogram p99 TTFT {a:.2} ms diverges from bench p99 {b:.2} ms \
+         beyond tolerance {tol:.2} ms"
+    );
 }
 
 /// Drain the arena behind the admission gate's back (a second
@@ -295,6 +330,29 @@ fn preempt_recovery_record() -> Json {
         control_texts.iter().map(|(_, t)| t).collect::<Vec<_>>(),
         "resumed completions must be bit-identical to the unpreempted run"
     );
+    // the obs trace must tell the same story the metrics counters do:
+    // each victim leaves a preempted → requeued → resumed chain with
+    // timestamps that never run backwards
+    {
+        use edgellm::obs::SpanKind;
+        let spans = engine.obs().trace.snapshot();
+        for h in &handles {
+            let mine: Vec<_> = spans.iter().filter(|s| s.req_id == h.id()).collect();
+            let pos = |k: SpanKind| mine.iter().position(|s| s.kind == k);
+            if let Some(p) = pos(SpanKind::Preempted) {
+                let rq = pos(SpanKind::Requeued).expect("preempted but never requeued");
+                let rs = pos(SpanKind::Resumed).expect("requeued but never resumed");
+                assert!(p < rq && rq < rs, "preemption chain out of order");
+                assert!(
+                    mine[p].end_ns <= mine[rq].end_ns && mine[rq].end_ns <= mine[rs].end_ns,
+                    "preemption chain timestamps regressed"
+                );
+            }
+        }
+        let preempted_spans =
+            spans.iter().filter(|s| s.kind == SpanKind::Preempted).count() as u64;
+        assert_eq!(preempted_spans, preempted, "trace and metrics disagree on preemptions");
+    }
     println!(
         "preempt recovery: {preempted} preempted / {requeued} requeued, \
          recovery window {stall_ms:.1} ms, completions bit-identical"
@@ -331,9 +389,11 @@ fn main() {
     for (name, s) in [("plain", &plain), ("robust", &robust)] {
         println!(
             "{name:>7}: ttft p50 {:>7.2} ms p99 {:>7.2} ms | itl p50 {:>6.2} ms \
-             p99 {:>6.2} ms | {} completed",
-            s.p50_ttft_ms, s.p99_ttft_ms, s.p50_itl_ms, s.p99_itl_ms, s.completed
+             p99 {:>6.2} ms | {} completed | engine hist p99 ttft {:>7.2} ms",
+            s.p50_ttft_ms, s.p99_ttft_ms, s.p50_itl_ms, s.p99_itl_ms, s.completed,
+            s.engine_p99_ttft_ms
         );
+        assert_hist_tracks_bench(name, s);
     }
     assert!(
         robust.p99_itl_ms < plain.p99_itl_ms,

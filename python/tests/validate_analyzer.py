@@ -497,8 +497,9 @@ def camel(s):
 
 def parse_rust_wire(sf):
     w = {"version": None, "max_frame": None, "ops": [], "err_to": [],
-         "err_from": [], "enc": [], "dec": []}
+         "err_from": [], "enc": [], "dec": [], "enc_obs": [], "dec_obs": []}
     in_dec = False
+    in_dec_obs = False
     for i, line in enumerate(sf.lines):
         if line.in_test:
             continue
@@ -534,6 +535,10 @@ def parse_rust_wire(sf):
             rest = t[len("e.u64(m."):]
             if ")" in rest:
                 w["enc"].append((rest.split(")", 1)[0].strip(), ln))
+        if t.startswith("e.u64(o."):
+            rest = t[len("e.u64(o."):]
+            if ")" in rest:
+                w["enc_obs"].append((rest.split(")", 1)[0].strip(), ln))
         if in_dec:
             if t.startswith("}"):
                 in_dec = False
@@ -545,6 +550,17 @@ def parse_rust_wire(sf):
                     w["dec"].append((name, ln))
         elif not w["dec"] and "Some(MemoryStats {" in t:
             in_dec = True
+        if in_dec_obs:
+            if t.startswith("}"):
+                in_dec_obs = False
+            elif ":" in t:
+                name, rhs = t.split(":", 1)
+                name = name.strip()
+                rhs = rhs.strip().rstrip(",")
+                if name and all(is_ident(c) for c in name) and rhs == "d.u64()?":
+                    w["dec_obs"].append((name, ln))
+        elif not w["dec_obs"] and "Some(ObsStats {" in t:
+            in_dec_obs = True
     return w
 
 
@@ -603,7 +619,8 @@ def parse_py_wire(text):
             kept.append(c)
         cleaned_lines.append("".join(kept))
     cleaned = "\n".join(cleaned_lines)
-    w = {"version": None, "max_frame": None, "ops": [], "errs": [], "mem": []}
+    w = {"version": None, "max_frame": None, "ops": [], "errs": [], "mem": [],
+         "obs": []}
     for line in cleaned.split("\n"):
         t = line.strip()
         if t.startswith("PROTOCOL_VERSION") and "=" in t:
@@ -619,15 +636,18 @@ def parse_py_wire(text):
     body = py_region(cleaned, "MEMORY_FIELDS", "[", "]")
     if body is not None:
         w["mem"] = py_strings(body)
+    body = py_region(cleaned, "OBS_FIELDS", "[", "]")
+    if body is not None:
+        w["obs"] = py_strings(body)
     return w
 
 
-def tail_diff(aname, a, bname, b):
+def tail_diff(what, aname, a, bname, b):
     if len(a) != len(b):
-        return (f"InfoResp memory-tail arity drift: {aname} carries {len(a)} u64s "
+        return (f"InfoResp {what} arity drift: {aname} carries {len(a)} u64s "
                 f"but {bname} carries {len(b)}")
     i = next((j for j, (x, y) in enumerate(zip(a, b)) if x != y), 0)
-    return (f"InfoResp memory-tail field {i} is `{a[i]}` in {aname} "
+    return (f"InfoResp {what} field {i} is `{a[i]}` in {aname} "
             f"but `{b[i]}` in {bname}")
 
 
@@ -652,6 +672,10 @@ def wire_drift(proto, py_text, py_path, out):
         missing("the `e.u64(m.<field>)` InfoResp memory-tail encoder", proto.path)
     if not rw["dec"]:
         missing("the `Some(MemoryStats { .. })` decode tail", proto.path)
+    if not rw["enc_obs"]:
+        missing("the `e.u64(o.<field>)` InfoResp obs-tail encoder", proto.path)
+    if not rw["dec_obs"]:
+        missing("the `Some(ObsStats { .. })` decode tail", proto.path)
     if pw["version"] is None:
         missing("`PROTOCOL_VERSION`", py_path)
     if pw["max_frame"] is None:
@@ -662,6 +686,8 @@ def wire_drift(proto, py_text, py_path, out):
         missing("the `ERR_CODES` dict", py_path)
     if not pw["mem"]:
         missing("the `MEMORY_FIELDS` list", py_path)
+    if not pw["obs"]:
+        missing("the `OBS_FIELDS` list", py_path)
 
     def drift(line, message):
         out.append(Finding(proto.path, line, "wire-drift", message))
@@ -709,9 +735,22 @@ def wire_drift(proto, py_text, py_path, out):
     enc_line = rw["enc"][0][1] if rw["enc"] else 1
     dec_line = rw["dec"][0][1] if rw["dec"] else 1
     if enc and dec and enc != dec:
-        drift(enc_line, tail_diff("the encode tail", enc, "the decode tail", dec))
+        drift(enc_line, tail_diff("memory-tail", "the encode tail", enc,
+                                  "the decode tail", dec))
     if dec and mem and dec != mem:
-        drift(dec_line, tail_diff("the decode tail", dec, f"{py_path}'s MEMORY_FIELDS", mem))
+        drift(dec_line, tail_diff("memory-tail", "the decode tail", dec,
+                                  f"{py_path}'s MEMORY_FIELDS", mem))
+    enc_obs = [n for n, _ in rw["enc_obs"]]
+    dec_obs = [n for n, _ in rw["dec_obs"]]
+    obs = pw["obs"]
+    enc_obs_line = rw["enc_obs"][0][1] if rw["enc_obs"] else 1
+    dec_obs_line = rw["dec_obs"][0][1] if rw["dec_obs"] else 1
+    if enc_obs and dec_obs and enc_obs != dec_obs:
+        drift(enc_obs_line, tail_diff("obs-tail", "the encode tail", enc_obs,
+                                      "the decode tail", dec_obs))
+    if dec_obs and obs and dec_obs != obs:
+        drift(dec_obs_line, tail_diff("obs-tail", "the decode tail", dec_obs,
+                                      f"{py_path}'s OBS_FIELDS", obs))
 
 
 # ---------------------------------------------------------------- driver
@@ -936,6 +975,9 @@ def real_tree_checks():
     check(len(rw["err_to"]) == 5 and len(rw["err_from"]) == 5, "real ErrCode arms parse")
     check(len(rw["enc"]) == 10 and len(rw["dec"]) == 10,
           f"real InfoResp tail parses 10/10 (got {len(rw['enc'])}/{len(rw['dec'])})")
+    check(len(rw["enc_obs"]) == 7 and len(rw["dec_obs"]) == 7,
+          f"real InfoResp obs tail parses 7/7 "
+          f"(got {len(rw['enc_obs'])}/{len(rw['dec_obs'])})")
 
     files, findings = run_check(Config.repo(REPO))
     if findings:

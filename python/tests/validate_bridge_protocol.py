@@ -54,6 +54,14 @@ MEMORY_FIELDS = [
     "prefix_cached_blocks", "prefix_hits",
 ]
 
+# Device-side observability counters carried in a second flagged tail
+# after the memory tail, in wire order (all u64). Pre-obs frames end
+# after the memory tail and decode with obs=None.
+OBS_FIELDS = [
+    "alloc_stalls", "cow_copies", "frames_served", "frame_p50_us",
+    "frame_p90_us", "frame_p99_us", "frame_max_us",
+]
+
 
 def _u8(v): return struct.pack("<B", v)
 def _u16(v): return struct.pack("<H", v)
@@ -103,6 +111,14 @@ def encode(kind, **f):
         else:
             out += _u8(1)
             out += b"".join(_u64(mem[k]) for k in MEMORY_FIELDS)
+        # second flagged tail (observability extension): presence flag +
+        # seven u64 counters; pre-obs frames end after the memory tail
+        obs = f.get("obs")
+        if obs is None:
+            out += _u8(0)
+        else:
+            out += _u8(1)
+            out += b"".join(_u64(obs[k]) for k in OBS_FIELDS)
     elif kind == "Logits":
         out += _u32(f["session"]) + _u32(f["pos"]) + _u32(len(f["logits"]))
         out += b"".join(_f32(x) for x in f["logits"])
@@ -201,6 +217,13 @@ def decode(buf):
             f["memory"] = {k: d.u64() for k in MEMORY_FIELDS}
         else:
             f["memory"] = None
+        # optional obs tail: absent entirely on pre-obs frames
+        if d.at == len(d.b):
+            f["obs"] = None
+        elif d.u8() != 0:
+            f["obs"] = {k: d.u64() for k in OBS_FIELDS}
+        else:
+            f["obs"] = None
     elif kind == "Logits":
         f["session"], f["pos"] = d.u32(), d.u32()
         f["logits"] = [d.f32() for _ in range(d.count(4))]
@@ -264,12 +287,17 @@ def main():
         "reuse_hits": 17, "peak_reserved_bytes": 18,
         "prefix_cached_blocks": 19, "prefix_hits": 20,
     }
+    golden_obs = {
+        "alloc_stalls": 21, "cow_copies": 22, "frames_served": 23,
+        "frame_p50_us": 24, "frame_p90_us": 25, "frame_p99_us": 26,
+        "frame_max_us": 27,
+    }
     check(
         frame("InfoResp", version=1, info=golden_info, buckets=[7],
               supports_batched_decode=True, ffn_weight_bytes=10,
-              memory=golden_mem)
+              memory=golden_mem, obs=golden_obs)
         == bytes(
-            [159, 0, 0, 0, 0x81, 1, 1, 0, 109]
+            [216, 0, 0, 0, 0x81, 1, 1, 0, 109]
             + [b for v in range(1, 9) for b in _u32(v)]  # vocab..head_dim
             + list(_u64(9))                              # n_params
             + [b for v in (1, 2, 3, 4) for b in _u32(v)]  # cache_shape
@@ -278,8 +306,10 @@ def main():
             + list(_u64(10))                             # ffn_weight_bytes
             + [1]                                        # memory present
             + [b for v in range(11, 21) for b in _u64(v)]
+            + [1]                                        # obs present
+            + [b for v in range(21, 28) for b in _u64(v)]
         ),
-        "golden InfoResp with memory tail",
+        "golden InfoResp with memory and obs tails",
     )
 
     # 2. round trips, every frame kind
@@ -297,7 +327,8 @@ def main():
         ("CloseSession", {"session": 4}),
         ("InfoResp", {"version": 1, "info": info, "buckets": [8, 16, 32, 64],
                       "supports_batched_decode": True,
-                      "ffn_weight_bytes": 1 << 20, "memory": None}),
+                      "ffn_weight_bytes": 1 << 20, "memory": None,
+                      "obs": None}),
         ("InfoResp", {"version": 1, "info": info, "buckets": [8, 16, 32, 64],
                       "supports_batched_decode": True,
                       "ffn_weight_bytes": 1 << 20,
@@ -307,7 +338,18 @@ def main():
                                  "blocks_free": 24, "reuse_hits": 7,
                                  "peak_reserved_bytes": 1 << 23,
                                  "prefix_cached_blocks": 5,
-                                 "prefix_hits": 9}}),
+                                 "prefix_hits": 9},
+                      "obs": {"alloc_stalls": 2, "cow_copies": 4,
+                              "frames_served": 1000, "frame_p50_us": 90,
+                              "frame_p90_us": 400, "frame_p99_us": 1500,
+                              "frame_max_us": 9000}}),
+        ("InfoResp", {"version": 1, "info": info, "buckets": [8],
+                      "supports_batched_decode": False,
+                      "ffn_weight_bytes": 0, "memory": None,
+                      "obs": {"alloc_stalls": 0, "cow_copies": 0,
+                              "frames_served": 1, "frame_p50_us": 1,
+                              "frame_p90_us": 1, "frame_p99_us": 1,
+                              "frame_max_us": 1}}),
         ("SessionOpened", {"session": 2}),
         ("Logits", {"session": 3, "pos": 17, "logits": [0.5, -1.25, 3.75e8]}),
         ("LogitsBatch", {"rows": [(1, 4, [1.0, 2.0]), (2, 9, [-0.5])]}),
@@ -345,16 +387,24 @@ def main():
         checks += 1
 
     # 5. backward compatibility: a pre-paging InfoResp (no memory tail at
-    # all) must decode as memory=None — strip the tail and re-frame
+    # all) must decode as memory=None and obs=None — strip both flag
+    # bytes and re-frame
     new = frame("InfoResp", version=1, info=info, buckets=[8],
                 supports_batched_decode=False, ffn_weight_bytes=9,
-                memory=None)
-    legacy_payload = new[4:-1]  # drop the 1-byte None flag
+                memory=None, obs=None)
+    legacy_payload = new[4:-2]  # drop both 1-byte None flags
     legacy = _u32(len(legacy_payload)) + legacy_payload
     kind, out = decode(legacy)
-    check(kind == "InfoResp" and out["memory"] is None,
-          "legacy InfoResp decodes with memory=None")
+    check(kind == "InfoResp" and out["memory"] is None and out["obs"] is None,
+          "legacy InfoResp decodes with memory=None and obs=None")
     check(out["ffn_weight_bytes"] == 9, "legacy tail fields intact")
+    # ... and a pre-obs InfoResp (memory tail present, no obs tail) must
+    # decode as obs=None — strip just the obs flag byte
+    pre_obs_payload = new[4:-1]
+    pre_obs = _u32(len(pre_obs_payload)) + pre_obs_payload
+    kind, out = decode(pre_obs)
+    check(kind == "InfoResp" and out["memory"] is None and out["obs"] is None,
+          "pre-obs InfoResp decodes with obs=None")
 
     print(f"bridge protocol: all {checks} checks pass")
 

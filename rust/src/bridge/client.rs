@@ -70,6 +70,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use super::protocol::{self, ErrCode, Frame, FrameError, PROTOCOL_VERSION};
+use crate::obs::{KvPressure, Obs, ObsStats, SpanKind};
 use crate::runtime::backend::{Backend, TransferMeter};
 use crate::runtime::kv::MemoryStats;
 use crate::runtime::model::{ModelInfo, Session};
@@ -222,6 +223,10 @@ pub struct BridgeBackend {
     /// backoff jitter source (spreads the redial stampede of many
     /// clients hitting one restarted device)
     jitter: RefCell<Rng>,
+    /// the serving side's observability registry, when attached
+    /// (`Backend::attach_obs`): per-opcode frame RTT histograms and
+    /// reconnect spans are recorded into it
+    obs: RefCell<Option<std::sync::Arc<Obs>>>,
 }
 
 impl BridgeBackend {
@@ -252,9 +257,11 @@ impl BridgeBackend {
                 buckets,
                 supports_batched_decode,
                 ffn_weight_bytes,
-                // handshake-time arena stats go stale immediately;
-                // `memory()` re-queries for a fresh snapshot
+                // handshake-time arena and obs stats go stale
+                // immediately; `memory()`/`device_obs()` re-query for a
+                // fresh snapshot
                 memory: _,
+                obs: _,
             } => Ok((conn, version, info, buckets, supports_batched_decode, ffn_weight_bytes)),
             other => Err(unexpected(other, "InfoResp")),
         }
@@ -291,7 +298,18 @@ impl BridgeBackend {
             next_session: Cell::new(1),
             history: RefCell::new(HashMap::new()),
             jitter: RefCell::new(Rng::new(seed | 1)),
+            obs: RefCell::new(None),
         })
+    }
+
+    /// Record one frame round-trip time (µs) for `opcode` into the
+    /// attached registry; silently a no-op when none is attached.
+    fn record_rtt(&self, opcode: u8, t0: std::time::Instant) {
+        if let Some(obs) = self.obs.borrow().as_ref() {
+            if let Some(h) = obs.frame_rtt(opcode) {
+                h.record(t0.elapsed().as_micros() as u64);
+            }
+        }
     }
 
     /// The device address this backend talks to.
@@ -338,6 +356,8 @@ impl BridgeBackend {
         // pipelined closes died with it (the device reclaims those
         // sessions on disconnect, and closed ids are out of `history`)
         let meter = self.conn.borrow().meter;
+        // span start: the moment the outage was detected
+        let span_start = self.obs.borrow().as_ref().map(|o| o.now_ns());
         let mut delay = BACKOFF_BASE_MS;
         let mut last = cause.to_string();
         for attempt in 1..=RECONNECT_ATTEMPTS {
@@ -367,7 +387,20 @@ impl BridgeBackend {
                     match self.replay_sessions(&mut conn) {
                         Ok(()) => {
                             conn.meter.reconnects += 1;
+                            let cycle = conn.meter.reconnects;
                             *self.conn.borrow_mut() = conn;
+                            // the recovery window — outage detected to
+                            // sessions replayed — as a trace span
+                            if let Some(obs) = self.obs.borrow().as_ref() {
+                                let end = obs.now_ns();
+                                obs.trace.record(
+                                    0,
+                                    SpanKind::Reconnect,
+                                    span_start.unwrap_or(end),
+                                    end,
+                                    cycle,
+                                );
+                            }
                             eprintln!(
                                 "bridge: reconnected to {} (attempt {attempt}) after: {cause}",
                                 self.addr
@@ -440,6 +473,7 @@ impl Backend for BridgeBackend {
         let id = self.fresh_session_id();
         let (pos, logits) = self.call(|conn| {
             conn.meter.calls += 1;
+            let t0 = std::time::Instant::now();
             // pipeline OpenSession + Prefill in one flush (one round
             // trip); BOTH replies are drained before either is
             // inspected, so an error on the first never leaves the
@@ -477,6 +511,7 @@ impl Backend for BridgeBackend {
                     self.info.vocab
                 )));
             }
+            self.record_rtt(0x03, t0); // Prefill
             Ok((pos, logits))
         })?;
         self.history.borrow_mut().insert(id, prompt.to_vec());
@@ -495,10 +530,14 @@ impl Backend for BridgeBackend {
         }
         let (pos, logits) = self.call(|conn| {
             conn.meter.calls += 1;
+            let t0 = std::time::Instant::now();
             conn.send(&Frame::Decode { session: id, token })?;
             conn.flush()?;
             match conn.recv_reply()? {
-                Frame::Logits { session: sid, pos, logits } if sid == id => Ok((pos, logits)),
+                Frame::Logits { session: sid, pos, logits } if sid == id => {
+                    self.record_rtt(0x04, t0); // Decode
+                    Ok((pos, logits))
+                }
                 Frame::Logits { session: sid, .. } => Err(BridgeError::Protocol(format!(
                     "logits for session {sid}, asked for {id}"
                 ))),
@@ -523,6 +562,7 @@ impl Backend for BridgeBackend {
         }
         let rows = self.call(|conn| {
             conn.meter.calls += 1;
+            let t0 = std::time::Instant::now();
             conn.send(&Frame::DecodeBatch { sessions: ids.clone(), tokens: tokens.to_vec() })?;
             conn.flush()?;
             let rows = match conn.recv_reply()? {
@@ -544,6 +584,7 @@ impl Backend for BridgeBackend {
                     )));
                 }
             }
+            self.record_rtt(0x05, t0); // DecodeBatch
             Ok(rows)
         })?;
         let mut history = self.history.borrow_mut();
@@ -613,10 +654,14 @@ impl Backend for BridgeBackend {
         }
         let fetched = self.call(|conn| {
             conn.meter.calls += 1;
+            let t0 = std::time::Instant::now();
             conn.send(&Frame::Info { version: PROTOCOL_VERSION })?;
             conn.flush()?;
             match conn.recv_reply()? {
-                Frame::InfoResp { memory, .. } => Ok(memory),
+                Frame::InfoResp { memory, .. } => {
+                    self.record_rtt(0x01, t0); // Info
+                    Ok(memory)
+                }
                 other => Err(unexpected(other, "InfoResp")),
             }
         });
@@ -635,6 +680,50 @@ impl Backend for BridgeBackend {
 
     fn transfer_meter(&self) -> Option<TransferMeter> {
         Some(self.conn.borrow().meter)
+    }
+
+    /// Adopt the serving side's registry: frame RTTs and reconnect
+    /// spans land in the engine's own histograms and trace ring.
+    fn attach_obs(&self, obs: &std::sync::Arc<Obs>) {
+        *self.obs.borrow_mut() = Some(std::sync::Arc::clone(obs));
+    }
+
+    /// The device's arena pressure, read out of the `InfoResp` obs tail
+    /// (same round trip as [`BridgeBackend::device_obs`]).
+    fn kv_pressure(&self) -> Option<KvPressure> {
+        self.device_obs().map(|o| KvPressure {
+            alloc_stalls: o.alloc_stalls,
+            cow_copies: o.cow_copies,
+        })
+    }
+
+    /// The device daemon's own observability summary, fetched fresh:
+    /// `Info` doubles as the obs query exactly as it does for `memory`.
+    fn device_obs(&self) -> Option<ObsStats> {
+        // defensive re-entrancy guard (Backend methods take &self)
+        if self.conn.try_borrow_mut().is_err() {
+            return None;
+        }
+        let fetched = self.call(|conn| {
+            conn.meter.calls += 1;
+            let t0 = std::time::Instant::now();
+            conn.send(&Frame::Info { version: PROTOCOL_VERSION })?;
+            conn.flush()?;
+            match conn.recv_reply()? {
+                Frame::InfoResp { obs, .. } => {
+                    self.record_rtt(0x01, t0); // Info
+                    Ok(obs)
+                }
+                other => Err(unexpected(other, "InfoResp")),
+            }
+        });
+        match fetched {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("bridge: device obs query failed: {e:#}");
+                None
+            }
+        }
     }
 }
 

@@ -39,6 +39,7 @@ use std::thread::{self, JoinHandle};
 use anyhow::Result;
 
 use super::protocol::{self, ErrCode, Frame, FrameError, LogitsRow, PROTOCOL_VERSION};
+use crate::obs::{Hist, Obs};
 use crate::runtime::backend::Backend;
 use crate::runtime::model::{LlmRuntime, Session};
 
@@ -70,6 +71,9 @@ struct DeviceShared {
     /// device restart to clients: connection reset, all state gone
     conns: Mutex<HashMap<u64, TcpStream>>,
     next_conn: AtomicU64,
+    /// daemon-side observability: the frame service-time histogram that
+    /// travels back in the `InfoResp` obs tail
+    obs: Obs,
 }
 
 /// Running daemon: address, session gauge, and the acceptor to reap.
@@ -142,6 +146,7 @@ pub fn spawn_on(
         open_sessions: AtomicUsize::new(0),
         conns: Mutex::new(HashMap::new()),
         next_conn: AtomicU64::new(0),
+        obs: Obs::new(),
     });
     let acceptor = {
         let shared = Arc::clone(&shared);
@@ -181,8 +186,16 @@ fn handle_conn(shared: &DeviceShared, stream: TcpStream) {
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "?".to_string());
     let mut sessions: HashMap<u32, Option<Session>> = HashMap::new();
-    let result = conn_loop(shared, stream, &mut sessions);
+    let conn_hist = Hist::new();
+    let result = conn_loop(shared, stream, &mut sessions, &conn_hist);
     shared.open_sessions.fetch_sub(sessions.len(), Ordering::Relaxed);
+    if conn_hist.count() > 0 {
+        let s = conn_hist.summary();
+        eprintln!(
+            "device client {peer}: served {} frames, service p50 {:.0}µs p99 {:.0}µs max {}µs",
+            s.count, s.p50, s.p99, s.max
+        );
+    }
     if let Err(e) = result {
         eprintln!("device client {peer}: {e:#}");
     }
@@ -192,6 +205,7 @@ fn conn_loop(
     shared: &DeviceShared,
     stream: TcpStream,
     sessions: &mut HashMap<u32, Option<Session>>,
+    conn_hist: &Hist,
 ) -> Result<()> {
     // per-call round trips live on the latency of small frames
     stream.set_nodelay(true)?;
@@ -201,7 +215,11 @@ fn conn_loop(
         match protocol::read_frame(&mut reader) {
             Ok(None) => return Ok(()), // clean hangup
             Ok(Some((frame, _bytes))) => {
+                let t0 = std::time::Instant::now();
                 let reply = respond(shared, sessions, frame);
+                let us = t0.elapsed().as_micros() as u64;
+                shared.obs.frame_service_us.record(us);
+                conn_hist.record(us);
                 match protocol::write_frame(&mut writer, &reply) {
                     Ok(_) => {}
                     Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
@@ -276,6 +294,9 @@ fn respond(
                 // client's memory-stats query, so the coordinator's
                 // admission gate sees current device-side figures
                 memory: rt.memory(),
+                // and the obs tail carries the daemon's frame
+                // service-time summary plus arena pressure counters
+                obs: Some(shared.obs.device_stats(rt.kv_pressure())),
             }
         }
         Frame::OpenSession { session } => {
@@ -446,6 +467,24 @@ mod tests {
             Frame::Closed { session: 5 }
         ));
         assert_eq!(dev.active_sessions(), 0);
+        dev.shutdown();
+    }
+
+    #[test]
+    fn info_resp_carries_service_time_obs_tail() {
+        let dev = spawn_tiny(DeviceConfig::default());
+        let mut c = TcpStream::connect(dev.addr()).unwrap();
+        // do some work first so the histogram has samples
+        ask(&mut c, &Frame::OpenSession { session: 1 });
+        ask(&mut c, &Frame::Prefill { session: 1, prompt: vec![1, 2, 3] });
+        ask(&mut c, &Frame::Decode { session: 1, token: 7 });
+        let obs = match ask(&mut c, &Frame::Info { version: PROTOCOL_VERSION }) {
+            Frame::InfoResp { obs, .. } => obs.expect("device always meters itself"),
+            other => panic!("want InfoResp, got {}", other.name()),
+        };
+        assert!(obs.frames_served >= 3, "{obs:?}");
+        assert!(obs.frame_p50_us <= obs.frame_p99_us, "{obs:?}");
+        assert!(obs.frame_p99_us <= obs.frame_max_us, "{obs:?}");
         dev.shutdown();
     }
 

@@ -40,6 +40,7 @@
 use std::fmt;
 use std::io::{Read, Write};
 
+use crate::obs::ObsStats;
 use crate::runtime::kv::MemoryStats;
 use crate::runtime::model::ModelInfo;
 
@@ -150,7 +151,11 @@ pub enum Frame {
     /// negotiate the tail per-connection without refusing old peers
     /// outright). The prefix-sharing extension grew the tail from
     /// eight to ten `u64`s (`prefix_cached_blocks`, `prefix_hits`)
-    /// under the same rule.
+    /// under the same rule, and the observability extension appended a
+    /// *second* flagged tail after it — `obs`, the device's frame
+    /// service-time histogram summary plus KV pressure counters
+    /// ([`ObsStats`], seven `u64`s) — so a pre-obs device's frames end
+    /// after the memory tail and decode as `obs: None`.
     InfoResp {
         version: u8,
         info: ModelInfo,
@@ -160,6 +165,9 @@ pub enum Frame {
         ffn_weight_bytes: u64,
         /// `None` when the hosted backend has no paged KV arena
         memory: Option<MemoryStats>,
+        /// `None` from pre-obs devices (shorter payload) or daemons
+        /// that don't meter themselves
+        obs: Option<ObsStats>,
     },
     /// `OpenSession` acknowledged
     SessionOpened { session: u32 },
@@ -349,6 +357,7 @@ fn encode_payload(f: &Frame) -> Vec<u8> {
             supports_batched_decode,
             ffn_weight_bytes,
             memory,
+            obs,
         } => {
             e = Enc::new(OP_INFO_RESP);
             e.u8(*version);
@@ -372,6 +381,20 @@ fn encode_payload(f: &Frame) -> Vec<u8> {
                     e.u64(m.peak_reserved_bytes);
                     e.u64(m.prefix_cached_blocks);
                     e.u64(m.prefix_hits);
+                }
+            }
+            // second backward-compatible tail: observability figures
+            match obs {
+                None => e.u8(0),
+                Some(o) => {
+                    e.u8(1);
+                    e.u64(o.alloc_stalls);
+                    e.u64(o.cow_copies);
+                    e.u64(o.frames_served);
+                    e.u64(o.frame_p50_us);
+                    e.u64(o.frame_p90_us);
+                    e.u64(o.frame_p99_us);
+                    e.u64(o.frame_max_us);
                 }
             }
         }
@@ -602,6 +625,23 @@ fn decode_payload(payload: &[u8]) -> Result<Frame, String> {
             } else {
                 None
             };
+            // pre-obs peers end after the memory tail; the obs tail is
+            // a second flagged optional extension under the same rule
+            let obs = if d.at_end() {
+                None
+            } else if d.u8()? != 0 {
+                Some(ObsStats {
+                    alloc_stalls: d.u64()?,
+                    cow_copies: d.u64()?,
+                    frames_served: d.u64()?,
+                    frame_p50_us: d.u64()?,
+                    frame_p90_us: d.u64()?,
+                    frame_p99_us: d.u64()?,
+                    frame_max_us: d.u64()?,
+                })
+            } else {
+                None
+            };
             Frame::InfoResp {
                 version,
                 info,
@@ -609,6 +649,7 @@ fn decode_payload(payload: &[u8]) -> Result<Frame, String> {
                 supports_batched_decode,
                 ffn_weight_bytes,
                 memory,
+                obs,
             }
         }
         OP_SESSION_OPENED => Frame::SessionOpened { session: d.u32()? },
@@ -732,6 +773,7 @@ mod tests {
                 supports_batched_decode: true,
                 ffn_weight_bytes: 1 << 20,
                 memory: None,
+                obs: None,
             },
             Frame::InfoResp {
                 version: PROTOCOL_VERSION,
@@ -750,6 +792,34 @@ mod tests {
                     peak_reserved_bytes: 1 << 23,
                     prefix_cached_blocks: 5,
                     prefix_hits: 9,
+                }),
+                obs: Some(ObsStats {
+                    alloc_stalls: 2,
+                    cow_copies: 6,
+                    frames_served: 1234,
+                    frame_p50_us: 90,
+                    frame_p90_us: 400,
+                    frame_p99_us: 950,
+                    frame_max_us: 4100,
+                }),
+            },
+            // obs without memory: a stateless hosted backend that still
+            // meters its frame service times
+            Frame::InfoResp {
+                version: PROTOCOL_VERSION,
+                info: sample_info(),
+                buckets: vec![8],
+                supports_batched_decode: false,
+                ffn_weight_bytes: 0,
+                memory: None,
+                obs: Some(ObsStats {
+                    alloc_stalls: 0,
+                    cow_copies: 0,
+                    frames_served: 3,
+                    frame_p50_us: 10,
+                    frame_p90_us: 20,
+                    frame_p99_us: 30,
+                    frame_max_us: 31,
                 }),
             },
             Frame::SessionOpened { session: 2 },
@@ -820,8 +890,9 @@ mod tests {
             enc(&Frame::Error { code: ErrCode::Session, message: "x".into() }),
             [5, 0, 0, 0, 0xEE, 2, 1, 0, 0x78]
         );
-        // InfoResp with the paged-KV memory tail — the literal produced
-        // and asserted by the Python mirror (fields 1..19 in wire order)
+        // InfoResp with both flagged tails (paged-KV memory, then obs)
+        // — the literal produced and asserted by the Python mirror
+        // (fields 1..27 in wire order)
         let golden_info = Frame::InfoResp {
             version: 1,
             info: ModelInfo {
@@ -852,9 +923,18 @@ mod tests {
                 prefix_cached_blocks: 19,
                 prefix_hits: 20,
             }),
+            obs: Some(ObsStats {
+                alloc_stalls: 21,
+                cow_copies: 22,
+                frames_served: 23,
+                frame_p50_us: 24,
+                frame_p90_us: 25,
+                frame_p99_us: 26,
+                frame_max_us: 27,
+            }),
         };
         let want: Vec<u8> = vec![
-            159, 0, 0, 0, // length prefix
+            216, 0, 0, 0, // length prefix
             0x81, // opcode
             1, // version
             1, 0, 109, // name "m"
@@ -876,17 +956,25 @@ mod tests {
             18, 0, 0, 0, 0, 0, 0, 0, // peak_reserved_bytes
             19, 0, 0, 0, 0, 0, 0, 0, // prefix_cached_blocks
             20, 0, 0, 0, 0, 0, 0, 0, // prefix_hits
+            1, // obs present
+            21, 0, 0, 0, 0, 0, 0, 0, // alloc_stalls
+            22, 0, 0, 0, 0, 0, 0, 0, // cow_copies
+            23, 0, 0, 0, 0, 0, 0, 0, // frames_served
+            24, 0, 0, 0, 0, 0, 0, 0, // frame_p50_us
+            25, 0, 0, 0, 0, 0, 0, 0, // frame_p90_us
+            26, 0, 0, 0, 0, 0, 0, 0, // frame_p99_us
+            27, 0, 0, 0, 0, 0, 0, 0, // frame_max_us
         ];
         assert_eq!(enc(&golden_info), want);
     }
 
     /// A pre-paging peer's `InfoResp` ends right after
     /// `ffn_weight_bytes`; the decoder must accept it as `memory: None`
-    /// instead of rejecting the shorter payload.
+    /// (and `obs: None`) instead of rejecting the shorter payload.
     #[test]
     fn info_resp_without_memory_tail_still_decodes() {
-        // encode the new frame, then strip the 1-byte `memory: None`
-        // flag to reconstruct the legacy payload byte-for-byte
+        // encode the new frame, then strip the two 1-byte `None` flags
+        // (memory, obs) to reconstruct the legacy payload byte-for-byte
         let f = Frame::InfoResp {
             version: PROTOCOL_VERSION,
             info: sample_info(),
@@ -894,18 +982,60 @@ mod tests {
             supports_batched_decode: false,
             ffn_weight_bytes: 42,
             memory: None,
+            obs: None,
         };
         let mut buf = Vec::new();
         write_frame(&mut buf, &f).unwrap();
-        let payload_len = buf.len() - 4 - 1; // minus prefix, minus flag byte
+        let payload_len = buf.len() - 4 - 2; // minus prefix, minus both flags
         let mut legacy = Vec::new();
         legacy.extend_from_slice(&(payload_len as u32).to_le_bytes());
         legacy.extend_from_slice(&buf[4..4 + payload_len]);
         let mut cur = Cursor::new(legacy);
         let (out, _) = read_frame(&mut cur).unwrap().expect("legacy frame");
         match out {
-            Frame::InfoResp { ffn_weight_bytes: 42, memory: None, .. } => {}
+            Frame::InfoResp { ffn_weight_bytes: 42, memory: None, obs: None, .. } => {}
             other => panic!("want legacy InfoResp with memory: None, got {other:?}"),
+        }
+    }
+
+    /// A paging-era but pre-obs peer's `InfoResp` ends right after the
+    /// memory tail; the decoder must keep the memory figures and read
+    /// `obs: None` rather than rejecting the payload.
+    #[test]
+    fn info_resp_without_obs_tail_still_decodes() {
+        let f = Frame::InfoResp {
+            version: PROTOCOL_VERSION,
+            info: sample_info(),
+            buckets: vec![8, 16],
+            supports_batched_decode: true,
+            ffn_weight_bytes: 42,
+            memory: Some(MemoryStats {
+                total_bytes: 1,
+                free_bytes: 2,
+                reserved_bytes: 3,
+                block_tokens: 4,
+                blocks_total: 5,
+                blocks_free: 6,
+                reuse_hits: 7,
+                peak_reserved_bytes: 8,
+                prefix_cached_blocks: 9,
+                prefix_hits: 10,
+            }),
+            obs: None,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let payload_len = buf.len() - 4 - 1; // minus prefix, minus obs flag
+        let mut pre_obs = Vec::new();
+        pre_obs.extend_from_slice(&(payload_len as u32).to_le_bytes());
+        pre_obs.extend_from_slice(&buf[4..4 + payload_len]);
+        let mut cur = Cursor::new(pre_obs);
+        let (out, _) = read_frame(&mut cur).unwrap().expect("pre-obs frame");
+        match out {
+            Frame::InfoResp { memory: Some(m), obs: None, .. } => {
+                assert_eq!(m.prefix_hits, 10);
+            }
+            other => panic!("want pre-obs InfoResp with obs: None, got {other:?}"),
         }
     }
 

@@ -42,6 +42,7 @@ use super::sampler::{sample, Sampling};
 use super::tokenizer;
 use crate::bridge::client::BridgeError;
 use crate::models::{LlmArch, SparseStrategy, DENSE};
+use crate::obs::{Obs, SpanKind};
 use crate::runtime::kv::{KvExhausted, MemoryStats, KV_EXHAUSTED_MARKER};
 use crate::runtime::model::{LlmRuntime, Session};
 use crate::sim::engine::Simulator;
@@ -282,6 +283,11 @@ struct QueuedRequest {
     /// `round_seq` when the entry (re-)entered the queue — the aging
     /// clock for the batch class and the resume grace window
     enqueued_seq: u64,
+    /// obs-clock nanoseconds when the entry (re-)entered the queue —
+    /// feeds the queue-wait histogram per waiting *episode* (a
+    /// preemption victim's requeue starts a fresh episode, so queue
+    /// wait never absorbs the decode time it already spent live)
+    enqueued_ns: u64,
     /// prompt tokens already warmed into the prefix cache by chunked
     /// prefill; admission resumes slicing from here
     warmed: usize,
@@ -392,7 +398,7 @@ fn pick_victim(remaining: &[usize]) -> usize {
 
 /// Fold a preempted live session back into a queue entry that resumes
 /// — same channel, same emitted tokens — instead of starting over.
-fn requeue_victim(victim: ActiveSession, seq: u64) -> QueuedRequest {
+fn requeue_victim(victim: ActiveSession, seq: u64, now_ns: u64) -> QueuedRequest {
     QueuedRequest {
         req: Request {
             id: victim.id,
@@ -405,6 +411,7 @@ fn requeue_victim(victim: ActiveSession, seq: u64) -> QueuedRequest {
         plan: None,
         class: victim.class,
         enqueued_seq: seq,
+        enqueued_ns: now_ns,
         warmed: 0,
         resume: Some(ResumeState {
             prompt_tokens: victim.prompt_tokens,
@@ -442,11 +449,20 @@ pub struct Engine {
     /// drives batch-class aging and the resume grace window
     round_seq: u64,
     metrics: EngineMetrics,
+    /// latency histograms + lifecycle trace ring; `Arc` so the server
+    /// can export stats/traces without borrowing the engine, and so
+    /// the backend (via `attach_obs`) can feed frame RTTs into the
+    /// same registry
+    obs: Arc<Obs>,
 }
 
 impl Engine {
     pub fn new(runtime: LlmRuntime, cfg: EngineConfig) -> Self {
         let sim = Simulator::new(&cfg.sim_arch, &cfg.sim_strategy, Memory::Hbm);
+        let obs = Arc::new(Obs::new());
+        // remote backends record per-frame RTTs and reconnect spans
+        // into the engine's registry; in-process backends ignore this
+        runtime.attach_obs(&obs);
         Engine {
             runtime,
             sim,
@@ -465,6 +481,7 @@ impl Engine {
             next_id: 1,
             round_seq: 0,
             metrics: EngineMetrics::default(),
+            obs,
         }
     }
 
@@ -514,6 +531,10 @@ impl Engine {
             return RequestHandle { id, cancel, events: rx };
         }
         self.metrics.submitted += 1;
+        let now = self.obs.now_ns();
+        // detail = queue depth at arrival, so a trace shows the
+        // backlog each request landed behind
+        self.obs.trace.mark(id, SpanKind::Submitted, now, self.queue.len() as u64);
         self.queue.push_back(QueuedRequest {
             req: Request {
                 id,
@@ -526,6 +547,7 @@ impl Engine {
             plan: None,
             class,
             enqueued_seq: self.round_seq,
+            enqueued_ns: now,
             warmed: 0,
             resume: None,
         });
@@ -567,6 +589,14 @@ impl Engine {
         &self.metrics
     }
 
+    /// The engine's observability registry: latency histograms
+    /// (queue wait, TTFT, inter-token, round duration, frame RTTs)
+    /// plus the request-lifecycle trace ring. Cloning the `Arc` lets
+    /// the server export stats and traces while the engine runs.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
+    }
+
     /// Drop every queued and live request (server error recovery /
     /// shutdown); each one's channel receives `Event::Error(msg)`, so
     /// no waiting client needs an id-indexed routing table.
@@ -593,6 +623,7 @@ impl Engine {
             if self.queue[i].cancel.load(Ordering::Relaxed) {
                 let q = self.queue.remove(i).expect("index in bounds");
                 self.metrics.cancelled += 1;
+                self.obs.trace.mark(q.req.id, SpanKind::Cancelled, self.obs.now_ns(), 0);
                 let _ = q.events.send(Event::Error("cancelled".to_string()));
             } else {
                 i += 1;
@@ -604,6 +635,9 @@ impl Engine {
                 let mut a = self.active.remove(i);
                 self.metrics.cancelled += 1;
                 self.runtime.end_session(&mut a.session);
+                self.obs
+                    .trace
+                    .mark(a.id, SpanKind::Cancelled, self.obs.now_ns(), a.generated.len() as u64);
                 a.send(Event::Error("cancelled".to_string()));
             } else {
                 i += 1;
@@ -713,6 +747,7 @@ impl Engine {
                 // cancelled while queued: never prefilled, costs nothing
                 let q = self.queue.remove(idx).expect("index in bounds");
                 self.metrics.cancelled += 1;
+                self.obs.trace.mark(q.req.id, SpanKind::Cancelled, self.obs.now_ns(), 0);
                 let _ = q.events.send(Event::Error("cancelled".to_string()));
                 continue;
             }
@@ -803,6 +838,7 @@ impl Engine {
                     let target = warmed + self.cfg_prefill_chunk;
                     let slice = tokens[..target].to_vec();
                     admitted += 1;
+                    let t_chunk = self.obs.now_ns();
                     match self.runtime.prefill_from(&slice, shared.min(target)) {
                         Ok((_, mut s)) => {
                             // release immediately: the slice's full
@@ -811,6 +847,14 @@ impl Engine {
                             // admission) adopt instead of recomputing
                             self.runtime.end_session(&mut s);
                             self.queue[idx].warmed = target;
+                            // detail = prompt tokens warmed so far
+                            self.obs.trace.record(
+                                self.queue[idx].req.id,
+                                SpanKind::PrefillChunk,
+                                t_chunk,
+                                self.obs.now_ns(),
+                                target as u64,
+                            );
                             continue;
                         }
                         Err(e) if is_kv_exhausted(&e) => {
@@ -839,8 +883,32 @@ impl Engine {
             let mut q = self.queue.remove(idx).expect("index in bounds");
             admitted += 1;
             let (tokens, max_new) = q.plan.take().expect("planned above");
+            let enq_ns = q.enqueued_ns;
+            let was_resume = q.resume.is_some();
             match self.admit(q, tokens, max_new, shared)? {
                 Admitted::Active(a) => {
+                    let now = self.obs.now_ns();
+                    self.obs.queue_wait_us.record(now.saturating_sub(enq_ns) / 1_000);
+                    self.obs.trace.record(a.id, SpanKind::Queued, enq_ns, now, 0);
+                    if was_resume {
+                        // the whole requeue→re-prefill stall, so a trace
+                        // shows what the preemption cost the client;
+                        // detail = tokens already generated pre-eviction
+                        self.obs.trace.record(
+                            a.id,
+                            SpanKind::Resumed,
+                            enq_ns,
+                            now,
+                            a.generated.len() as u64 + 1,
+                        );
+                    } else {
+                        self.obs.trace.mark(a.id, SpanKind::Admitted, now, 0);
+                        // TTFT = submit → prefill done (the first token
+                        // streams at the next decode round, but it was
+                        // sampled here); resumes keep their original TTFT
+                        self.obs.ttft_us.record(now.saturating_sub(enq_ns) / 1_000);
+                        self.obs.trace.record(a.id, SpanKind::FirstToken, enq_ns, now, 0);
+                    }
                     self.active.push(*a);
                     if let Some(m) = &mut mem {
                         // prefill drew ceil(prompt/bt) blocks from the
@@ -861,7 +929,13 @@ impl Engine {
                     }
                 }
                 // instant retirement released its blocks; snapshot holds
-                Admitted::Done(c) => retired.push(c),
+                Admitted::Done(c) => {
+                    let now = self.obs.now_ns();
+                    self.obs.queue_wait_us.record(now.saturating_sub(enq_ns) / 1_000);
+                    self.obs.trace.record(c.id, SpanKind::Queued, enq_ns, now, 0);
+                    self.obs.trace.mark(c.id, SpanKind::Done, now, c.n_generated as u64);
+                    retired.push(c);
+                }
                 Admitted::Requeue(q) => {
                     // the arena refused prefill despite the gate (blocks
                     // held by work the gate cannot see, or a stale
@@ -918,6 +992,7 @@ impl Engine {
             }
 
             let t0 = Instant::now();
+            let round_start_ns = self.obs.now_ns();
             // decode with a preemption loop: a KV-exhausted round (the
             // arena could not grow a session — only reachable when the
             // arena is over-committed behind the admission gate's back)
@@ -966,8 +1041,20 @@ impl Engine {
                         self.metrics.preempted += 1;
                         self.metrics.requeued += 1;
                         self.runtime.end_session(&mut victim.session);
+                        let now = self.obs.now_ns();
+                        // Preempted covers the failed round up to the
+                        // eviction; Requeued marks the instant the
+                        // victim re-enters the queue (front)
+                        self.obs.trace.record(
+                            victim.id,
+                            SpanKind::Preempted,
+                            round_start_ns,
+                            now,
+                            victim.generated.len() as u64,
+                        );
+                        self.obs.trace.mark(victim.id, SpanKind::Requeued, now, 0);
                         let seq = self.round_seq;
-                        self.queue.push_front(requeue_victim(victim, seq));
+                        self.queue.push_front(requeue_victim(victim, seq, now));
                         if self.active.is_empty() {
                             break Vec::new();
                         }
@@ -986,6 +1073,24 @@ impl Engine {
                 self.metrics.decode_wall_s += round_wall;
                 self.metrics.sim_decode_us += round_us;
 
+                // round duration + one ITL sample per live session:
+                // under continuous batching every session's inter-token
+                // gap *is* the round it decoded in (plus any preemption
+                // retries, which the wall clock already includes).
+                // detail = batch size, req_id 0 = engine-level span.
+                let wall_us = (round_wall * 1e6) as u64;
+                self.obs.round_us.record(wall_us);
+                for _ in 0..self.round_tokens.len() {
+                    self.obs.itl_us.record(wall_us);
+                }
+                self.obs.trace.record(
+                    0,
+                    SpanKind::DecodeRound,
+                    round_start_ns,
+                    self.obs.now_ns(),
+                    self.round_tokens.len() as u64,
+                );
+
                 // 3. sample next tokens, retire finished sessions
                 let mut still_active = Vec::with_capacity(self.active.len());
                 for (mut a, l) in self.active.drain(..).zip(logits) {
@@ -1000,6 +1105,12 @@ impl Engine {
                         // release backend-side state (the bridge closes the
                         // device session) before the completion is built
                         self.runtime.end_session(&mut a.session);
+                        self.obs.trace.mark(
+                            a.id,
+                            SpanKind::Done,
+                            self.obs.now_ns(),
+                            a.generated.len() as u64,
+                        );
                         retired.push(Self::finish(a));
                     } else {
                         still_active.push(a);
@@ -1033,6 +1144,7 @@ impl Engine {
             cancel,
             class,
             enqueued_seq,
+            enqueued_ns,
             warmed,
             resume,
             plan: _,
@@ -1053,6 +1165,9 @@ impl Engine {
                     plan: Some((tokens, max_new)),
                     class,
                     enqueued_seq,
+                    // same waiting episode: the gate bounced it back,
+                    // the client has seen nothing yet
+                    enqueued_ns,
                     warmed,
                     resume,
                 }));

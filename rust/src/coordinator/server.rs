@@ -54,6 +54,7 @@ use anyhow::Result;
 
 use super::engine::{Completion, Engine, Event, Priority, RequestHandle, TokenEvent};
 use super::sampler::Sampling;
+use crate::obs::chrome_trace_json;
 use crate::util::json::Json;
 
 /// Protocol-level cap on `max_new_tokens`; requests beyond it are
@@ -76,6 +77,9 @@ pub enum ServerRequest {
     /// v2: cancel an in-flight request by id
     Cancel(u64),
     Stats,
+    /// v2: export the last N lifecycle spans as one Chrome-trace-format
+    /// JSON line (`{"trace": N}` — the `edgellm trace-dump` CLI's query)
+    Trace(usize),
 }
 
 /// Parse and validate one request line. Pure — no engine needed — so the
@@ -93,6 +97,15 @@ pub fn parse_request(line: &str) -> Result<ServerRequest, String> {
             return Err(format!("'cancel' must be a non-negative integer id: {id}"));
         }
         return Ok(ServerRequest::Cancel(id as u64));
+    }
+    if let Some(v) = req.get("trace") {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| "'trace' must be a span count".to_string())?;
+        if n < 1.0 || n.fract() != 0.0 {
+            return Err(format!("'trace' must be a positive integer span count: {n}"));
+        }
+        return Ok(ServerRequest::Trace(n as usize));
     }
     let prompt = req
         .get("prompt")
@@ -257,6 +270,23 @@ fn stats_json(engine: &Engine) -> Json {
         pairs.push(("device_calls", Json::Num(t.calls as f64)));
         pairs.push(("device_reconnects", Json::Num(t.reconnects as f64)));
     }
+    // arena pressure counters plus — for a bridged backend — the device
+    // daemon's own frame-service summary. One query per deployment
+    // shape: a remote backend answers `device_obs()` (a single `Info`
+    // round trip carries pressure and service percentiles together),
+    // an in-process backend answers `kv_pressure()` straight from its
+    // arena and has no device section.
+    if let Some(o) = engine.runtime().device_obs() {
+        pairs.push(("kv_alloc_stalls", Json::Num(o.alloc_stalls as f64)));
+        pairs.push(("kv_cow_copies", Json::Num(o.cow_copies as f64)));
+        pairs.push(("device", o.to_json()));
+    } else if let Some(p) = engine.runtime().kv_pressure() {
+        pairs.push(("kv_alloc_stalls", Json::Num(p.alloc_stalls as f64)));
+        pairs.push(("kv_cow_copies", Json::Num(p.cow_copies as f64)));
+    }
+    // serving-side latency histograms (always present; empty hists
+    // report count 0 with zeroed percentiles)
+    pairs.push(("latency", engine.obs().latency_json()));
     Json::obj(pairs)
 }
 
@@ -273,6 +303,7 @@ pub fn process_line(engine: &mut Engine, line: &str) -> Json {
     match parse_request(line) {
         Err(msg) => error_json(msg),
         Ok(ServerRequest::Stats) => stats_json(engine),
+        Ok(ServerRequest::Trace(n)) => chrome_trace_json(&engine.obs().trace.last(n)),
         Ok(ServerRequest::Cancel(id)) => {
             let found = engine.cancel(id);
             cancel_json(id, found)
@@ -500,6 +531,16 @@ fn handle_client(shared: &Shared, stream: TcpStream) -> Result<()> {
                 drop(engine);
                 writeln!(writer, "{reply}")?;
             }
+            Ok(ServerRequest::Trace(n)) => {
+                // clone the Arc under the lock, snapshot the ring after
+                // dropping it — exporting a big trace must not stall
+                // the scheduler round in progress
+                let obs = {
+                    let engine = crate::util::lock_unpoisoned(&shared.engine);
+                    Arc::clone(engine.obs())
+                };
+                writeln!(writer, "{}", chrome_trace_json(&obs.trace.last(n)))?;
+            }
             Ok(ServerRequest::Cancel(id)) => {
                 let found = crate::util::lock_unpoisoned(&shared.engine).cancel(id);
                 writeln!(writer, "{}", cancel_json(id, found))?;
@@ -596,6 +637,57 @@ mod tests {
         assert!(parse_request(r#"{"cancel": -1}"#).is_err());
         assert!(parse_request(r#"{"cancel": 1.5}"#).is_err());
         assert!(parse_request(r#"{"cancel": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_request_trace_surface() {
+        assert!(matches!(
+            parse_request(r#"{"trace": 256}"#),
+            Ok(ServerRequest::Trace(256))
+        ));
+        assert!(parse_request(r#"{"trace": 0}"#).is_err());
+        assert!(parse_request(r#"{"trace": -4}"#).is_err());
+        assert!(parse_request(r#"{"trace": 1.5}"#).is_err());
+        assert!(parse_request(r#"{"trace": true}"#).is_err());
+    }
+
+    #[test]
+    fn stats_line_carries_latency_and_trace_exports_lifecycle() {
+        use super::super::engine::{Engine, EngineConfig};
+        use crate::runtime::model::LlmRuntime;
+
+        let mut eng = Engine::new(LlmRuntime::reference_tiny(), EngineConfig::default());
+        let reply = process_line(&mut eng, r#"{"prompt":"observable","max_new_tokens":4}"#);
+        assert!(reply.get("error").is_none(), "generate failed: {reply}");
+
+        // stats: nested latency histograms with one admission recorded
+        let stats = process_line(&mut eng, r#"{"stats": true}"#);
+        let lat = stats.get("latency").expect("stats carries latency");
+        for h in ["queue_wait_us", "ttft_us", "itl_us", "round_us"] {
+            let c = lat
+                .get(h)
+                .and_then(|v| v.get("count"))
+                .and_then(|v| v.as_f64())
+                .expect("histogram summary shape");
+            assert!(c >= 1.0, "{h} recorded nothing");
+        }
+        // in-process backend: arena pressure counters, no device section
+        assert!(stats.get("kv_alloc_stalls").is_some());
+        assert!(stats.get("device").is_none());
+
+        // trace: the request's lifecycle is exportable as Chrome JSON
+        let trace = process_line(&mut eng, r#"{"trace": 64}"#);
+        let events = trace
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("chrome trace shape");
+        let names: Vec<&str> = events
+            .iter()
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        for want in ["submitted", "queued", "admitted", "first_token", "decode_round", "done"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
     }
 
     #[test]

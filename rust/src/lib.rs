@@ -5,6 +5,7 @@ pub mod compiler;
 pub mod coordinator;
 pub mod fp;
 pub mod models;
+pub mod obs;
 pub mod pack;
 pub mod quant;
 pub mod runtime;

@@ -12,6 +12,9 @@
 //!   simulate     --arch glm|qwen|tiny --strategy dense|s1|s2|s3 --mem hbm|ddr
 //!                [--ctx N] [--prefill N] [--batch B]
 //!   info         [--backend auto|ref|sim|bridge|artifacts] [--device HOST:PORT]
+//!   trace-dump   [--addr HOST:PORT] [--last N] [--out FILE]
+//!                (pull the serving engine's lifecycle trace as Chrome
+//!                trace-format JSON — load into chrome://tracing or Perfetto)
 
 use edgellm::bridge::client::BridgeBackend;
 use edgellm::bridge::device::{self, DeviceConfig};
@@ -38,6 +41,7 @@ fn main() {
         "generate" => cmd_generate(&args),
         "simulate" => cmd_simulate(&args),
         "info" => cmd_info(&args),
+        "trace-dump" => cmd_trace_dump(&args),
         _ => {
             print_help();
             Ok(())
@@ -57,7 +61,8 @@ fn print_help() {
          edgellm device-serve --addr {DEFAULT_DEVICE_ADDR} --backend sim\n  \
          edgellm generate --prompt \"Hello\" --max-new 32\n  \
          edgellm simulate --arch glm --strategy s3 --ctx 128 --batch 8\n  \
-         edgellm info\n\n\
+         edgellm info\n  \
+         edgellm trace-dump --addr 127.0.0.1:7077 --last 4096 --out trace.json\n\n\
          Backends: --backend ref (pure-Rust reference model, default when\n\
          no artifacts are present; paged KV arena via --kv-block-tokens N\n\
          [64] and --kv-pool-blocks N [0 = auto]), --backend sim (VCU128\n\
@@ -339,6 +344,42 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         e.energy_j,
         1.0 / e.energy_j
     );
+    Ok(())
+}
+
+/// Pull the serving engine's request-lifecycle trace over the line
+/// protocol (`{"trace": N}`) and write it out as Chrome trace-format
+/// JSON — one self-contained file for chrome://tracing / Perfetto.
+fn cmd_trace_dump(args: &Args) -> anyhow::Result<()> {
+    use std::io::{BufRead, BufReader, Write as _};
+
+    let addr = args.get_or("addr", "127.0.0.1:7077");
+    let last = args.get_usize("last", 4096).max(1);
+    let stream = std::net::TcpStream::connect(&addr)
+        .map_err(|e| anyhow::anyhow!("connect to serving endpoint {addr}: {e}"))?;
+    let mut writer = stream.try_clone()?;
+    writeln!(writer, "{{\"trace\": {last}}}")?;
+    writer.flush()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    let line = line.trim();
+    if line.is_empty() {
+        anyhow::bail!("server at {addr} closed the connection without a trace line");
+    }
+    // surface a structured server-side refusal instead of writing it
+    // into the output file as if it were a trace
+    if let Ok(j) = edgellm::util::json::Json::parse(line) {
+        if let Some(msg) = j.get("error").and_then(|v| v.as_str()) {
+            anyhow::bail!("server refused trace export: {msg}");
+        }
+    }
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(&path, format!("{line}\n"))?;
+            eprintln!("wrote {} bytes of trace to {path}", line.len() + 1);
+        }
+        None => println!("{line}"),
+    }
     Ok(())
 }
 

@@ -1,0 +1,294 @@
+//! Fixed log2-bucket latency histograms.
+//!
+//! One [`Hist`] is 64 `AtomicU64` buckets plus count/sum/max — no
+//! allocation ever, recording is three relaxed atomic ops on `&self`,
+//! so a histogram can sit behind an `Arc` and take samples from the
+//! engine round loop, the bridge client, and the device daemon without
+//! a lock. Bucket `i ≥ 1` covers values in `[2^(i-1), 2^i)`; bucket 0
+//! holds exact zeros. Percentile extraction snapshots the buckets and
+//! interpolates linearly inside the target bucket, capped by the true
+//! observed maximum, so the answer is within one power of two of the
+//! exact order statistic (in practice much closer — the benches assert
+//! agreement with offline-sorted percentiles in `benches/overload.rs`).
+//!
+//! All serving histograms record **microseconds** by convention; the
+//! field names exported on the stats line carry a `_us` suffix.
+
+#![deny(missing_docs)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Number of log2 buckets. 64 buckets cover every `u64` value.
+pub const N_BUCKETS: usize = 64;
+
+/// A lock-free fixed-footprint latency histogram (see module docs).
+pub struct Hist {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+/// `Hist::record` never blocks and never allocates; the snapshot side
+/// (`percentile`/`summary`) tolerates racing recorders — it reads a
+/// consistent-enough view for monitoring, not an atomic cut.
+impl Hist {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Hist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a value: 0 for 0, else `⌊log2 v⌋ + 1`, capped.
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(N_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive lower bound of bucket `i`.
+    fn bucket_lo(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    /// Exclusive upper bound of bucket `i` (saturating at the top).
+    fn bucket_hi(i: usize) -> u64 {
+        if i == 0 {
+            1
+        } else if i >= N_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            1u64 << i
+        }
+    }
+
+    /// Record one sample. Three relaxed atomic RMW ops; hot-path safe.
+    pub fn record(&self, v: u64) {
+        if let Some(b) = self.buckets.get(Self::bucket_of(v)) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// The `p`-th percentile (`p` in `[0, 1]`), linearly interpolated
+    /// inside the target log2 bucket and capped at the observed max.
+    /// Returns 0.0 for an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (p.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let lo = Self::bucket_lo(i) as f64;
+                let hi = (Self::bucket_hi(i).min(self.max().max(1))) as f64;
+                let frac = (rank - seen) as f64 / c as f64;
+                let est = lo + (hi.max(lo) - lo) * frac;
+                return est.min(self.max() as f64);
+            }
+            seen += c;
+        }
+        self.max() as f64
+    }
+
+    /// p50/p90/p99 plus count/sum/max in one snapshot.
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            sum: self.sum(),
+            max: self.max(),
+            p50: self.percentile(0.50),
+            p90: self.percentile(0.90),
+            p99: self.percentile(0.99),
+        }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+/// One-shot summary of a [`Hist`]: what the stats line and the device
+/// `InfoResp` tail export.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistSummary {
+    /// Total samples.
+    pub count: u64,
+    /// Sum of all samples (same unit as the samples).
+    pub sum: u64,
+    /// Largest sample.
+    pub max: u64,
+    /// Median estimate.
+    pub p50: f64,
+    /// 90th-percentile estimate.
+    pub p90: f64,
+    /// 99th-percentile estimate.
+    pub p99: f64,
+}
+
+impl HistSummary {
+    /// `{"count":..,"p50":..,"p90":..,"p99":..,"max":..}` for the
+    /// serving stats line.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("p50", Json::Num(self.p50)),
+            ("p90", Json::Num(self.p90)),
+            ("p99", Json::Num(self.p99)),
+            ("max", Json::Num(self.max as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 1);
+        assert_eq!(Hist::bucket_of(2), 2);
+        assert_eq!(Hist::bucket_of(3), 2);
+        assert_eq!(Hist::bucket_of(4), 3);
+        assert_eq!(Hist::bucket_of(7), 3);
+        assert_eq!(Hist::bucket_of(8), 4);
+        assert_eq!(Hist::bucket_of(u64::MAX), N_BUCKETS - 1);
+        // every bucket's bounds nest: lo(i) < hi(i) == lo(i+1)
+        for i in 1..N_BUCKETS - 1 {
+            assert_eq!(Hist::bucket_hi(i), Hist::bucket_lo(i + 1), "bucket {i}");
+            assert!(Hist::bucket_lo(i) < Hist::bucket_hi(i), "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn recorded_values_land_in_their_bucket_bounds() {
+        for v in [0u64, 1, 2, 3, 15, 16, 17, 1000, 1 << 40] {
+            let i = Hist::bucket_of(v);
+            assert!(Hist::bucket_lo(i) <= v, "v={v} bucket {i}");
+            assert!(v < Hist::bucket_hi(i) || i == N_BUCKETS - 1, "v={v} bucket {i}");
+        }
+    }
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        let s = h.summary();
+        assert_eq!((s.count, s.max), (0, 0));
+        assert_eq!(s.p99, 0.0);
+    }
+
+    #[test]
+    fn single_value_percentiles_are_exactish() {
+        let h = Hist::new();
+        for _ in 0..1000 {
+            h.record(700);
+        }
+        // 700 lives in [512, 1024); interpolation is capped by max=700
+        for p in [0.5, 0.9, 0.99] {
+            let est = h.percentile(p);
+            assert!((512.0..=700.0).contains(&est), "p{p}: {est}");
+        }
+        assert_eq!(h.max(), 700);
+        assert_eq!(h.sum(), 700_000);
+    }
+
+    #[test]
+    fn percentiles_are_monotonic_and_bounded_by_max() {
+        let h = Hist::new();
+        for v in 1..=1024u64 {
+            h.record(v);
+        }
+        let (p50, p90, p99) = (h.percentile(0.5), h.percentile(0.9), h.percentile(0.99));
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        assert!(p99 <= h.max() as f64);
+        // uniform 1..=1024: true p50 = 512; log2 quantization keeps the
+        // estimate within its bucket's factor-of-two band
+        assert!((256.0..=1024.0).contains(&p50), "{p50}");
+        assert!(p99 >= 512.0, "{p99}");
+    }
+
+    #[test]
+    fn p0_and_p100_hit_the_extremes() {
+        let h = Hist::new();
+        h.record(10);
+        h.record(1_000_000);
+        assert!(h.percentile(0.0) <= 16.0);
+        assert_eq!(h.percentile(1.0), 1_000_000.0);
+    }
+
+    #[test]
+    fn summary_json_has_the_stats_line_fields() {
+        let h = Hist::new();
+        h.record(100);
+        let j = h.summary().to_json();
+        for k in ["count", "p50", "p90", "p99", "max"] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+        assert_eq!(j.get("count").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        use std::sync::Arc;
+        let h = Arc::new(Hist::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().expect("recorder thread");
+        }
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.max(), 3999);
+    }
+}

@@ -1,0 +1,284 @@
+//! Observability: latency histograms + request-lifecycle tracing.
+//!
+//! The serving stack's lifetime counters (`EngineMetrics`,
+//! `MemoryStats`, `TransferMeter`) say *how much* work happened; this
+//! module says *how long it took* and *in what order*. One shared
+//! [`Obs`] registry per process side holds:
+//!
+//! * log2-bucket [`Hist`]ograms (microseconds) for queue wait, TTFT,
+//!   inter-token latency, decode-round duration, per-opcode bridge
+//!   frame RTT, and device frame service time;
+//! * a bounded [`TraceRing`] of lifecycle [`Span`]s, exportable as
+//!   Chrome-trace JSON via `edgellm trace-dump` or the v2 `{"trace":N}`
+//!   query.
+//!
+//! The registry is deliberately pull-based and allocation-free on the
+//! hot path: recorders touch pre-sized atomics or overwrite ring slots;
+//! aggregation (percentiles, JSON) happens only when a stats or trace
+//! query asks. The engine creates the registry, hands an `Arc` clone to
+//! its backend via `Backend::attach_obs`, and the device daemon keeps
+//! its own — device-side figures travel back in the backward-compatible
+//! [`ObsStats`] tail of the `InfoResp` frame.
+//!
+//! See `docs/observability.md` for the field tables and workflows.
+
+#![deny(missing_docs)]
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Hist, HistSummary, N_BUCKETS};
+pub use trace::{chrome_trace_json, Span, SpanKind, TraceRing};
+
+/// Number of request opcodes the bridge RTT histograms cover
+/// (`Info` 0x01 … `CloseSession` 0x06).
+pub const N_FRAME_OPS: usize = 6;
+
+/// Stats-line / trace-viewer names for the request opcodes, indexed by
+/// `opcode - 1`.
+pub const FRAME_OP_NAMES: [&str; N_FRAME_OPS] = [
+    "info",
+    "open_session",
+    "prefill",
+    "decode",
+    "decode_batch",
+    "close_session",
+];
+
+/// Default span capacity for a serving-side trace ring.
+pub const DEFAULT_TRACE_CAP: usize = 4096;
+
+/// Device-side observability figures carried in the backward-compatible
+/// second tail of the `InfoResp` frame (after the memory tail). Old
+/// devices omit it; old coordinators ignore it. The field list is
+/// wire-anchored: the analyzer's wire-drift lint cross-checks the
+/// encoder, the decoder, and the python mirror's `OBS_FIELDS`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsStats {
+    /// KV-arena allocation attempts that failed for want of free blocks.
+    pub alloc_stalls: u64,
+    /// Copy-on-write block copies performed by the arena.
+    pub cow_copies: u64,
+    /// Frames the device served since start.
+    pub frames_served: u64,
+    /// p50 frame service time, microseconds.
+    pub frame_p50_us: u64,
+    /// p90 frame service time, microseconds.
+    pub frame_p90_us: u64,
+    /// p99 frame service time, microseconds.
+    pub frame_p99_us: u64,
+    /// Worst observed frame service time, microseconds.
+    pub frame_max_us: u64,
+}
+
+impl ObsStats {
+    /// Render for the stats line / `edgellm info` output.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("alloc_stalls", Json::Num(self.alloc_stalls as f64)),
+            ("cow_copies", Json::Num(self.cow_copies as f64)),
+            ("frames_served", Json::Num(self.frames_served as f64)),
+            ("frame_p50_us", Json::Num(self.frame_p50_us as f64)),
+            ("frame_p90_us", Json::Num(self.frame_p90_us as f64)),
+            ("frame_p99_us", Json::Num(self.frame_p99_us as f64)),
+            ("frame_max_us", Json::Num(self.frame_max_us as f64)),
+        ])
+    }
+}
+
+/// KV-arena pressure counters a backend can surface without exposing
+/// the arena itself (`Backend::kv_pressure`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KvPressure {
+    /// Allocation attempts refused for want of free blocks.
+    pub alloc_stalls: u64,
+    /// Copy-on-write block copies performed.
+    pub cow_copies: u64,
+}
+
+/// One process side's observability registry (see module docs). Share
+/// it behind an `Arc`; every member records through `&self`.
+pub struct Obs {
+    origin: Instant,
+    /// Submit → admission decision, per admitted request.
+    pub queue_wait_us: Hist,
+    /// Submit → first token, fresh admissions only (a resumed victim
+    /// already streamed its first token before preemption).
+    pub ttft_us: Hist,
+    /// Gap between consecutive streamed tokens of one request.
+    pub itl_us: Hist,
+    /// Wall time of one full `step_round`.
+    pub round_us: Hist,
+    /// Bridge-client frame round-trip time, one histogram per request
+    /// opcode (`FRAME_OP_NAMES` order).
+    pub frame_rtt_us: [Hist; N_FRAME_OPS],
+    /// Device-side request handling time (decode → reply written).
+    pub frame_service_us: Hist,
+    /// Lifecycle span ring.
+    pub trace: TraceRing,
+}
+
+impl Obs {
+    /// Registry with the default trace capacity.
+    pub fn new() -> Self {
+        Self::with_trace_cap(DEFAULT_TRACE_CAP)
+    }
+
+    /// Registry retaining the most recent `trace_cap` spans.
+    pub fn with_trace_cap(trace_cap: usize) -> Self {
+        Obs {
+            origin: Instant::now(),
+            queue_wait_us: Hist::new(),
+            ttft_us: Hist::new(),
+            itl_us: Hist::new(),
+            round_us: Hist::new(),
+            frame_rtt_us: std::array::from_fn(|_| Hist::new()),
+            frame_service_us: Hist::new(),
+            trace: TraceRing::new(trace_cap),
+        }
+    }
+
+    /// Monotonic nanoseconds since this registry was created — the
+    /// epoch every span timestamp is relative to.
+    pub fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    /// RTT histogram for a request opcode (`0x01..=0x06`), `None` for
+    /// anything else — unknown opcodes are dropped, not misfiled.
+    pub fn frame_rtt(&self, opcode: u8) -> Option<&Hist> {
+        self.frame_rtt_us.get(opcode.wrapping_sub(1) as usize)
+    }
+
+    /// The nested `latency` object for the `{"stats":true}` line:
+    /// engine histograms always, per-opcode frame RTTs only once that
+    /// opcode has samples (an in-process backend contributes none).
+    pub fn latency_json(&self) -> Json {
+        let mut pairs = vec![
+            ("queue_wait_us", self.queue_wait_us.summary().to_json()),
+            ("ttft_us", self.ttft_us.summary().to_json()),
+            ("itl_us", self.itl_us.summary().to_json()),
+            ("round_us", self.round_us.summary().to_json()),
+        ];
+        let mut rtt = Vec::new();
+        for (i, h) in self.frame_rtt_us.iter().enumerate() {
+            if h.count() > 0 {
+                if let Some(name) = FRAME_OP_NAMES.get(i) {
+                    rtt.push((*name, h.summary().to_json()));
+                }
+            }
+        }
+        if !rtt.is_empty() {
+            pairs.push(("frame_rtt_us", Json::obj(rtt)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Build the `InfoResp` [`ObsStats`] tail from this (device-side)
+    /// registry plus the backend's arena counters.
+    pub fn device_stats(&self, kv: Option<KvPressure>) -> ObsStats {
+        let s = self.frame_service_us.summary();
+        let kv = kv.unwrap_or_default();
+        ObsStats {
+            alloc_stalls: kv.alloc_stalls,
+            cow_copies: kv.cow_copies,
+            frames_served: s.count,
+            frame_p50_us: s.p50 as u64,
+            frame_p90_us: s.p90 as u64,
+            frame_p99_us: s.p99 as u64,
+            frame_max_us: s.max,
+        }
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_ns_is_monotonic() {
+        let o = Obs::new();
+        let a = o.now_ns();
+        let b = o.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn frame_rtt_maps_request_opcodes_only() {
+        let o = Obs::new();
+        for op in 1u8..=6 {
+            assert!(o.frame_rtt(op).is_some(), "opcode {op:#x}");
+        }
+        assert!(o.frame_rtt(0).is_none());
+        assert!(o.frame_rtt(7).is_none());
+        assert!(o.frame_rtt(0x81).is_none());
+    }
+
+    #[test]
+    fn latency_json_hides_empty_frame_rtt() {
+        let o = Obs::new();
+        o.queue_wait_us.record(100);
+        let j = o.latency_json();
+        assert!(j.get("queue_wait_us").is_some());
+        assert!(j.get("ttft_us").is_some());
+        assert!(j.get("frame_rtt_us").is_none(), "no samples, no section");
+        // one decode RTT sample brings the section in under its name
+        if let Some(h) = o.frame_rtt(0x04) {
+            h.record(250);
+        }
+        let j = o.latency_json();
+        let rtt = j.get("frame_rtt_us").expect("section appears");
+        assert!(rtt.get("decode").is_some());
+        assert!(rtt.get("info").is_none());
+    }
+
+    #[test]
+    fn device_stats_reflects_service_hist_and_kv() {
+        let o = Obs::new();
+        for v in [100u64, 200, 300] {
+            o.frame_service_us.record(v);
+        }
+        let s = o.device_stats(Some(KvPressure { alloc_stalls: 4, cow_copies: 9 }));
+        assert_eq!(s.frames_served, 3);
+        assert_eq!(s.frame_max_us, 300);
+        assert_eq!((s.alloc_stalls, s.cow_copies), (4, 9));
+        assert!(s.frame_p50_us <= s.frame_p99_us);
+        let none = o.device_stats(None);
+        assert_eq!((none.alloc_stalls, none.cow_copies), (0, 0));
+    }
+
+    #[test]
+    fn obs_stats_json_has_all_wire_fields() {
+        let s = ObsStats {
+            alloc_stalls: 1,
+            cow_copies: 2,
+            frames_served: 3,
+            frame_p50_us: 4,
+            frame_p90_us: 5,
+            frame_p99_us: 6,
+            frame_max_us: 7,
+        };
+        let j = s.to_json();
+        for k in [
+            "alloc_stalls",
+            "cow_copies",
+            "frames_served",
+            "frame_p50_us",
+            "frame_p90_us",
+            "frame_p99_us",
+            "frame_max_us",
+        ] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+    }
+}

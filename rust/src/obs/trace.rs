@@ -1,0 +1,286 @@
+//! Bounded ring buffer of per-request lifecycle spans.
+//!
+//! Every state transition a request goes through — submitted, queued,
+//! admitted, prefill chunks, first token, per-round decode, preempt /
+//! requeue / resume, bridge reconnects, done — is recorded as one
+//! fixed-size [`Span`] carrying the request id and monotonic
+//! nanosecond timestamps. Spans land in a pre-sized overwrite ring
+//! ([`TraceRing`]): recording in steady state is one short mutex hold
+//! and a `Copy` into an existing slot, never an allocation, so the
+//! engine round loop can trace unconditionally.
+//!
+//! The ring exports [Chrome trace format] JSON (`chrome://tracing`,
+//! Perfetto) through `edgellm trace-dump` and the v2 `{"trace":N}`
+//! server query: complete events (`"ph":"X"`) with microsecond
+//! timestamps, one trace `tid` per request id.
+//!
+//! [Chrome trace format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+#![deny(missing_docs)]
+
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::lock_unpoisoned;
+
+/// What a [`Span`] marks in the request lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Request entered the bounded queue (instant; `detail` = queue
+    /// depth after the push).
+    Submitted,
+    /// Time spent waiting in the queue: submit → admission decision.
+    Queued,
+    /// Admission into the active pool, spanning the admission prefill
+    /// (`detail` = prompt tokens).
+    Admitted,
+    /// One chunked-prefill warming slice (`detail` = tokens warmed so
+    /// far, including this chunk).
+    PrefillChunk,
+    /// First token produced (instant; the span from `Submitted` to
+    /// here is the TTFT the histogram records).
+    FirstToken,
+    /// One batched decode round (`req_id` 0 — the round is pool-wide;
+    /// `detail` = live sessions in the round).
+    DecodeRound,
+    /// Mid-stream eviction under memory pressure (instant; `detail` =
+    /// tokens generated so far).
+    Preempted,
+    /// Victim pushed back onto the queue head (instant).
+    Requeued,
+    /// Requeued victim re-admitted, spanning its recompute prefill
+    /// (`detail` = tokens re-prefetched into KV).
+    Resumed,
+    /// Bridge client lost the device connection and re-established it,
+    /// spanning the backoff (`detail` = reconnect cycle count).
+    Reconnect,
+    /// Request cancelled by the client (instant).
+    Cancelled,
+    /// Terminal retirement (`detail` = tokens generated).
+    Done,
+}
+
+impl SpanKind {
+    /// Chrome-trace event name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Submitted => "submitted",
+            SpanKind::Queued => "queued",
+            SpanKind::Admitted => "admitted",
+            SpanKind::PrefillChunk => "prefill_chunk",
+            SpanKind::FirstToken => "first_token",
+            SpanKind::DecodeRound => "decode_round",
+            SpanKind::Preempted => "preempted",
+            SpanKind::Requeued => "requeued",
+            SpanKind::Resumed => "resumed",
+            SpanKind::Reconnect => "reconnect",
+            SpanKind::Cancelled => "cancelled",
+            SpanKind::Done => "done",
+        }
+    }
+
+    /// Chrome-trace category: groups lifecycle vs scheduler vs bridge
+    /// rows in the viewer.
+    pub fn cat(self) -> &'static str {
+        match self {
+            SpanKind::DecodeRound => "scheduler",
+            SpanKind::Reconnect => "bridge",
+            SpanKind::Preempted | SpanKind::Requeued | SpanKind::Resumed => "preemption",
+            _ => "lifecycle",
+        }
+    }
+}
+
+/// One lifecycle event: fixed-size, `Copy`, ring-storable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    /// Engine request id (`Completion::id`); 0 for pool-wide spans.
+    pub req_id: u64,
+    /// What happened.
+    pub kind: SpanKind,
+    /// Monotonic start, nanoseconds since the owning registry's epoch.
+    pub start_ns: u64,
+    /// Monotonic end; equal to `start_ns` for instant events.
+    pub end_ns: u64,
+    /// Kind-specific payload (see [`SpanKind`] variants).
+    pub detail: u64,
+    /// Global record order — ties on `start_ns` are broken by `seq`,
+    /// so per-request event order is always reconstructible.
+    pub seq: u64,
+}
+
+struct Ring {
+    buf: Vec<Span>,
+    next: u64,
+}
+
+/// Pre-sized overwrite ring of [`Span`]s (see module docs). Recording
+/// holds the mutex only for the slot copy; snapshots clone out.
+pub struct TraceRing {
+    cap: usize,
+    inner: Mutex<Ring>,
+}
+
+impl TraceRing {
+    /// Ring holding the most recent `cap` spans (`cap` is clamped to at
+    /// least 16 so preempt/requeue/resume chains survive bursts).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(16);
+        TraceRing {
+            cap,
+            inner: Mutex::new(Ring { buf: Vec::with_capacity(cap), next: 0 }),
+        }
+    }
+
+    /// Record one span; assigns its `seq`. Allocation-free once the
+    /// ring has filled (`Copy` into the recycled slot).
+    pub fn record(&self, req_id: u64, kind: SpanKind, start_ns: u64, end_ns: u64, detail: u64) {
+        let mut r = lock_unpoisoned(&self.inner);
+        let seq = r.next;
+        r.next += 1;
+        let span = Span { req_id, kind, start_ns, end_ns, detail, seq };
+        let at = (seq % self.cap as u64) as usize;
+        if at < r.buf.len() {
+            r.buf[at] = span;
+        } else {
+            r.buf.push(span);
+        }
+    }
+
+    /// Instant event: start == end.
+    pub fn mark(&self, req_id: u64, kind: SpanKind, at_ns: u64, detail: u64) {
+        self.record(req_id, kind, at_ns, at_ns, detail);
+    }
+
+    /// Total spans ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        lock_unpoisoned(&self.inner).next
+    }
+
+    /// The retained spans, oldest first (record order).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let r = lock_unpoisoned(&self.inner);
+        let mut out = r.buf.clone();
+        drop(r);
+        out.sort_by_key(|s| s.seq);
+        out
+    }
+
+    /// The most recent `n` spans, oldest first.
+    pub fn last(&self, n: usize) -> Vec<Span> {
+        let mut all = self.snapshot();
+        if all.len() > n {
+            all.drain(..all.len() - n);
+        }
+        all
+    }
+}
+
+/// Render spans as one Chrome-trace JSON object
+/// (`{"traceEvents":[...]}`): complete events, microsecond floats,
+/// `pid` 1, `tid` = request id, kind detail and seq under `args`.
+pub fn chrome_trace_json(spans: &[Span]) -> Json {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::Str(s.kind.name().to_string())),
+                ("cat", Json::Str(s.kind.cat().to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(s.start_ns as f64 / 1e3)),
+                ("dur", Json::Num((s.end_ns.saturating_sub(s.start_ns)) as f64 / 1e3)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(s.req_id as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("detail", Json::Num(s.detail as f64)),
+                        ("seq", Json::Num(s.seq as f64)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_retains_the_most_recent_spans_in_order() {
+        let ring = TraceRing::new(16);
+        for i in 0..40u64 {
+            ring.mark(i, SpanKind::Submitted, i * 10, 0);
+        }
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 16);
+        let seqs: Vec<u64> = spans.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, (24..40).collect::<Vec<u64>>(), "oldest evicted first");
+        assert_eq!(ring.recorded(), 40);
+    }
+
+    #[test]
+    fn last_n_trims_from_the_front() {
+        let ring = TraceRing::new(64);
+        for i in 0..10u64 {
+            ring.mark(1, SpanKind::Submitted, i, 0);
+        }
+        let tail = ring.last(3);
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail.first().map(|s| s.seq), Some(7));
+        assert_eq!(ring.last(100).len(), 10);
+    }
+
+    #[test]
+    fn seq_breaks_timestamp_ties() {
+        let ring = TraceRing::new(16);
+        ring.mark(5, SpanKind::Preempted, 1000, 0);
+        ring.mark(5, SpanKind::Requeued, 1000, 0);
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans.first().map(|s| s.kind), Some(SpanKind::Preempted));
+        assert_eq!(spans.get(1).map(|s| s.kind), Some(SpanKind::Requeued));
+        assert!(spans.first().map(|s| s.seq) < spans.get(1).map(|s| s.seq));
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let ring = TraceRing::new(16);
+        ring.record(7, SpanKind::Admitted, 2_000, 5_000, 12);
+        let j = chrome_trace_json(&ring.snapshot());
+        let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert_eq!(events.len(), 1);
+        let e = events.first().expect("one event");
+        assert_eq!(e.get("name").and_then(Json::as_str), Some("admitted"));
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(e.get("ts").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(e.get("dur").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(e.get("tid").and_then(Json::as_usize), Some(7));
+        // the line parses back — the server sends it verbatim
+        let line = j.to_string();
+        assert_eq!(Json::parse(&line).expect("valid json"), j);
+    }
+
+    #[test]
+    fn every_kind_has_a_name_and_category() {
+        for k in [
+            SpanKind::Submitted,
+            SpanKind::Queued,
+            SpanKind::Admitted,
+            SpanKind::PrefillChunk,
+            SpanKind::FirstToken,
+            SpanKind::DecodeRound,
+            SpanKind::Preempted,
+            SpanKind::Requeued,
+            SpanKind::Resumed,
+            SpanKind::Reconnect,
+            SpanKind::Cancelled,
+            SpanKind::Done,
+        ] {
+            assert!(!k.name().is_empty());
+            assert!(!k.cat().is_empty());
+        }
+    }
+}

@@ -249,6 +249,31 @@ pub trait Backend: Send {
     fn prefill_from(&self, prompt: &[i32], _shared_len: usize) -> Result<(Vec<f32>, Session)> {
         self.prefill(prompt)
     }
+
+    /// Hand the backend the serving side's [`Obs`](crate::obs::Obs)
+    /// registry so its internals can record into the shared histograms
+    /// and span ring (the bridge client records per-opcode frame RTTs
+    /// and reconnect spans there). The default no-op keeps in-process
+    /// and out-of-crate backends compiling unchanged; the engine calls
+    /// this once at construction, before any request is served.
+    fn attach_obs(&self, _obs: &std::sync::Arc<crate::obs::Obs>) {}
+
+    /// KV-arena pressure counters (allocation stalls, copy-on-write
+    /// copies) for the stats line — gauges the wire-anchored
+    /// [`MemoryStats`] deliberately does not carry. `None` (the
+    /// default) for backends without a paged arena.
+    fn kv_pressure(&self) -> Option<crate::obs::KvPressure> {
+        None
+    }
+
+    /// The *device's* observability summary (frame service-time
+    /// percentiles plus its arena pressure counters), when the backend
+    /// fronts a remote daemon — fetched from the `InfoResp` obs tail,
+    /// one metered round trip per call. `None` (the default) for
+    /// in-process backends: their figures are readable directly.
+    fn device_obs(&self) -> Option<crate::obs::ObsStats> {
+        None
+    }
 }
 
 // The trait must stay object-safe: the scheduler only ever sees it

@@ -338,6 +338,11 @@ pub struct KvArena {
     peak_pinned: usize,
     reuse_hits: u64,
     prefix_hits: u64,
+    /// allocation attempts (reserve / ensure / ensure_writable) refused
+    /// for want of free blocks — the obs layer's pressure signal
+    alloc_stalls: u64,
+    /// copy-on-write block copies performed
+    cow_copies: u64,
     index: PrefixIndex,
     /// monotone LRU clock, bumped on every index lookup/registration
     lru_clock: u64,
@@ -364,6 +369,8 @@ impl KvArena {
             peak_pinned: 0,
             reuse_hits: 0,
             prefix_hits: 0,
+            alloc_stalls: 0,
+            cow_copies: 0,
             index: PrefixIndex::default(),
             lru_clock: 0,
         }
@@ -515,6 +522,7 @@ impl KvArena {
     pub fn reserve(&mut self, tokens: usize) -> Result<KvHandle, KvExhausted> {
         let need = self.blocks_for(tokens);
         if need > self.blocks_free() {
+            self.alloc_stalls += 1;
             return Err(KvExhausted { needed_blocks: need, blocks_free: self.blocks_free() });
         }
         let mut h = KvHandle::default();
@@ -534,6 +542,7 @@ impl KvArena {
         let need_total = self.blocks_for(tokens);
         while h.blocks.len() < need_total {
             let Some(b) = self.take_block() else {
+                self.alloc_stalls += 1;
                 return Err(KvExhausted {
                     needed_blocks: need_total - h.blocks.len(),
                     blocks_free: 0,
@@ -584,6 +593,7 @@ impl KvArena {
                 return Ok(());
             }
             if !self.evict_lru_entry() {
+                self.alloc_stalls += 1;
                 return Err(KvExhausted { needed_blocks: 1, blocks_free: 0 });
             }
         }
@@ -601,6 +611,7 @@ impl KvArena {
         self.add_handle_ref(nb);
         self.drop_handle_ref(b);
         h.blocks[bi] = nb;
+        self.cow_copies += 1;
     }
 
     /// Drop every block reference `h` holds. Shared blocks only lose
@@ -824,6 +835,19 @@ impl KvArena {
             prefix_hits: self.prefix_hits,
         }
     }
+
+    /// Allocation attempts refused for want of free blocks. Not part of
+    /// the wire-anchored [`MemoryStats`]; surfaced through the obs
+    /// layer (`Backend::kv_pressure`).
+    pub fn alloc_stalls(&self) -> u64 {
+        self.alloc_stalls
+    }
+
+    /// Copy-on-write block copies performed (same caveat as
+    /// [`KvArena::alloc_stalls`]).
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
 }
 
 #[cfg(test)]
@@ -1035,6 +1059,30 @@ mod tests {
         a.ensure_writable(&mut h2, 11).unwrap(); // now a no-op
         a.k_row_mut(&h2, 0, 11).fill(777.0);
         assert_eq!(a.k_rows(&h1, 0).row(11), &[11.0; 4][..]);
+        a.release(&mut h1);
+        a.release(&mut h2);
+    }
+
+    #[test]
+    fn pressure_counters_track_stalls_and_cow() {
+        let mut a = KvArena::new(1, 4, 8, 2);
+        assert_eq!((a.alloc_stalls(), a.cow_copies()), (0, 0));
+        let mut h = a.reserve(16).unwrap(); // whole pool
+        assert!(a.reserve(8).is_err());
+        assert_eq!(a.alloc_stalls(), 1, "refused reserve counts");
+        assert!(a.ensure(&mut h, 24).is_err());
+        assert_eq!(a.alloc_stalls(), 2, "refused growth counts");
+        a.release(&mut h);
+        // a CoW on a boundary block shared with a *live* handle bumps
+        // cow_copies (an index-only sharer would be evicted instead)
+        let mut a = KvArena::new(1, 4, 8, 4);
+        let p: Vec<i32> = (0..12).collect();
+        let mut h1 = a.reserve(p.len()).unwrap();
+        a.register_prefix(&p, &h1);
+        let (mut h2, _) = a.adopt_prefix(&p).unwrap();
+        a.ensure_writable(&mut h2, 11).unwrap();
+        assert_eq!(a.cow_copies(), 1);
+        assert_eq!(a.alloc_stalls(), 0, "fresh arena, no stalls");
         a.release(&mut h1);
         a.release(&mut h2);
     }

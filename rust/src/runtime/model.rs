@@ -295,6 +295,25 @@ impl LlmRuntime {
         self.backend.transfer_meter()
     }
 
+    /// Hand the backend the serving side's observability registry (the
+    /// bridge client records frame RTTs and reconnect spans into it).
+    /// No-op for backends that don't instrument themselves.
+    pub fn attach_obs(&self, obs: &std::sync::Arc<crate::obs::Obs>) {
+        self.backend.attach_obs(obs);
+    }
+
+    /// KV-arena pressure counters (allocation stalls, CoW copies) for
+    /// the stats line; `None` for backends without a paged arena.
+    pub fn kv_pressure(&self) -> Option<crate::obs::KvPressure> {
+        self.backend.kv_pressure()
+    }
+
+    /// The remote device's observability summary (one wire round trip
+    /// for the bridge; `None` for in-process backends).
+    pub fn device_obs(&self) -> Option<crate::obs::ObsStats> {
+        self.backend.device_obs()
+    }
+
     /// Run prefill over `prompt` (padded to a bucket); returns the logits
     /// of the last real token plus a fresh session.
     pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Session)> {

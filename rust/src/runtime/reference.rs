@@ -704,6 +704,16 @@ impl Backend for RefLlm {
         Some(self.memory_stats())
     }
 
+    /// Arena pressure counters for the obs layer: allocation stalls and
+    /// copy-on-write copies since construction.
+    fn kv_pressure(&self) -> Option<crate::obs::KvPressure> {
+        let a = self.arena.borrow();
+        Some(crate::obs::KvPressure {
+            alloc_stalls: a.alloc_stalls(),
+            cow_copies: a.cow_copies(),
+        })
+    }
+
     /// The admission gate's query: longest resident prefix of `prompt`
     /// per the arena's index, without adopting it.
     fn shared_prefix_len(&self, prompt: &[i32]) -> usize {

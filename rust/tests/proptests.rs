@@ -459,6 +459,66 @@ fn prop_kv_prefix_sharing_interleavings_stay_consistent() {
 }
 
 #[test]
+fn prop_trace_ring_preserves_per_request_order_under_concurrent_recording() {
+    // 8 writer threads × 200 spans through rings both larger and much
+    // smaller than the total volume: whatever survives the overwrites,
+    // each request's retained spans must be a contiguous, in-order tail
+    // of what its thread recorded (detail = per-thread sequence number,
+    // timestamps strictly increasing per thread). The ring may drop the
+    // oldest spans globally, but it must never reorder a request's
+    // stream or punch holes in the middle of it.
+    use edgellm::obs::{SpanKind, TraceRing};
+    use std::sync::Arc;
+
+    const WRITERS: u64 = 8;
+    const PER_WRITER: u64 = 200;
+    for cap in [4096usize, 64] {
+        let ring = Arc::new(TraceRing::new(cap));
+        std::thread::scope(|s| {
+            for req in 0..WRITERS {
+                let ring = Arc::clone(&ring);
+                s.spawn(move || {
+                    for i in 0..PER_WRITER {
+                        let kind = match i % 3 {
+                            0 => SpanKind::Queued,
+                            1 => SpanKind::DecodeRound,
+                            _ => SpanKind::Done,
+                        };
+                        ring.record(req, kind, i * 10, i * 10 + 5, i);
+                    }
+                });
+            }
+        });
+        let spans = ring.snapshot();
+        assert_eq!(
+            spans.len(),
+            cap.min((WRITERS * PER_WRITER) as usize),
+            "cap {cap}: retained span count"
+        );
+        for req in 0..WRITERS {
+            let mine: Vec<_> = spans.iter().filter(|sp| sp.req_id == req).collect();
+            for w in mine.windows(2) {
+                assert!(w[0].seq < w[1].seq, "cap {cap} req {req}: seq order broken");
+                assert_eq!(
+                    w[0].detail + 1,
+                    w[1].detail,
+                    "cap {cap} req {req}: span dropped or reordered mid-stream"
+                );
+                assert!(
+                    w[0].start_ns < w[1].start_ns,
+                    "cap {cap} req {req}: timestamps out of order"
+                );
+            }
+            // the retained subset is a suffix of the recorded stream, so
+            // when anything survives, the newest span does
+            if let Some(last) = mine.last() {
+                assert_eq!(last.detail, PER_WRITER - 1, "cap {cap} req {req}");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_rng_choose_indices_uniformish() {
     // sanity on the test harness itself: chosen index sets cover the range
     let mut rng = Rng::new(808);

@@ -390,6 +390,104 @@ fn kv_exhaustion_preempts_then_resumes_bit_identically() {
     assert_eq!(terminal.expect("terminal Done event").text, control_text);
 }
 
+/// The observable side of preemption recovery: a forced
+/// preempt-then-resume leaves a complete, correctly ordered span chain
+/// in the engine's trace ring — submitted → admitted → preempted →
+/// requeued → resumed → done, with monotonically non-decreasing
+/// timestamps — and the trace exports as valid Chrome trace JSON.
+#[test]
+fn preemption_leaves_a_complete_span_chain_in_the_trace() {
+    use edgellm::obs::SpanKind;
+
+    let cfg = ReferenceConfig {
+        max_tokens: 64,
+        kv_block_tokens: 8,
+        kv_pool_blocks: 6,
+        ..ReferenceConfig::default()
+    };
+    let mut eng = Engine::new(
+        LlmRuntime::reference(cfg),
+        EngineConfig { max_active: 4, ..EngineConfig::default() },
+    );
+    // same forcing move as the bit-identical test: an out-of-band
+    // session raids the arena behind the admission gate's back
+    let (mut logits, mut ext) = eng.runtime().prefill(&[1, 2, 3]).unwrap();
+    let ha = eng.submit("aaaa", 30, Sampling::Greedy);
+    let victim_id = ha.id();
+    eng.step_round().unwrap();
+    while eng.runtime().memory().unwrap().blocks_free > 0 {
+        let t = edgellm::runtime::model::argmax(&logits);
+        logits = eng.runtime().decode(&mut ext, t).unwrap();
+    }
+    for _ in 0..40 {
+        eng.step_round().unwrap();
+        if eng.metrics().preempted > 0 {
+            break;
+        }
+    }
+    assert_eq!(eng.metrics().preempted, 1, "setup failed to force a preemption");
+    eng.runtime().end_session(&mut ext);
+    eng.run_all().unwrap();
+    assert!(ha.wait().is_ok(), "victim must finish after resume");
+
+    // the victim's lifecycle, in ring order
+    let spans: Vec<_> = eng
+        .obs()
+        .trace
+        .snapshot()
+        .into_iter()
+        .filter(|s| s.req_id == victim_id)
+        .collect();
+    let kinds: Vec<SpanKind> = spans.iter().map(|s| s.kind).collect();
+    for want in [
+        SpanKind::Submitted,
+        SpanKind::Admitted,
+        SpanKind::Preempted,
+        SpanKind::Requeued,
+        SpanKind::Resumed,
+        SpanKind::Done,
+    ] {
+        assert!(kinds.contains(&want), "missing {want:?} in {kinds:?}");
+    }
+    let pos = |k: SpanKind| kinds.iter().position(|&x| x == k).unwrap();
+    assert!(pos(SpanKind::Submitted) < pos(SpanKind::Admitted));
+    assert!(pos(SpanKind::Admitted) < pos(SpanKind::Preempted));
+    assert!(pos(SpanKind::Preempted) < pos(SpanKind::Requeued));
+    assert!(pos(SpanKind::Requeued) < pos(SpanKind::Resumed));
+    assert!(pos(SpanKind::Resumed) < pos(SpanKind::Done));
+    // only one preemption episode, and the resume arrives after the
+    // requeue on the clock, not just in ring order
+    assert_eq!(kinds.iter().filter(|&&k| k == SpanKind::Preempted).count(), 1);
+    let requeued = spans[pos(SpanKind::Requeued)];
+    let resumed = spans[pos(SpanKind::Resumed)];
+    assert!(requeued.end_ns <= resumed.end_ns);
+    for w in spans.windows(2) {
+        assert!(
+            w[0].end_ns <= w[1].end_ns,
+            "span timestamps regressed: {:?} then {:?}",
+            w[0],
+            w[1]
+        );
+    }
+    // TTFT is recorded for the fresh admission only — a resume is a
+    // stall, not a second first token
+    assert_eq!(eng.obs().ttft_us.summary().count, 1);
+    // queue-wait: one fresh-admission episode + one requeue episode
+    assert_eq!(eng.obs().queue_wait_us.summary().count, 2);
+
+    // the exported chrome trace parses and names the preemption spans
+    let exported = edgellm::obs::chrome_trace_json(&eng.obs().trace.last(4096)).to_string();
+    let j = Json::parse(&exported).unwrap();
+    let cats: Vec<&str> = j
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .filter_map(|e| e.get("cat").and_then(|c| c.as_str()))
+        .collect();
+    assert!(cats.contains(&"preemption"), "exported trace lost the preemption");
+}
+
 /// A preempted session that *shares* its prefix frees only its private
 /// blocks: the full-block prefix it adopted stays resident for the
 /// other sharer (refcount > 1), so preemption must never be counted on

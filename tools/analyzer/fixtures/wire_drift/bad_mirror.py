@@ -13,3 +13,7 @@ ERR_CODES = {"Protocol": 1, "Backend": 3}
 MEMORY_FIELDS = [
     "total_bytes", "free_bytes",
 ]
+
+OBS_FIELDS = [
+    "frames_served", "frame_p99_us",
+]

@@ -38,3 +38,15 @@ fn decode_memory(d: &mut Dec) -> Option<MemoryStats> {
         free_bytes: d.u64()?,
     })
 }
+
+fn encode_obs(e: &mut Enc, o: &ObsStats) {
+    e.u64(o.frames_served);
+    e.u64(o.frame_p99_us);
+}
+
+fn decode_obs(d: &mut Dec) -> Option<ObsStats> {
+    Some(ObsStats {
+        frames_served: d.u64()?,
+        frame_p99_us: d.u64()?,
+    })
+}

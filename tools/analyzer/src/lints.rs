@@ -371,6 +371,10 @@ struct RustWire {
     enc: Vec<(String, usize)>,
     /// ... and in decode order
     dec: Vec<(String, usize)>,
+    /// InfoResp obs-tail field names in encode order
+    enc_obs: Vec<(String, usize)>,
+    /// ... and in decode order
+    dec_obs: Vec<(String, usize)>,
 }
 
 /// What the Python mirror declares.
@@ -381,6 +385,7 @@ struct PyWire {
     ops: Vec<(String, u64)>,
     errs: Vec<(String, u64)>,
     mem: Vec<String>,
+    obs: Vec<String>,
 }
 
 /// Cross-check the Rust codec against the Python mirror: protocol
@@ -421,6 +426,12 @@ pub fn wire_drift(proto: &SourceFile, py_text: &str, py_path: &str, out: &mut Ve
     if rw.dec.is_empty() {
         missing("the `Some(MemoryStats { .. })` decode tail", &proto.path);
     }
+    if rw.enc_obs.is_empty() {
+        missing("the `e.u64(o.<field>)` InfoResp obs-tail encoder", &proto.path);
+    }
+    if rw.dec_obs.is_empty() {
+        missing("the `Some(ObsStats { .. })` decode tail", &proto.path);
+    }
     if pw.version.is_none() {
         missing("`PROTOCOL_VERSION`", py_path);
     }
@@ -435,6 +446,9 @@ pub fn wire_drift(proto: &SourceFile, py_text: &str, py_path: &str, out: &mut Ve
     }
     if pw.mem.is_empty() {
         missing("the `MEMORY_FIELDS` list", py_path);
+    }
+    if pw.obs.is_empty() {
+        missing("the `OBS_FIELDS` list", py_path);
     }
 
     let mut drift = |line: usize, message: String| {
@@ -516,27 +530,60 @@ pub fn wire_drift(proto: &SourceFile, py_text: &str, py_path: &str, out: &mut Ve
     let enc_line = rw.enc.first().map_or(1, |(_, l)| *l);
     let dec_line = rw.dec.first().map_or(1, |(_, l)| *l);
     if !enc.is_empty() && !dec.is_empty() && enc != dec {
-        drift(enc_line, tail_diff("the encode tail", &enc, "the decode tail", &dec));
+        drift(
+            enc_line,
+            tail_diff("memory-tail", "the encode tail", &enc, "the decode tail", &dec),
+        );
     }
     if !dec.is_empty() && !mem.is_empty() && dec != mem {
         drift(
             dec_line,
-            tail_diff("the decode tail", &dec, &format!("{py_path}'s MEMORY_FIELDS"), &mem),
+            tail_diff(
+                "memory-tail",
+                "the decode tail",
+                &dec,
+                &format!("{py_path}'s MEMORY_FIELDS"),
+                &mem,
+            ),
+        );
+    }
+    // ... and the obs tail, held to the identical discipline
+    let enc_obs: Vec<&str> = rw.enc_obs.iter().map(|(n, _)| n.as_str()).collect();
+    let dec_obs: Vec<&str> = rw.dec_obs.iter().map(|(n, _)| n.as_str()).collect();
+    let obs: Vec<&str> = pw.obs.iter().map(|s| s.as_str()).collect();
+    let enc_obs_line = rw.enc_obs.first().map_or(1, |(_, l)| *l);
+    let dec_obs_line = rw.dec_obs.first().map_or(1, |(_, l)| *l);
+    if !enc_obs.is_empty() && !dec_obs.is_empty() && enc_obs != dec_obs {
+        drift(
+            enc_obs_line,
+            tail_diff("obs-tail", "the encode tail", &enc_obs, "the decode tail", &dec_obs),
+        );
+    }
+    if !dec_obs.is_empty() && !obs.is_empty() && dec_obs != obs {
+        drift(
+            dec_obs_line,
+            tail_diff(
+                "obs-tail",
+                "the decode tail",
+                &dec_obs,
+                &format!("{py_path}'s OBS_FIELDS"),
+                &obs,
+            ),
         );
     }
 }
 
-fn tail_diff(aname: &str, a: &[&str], bname: &str, b: &[&str]) -> String {
+fn tail_diff(what: &str, aname: &str, a: &[&str], bname: &str, b: &[&str]) -> String {
     if a.len() != b.len() {
         format!(
-            "InfoResp memory-tail arity drift: {aname} carries {} u64s but {bname} carries {}",
+            "InfoResp {what} arity drift: {aname} carries {} u64s but {bname} carries {}",
             a.len(),
             b.len()
         )
     } else {
         let i = a.iter().zip(b).position(|(x, y)| x != y).unwrap_or(0);
         format!(
-            "InfoResp memory-tail field {} is `{}` in {aname} but `{}` in {bname}",
+            "InfoResp {what} field {} is `{}` in {aname} but `{}` in {bname}",
             i, a[i], b[i]
         )
     }
@@ -545,6 +592,7 @@ fn tail_diff(aname: &str, a: &[&str], bname: &str, b: &[&str]) -> String {
 fn parse_rust_wire(sf: &SourceFile) -> RustWire {
     let mut w = RustWire::default();
     let mut in_dec = false;
+    let mut in_dec_obs = false;
     for (i, line) in sf.lines.iter().enumerate() {
         if line.in_test {
             continue;
@@ -588,6 +636,12 @@ fn parse_rust_wire(sf: &SourceFile) -> RustWire {
                 w.enc.push((rest[..close].trim().to_string(), ln));
             }
         }
+        // InfoResp obs tail, encode side
+        if let Some(rest) = t.strip_prefix("e.u64(o.") {
+            if let Some(close) = rest.find(')') {
+                w.enc_obs.push((rest[..close].trim().to_string(), ln));
+            }
+        }
         // ... and decode side (first non-test MemoryStats literal)
         if in_dec {
             if t.starts_with("})") || t.starts_with('}') {
@@ -604,6 +658,23 @@ fn parse_rust_wire(sf: &SourceFile) -> RustWire {
             }
         } else if w.dec.is_empty() && t.contains("Some(MemoryStats {") {
             in_dec = true;
+        }
+        // ... and the obs decode tail (first non-test ObsStats literal)
+        if in_dec_obs {
+            if t.starts_with("})") || t.starts_with('}') {
+                in_dec_obs = false;
+            } else if let Some((name, rhs)) = t.split_once(':') {
+                let name = name.trim();
+                let rhs = rhs.trim().trim_end_matches(',');
+                if !name.is_empty()
+                    && name.bytes().all(is_ident)
+                    && (rhs == "d.u64()?" || rhs == "d.u64()?,")
+                {
+                    w.dec_obs.push((name.to_string(), ln));
+                }
+            }
+        } else if w.dec_obs.is_empty() && t.contains("Some(ObsStats {") {
+            in_dec_obs = true;
         }
     }
     w
@@ -647,6 +718,9 @@ fn parse_py_wire(text: &str) -> PyWire {
     }
     if let Some(body) = py_region(&cleaned, "MEMORY_FIELDS", '[', ']') {
         w.mem = py_strings(&body);
+    }
+    if let Some(body) = py_region(&cleaned, "OBS_FIELDS", '[', ']') {
+        w.obs = py_strings(&body);
     }
     w
 }
