@@ -1,22 +1,27 @@
 //! Backend throughput: prefill and batched-decode tokens/s of the
-//! functional reference backend, at batch 1 / 4 / 8 — and the start of
-//! the repo's recorded perf trajectory.
+//! functional reference backend, at batch 1 / 4 / 8, across the kernel
+//! tier matrix — scalar oracle, SIMD, SIMD+multicore — and the repo's
+//! recorded perf trajectory.
 //!
 //! The model is sized so its weights (~80 MB dense f32 attention +
 //! nibble-packed INT4 FFN) overflow every cache level: batch-1 decode is
 //! then genuinely bound by streaming the weights (plus the per-row
 //! nibble decode), which is exactly the cost a batched round amortizes —
 //! each weight matrix is walked once per round regardless of batch size.
-//! Aggregate tokens/s at batch 8 versus the batch-1 scalar path is the
-//! headline number; it is written, machine-readable, to
-//! `BENCH_backend.json` so CI can archive the trajectory.
+//! Two headline numbers come out: aggregate tokens/s at batch 8 versus
+//! the batch-1 scalar path (batching amortization), and the
+//! simd-parallel tier versus the scalar tier at batch 8 (the hardware
+//! tier speedup — every tier produces bit-identical logits, so this is
+//! pure speed). Both are written, machine-readable, to
+//! `BENCH_backend.json` so CI can archive the trajectory; committed
+//! snapshots live under `benchmarks/`.
 //!
 //! `cargo bench --bench backend_throughput`
 
 use std::time::Instant;
 
 use edgellm::runtime::model::{LlmRuntime, Session};
-use edgellm::runtime::reference::ReferenceConfig;
+use edgellm::runtime::reference::{KernelTier, ReferenceConfig};
 use edgellm::util::bench::{fmt_secs, Table};
 use edgellm::util::json::Json;
 
@@ -27,8 +32,11 @@ const ROUNDS: usize = 48;
 /// Measured samples per batch size (plus one warmup).
 const SAMPLES: usize = 3;
 const BATCHES: [usize; 3] = [1, 4, 8];
+/// The tier matrix: the scalar oracle, single-threaded SIMD, and the
+/// pool-parallel tier at auto-detected width.
+const TIERS: [KernelTier; 3] = [KernelTier::Scalar, KernelTier::Simd, KernelTier::SimdParallel];
 
-fn bench_cfg() -> ReferenceConfig {
+fn bench_cfg(tier: KernelTier) -> ReferenceConfig {
     ReferenceConfig {
         name: "ref-bench".to_string(),
         d_model: 640,
@@ -36,6 +44,7 @@ fn bench_cfg() -> ReferenceConfig {
         n_heads: 8,
         max_tokens: 128,
         seed: 0xB0BA,
+        kernel_tier: tier,
         ..ReferenceConfig::default()
     }
 }
@@ -83,22 +92,21 @@ fn decode_tps(rt: &LlmRuntime, b: usize) -> (f64, f64) {
     (tokens / t, t / ROUNDS as f64)
 }
 
-fn main() {
-    let cfg = bench_cfg();
-    println!(
-        "== backend throughput: d={} L={} ffn={} (INT4), prompt {PROMPT_LEN}, \
-         {ROUNDS} rounds ==",
-        cfg.d_model,
-        cfg.n_layers,
-        4 * cfg.d_model
-    );
-    let build0 = Instant::now();
-    let rt = LlmRuntime::reference(cfg);
-    println!(
-        "model built in {} ({} params)",
-        fmt_secs(build0.elapsed().as_secs_f64()),
-        rt.info.n_params
-    );
+/// Everything measured for one kernel tier.
+struct TierResult {
+    label: String,
+    prefill_s: f64,
+    prefill_tps: f64,
+    /// (batch, aggregate tok/s, round latency) per batch size
+    decode: Vec<(usize, f64, f64)>,
+    /// batch-8 aggregate tok/s vs batch 1 within this tier
+    batch_speedup: f64,
+}
+
+fn bench_tier(tier: KernelTier) -> TierResult {
+    let rt = LlmRuntime::reference(bench_cfg(tier));
+    let label = rt.kernel_tier().unwrap_or_else(|| "unknown".to_string());
+    println!("-- tier {label} --");
 
     // prefill: single-pass sequence-level GEMM, measured per prompt
     let mut prefill_times = Vec::new();
@@ -115,7 +123,7 @@ fn main() {
     let prefill_tps = PROMPT_LEN as f64 / prefill_s;
 
     let mut table = Table::new(&["batch", "round latency", "aggregate tok/s", "vs batch 1"]);
-    let mut decode_rows = Vec::new();
+    let mut decode = Vec::new();
     let mut tps1 = 0.0;
     for &b in &BATCHES {
         let (tps, round_s) = decode_tps(&rt, b);
@@ -128,72 +136,137 @@ fn main() {
             format!("{tps:.1}"),
             format!("{:.2}x", tps / tps1),
         ]);
-        decode_rows.push((b, tps, round_s));
+        decode.push((b, tps, round_s));
     }
     table.print();
-
-    let speedup = decode_rows
-        .iter()
-        .find(|(b, _, _)| *b == 8)
-        .map(|(_, tps, _)| tps / tps1)
-        .expect("batch-8 row");
     println!(
         "prefill: {} / prompt ({prefill_tps:.0} tok/s single-pass GEMM)",
         fmt_secs(prefill_s)
     );
-    println!("batch 8 vs batch-1 scalar decode: {speedup:.2}x aggregate tokens/s");
+    let batch_speedup = decode
+        .iter()
+        .find(|(b, _, _)| *b == 8)
+        .map(|(_, tps, _)| tps / tps1)
+        .expect("batch-8 row");
+    TierResult { label, prefill_s, prefill_tps, decode, batch_speedup }
+}
 
-    // machine-readable trajectory record
+fn batch8_tps(t: &TierResult) -> f64 {
+    t.decode
+        .iter()
+        .find(|(b, _, _)| *b == 8)
+        .map(|(_, tps, _)| *tps)
+        .expect("batch-8 row")
+}
+
+fn main() {
+    let cfg = bench_cfg(KernelTier::Scalar);
+    println!(
+        "== backend throughput: d={} L={} ffn={} (INT4), prompt {PROMPT_LEN}, \
+         {ROUNDS} rounds, tier matrix ==",
+        cfg.d_model,
+        cfg.n_layers,
+        4 * cfg.d_model
+    );
+    let build0 = Instant::now();
+    let rt = LlmRuntime::reference(cfg);
+    println!(
+        "model built in {} ({} params)",
+        fmt_secs(build0.elapsed().as_secs_f64()),
+        rt.info.n_params
+    );
+    let model_json = Json::obj(vec![
+        ("name", Json::Str(rt.info.name.clone())),
+        ("d_model", Json::Num(rt.info.d_model as f64)),
+        ("n_layers", Json::Num(rt.info.n_layers as f64)),
+        ("d_ffn", Json::Num(rt.info.d_ffn as f64)),
+        ("vocab", Json::Num(rt.info.vocab as f64)),
+        ("n_params", Json::Num(rt.info.n_params as f64)),
+        (
+            "ffn_weight_bytes",
+            Json::Num(rt.ffn_weight_bytes().unwrap_or(0) as f64),
+        ),
+    ]);
+    drop(rt); // each tier builds its own runtime (same seed → same weights)
+
+    let results: Vec<TierResult> = TIERS.iter().map(|&t| bench_tier(t)).collect();
+    let scalar = &results[0];
+    let parallel = results.last().expect("tier matrix is non-empty");
+    let tier_speedup = batch8_tps(parallel) / batch8_tps(scalar);
+    println!(
+        "{} vs scalar at batch 8: {tier_speedup:.2}x aggregate tokens/s",
+        parallel.label
+    );
+    println!(
+        "batch 8 vs batch-1 within {}: {:.2}x",
+        parallel.label, parallel.batch_speedup
+    );
+
+    // machine-readable trajectory record: the whole tier × batch matrix
+    // in one JSON, so the committed snapshots under benchmarks/ carry
+    // the scalar baseline and the vector tiers side by side
     let json = Json::obj(vec![
         ("bench", Json::Str("backend_throughput".into())),
-        (
-            "model",
-            Json::obj(vec![
-                ("name", Json::Str(rt.info.name.clone())),
-                ("d_model", Json::Num(rt.info.d_model as f64)),
-                ("n_layers", Json::Num(rt.info.n_layers as f64)),
-                ("d_ffn", Json::Num(rt.info.d_ffn as f64)),
-                ("vocab", Json::Num(rt.info.vocab as f64)),
-                ("n_params", Json::Num(rt.info.n_params as f64)),
-                (
-                    "ffn_weight_bytes",
-                    Json::Num(rt.ffn_weight_bytes().unwrap_or(0) as f64),
-                ),
-            ]),
-        ),
+        ("model", model_json),
         ("prompt_len", Json::Num(PROMPT_LEN as f64)),
         ("rounds", Json::Num(ROUNDS as f64)),
         (
-            "prefill",
-            Json::obj(vec![
-                ("latency_s", Json::Num(prefill_s)),
-                ("tokens_per_s", Json::Num(prefill_tps)),
-            ]),
-        ),
-        (
-            "decode",
+            "tiers",
             Json::Arr(
-                decode_rows
+                results
                     .iter()
-                    .map(|&(b, tps, round_s)| {
+                    .map(|t| {
                         Json::obj(vec![
-                            ("batch", Json::Num(b as f64)),
-                            ("tokens_per_s", Json::Num(tps)),
-                            ("round_latency_s", Json::Num(round_s)),
+                            ("tier", Json::Str(t.label.clone())),
+                            (
+                                "prefill",
+                                Json::obj(vec![
+                                    ("latency_s", Json::Num(t.prefill_s)),
+                                    ("tokens_per_s", Json::Num(t.prefill_tps)),
+                                ]),
+                            ),
+                            (
+                                "decode",
+                                Json::Arr(
+                                    t.decode
+                                        .iter()
+                                        .map(|&(b, tps, round_s)| {
+                                            Json::obj(vec![
+                                                ("batch", Json::Num(b as f64)),
+                                                ("tokens_per_s", Json::Num(tps)),
+                                                ("round_latency_s", Json::Num(round_s)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                            ("speedup_batch8_vs_batch1", Json::Num(t.batch_speedup)),
                         ])
                     })
                     .collect(),
             ),
         ),
-        ("speedup_batch8_vs_batch1", Json::Num(speedup)),
+        ("speedup_batch8_vs_batch1", Json::Num(parallel.batch_speedup)),
+        (
+            "speedup_simd_parallel_vs_scalar_batch8",
+            Json::Num(tier_speedup),
+        ),
     ]);
     std::fs::write("BENCH_backend.json", format!("{json}\n")).expect("write BENCH_backend.json");
     println!("wrote BENCH_backend.json");
 
-    // smoke floor only — the real number lives in the JSON record; a
-    // contended runner must not turn a load dip into a red build
+    // smoke floors only — the real numbers live in the JSON record; a
+    // contended runner must not turn a load dip into a red build. The
+    // ≥2x tier-speedup acceptance target is read off the committed
+    // snapshot from the multi-core CI runner, not asserted here (a
+    // single-core box legitimately reports ~1x).
     assert!(
-        speedup > 1.0,
-        "batched decode must amortize the weight stream (got {speedup:.2}x)"
+        parallel.batch_speedup > 1.0,
+        "batched decode must amortize the weight stream (got {:.2}x)",
+        parallel.batch_speedup
+    );
+    assert!(
+        tier_speedup > 0.5,
+        "the vector tier must not be materially slower than scalar (got {tier_speedup:.2}x)"
     );
 }

@@ -1,0 +1,35 @@
+#!/usr/bin/env sh
+# Regenerate the committed backend-throughput snapshot on THIS machine.
+#
+#   benchmarks/refresh.sh [label]
+#
+# Runs the backend bench from the repo root, then copies the fresh
+# BENCH_backend.json here with provenance fields appended so the
+# snapshot says where its numbers came from. `label` defaults to
+# `uname -m` plus the core count (e.g. "x86_64-8core").
+set -eu
+
+root=$(cd "$(dirname "$0")/.." && pwd)
+cd "$root"
+
+cores=$(nproc 2>/dev/null || getconf _NPROCESSORS_ONLN 2>/dev/null || echo "?")
+label=${1:-"$(uname -m)-${cores}core"}
+
+cargo bench --bench backend_throughput
+
+# append provenance without disturbing the bench-written fields
+python3 - "$label" <<'EOF'
+import json, sys, datetime
+with open("BENCH_backend.json") as f:
+    rec = json.load(f)
+rec["provenance"] = {
+    "generated_on": datetime.date.today().isoformat(),
+    "generated_by": sys.argv[1],
+    "via": "benchmarks/refresh.sh (cargo bench --bench backend_throughput)",
+}
+with open("benchmarks/BENCH_backend.json", "w") as f:
+    json.dump(rec, f, indent=2)
+    f.write("\n")
+EOF
+
+echo "wrote benchmarks/BENCH_backend.json (provenance: $label)"

@@ -771,7 +771,8 @@ class Config:
         return Config(
             src_dir=os.path.join(root, "rust", "src"),
             hostile=["bridge/protocol.rs", "bridge/device.rs",
-                     "bridge/client.rs", "coordinator/server.rs"],
+                     "bridge/client.rs", "coordinator/server.rs",
+                     "runtime/pool.rs"],
             protocol=os.path.join(root, "rust", "src", "bridge", "protocol.rs"),
             mirror=os.path.join(root, "python", "tests", "validate_bridge_protocol.py"),
         )

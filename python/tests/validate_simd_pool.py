@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Toolchain-free validation of the SIMD/parallel kernel tier's two
+load-bearing claims, ported from rust/src/runtime/{pool.rs,kernels/simd.rs}.
+
+1. `partition_aligned` (pool.rs) — the deterministic work split. The
+   parallel tier's bit-identity rests on stripes being disjoint,
+   contiguous, covering, aligned, and at most `parts` long; a stripe
+   that split a nibble byte or overlapped a neighbour would be silent
+   data corruption under the SendPtr aliasing argument.
+
+2. The AVX2 nibble expansion (simd.rs `expand_nibbles_avx2`) — the one
+   place the vector path re-derives integer values instead of calling
+   the scalar helper. The vector sequence
+   (unpack, compare-with-7, conditional subtract-16) must equal
+   `nibble_i8` (= `((v << 4) as i8) >> 4`) for every byte.
+
+3. Column-stripe order identity — float32 replay (via struct.pack
+   round-trips, no numpy dependency needed) showing that computing a
+   q4 output column inside any stripe performs the same float ops in
+   the same order as the full-width scalar loop, so stripes compose
+   bitwise. This is the structural-determinism contract of par.rs in
+   executable form.
+
+Run: python3 python/tests/validate_simd_pool.py
+"""
+
+import struct
+
+CHECKS = 0
+
+
+def ok(cond, msg):
+    global CHECKS
+    CHECKS += 1
+    if not cond:
+        raise SystemExit(f"FAIL [{CHECKS}]: {msg}")
+
+
+# ---------------------------------------------------------------------------
+# 1. partition_aligned port + properties
+# ---------------------------------------------------------------------------
+
+def div_ceil(a, b):
+    return -(-a // b)
+
+
+def partition_aligned(n, parts, align):
+    align = max(align, 1)
+    parts = max(parts, 1)
+    units = div_ceil(n, align)
+    step = div_ceil(units, parts) * align
+    out = []
+    start = 0
+    while start < n:
+        end = min(start + step, n)
+        out.append((start, end))
+        start = end
+    return out
+
+
+def check_partition():
+    for n in range(0, 130):
+        for parts in (1, 2, 3, 4, 7, 8, 16, 33):
+            for align in (1, 2, 8):
+                rs = partition_aligned(n, parts, align)
+                # covering + contiguous + disjoint: ranges chain 0 → n
+                pos = 0
+                for (a, b) in rs:
+                    ok(a == pos and b > a, f"chain broken n={n} p={parts} a={align}: {rs}")
+                    pos = b
+                ok(pos == n, f"cover != n for n={n} p={parts} a={align}: {rs}")
+                ok(len(rs) <= parts, f"{len(rs)} > parts={parts} for n={n} a={align}")
+                # every boundary except the final n is aligned — a q4
+                # stripe must never start mid nibble-byte
+                for (a, b) in rs:
+                    ok(a % align == 0, f"start {a} unaligned n={n} p={parts} a={align}")
+                    ok(b == n or b % align == 0,
+                       f"end {b} unaligned n={n} p={parts} a={align}")
+    ok(partition_aligned(0, 4, 8) == [], "n=0 must yield no ranges")
+    print(f"partition_aligned: properties hold over 130x8x3 grid")
+
+
+# ---------------------------------------------------------------------------
+# 2. nibble sign-extension: vector sequence == scalar for all 256 bytes
+# ---------------------------------------------------------------------------
+
+def nibble_i8(v):
+    """Scalar oracle: ((v << 4) as i8) >> 4."""
+    x = (v << 4) & 0xFF
+    if x >= 128:
+        x -= 256
+    return x >> 1 >> 1 >> 1 >> 1  # arithmetic >> 4 on the sign-extended value
+
+
+def nibble_vector(v):
+    """The AVX2 sequence: unsigned nibble, then subtract 16 where > 7."""
+    n = v & 0x0F
+    return n - 16 if n > 7 else n
+
+
+def check_nibbles():
+    for byte in range(256):
+        lo, hi = byte & 0x0F, (byte >> 4) & 0x0F
+        ok(nibble_vector(lo) == nibble_i8(byte & 0xFF),
+           f"lo nibble mismatch for byte {byte:#04x}")
+        ok(nibble_vector(hi) == nibble_i8((byte >> 4) & 0xFF),
+           f"hi nibble mismatch for byte {byte:#04x}")
+        ok(-8 <= nibble_vector(lo) <= 7, f"range escape {byte:#04x}")
+    print("nibble expansion: vector sequence == scalar oracle for all 256 bytes")
+
+
+# ---------------------------------------------------------------------------
+# 3. float32 column-stripe order identity
+# ---------------------------------------------------------------------------
+
+def f32(x):
+    """Round a python float to binary32 — one IEEE f32 operation."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def rng_stream(seed, count):
+    """Small deterministic value stream (not the repo RNG; any values do —
+    the claim is order identity, not specific numerics)."""
+    vals, s = [], seed
+    for _ in range(count):
+        s = (s * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        vals.append(f32(((s >> 33) % 2000 - 1000) / 997.0))
+    return vals
+
+
+def q4_column(x, q, scales, k, qblock, col):
+    """Scalar oracle inner loop for ONE output column: acc over k rows,
+    block-scaled, every intermediate rounded to f32."""
+    acc = 0.0
+    for blk in range(div_ceil(k, qblock)):
+        partial = 0.0
+        for i in range(blk * qblock, min((blk + 1) * qblock, k)):
+            partial = f32(partial + f32(x[i] * q[i][col]))
+        acc = f32(acc + f32(partial * scales[blk][col]))
+    return acc
+
+
+def check_stripe_order():
+    k, n, qblock = 24, 14, 8
+    x = rng_stream(7, k)
+    qvals = rng_stream(11, k * n)
+    q = [[float(int(qvals[i * n + j] * 8) % 16 - 8) for j in range(n)] for i in range(k)]
+    scales = [rng_stream(13 + b, n) for b in range(div_ceil(k, qblock))]
+
+    full = [q4_column(x, q, scales, k, qblock, c) for c in range(n)]
+    for parts in (1, 2, 3, 8):
+        out = [None] * n
+        for (a, b) in partition_aligned(n, parts, 2):
+            for c in range(a, b):
+                out[c] = q4_column(x, q, scales, k, qblock, c)
+        ok(all(struct.pack("<f", out[c]) == struct.pack("<f", full[c]) for c in range(n)),
+           f"stripe split changed bits at parts={parts}")
+    print("column stripes: bitwise identical to full-width pass at 1/2/3/8 parts")
+
+
+def main():
+    check_partition()
+    check_nibbles()
+    check_stripe_order()
+    print(f"simd/pool port: all {CHECKS} checks pass")
+
+
+if __name__ == "__main__":
+    main()

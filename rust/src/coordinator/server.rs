@@ -246,6 +246,11 @@ fn stats_json(engine: &Engine) -> Json {
         ("tokens_per_s", Json::Num(m.tokens_per_s())),
         ("sim_tokens_per_s", Json::Num(m.sim_tokens_per_s())),
     ];
+    // which kernel tier produced these numbers (reference backend only;
+    // all tiers are bit-identical, so this is provenance, not behavior)
+    if let Some(t) = engine.runtime().kernel_tier() {
+        pairs.push(("kernel_tier", Json::Str(t)));
+    }
     // KV-arena accounting when the backend pages its session memory
     // (for a bridged backend these are the *device's* arena figures,
     // fetched over the wire; the query also flushes any pipelined

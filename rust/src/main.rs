@@ -24,7 +24,7 @@ use edgellm::coordinator::server;
 use edgellm::models::{self, LlmArch, SparseStrategy};
 use edgellm::runtime::backend::{Backend, ReferenceBackend, SimBackend};
 use edgellm::runtime::model::LlmRuntime;
-use edgellm::runtime::reference::ReferenceConfig;
+use edgellm::runtime::reference::{KernelTier, ReferenceConfig};
 use edgellm::sim::engine::Simulator;
 use edgellm::sim::Memory;
 use edgellm::util::Args;
@@ -65,7 +65,10 @@ fn print_help() {
          edgellm trace-dump --addr 127.0.0.1:7077 --last 4096 --out trace.json\n\n\
          Backends: --backend ref (pure-Rust reference model, default when\n\
          no artifacts are present; paged KV arena via --kv-block-tokens N\n\
-         [64] and --kv-pool-blocks N [0 = auto]), --backend sim (VCU128\n\
+         [64] and --kv-pool-blocks N [0 = auto]; kernel tier via\n\
+         --kernel-tier auto|scalar|simd|simd-parallel [auto] and\n\
+         --threads N [0 = auto] — all tiers are bit-identical,\n\
+         scalar is the oracle), --backend sim (VCU128\n\
          latency model serving deterministic pseudo-tokens; --sim-arch\n\
          glm|qwen|tiny, --max-tokens N), --backend bridge (a remote device\n\
          daemon over the command-stream protocol; --device HOST:PORT, start\n\
@@ -74,13 +77,30 @@ fn print_help() {
     );
 }
 
-/// Reference-backend config with the KV-arena flags threaded in:
-/// `--kv-block-tokens` (tokens per arena block, default 64) and
-/// `--kv-pool-blocks` (pool capacity in blocks, 0 = auto).
+/// Reference-backend config with the KV-arena and kernel-tier flags
+/// threaded in: `--kv-block-tokens` (tokens per arena block, default
+/// 64), `--kv-pool-blocks` (pool capacity in blocks, 0 = auto),
+/// `--kernel-tier auto|scalar|simd|simd-parallel` (default auto;
+/// `EDGELLM_KERNEL_TIER` overrides auto) and `--threads N` (worker
+/// count for the parallel tier, 0 = auto via `EDGELLM_THREADS` /
+/// available parallelism).
 fn ref_config(args: &Args) -> ReferenceConfig {
+    let tier_arg = args.get_or("kernel-tier", "auto");
+    let kernel_tier = match KernelTier::parse(&tier_arg) {
+        Some(t) => t,
+        None => {
+            eprintln!(
+                "unknown --kernel-tier {tier_arg:?} \
+                 (want auto|scalar|simd|simd-parallel), using auto"
+            );
+            KernelTier::Auto
+        }
+    };
     ReferenceConfig {
         kv_block_tokens: args.get_usize("kv-block-tokens", 64),
         kv_pool_blocks: args.get_usize("kv-pool-blocks", 0),
+        kernel_tier,
+        threads: args.get_usize("threads", 0),
         ..ReferenceConfig::default()
     }
 }
@@ -116,8 +136,12 @@ fn load_runtime(args: &Args) -> anyhow::Result<LlmRuntime> {
         "stepped"
     };
     let remote = if runtime.is_remote() { ", remote device" } else { "" };
+    let tier = match runtime.kernel_tier() {
+        Some(t) => format!(", kernels: {t}"),
+        None => String::new(),
+    };
     eprintln!(
-        "loaded {} ({:.1}M params, max_tokens={}, batched decode: {decode_mode}{remote})",
+        "loaded {} ({:.1}M params, max_tokens={}, batched decode: {decode_mode}{remote}{tier})",
         runtime.info.name,
         runtime.info.n_params as f64 / 1e6,
         runtime.info.max_tokens,
@@ -394,6 +418,9 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     println!("d_ffn       : {}", i.d_ffn);
     println!("max_tokens  : {}", i.max_tokens);
     println!("prefill     : buckets {:?}", rt.prefill_buckets());
+    if let Some(t) = rt.kernel_tier() {
+        println!("kernels     : {t}");
+    }
     if let Some(m) = rt.memory() {
         println!(
             "kv arena    : {} blocks x {} tokens ({:.1} MiB pool, {} free, {} reused)",

@@ -192,6 +192,17 @@ pub trait Backend: Send {
         None
     }
 
+    /// Human-readable kernel execution tier serving the hot path
+    /// (`"scalar"`, `"simd"`, `"simd-parallel(8)"`), when the backend
+    /// dispatches through the tiered CPU kernels
+    /// (`runtime::kernels::{simd, par}`). `None` (the default) for
+    /// backends without a CPU compute tier — latency models, remote
+    /// bridges, mocks — so the stats line and benches omit the field
+    /// rather than report a meaningless one.
+    fn kernel_tier(&self) -> Option<String> {
+        None
+    }
+
     /// The scheduler is done with `session` (retired, cancelled, or
     /// aborted). In-process backends keep session state on the host and
     /// free it on drop — the default no-op. Remote backends override

@@ -34,6 +34,9 @@
 //! lives in `fp::mixpe`; these kernels are the fast functional
 //! counterpart.
 
+pub mod par;
+pub mod simd;
+
 use super::kv::PagedRows;
 use crate::pack::layout::{nibble_i8, PackedQ4};
 use crate::quant::sparse::SparseMatrix;

@@ -1,0 +1,330 @@
+//! Multicore drivers over the striped SIMD kernels — the
+//! `simd-parallel` execution tier.
+//!
+//! Each driver splits the *output* of one kernel call into disjoint
+//! column stripes (or whole attention jobs) and runs the stripes on the
+//! persistent [`WorkerPool`](super::super::pool::WorkerPool). The
+//! determinism contract is structural, not numeric:
+//!
+//! - Stripes never share an output element or a scratch element, so
+//!   there is no combining step — nothing is reduced across workers.
+//! - Within a stripe the [`simd`](super::simd) kernel runs the scalar
+//!   oracle's per-element operation sequence unchanged; the stripe
+//!   boundary only decides *which* elements a worker computes, never
+//!   the order of operations *per* element.
+//!
+//! Results are therefore bitwise identical for any thread count
+//! (asserted by the equivalence suite across `threads ∈ {1, 2, 8}`),
+//! and a q4 stripe boundary is kept even so it never splits a
+//! nibble-packed byte.
+//!
+//! Every driver falls back to the single-threaded SIMD kernel when the
+//! split would be degenerate (one stripe, a pool without workers, or
+//! scratch sized for fewer stripes than requested) — callers never need
+//! a size check before dispatching here.
+
+use std::ops::Range;
+
+use super::super::kv::PagedRows;
+use super::super::pool::{partition, partition_aligned, SendPtr, Task, WorkerPool};
+use super::simd::{self, ColScratch};
+use crate::pack::layout::PackedQ4;
+use crate::quant::sparse::SparseMatrix;
+
+/// Column stripes for an `n`-wide output on this pool, `align`-aligned.
+fn stripes(pool: &WorkerPool, n: usize, align: usize) -> Vec<Range<usize>> {
+    partition_aligned(n, pool.threads(), align)
+}
+
+/// Parallel [`gemm_into`](super::gemm_into): output columns are split
+/// 8-aligned (full vector lanes per stripe where possible) across the
+/// pool. Bit-identical to the scalar oracle at any thread count.
+pub fn gemm_into(
+    pool: &WorkerPool,
+    x: &[f32],
+    b: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    assert!(x.len() >= b * k && w.len() >= k * n && out.len() >= b * n);
+    let ranges = stripes(pool, n, 8);
+    if ranges.len() <= 1 {
+        simd::gemm_into(x, b, k, w, n, out);
+        return;
+    }
+    let base = SendPtr::new(out.as_mut_ptr());
+    let tasks: Vec<Task> = ranges
+        .into_iter()
+        .map(|cols| {
+            // SAFETY: stripes are disjoint column ranges of `out`, each
+            // worker writes only `s*n + cols`; the pool joins every
+            // task before `run` returns, within `out`'s borrow.
+            Box::new(move || unsafe { simd::gemm_cols_raw(x, b, k, w, n, cols, base) }) as Task
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// Parallel [`matvec_into`](super::matvec_into) (the logits head).
+pub fn matvec_into(pool: &WorkerPool, w: &[f32], x: &[f32], out: &mut [f32]) {
+    let (k, n) = (x.len(), out.len());
+    gemm_into(pool, x, 1, k, w, n, out);
+}
+
+/// Parallel [`q4_gemm_into`](super::q4_gemm_into): even-aligned column
+/// stripes (a stripe never splits a nibble-packed byte), with the
+/// caller's scratch carved into per-worker [`ColScratch`] regions —
+/// `b` activation lanes, `cols.len()` expanded nibbles and
+/// `b * cols.len()` partials each, all disjoint. Falls back to the
+/// single-threaded kernel when `xcol` was sized for fewer stripes.
+pub fn q4_gemm_into(
+    pool: &WorkerPool,
+    x: &[f32],
+    b: usize,
+    w: &PackedQ4,
+    partial: &mut [f32],
+    xcol: &mut [f32],
+    qrow: &mut [f32],
+    out: &mut [f32],
+) {
+    let n = w.n;
+    assert!(x.len() >= b * w.k && out.len() >= b * n);
+    assert!(partial.len() >= b * n && qrow.len() >= n);
+    let ranges = stripes(pool, n, 2);
+    if ranges.len() <= 1 || xcol.len() < ranges.len() * b {
+        simd::q4_gemm_into(x, b, w, partial, xcol, qrow, out);
+        return;
+    }
+    let base = SendPtr::new(out.as_mut_ptr());
+    let mut xcol_rest = xcol;
+    let mut qrow_rest = qrow;
+    let mut partial_rest = partial;
+    let tasks: Vec<Task> = ranges
+        .into_iter()
+        .map(|cols| {
+            let cw = cols.len();
+            let (xc, rest) = std::mem::take(&mut xcol_rest).split_at_mut(b);
+            xcol_rest = rest;
+            let (qr, rest) = std::mem::take(&mut qrow_rest).split_at_mut(cw);
+            qrow_rest = rest;
+            let (pp, rest) = std::mem::take(&mut partial_rest).split_at_mut(b * cw);
+            partial_rest = rest;
+            // SAFETY: disjoint even-aligned column stripes of `out`,
+            // each with its own scratch region; the pool joins every
+            // task before `run` returns, within `out`'s borrow.
+            Box::new(move || {
+                let sc = ColScratch { xcol: xc, qrow: qr, partial: pp };
+                unsafe { simd::q4_gemm_cols_raw(x, b, w, cols, sc, base) }
+            }) as Task
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// Parallel [`q4_sparse_gemm_into`](super::q4_sparse_gemm_into): slots
+/// are per-column, so any column split is valid and no scratch is
+/// needed.
+pub fn q4_sparse_gemm_into(
+    pool: &WorkerPool,
+    x: &[f32],
+    b: usize,
+    m: &SparseMatrix,
+    slot_scale: &[f32],
+    out: &mut [f32],
+) {
+    let n = m.n;
+    assert!(x.len() >= b * m.k && slot_scale.len() >= m.kk() * n && out.len() >= b * n);
+    let ranges = stripes(pool, n, 8);
+    if ranges.len() <= 1 {
+        simd::q4_sparse_gemm_into(x, b, m, slot_scale, out);
+        return;
+    }
+    let base = SendPtr::new(out.as_mut_ptr());
+    let tasks: Vec<Task> = ranges
+        .into_iter()
+        .map(|cols| {
+            // SAFETY: disjoint column stripes of `out`; the pool joins
+            // every task before `run` returns, within `out`'s borrow.
+            Box::new(move || unsafe { simd::q4_sparse_cols_raw(x, b, m, slot_scale, cols, base) })
+                as Task
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+/// One session-position attention problem: `q` against `len` cached
+/// rows, context written to this job's own `ctx` row. Jobs are
+/// independent by construction (each session attends over its own
+/// cache), which is what makes attention the *job*-parallel axis while
+/// the GEMMs are *column*-parallel.
+pub struct AttnJob<'a> {
+    /// query row, `d` wide
+    pub q: &'a [f32],
+    /// paged key rows for this session
+    pub keys: PagedRows<'a>,
+    /// paged value rows for this session
+    pub vals: PagedRows<'a>,
+    /// cached positions to attend over
+    pub len: usize,
+    /// output context row, `d` wide — exclusive to this job
+    pub ctx: &'a mut [f32],
+}
+
+/// Run a batch of attention jobs across the pool. `scores` is scratch
+/// for softmax logits: every worker group gets its own `max_len`-wide
+/// stripe, so the same buffer serves any thread count. Scores never
+/// escape (only `ctx` does), so tiers that stripe the buffer
+/// differently still produce identical outputs.
+pub fn attend_jobs(pool: &WorkerPool, jobs: Vec<AttnJob<'_>>, scores: &mut [f32], max_len: usize) {
+    debug_assert!(jobs.iter().all(|j| j.len <= max_len));
+    let groups = partition(jobs.len(), pool.threads());
+    if groups.len() <= 1 || scores.len() < groups.len() * max_len {
+        for j in jobs {
+            simd::attend_paged_into(j.q, &j.keys, &j.vals, &mut scores[..j.len], j.ctx);
+        }
+        return;
+    }
+    let mut remaining = jobs;
+    let mut scores_rest = scores;
+    let tasks: Vec<Task> = groups
+        .into_iter()
+        .map(|g| {
+            let rest = remaining.split_off(g.len());
+            let group = std::mem::replace(&mut remaining, rest);
+            let (stripe, rest) = std::mem::take(&mut scores_rest).split_at_mut(max_len);
+            scores_rest = rest;
+            Box::new(move || {
+                for j in group {
+                    simd::attend_paged_into(j.q, &j.keys, &j.vals, &mut stripe[..j.len], j.ctx);
+                }
+            }) as Task
+        })
+        .collect();
+    pool.run(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{self as kernels};
+    use super::*;
+    use crate::pack::layout::PackedQ4;
+    use crate::quant::sparse::pack_sparse;
+    use crate::quant::{prune_log_scale, quantize, QBLOCK};
+    use crate::util::rng::Rng;
+
+    fn random(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn gemm_invariant_across_thread_counts() {
+        let (k, n, b) = (24usize, 37usize, 3usize); // odd width, tail lanes
+        let w = random(k * n, 1);
+        let x = random(b * k, 2);
+        let mut want = vec![0f32; b * n];
+        kernels::gemm_into(&x, b, k, &w, n, &mut want);
+        for threads in [1usize, 2, 8, 16] {
+            let pool = WorkerPool::new(threads);
+            let mut got = vec![0f32; b * n];
+            gemm_into(&pool, &x, b, k, &w, n, &mut got);
+            assert_eq!(bits(&want), bits(&got), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn q4_gemm_invariant_across_thread_counts() {
+        let (k, n, b) = (QBLOCK, 26usize, 3usize);
+        let w = random(k * n, 3);
+        let p = PackedQ4::from_quant(&quantize(&w, k, n));
+        let x = random(b * k, 4);
+        let mut partial = vec![0f32; b * n];
+        let mut xcol1 = vec![0f32; b];
+        let mut qrow = vec![0f32; n];
+        let mut want = vec![0f32; b * n];
+        kernels::q4_gemm_into(&x, b, &p, &mut partial, &mut xcol1, &mut qrow, &mut want);
+        for threads in [1usize, 2, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut xcol = vec![0f32; pool.threads() * b];
+            let mut got = vec![0f32; b * n];
+            q4_gemm_into(&pool, &x, b, &p, &mut partial, &mut xcol, &mut qrow, &mut got);
+            assert_eq!(bits(&want), bits(&got), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn q4_gemm_falls_back_when_scratch_is_small() {
+        let (k, n, b) = (QBLOCK, 16usize, 2usize);
+        let w = random(k * n, 5);
+        let p = PackedQ4::from_quant(&quantize(&w, k, n));
+        let x = random(b * k, 6);
+        let mut partial = vec![0f32; b * n];
+        let mut xcol = vec![0f32; b]; // sized for one stripe only
+        let mut qrow = vec![0f32; n];
+        let mut want = vec![0f32; b * n];
+        kernels::q4_gemm_into(&x, b, &p, &mut partial, &mut xcol, &mut qrow, &mut want);
+        let pool = WorkerPool::new(4);
+        let mut got = vec![0f32; b * n];
+        q4_gemm_into(&pool, &x, b, &p, &mut partial, &mut xcol, &mut qrow, &mut got);
+        assert_eq!(bits(&want), bits(&got));
+    }
+
+    #[test]
+    fn sparse_invariant_across_thread_counts() {
+        let (k, n, b) = (QBLOCK, 21usize, 2usize);
+        let mut w = random(k * n, 7);
+        prune_log_scale(&mut w, k, n, 2);
+        let sm = pack_sparse(&quantize(&w, k, n), 2);
+        let ss = sm.slot_scales();
+        let x = random(b * k, 8);
+        let mut want = vec![0f32; b * n];
+        kernels::q4_sparse_gemm_into(&x, b, &sm, &ss, &mut want);
+        for threads in [1usize, 2, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut got = vec![0f32; b * n];
+            q4_sparse_gemm_into(&pool, &x, b, &sm, &ss, &mut got);
+            assert_eq!(bits(&want), bits(&got), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn attention_jobs_invariant_across_thread_counts() {
+        let d = 16usize;
+        let lens = [5usize, 1, 12, 9, 3]; // fewer jobs than 8 threads
+        let q: Vec<Vec<f32>> = (0..lens.len()).map(|i| random(d, 10 + i as u64)).collect();
+        let keys: Vec<Vec<f32>> = lens.iter().map(|&l| random(l * d, 20 + l as u64)).collect();
+        let vals: Vec<Vec<f32>> = lens.iter().map(|&l| random(l * d, 30 + l as u64)).collect();
+        let max_len = 12usize;
+        let mut want = vec![0f32; lens.len() * d];
+        for (i, &len) in lens.iter().enumerate() {
+            let mut sc = vec![0f32; len];
+            kernels::attend_into(&q[i], &keys[i], &vals[i], &mut sc, &mut want[i * d..(i + 1) * d]);
+        }
+        let blocks = [0u32];
+        for threads in [1usize, 2, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut scores = vec![0f32; pool.threads() * max_len];
+            let mut got = vec![0f32; lens.len() * d];
+            let mut rows = got.chunks_mut(d);
+            let jobs: Vec<AttnJob> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &len)| AttnJob {
+                    q: &q[i],
+                    keys: PagedRows::new(&keys[i], &blocks, len.max(1), 0, 0, d),
+                    vals: PagedRows::new(&vals[i], &blocks, len.max(1), 0, 0, d),
+                    len,
+                    ctx: rows.next().unwrap(),
+                })
+                .collect();
+            attend_jobs(&pool, jobs, &mut scores, max_len);
+            assert_eq!(bits(&want), bits(&got), "threads {threads}");
+        }
+    }
+}

@@ -1,0 +1,792 @@
+//! Explicitly vectorized kernels — the AVX2 execution tier under the
+//! scalar oracle in [`kernels`](super).
+//!
+//! Every function here computes the *same floating-point operation
+//! sequence per output element* as its scalar twin, so the results are
+//! **bit-identical**, not merely close — the equivalence suite compares
+//! `to_bits()`. Three rules make that possible:
+//!
+//! 1. **Multiply + add, never FMA.** `_mm256_fmadd_ps` rounds once
+//!    where the scalar `*o += x * w` rounds twice; a fused tier could
+//!    only promise a ULP bound. We deliberately use
+//!    `_mm256_add_ps(_mm256_mul_ps(..))` — same speedup class (the
+//!    axpy loops are load/store-bound), strictly stronger contract.
+//!    Dispatch therefore keys on `avx2` alone and never requires `fma`.
+//! 2. **Vectorize across independent accumulators only.** The axpy
+//!    loops step 8 *output channels* at once; each channel's
+//!    multiply/add sequence over input rows is unchanged at any vector
+//!    width. The one true reduction ([`dot4`](super::dot4)) already
+//!    fixes a 4-lane summation order, and the SSE version reproduces
+//!    exactly those 4 lanes and the scalar combine.
+//! 3. **Exact integer expansion.** Nibble unpack, sign extension, and
+//!    `i32 → f32` conversion are exact in both scalar and vector form;
+//!    softmax keeps the scalar libm `exp` (vector polynomial exp would
+//!    change results).
+//!
+//! Runtime dispatch: every public kernel checks
+//! `is_x86_feature_detected!("avx2")` (cached by std) and falls back to
+//! an in-module scalar body with the identical operation order — on
+//! non-x86-64 targets that fallback is the whole implementation. The
+//! `*_cols_raw` variants compute a **column stripe** `[c0, c2)` of the
+//! same output and exist for the worker pool (`runtime::pool`): paged
+//! addressing and partitioning stay outside the vector bodies, so
+//! paged == contiguous and striped == full-width identities hold by
+//! construction.
+
+use std::ops::Range;
+
+use super::super::kv::PagedRows;
+use super::super::pool::SendPtr;
+use crate::pack::layout::{nibble_i8, PackedQ4};
+use crate::quant::sparse::SparseMatrix;
+use crate::quant::QBLOCK;
+
+/// Whether the vector path is live on this machine (AVX2 detected at
+/// runtime). When false every kernel in this module still works — it
+/// runs the identical-order scalar body.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub fn available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// Whether the vector path is live on this machine (never, off x86-64).
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+pub fn available() -> bool {
+    false
+}
+
+/// Worker-local scratch for the striped q4 kernel
+/// ([`q4_gemm_cols_raw`]). Each stripe needs its own copy — the
+/// parallel driver slices one contiguous scratch buffer per worker.
+pub struct ColScratch<'a> {
+    /// activation gather across the batch, `>= b`
+    pub xcol: &'a mut [f32],
+    /// one expanded nibble stripe, `>= cols.len()`
+    pub qrow: &'a mut [f32],
+    /// per-QBLOCK partial accumulators, `>= b * cols.len()`
+    pub partial: &'a mut [f32],
+}
+
+// ---------------------------------------------------------------------
+// dense GEMM
+// ---------------------------------------------------------------------
+
+/// Vector-tier [`gemm_into`](super::gemm_into): identical contract and
+/// bit-identical output.
+pub fn gemm_into(x: &[f32], b: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    assert!(x.len() >= b * k && w.len() >= k * n && out.len() >= b * n);
+    // SAFETY: `out` covers the full `b × n` output and the stripe is
+    // the whole width; no other view of `out` exists during the call.
+    unsafe { gemm_cols_raw(x, b, k, w, n, 0..n, SendPtr::new(out.as_mut_ptr())) }
+}
+
+/// Vector-tier [`matvec_into`](super::matvec_into).
+pub fn matvec_into(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let (k, n) = (x.len(), out.len());
+    gemm_into(x, 1, k, w, n, out);
+}
+
+/// Column stripe `cols` of [`gemm_into`]: fills rows `s*n + cols` of
+/// the output at `out` for every session `s`. The stripe owns those
+/// elements exclusively, so disjoint stripes may run concurrently.
+///
+/// # Safety
+///
+/// `out` must point to a live `f32` buffer of at least `b * n`
+/// elements that outlives the call, `cols` must lie within `0..=n`,
+/// and no other thread may touch `out`'s elements `s*n + cols` for any
+/// `s < b` while this runs. `x`/`w` must not overlap `out`.
+pub unsafe fn gemm_cols_raw(
+    x: &[f32],
+    b: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    cols: Range<usize>,
+    out: SendPtr,
+) {
+    debug_assert!(cols.end <= n && cols.start <= cols.end);
+    debug_assert!(x.len() >= b * k && w.len() >= k * n);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            gemm_cols_avx2(x, b, k, w, n, cols, out);
+            return;
+        }
+    }
+    gemm_cols_scalar(x, b, k, w, n, cols, out)
+}
+
+/// Scalar fallback with the oracle's exact loop body, restricted to a
+/// column stripe. Per output element the (multiply, add) sequence over
+/// input channels is unchanged, so stripe results equal the full-width
+/// kernel's bitwise.
+unsafe fn gemm_cols_scalar(
+    x: &[f32],
+    b: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    cols: Range<usize>,
+    out: SendPtr,
+) {
+    let (c0, cw) = (cols.start, cols.len());
+    for s in 0..b {
+        stripe_mut(out, s * n + c0, cw).fill(0.0);
+    }
+    for i in 0..k {
+        let wrow = &w[i * n + c0..i * n + c0 + cw];
+        for s in 0..b {
+            let xv = x[s * k + i];
+            if xv == 0.0 {
+                continue;
+            }
+            let orow = stripe_mut(out, s * n + c0, cw);
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_cols_avx2(
+    x: &[f32],
+    b: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    cols: Range<usize>,
+    out: SendPtr,
+) {
+    let (c0, cw) = (cols.start, cols.len());
+    for s in 0..b {
+        stripe_mut(out, s * n + c0, cw).fill(0.0);
+    }
+    for i in 0..k {
+        let wrow = &w[i * n + c0..i * n + c0 + cw];
+        for s in 0..b {
+            let xv = x[s * k + i];
+            if xv == 0.0 {
+                continue;
+            }
+            axpy_avx2(xv, wrow, stripe_mut(out, s * n + c0, cw));
+        }
+    }
+}
+
+/// Materialize the caller-promised disjoint output stripe. Each call
+/// creates a fresh `&mut` that dies with the expression, and no two
+/// concurrent stripes overlap (pool drivers partition the columns), so
+/// no aliasing `&mut` ever coexists.
+#[inline(always)]
+unsafe fn stripe_mut<'a>(base: SendPtr, off: usize, len: usize) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(base.get().add(off), len)
+}
+
+/// `dst[j] += a * src[j]` — the vector form of the axpy inner loop.
+/// Mul then add per element, matching the scalar rounding exactly.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(a: f32, src: &[f32], dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let len = src.len().min(dst.len());
+    let av = _mm256_set1_ps(a);
+    let mut j = 0usize;
+    while j + 8 <= len {
+        let sv = _mm256_loadu_ps(src.as_ptr().add(j));
+        let dv = _mm256_loadu_ps(dst.as_ptr().add(j));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_add_ps(dv, _mm256_mul_ps(av, sv)));
+        j += 8;
+    }
+    while j < len {
+        *dst.get_unchecked_mut(j) += a * *src.get_unchecked(j);
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// dense q4 GEMM
+// ---------------------------------------------------------------------
+
+/// Vector-tier [`q4_gemm_into`](super::q4_gemm_into): identical
+/// contract (same scratch shapes) and bit-identical output.
+pub fn q4_gemm_into(
+    x: &[f32],
+    b: usize,
+    w: &PackedQ4,
+    partial: &mut [f32],
+    xcol: &mut [f32],
+    qrow: &mut [f32],
+    out: &mut [f32],
+) {
+    let n = w.n;
+    assert!(x.len() >= b * w.k && out.len() >= b * n);
+    assert!(partial.len() >= b * n && xcol.len() >= b && qrow.len() >= n);
+    let sc = ColScratch { xcol, qrow, partial };
+    // SAFETY: full-width stripe of an exclusively borrowed `out`.
+    unsafe { q4_gemm_cols_raw(x, b, w, 0..n, sc, SendPtr::new(out.as_mut_ptr())) }
+}
+
+/// Column stripe `cols` of the q4 GEMM. `cols.start` and `cols.end`
+/// must be even (a stripe never splits a nibble-packed byte; the
+/// aligned partitioner guarantees this). Scratch is worker-local; the
+/// `partial` accumulators are indexed stripe-locally (`s * cols.len()`
+/// rows), so a stripe touches no scratch outside its own.
+///
+/// # Safety
+///
+/// As [`gemm_cols_raw`]: `out` live for `b * w.n` elements, `cols`
+/// within `0..=w.n` with even bounds, stripe elements untouched by
+/// any other thread, no overlap with `x` or the scratch.
+pub unsafe fn q4_gemm_cols_raw(
+    x: &[f32],
+    b: usize,
+    w: &PackedQ4,
+    cols: Range<usize>,
+    sc: ColScratch<'_>,
+    out: SendPtr,
+) {
+    debug_assert!(cols.start % 2 == 0 && cols.end % 2 == 0 && cols.end <= w.n);
+    debug_assert!(sc.xcol.len() >= b);
+    debug_assert!(sc.qrow.len() >= cols.len());
+    debug_assert!(sc.partial.len() >= b * cols.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            q4_cols_avx2(x, b, w, cols, sc, out);
+            return;
+        }
+    }
+    q4_cols_scalar(x, b, w, cols, sc, out)
+}
+
+unsafe fn q4_cols_scalar(
+    x: &[f32],
+    b: usize,
+    w: &PackedQ4,
+    cols: Range<usize>,
+    sc: ColScratch<'_>,
+    out: SendPtr,
+) {
+    let (k, n) = (w.k, w.n);
+    let (c0, cw) = (cols.start, cols.len());
+    let half = n / 2;
+    for s in 0..b {
+        stripe_mut(out, s * n + c0, cw).fill(0.0);
+    }
+    for blk in 0..k / QBLOCK {
+        sc.partial[..b * cw].fill(0.0);
+        for i in blk * QBLOCK..(blk + 1) * QBLOCK {
+            let mut any = false;
+            for s in 0..b {
+                let xv = x[s * k + i];
+                sc.xcol[s] = xv;
+                any |= xv != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            let row = &w.data[i * half + c0 / 2..i * half + (c0 + cw) / 2];
+            for (j, &byte) in row.iter().enumerate() {
+                sc.qrow[2 * j] = nibble_i8(byte & 0xF) as f32;
+                sc.qrow[2 * j + 1] = nibble_i8(byte >> 4) as f32;
+            }
+            for (s, &xv) in sc.xcol[..b].iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let prow = &mut sc.partial[s * cw..(s + 1) * cw];
+                for (p, &qv) in prow.iter_mut().zip(&sc.qrow[..cw]) {
+                    *p += xv * qv;
+                }
+            }
+        }
+        let srow = &w.scales[blk * n + c0..blk * n + c0 + cw];
+        for s in 0..b {
+            let orow = stripe_mut(out, s * n + c0, cw);
+            let prow = &sc.partial[s * cw..(s + 1) * cw];
+            for ((o, &p), &scale) in orow.iter_mut().zip(prow).zip(srow) {
+                *o += p * scale;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn q4_cols_avx2(
+    x: &[f32],
+    b: usize,
+    w: &PackedQ4,
+    cols: Range<usize>,
+    sc: ColScratch<'_>,
+    out: SendPtr,
+) {
+    let (k, n) = (w.k, w.n);
+    let (c0, cw) = (cols.start, cols.len());
+    let half = n / 2;
+    for s in 0..b {
+        stripe_mut(out, s * n + c0, cw).fill(0.0);
+    }
+    for blk in 0..k / QBLOCK {
+        sc.partial[..b * cw].fill(0.0);
+        for i in blk * QBLOCK..(blk + 1) * QBLOCK {
+            let mut any = false;
+            for s in 0..b {
+                let xv = x[s * k + i];
+                sc.xcol[s] = xv;
+                any |= xv != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            let row = &w.data[i * half + c0 / 2..i * half + (c0 + cw) / 2];
+            expand_nibbles_avx2(row, &mut sc.qrow[..cw]);
+            for (s, &xv) in sc.xcol[..b].iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                axpy_avx2(xv, &sc.qrow[..cw], &mut sc.partial[s * cw..(s + 1) * cw]);
+            }
+        }
+        let srow = &w.scales[blk * n + c0..blk * n + c0 + cw];
+        for s in 0..b {
+            let orow = stripe_mut(out, s * n + c0, cw);
+            scale_add_avx2(&sc.partial[s * cw..(s + 1) * cw], srow, orow);
+        }
+    }
+}
+
+/// Expand `bytes.len()` nibble-packed bytes into `2 * bytes.len()`
+/// dequantized-integer f32 lanes, column order `(lo, hi)` per byte —
+/// the vector twin of the `nibble_i8` loop. Unpack, mask, compare-based
+/// sign extension, and widening conversion are all exact.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn expand_nibbles_avx2(bytes: &[u8], dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    debug_assert!(dst.len() >= bytes.len() * 2);
+    let lo_mask = _mm_set1_epi8(0x0F);
+    let seven = _mm_set1_epi8(7);
+    let sixteen = _mm_set1_epi8(16);
+    let mut j = 0usize;
+    while j + 16 <= bytes.len() {
+        let raw = _mm_loadu_si128(bytes.as_ptr().add(j) as *const __m128i);
+        let lo = _mm_and_si128(raw, lo_mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), lo_mask);
+        // interleave restores storage column order: byte t holds
+        // columns (2t, 2t+1) as (low, high) nibble
+        let il0 = _mm_unpacklo_epi8(lo, hi); // columns 0..16 of this chunk
+        let il1 = _mm_unpackhi_epi8(lo, hi); // columns 16..32
+        // two's-complement sign extension of a 4-bit value: v - 16 iff v > 7
+        let s0 = _mm_sub_epi8(il0, _mm_and_si128(_mm_cmpgt_epi8(il0, seven), sixteen));
+        let s1 = _mm_sub_epi8(il1, _mm_and_si128(_mm_cmpgt_epi8(il1, seven), sixteen));
+        store8_i8_as_f32(dst.as_mut_ptr().add(2 * j), s0);
+        store8_i8_as_f32(dst.as_mut_ptr().add(2 * j + 8), _mm_srli_si128::<8>(s0));
+        store8_i8_as_f32(dst.as_mut_ptr().add(2 * j + 16), s1);
+        store8_i8_as_f32(dst.as_mut_ptr().add(2 * j + 24), _mm_srli_si128::<8>(s1));
+        j += 16;
+    }
+    while j < bytes.len() {
+        let byte = *bytes.get_unchecked(j);
+        *dst.get_unchecked_mut(2 * j) = nibble_i8(byte & 0xF) as f32;
+        *dst.get_unchecked_mut(2 * j + 1) = nibble_i8(byte >> 4) as f32;
+        j += 1;
+    }
+}
+
+/// Sign-extend the low 8 `i8` lanes to `i32` and store as 8 exact f32.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn store8_i8_as_f32(dst: *mut f32, v: std::arch::x86_64::__m128i) {
+    use std::arch::x86_64::*;
+    _mm256_storeu_ps(dst, _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(v)));
+}
+
+/// `out[j] += partial[j] * scales[j]` — the block-scale application,
+/// mul then add per element like the scalar loop.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_add_avx2(partial: &[f32], scales: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let len = out.len().min(partial.len()).min(scales.len());
+    let mut j = 0usize;
+    while j + 8 <= len {
+        let p = _mm256_loadu_ps(partial.as_ptr().add(j));
+        let s = _mm256_loadu_ps(scales.as_ptr().add(j));
+        let o = _mm256_loadu_ps(out.as_ptr().add(j));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(o, _mm256_mul_ps(p, s)));
+        j += 8;
+    }
+    while j < len {
+        *out.get_unchecked_mut(j) += *partial.get_unchecked(j) * *scales.get_unchecked(j);
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// sparse q4 GEMM
+// ---------------------------------------------------------------------
+
+/// Vector-tier [`q4_sparse_gemm_into`](super::q4_sparse_gemm_into):
+/// identical contract and bit-identical output.
+pub fn q4_sparse_gemm_into(
+    x: &[f32],
+    b: usize,
+    m: &SparseMatrix,
+    slot_scale: &[f32],
+    out: &mut [f32],
+) {
+    let n = m.n;
+    assert!(x.len() >= b * m.k && slot_scale.len() >= m.kk() * n && out.len() >= b * n);
+    // SAFETY: full-width stripe of an exclusively borrowed `out`.
+    unsafe { q4_sparse_cols_raw(x, b, m, slot_scale, 0..n, SendPtr::new(out.as_mut_ptr())) }
+}
+
+/// Column stripe `cols` of the sparse q4 GEMM (`idx`-gather per slot
+/// row). Any column split is valid — slots are per-column.
+///
+/// # Safety
+///
+/// As [`gemm_cols_raw`], with `cols` within `0..=m.n` and every
+/// `m.idx` entry `< m.k` (the packer's invariant — the gather indexes
+/// `x` with them).
+pub unsafe fn q4_sparse_cols_raw(
+    x: &[f32],
+    b: usize,
+    m: &SparseMatrix,
+    slot_scale: &[f32],
+    cols: Range<usize>,
+    out: SendPtr,
+) {
+    debug_assert!(cols.end <= m.n);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            sparse_cols_avx2(x, b, m, slot_scale, cols, out);
+            return;
+        }
+    }
+    sparse_cols_scalar(x, b, m, slot_scale, cols, out)
+}
+
+unsafe fn sparse_cols_scalar(
+    x: &[f32],
+    b: usize,
+    m: &SparseMatrix,
+    slot_scale: &[f32],
+    cols: Range<usize>,
+    out: SendPtr,
+) {
+    let (k, n, kk) = (m.k, m.n, m.kk());
+    let (c0, cw) = (cols.start, cols.len());
+    for s in 0..b {
+        stripe_mut(out, s * n + c0, cw).fill(0.0);
+    }
+    for r in 0..kk {
+        let idxrow = &m.idx[r * n + c0..r * n + c0 + cw];
+        let valrow = &m.val[r * n + c0..r * n + c0 + cw];
+        let srow = &slot_scale[r * n + c0..r * n + c0 + cw];
+        for s in 0..b {
+            let xs = &x[s * k..(s + 1) * k];
+            let orow = stripe_mut(out, s * n + c0, cw);
+            for c in 0..cw {
+                orow[c] += xs[idxrow[c] as usize] * valrow[c] as f32 * srow[c];
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sparse_cols_avx2(
+    x: &[f32],
+    b: usize,
+    m: &SparseMatrix,
+    slot_scale: &[f32],
+    cols: Range<usize>,
+    out: SendPtr,
+) {
+    use std::arch::x86_64::*;
+    let (k, n, kk) = (m.k, m.n, m.kk());
+    let (c0, cw) = (cols.start, cols.len());
+    for s in 0..b {
+        stripe_mut(out, s * n + c0, cw).fill(0.0);
+    }
+    for r in 0..kk {
+        let idxrow = &m.idx[r * n + c0..r * n + c0 + cw];
+        let valrow = &m.val[r * n + c0..r * n + c0 + cw];
+        let srow = &slot_scale[r * n + c0..r * n + c0 + cw];
+        for s in 0..b {
+            let xs = &x[s * k..(s + 1) * k];
+            let orow = stripe_mut(out, s * n + c0, cw);
+            let mut j = 0usize;
+            while j + 8 <= cw {
+                // gather activations by slot index, widen INT4 values,
+                // then ((x * v) * scale) + acc — the scalar grouping
+                let iv = _mm256_loadu_si256(idxrow.as_ptr().add(j) as *const __m256i);
+                let g = _mm256_i32gather_ps::<4>(xs.as_ptr(), iv);
+                let v8 = _mm_loadl_epi64(valrow.as_ptr().add(j) as *const __m128i);
+                let vf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(v8));
+                let sv = _mm256_loadu_ps(srow.as_ptr().add(j));
+                let ov = _mm256_loadu_ps(orow.as_ptr().add(j));
+                let acc = _mm256_add_ps(ov, _mm256_mul_ps(_mm256_mul_ps(g, vf), sv));
+                _mm256_storeu_ps(orow.as_mut_ptr().add(j), acc);
+                j += 8;
+            }
+            while j < cw {
+                *orow.get_unchecked_mut(j) += *xs.get_unchecked(*idxrow.get_unchecked(j) as usize)
+                    * *valrow.get_unchecked(j) as f32
+                    * *srow.get_unchecked(j);
+                j += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// attention
+// ---------------------------------------------------------------------
+
+/// Vector-tier [`attend_into`](super::attend_into) — same degenerate
+/// block-table delegation as the oracle.
+pub fn attend_into(q: &[f32], keys: &[f32], vals: &[f32], scores: &mut [f32], ctx: &mut [f32]) {
+    let d = q.len();
+    let len = scores.len();
+    debug_assert!(keys.len() >= len * d && vals.len() >= len * d);
+    let blocks = [0u32];
+    let kr = PagedRows::new(keys, &blocks, len.max(1), 0, 0, d);
+    let vr = PagedRows::new(vals, &blocks, len.max(1), 0, 0, d);
+    attend_paged_into(q, &kr, &vr, scores, ctx);
+}
+
+/// Vector-tier [`attend_paged_into`](super::attend_paged_into):
+/// SSE 4-lane score dots (the exact [`dot4`](super::dot4) lanes),
+/// scalar softmax (libm `exp` is the contract), vector accumulate.
+/// Paged addressing stays outside the vector body.
+pub fn attend_paged_into(
+    q: &[f32],
+    keys: &PagedRows,
+    vals: &PagedRows,
+    scores: &mut [f32],
+    ctx: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            // SAFETY: runtime-detected avx2.
+            unsafe { attend_paged_avx2(q, keys, vals, scores, ctx) };
+            return;
+        }
+    }
+    super::attend_paged_into(q, keys, vals, scores, ctx)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn attend_paged_avx2(
+    q: &[f32],
+    keys: &PagedRows,
+    vals: &PagedRows,
+    scores: &mut [f32],
+    ctx: &mut [f32],
+) {
+    let d = q.len();
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    for (i, s) in scores.iter_mut().enumerate() {
+        *s = dot4_sse(keys.row(i), q) * inv_sqrt_d;
+    }
+    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut wsum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - m).exp();
+        wsum += *s;
+    }
+    ctx.fill(0.0);
+    for (i, s) in scores.iter().enumerate() {
+        let a = s / wsum;
+        axpy_avx2(a, vals.row(i), ctx);
+    }
+}
+
+/// SSE twin of [`dot4`](super::dot4): lane `l` of the 128-bit
+/// accumulator receives exactly the scalar `acc[l]` sequence, and the
+/// final combine is the scalar `(acc0 + acc1) + (acc2 + acc3) + tail`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_sse(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let len = a.len().min(b.len());
+    let body = len - len % 4;
+    let mut acc = _mm_setzero_ps();
+    let mut i = 0usize;
+    while i < body {
+        let av = _mm_loadu_ps(a.as_ptr().add(i));
+        let bv = _mm_loadu_ps(b.as_ptr().add(i));
+        acc = _mm_add_ps(acc, _mm_mul_ps(av, bv));
+        i += 4;
+    }
+    let mut lanes = [0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0f32;
+    while i < len {
+        tail += *a.get_unchecked(i) * *b.get_unchecked(i);
+        i += 1;
+    }
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{self as kernels};
+    use super::*;
+    use crate::quant::sparse::pack_sparse;
+    use crate::quant::{prune_log_scale, quantize};
+    use crate::util::rng::Rng;
+
+    fn random(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn gemm_bit_identical_to_scalar_oracle() {
+        // odd n (tail lanes), n < 8, n exactly 8, large n
+        for (k, n, b) in [(24usize, 18usize, 3usize), (16, 5, 1), (8, 8, 2), (32, 67, 4)] {
+            let w = random(k * n, 3);
+            let x = random(b * k, 4);
+            let mut want = vec![0f32; b * n];
+            kernels::gemm_into(&x, b, k, &w, n, &mut want);
+            let mut got = vec![0f32; b * n];
+            gemm_into(&x, b, k, &w, n, &mut got);
+            assert_eq!(bits(&want), bits(&got), "k={k} n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn gemm_stripes_compose_to_full_width() {
+        let (k, n, b) = (16usize, 30usize, 3usize);
+        let w = random(k * n, 5);
+        let x = random(b * k, 6);
+        let mut want = vec![0f32; b * n];
+        kernels::gemm_into(&x, b, k, &w, n, &mut want);
+        let mut got = vec![0f32; b * n];
+        let base = SendPtr::new(got.as_mut_ptr());
+        for cols in [0..7, 7..8, 8..30] {
+            // SAFETY: sequential disjoint stripes of `got`.
+            unsafe { gemm_cols_raw(&x, b, k, &w, n, cols, base) };
+        }
+        assert_eq!(bits(&want), bits(&got));
+    }
+
+    #[test]
+    fn q4_gemm_bit_identical_to_scalar_oracle() {
+        use crate::quant::QBLOCK;
+        let (k, n, b) = (QBLOCK * 2, 20usize, 3usize);
+        let w = random(k * n, 9);
+        let q = quantize(&w, k, n);
+        let p = PackedQ4::from_quant(&q);
+        let x = random(b * k, 10);
+        let mut partial = vec![0f32; b * n];
+        let mut xcol = vec![0f32; b];
+        let mut qrow = vec![0f32; n];
+        let mut want = vec![0f32; b * n];
+        kernels::q4_gemm_into(&x, b, &p, &mut partial, &mut xcol, &mut qrow, &mut want);
+        let mut got = vec![0f32; b * n];
+        q4_gemm_into(&x, b, &p, &mut partial, &mut xcol, &mut qrow, &mut got);
+        assert_eq!(bits(&want), bits(&got));
+    }
+
+    #[test]
+    fn q4_stripes_compose_to_full_width() {
+        use crate::quant::QBLOCK;
+        let (k, n, b) = (QBLOCK, 24usize, 2usize);
+        let w = random(k * n, 11);
+        let q = quantize(&w, k, n);
+        let p = PackedQ4::from_quant(&q);
+        let x = random(b * k, 12);
+        let mut partial = vec![0f32; b * n];
+        let mut xcol = vec![0f32; b];
+        let mut qrow = vec![0f32; n];
+        let mut want = vec![0f32; b * n];
+        kernels::q4_gemm_into(&x, b, &p, &mut partial, &mut xcol, &mut qrow, &mut want);
+        let mut got = vec![0f32; b * n];
+        let base = SendPtr::new(got.as_mut_ptr());
+        for cols in [0..10usize, 10..16, 16..24] {
+            let cw = cols.len();
+            let sc = ColScratch {
+                xcol: &mut xcol,
+                qrow: &mut qrow[..cw],
+                partial: &mut partial[..b * cw],
+            };
+            // SAFETY: sequential disjoint even-aligned stripes.
+            unsafe { q4_gemm_cols_raw(&x, b, &p, cols, sc, base) };
+        }
+        assert_eq!(bits(&want), bits(&got));
+    }
+
+    #[test]
+    fn sparse_bit_identical_to_scalar_oracle() {
+        use crate::quant::QBLOCK;
+        let (k, n, b) = (QBLOCK, 19usize, 3usize);
+        for keep in [1usize, 2, 4] {
+            let mut w = random(k * n, 20 + keep as u64);
+            prune_log_scale(&mut w, k, n, keep);
+            let q = quantize(&w, k, n);
+            let sm = pack_sparse(&q, keep);
+            let ss = sm.slot_scales();
+            let x = random(b * k, 21);
+            let mut want = vec![0f32; b * n];
+            kernels::q4_sparse_gemm_into(&x, b, &sm, &ss, &mut want);
+            let mut got = vec![0f32; b * n];
+            q4_sparse_gemm_into(&x, b, &sm, &ss, &mut got);
+            assert_eq!(bits(&want), bits(&got), "keep {keep}");
+        }
+    }
+
+    #[test]
+    fn attend_bit_identical_to_scalar_oracle() {
+        for (d, len) in [(8usize, 13usize), (6, 1), (16, 5), (20, 33)] {
+            let q = random(d, 30);
+            let keys = random(len * d, 31);
+            let vals = random(len * d, 32);
+            let mut s1 = vec![0f32; len];
+            let mut c1 = vec![0f32; d];
+            kernels::attend_into(&q, &keys, &vals, &mut s1, &mut c1);
+            let mut s2 = vec![0f32; len];
+            let mut c2 = vec![0f32; d];
+            attend_into(&q, &keys, &vals, &mut s2, &mut c2);
+            assert_eq!(bits(&c1), bits(&c2), "ctx d={d} len={len}");
+            assert_eq!(bits(&s1), bits(&s2), "scores d={d} len={len}");
+        }
+    }
+
+    #[test]
+    fn nibble_expansion_is_exact_for_every_byte() {
+        // all 256 byte values through the (possibly vector) q4 path via
+        // a 1-row matvec against a delta activation
+        use crate::quant::QBLOCK;
+        let (k, n) = (QBLOCK, 32usize);
+        let w = random(k * n, 40);
+        let q = quantize(&w, k, n);
+        let p = PackedQ4::from_quant(&q);
+        let mut x = vec![0f32; k];
+        x[17] = 1.0;
+        let mut partial = vec![0f32; n];
+        let mut xcol = vec![0f32; 1];
+        let mut qrow = vec![0f32; n];
+        let mut want = vec![0f32; n];
+        kernels::q4_gemm_into(&x, 1, &p, &mut partial, &mut xcol, &mut qrow, &mut want);
+        let mut got = vec![0f32; n];
+        q4_gemm_into(&x, 1, &p, &mut partial, &mut xcol, &mut qrow, &mut got);
+        assert_eq!(bits(&want), bits(&got));
+    }
+}

@@ -218,6 +218,9 @@ impl KvHandle {
 /// the gather side of the paged path, consumed by
 /// `kernels::attend_paged_into`. Constructed by [`KvArena::k_rows`] /
 /// [`KvArena::v_rows`] (or [`PagedRows::new`] for custom storage).
+/// `Copy` because it is a pair of shared views plus addressing
+/// constants — the parallel attention driver hands each worker its own.
+#[derive(Clone, Copy)]
 pub struct PagedRows<'a> {
     data: &'a [f32],
     blocks: &'a [u32],

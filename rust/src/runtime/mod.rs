@@ -111,5 +111,6 @@ pub mod backend;
 pub mod kernels;
 pub mod kv;
 pub mod model;
+pub mod pool;
 pub mod reference;
 pub mod weights;

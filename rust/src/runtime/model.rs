@@ -89,13 +89,18 @@ pub struct Session {
     /// stateless and remote backends.
     pub(crate) kv: KvHandle,
     // Legacy contiguous host KV copy — only the PJRT artifact path uses
-    // these (it re-uploads the whole cache every step).
-    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    // these (it re-uploads the whole cache every step), so they exist
+    // only under that feature. The default build's Session is a block
+    // table plus two integers: paged arena storage replaced the
+    // contiguous copy everywhere else, and carrying always-empty Vecs
+    // behind allow(dead_code) hid that from both the reader and the
+    // dead-code lint.
+    #[cfg(feature = "pjrt")]
     pub(crate) k_cache: Vec<f32>,
-    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    #[cfg(feature = "pjrt")]
     pub(crate) v_cache: Vec<f32>,
     /// only the PJRT backend re-uploads the cache and needs its dims
-    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    #[cfg(feature = "pjrt")]
     pub(crate) cache_dims: Vec<usize>,
 }
 
@@ -108,13 +113,17 @@ impl Session {
     /// [`Session::with_kv`] instead — this constructor allocates the
     /// legacy contiguous host copy.)
     pub fn new(cache_shape: [usize; 4]) -> Self {
-        let n: usize = cache_shape.iter().product();
+        #[cfg(not(feature = "pjrt"))]
+        let _ = cache_shape; // shape only materializes host tensors for PJRT
         Session {
             pos: 0,
             tag: 0,
             kv: KvHandle::default(),
-            k_cache: vec![0.0; n],
-            v_cache: vec![0.0; n],
+            #[cfg(feature = "pjrt")]
+            k_cache: vec![0.0; cache_shape.iter().product()],
+            #[cfg(feature = "pjrt")]
+            v_cache: vec![0.0; cache_shape.iter().product()],
+            #[cfg(feature = "pjrt")]
             cache_dims: cache_shape.to_vec(),
         }
     }
@@ -127,8 +136,11 @@ impl Session {
             pos: 0,
             tag: 0,
             kv,
+            #[cfg(feature = "pjrt")]
             k_cache: Vec::new(),
+            #[cfg(feature = "pjrt")]
             v_cache: Vec::new(),
+            #[cfg(feature = "pjrt")]
             cache_dims: Vec::new(),
         }
     }
@@ -266,6 +278,13 @@ impl LlmRuntime {
     /// them — the stream the batched decode round amortizes.
     pub fn ffn_weight_bytes(&self) -> Option<usize> {
         self.backend.ffn_weight_bytes()
+    }
+
+    /// Resolved kernel execution tier (`"scalar"`, `"simd"`,
+    /// `"simd-parallel(N)"`), when the backend runs the tiered CPU
+    /// kernels — provenance for `info`, the stats line, and benches.
+    pub fn kernel_tier(&self) -> Option<String> {
+        self.backend.kernel_tier()
     }
 
     /// Notify the backend that `session` is leaving the scheduler
@@ -699,8 +718,13 @@ mod tests {
     fn session_new_has_requested_shape() {
         let s = Session::new([2, 8, 1, 4]);
         assert_eq!(s.pos, 0);
-        assert_eq!(s.k_cache.len(), 2 * 8 * 4);
-        let empty = Session::new([0, 0, 0, 0]);
-        assert!(empty.k_cache.is_empty());
+        assert_eq!(s.tag, 0);
+        // the contiguous host cache exists only for the PJRT path
+        #[cfg(feature = "pjrt")]
+        {
+            assert_eq!(s.k_cache.len(), 2 * 8 * 4);
+            let empty = Session::new([0, 0, 0, 0]);
+            assert!(empty.k_cache.is_empty());
+        }
     }
 }

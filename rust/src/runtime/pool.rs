@@ -1,0 +1,379 @@
+//! Persistent worker pool for the parallel kernel tier — std threads
+//! and channels only, no external dependencies.
+//!
+//! The pool exists to split *disjoint-output* work (GEMM column
+//! stripes, per-session attention) across cores. Determinism is a
+//! design invariant, not an aspiration: callers hand each task its own
+//! output region and its own scratch, every floating-point operation
+//! happens inside exactly one task, and no task reads another task's
+//! output. The result is therefore bitwise independent of how many
+//! workers exist or how the OS schedules them — the equivalence suite
+//! asserts this across `threads ∈ {1, 2, 8}`.
+//!
+//! Panic discipline (this file is covered by the in-repo analyzer's
+//! panic-path lint): the worker loop never unwraps, never indexes, and
+//! never panics on its own. A panicking *task* is caught with
+//! `catch_unwind`, reported through the completion channel, and
+//! re-raised on the submitting thread with `resume_unwind` — after
+//! every other in-flight task has been drained, so a panic can neither
+//! deadlock the pool nor leave a worker running against freed borrows.
+
+#![deny(missing_docs)]
+
+use std::any::Any;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+/// A unit of work: runs once, writes only its own output region.
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// Completion signal a worker sends after running one task.
+enum Done {
+    /// Task ran to completion.
+    Ok,
+    /// Task unwound; the payload is re-raised on the submitting thread.
+    Panicked(Box<dyn Any + Send>),
+}
+
+/// One queued task plus the channel to acknowledge it on.
+struct Job {
+    task: Task<'static>,
+    done: Sender<Done>,
+}
+
+/// A fixed set of persistent worker threads fed over per-worker
+/// channels (round-robin). Workers park on `recv` between batches;
+/// dropping the pool closes the channels and the threads exit.
+///
+/// `WorkerPool::new(1)` spawns no threads at all — `run` executes
+/// inline on the caller, which is the degenerate (and still
+/// bit-identical) single-core configuration.
+pub struct WorkerPool {
+    senders: Vec<Sender<Job>>,
+}
+
+fn worker_loop(rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let outcome = match catch_unwind(AssertUnwindSafe(job.task)) {
+            Ok(()) => Done::Ok,
+            Err(payload) => Done::Panicked(payload),
+        };
+        // the submitter may itself be unwinding and have dropped the
+        // receiving end; a failed ack must not take the worker down
+        let _ = job.done.send(outcome);
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` workers (clamped to at least 1; one
+    /// thread means "inline", so `threads - 1` OS threads exist at
+    /// most). Spawn failures degrade capacity instead of erroring: a
+    /// pool that ends up with zero workers still runs everything
+    /// inline, bit-identically.
+    pub fn new(threads: usize) -> Self {
+        let workers = threads.max(1) - 1;
+        let mut senders = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let spawned = thread::Builder::new()
+                .name(format!("edgellm-pool-{i}"))
+                .spawn(move || worker_loop(rx));
+            if spawned.is_ok() {
+                senders.push(tx);
+            }
+        }
+        WorkerPool { senders }
+    }
+
+    /// Degree of parallelism `run` can deliver: workers plus the
+    /// submitting thread. Partition work into this many pieces.
+    pub fn threads(&self) -> usize {
+        self.senders.len() + 1
+    }
+
+    /// Run every task to completion before returning. Tasks must write
+    /// disjoint outputs; beyond that, no ordering is observable —
+    /// results are bitwise identical for any worker count because each
+    /// output element is produced by exactly one task.
+    ///
+    /// The last task runs inline on the submitting thread (it would
+    /// otherwise just block), as does everything when no workers exist.
+    /// If a task panics, the first payload is re-raised here — after
+    /// *all* dispatched tasks have been drained, so no task can still
+    /// be touching the `'scope` borrows when this frame unwinds.
+    pub fn run<'scope>(&self, tasks: Vec<Task<'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if self.senders.is_empty() || tasks.len() == 1 {
+            let mut first_panic: Option<Box<dyn Any + Send>> = None;
+            for task in tasks {
+                if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
+            }
+            if let Some(p) = first_panic {
+                resume_unwind(p);
+            }
+            return;
+        }
+        let (done_tx, done_rx) = channel::<Done>();
+        let mut dispatched = 0usize;
+        let mut inline: Vec<Task<'static>> = Vec::new();
+        let keep_here = tasks.len().div_ceil(self.threads());
+        let mut iter = tasks.into_iter();
+        // the submitter's own share runs inline; everything else is
+        // dealt round-robin to the workers
+        for _ in 0..keep_here {
+            if let Some(task) = iter.next() {
+                // SAFETY: see the transmute justification below — inline
+                // tasks trivially finish before `run` returns.
+                inline.push(unsafe { erase_lifetime(task) });
+            }
+        }
+        for (task, tx) in iter.zip(self.senders.iter().cycle()) {
+            // SAFETY: the borrows captured in `task` live for `'scope`,
+            // which outlives this call. `run` does not return (normally
+            // or by unwind) until every dispatched job has acknowledged
+            // completion on `done_rx`, and a worker acknowledges only
+            // after the task has finished running — so no job ever
+            // outlives `'scope` despite the erased lifetime.
+            let task = unsafe { erase_lifetime(task) };
+            match tx.send(Job { task, done: done_tx.clone() }) {
+                Ok(()) => dispatched += 1,
+                // worker gone (spawn raced a shutdown): reclaim the task
+                // and run it inline rather than losing the work
+                Err(returned) => inline.push(returned.0.task),
+            }
+        }
+        drop(done_tx);
+        let mut first_panic: Option<Box<dyn Any + Send>> = None;
+        for task in inline {
+            if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
+                if first_panic.is_none() {
+                    first_panic = Some(p);
+                }
+            }
+        }
+        // drain every acknowledgement before returning or unwinding —
+        // this blocking loop is what makes the lifetime erasure sound
+        for _ in 0..dispatched {
+            match done_rx.recv() {
+                Ok(Done::Ok) => {}
+                Ok(Done::Panicked(p)) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
+                // all senders dropped: every outstanding job has already
+                // acknowledged (workers send before dropping)
+                Err(_) => break,
+            }
+        }
+        if let Some(p) = first_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Erase a task's borrow lifetime so it can cross the channel. Sound
+/// only because [`WorkerPool::run`] blocks until the task has finished
+/// (see the safety comments at the call sites).
+unsafe fn erase_lifetime(task: Task<'_>) -> Task<'static> {
+    std::mem::transmute::<Task<'_>, Task<'static>>(task)
+}
+
+/// Split `0..n` into at most `parts` contiguous, non-empty,
+/// near-equal ranges covering every index exactly once.
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    partition_aligned(n, parts, 1)
+}
+
+/// [`partition`] with every boundary (except the final `n`) a multiple
+/// of `align` — the q4 kernels need even column starts so a stripe
+/// never splits a nibble-packed byte.
+pub fn partition_aligned(n: usize, parts: usize, align: usize) -> Vec<Range<usize>> {
+    let align = align.max(1);
+    let parts = parts.max(1);
+    let units = n.div_ceil(align);
+    let step = units.div_ceil(parts) * align;
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + step).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Resolve the default worker count: `EDGELLM_THREADS` when set to a
+/// positive integer, else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    let from_env = std::env::var("EDGELLM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t > 0);
+    match from_env {
+        Some(t) => t,
+        None => thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// A `*mut f32` that asserts cross-thread sendability. Used to hand
+/// workers the *base* of a shared output buffer; each worker derives
+/// `&mut` slices only for its own disjoint region, so no two threads
+/// ever hold overlapping mutable views.
+#[derive(Clone, Copy)]
+pub struct SendPtr {
+    ptr: *mut f32,
+}
+
+impl SendPtr {
+    /// Wrap a base pointer (typically `slice.as_mut_ptr()`).
+    pub fn new(ptr: *mut f32) -> Self {
+        SendPtr { ptr }
+    }
+
+    /// The wrapped pointer.
+    pub fn get(self) -> *mut f32 {
+        self.ptr
+    }
+}
+
+// SAFETY: SendPtr is a plain address. The disjointness contract that
+// makes concurrent use sound is enforced by the kernel drivers (each
+// task touches only its own column stripe) and documented at every
+// construction site.
+unsafe impl Send for SendPtr {}
+// SAFETY: as above — shared access never materializes overlapping
+// mutable views.
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_everything_once() {
+        for n in [0usize, 1, 7, 8, 64, 257] {
+            for parts in [1usize, 2, 3, 8, 300] {
+                let ranges = partition(n, parts);
+                assert!(ranges.len() <= parts.max(1));
+                let mut next = 0usize;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "gap at {n}/{parts}");
+                    assert!(r.end > r.start, "empty range at {n}/{parts}");
+                    next = r.end;
+                }
+                assert_eq!(next, n, "missing tail at {n}/{parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_aligned_keeps_boundaries_aligned() {
+        for n in [2usize, 10, 16, 30, 128, 130] {
+            for parts in [1usize, 2, 3, 7] {
+                let ranges = partition_aligned(n, parts, 2);
+                for r in &ranges {
+                    assert_eq!(r.start % 2, 0, "odd start at {n}/{parts}");
+                }
+                assert_eq!(ranges.last().unwrap().end, n);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_disjoint_tasks_to_completion() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u32; 100];
+        let ranges = partition(data.len(), pool.threads());
+        {
+            let mut rest = data.as_mut_slice();
+            let mut tasks: Vec<Task> = Vec::new();
+            for r in ranges {
+                let (mine, tail) = rest.split_at_mut(r.len());
+                rest = tail;
+                let start = r.start as u32;
+                tasks.push(Box::new(move || {
+                    for (i, v) in mine.iter_mut().enumerate() {
+                        *v = start + i as u32;
+                    }
+                }));
+            }
+            pool.run(tasks);
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v as usize, i);
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task() {
+        let pool = WorkerPool::new(3);
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Task> = (0..6)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 3 {
+                            panic!("task {i} exploded");
+                        }
+                    }) as Task
+                })
+                .collect();
+            pool.run(tasks);
+        }));
+        assert!(boom.is_err(), "panic must propagate to the submitter");
+        // the pool is still serviceable afterwards
+        let mut hits = vec![false; 8];
+        let mut rest = hits.as_mut_slice();
+        let mut tasks: Vec<Task> = Vec::new();
+        for r in partition(8, pool.threads()) {
+            let (mine, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            tasks.push(Box::new(move || {
+                for v in mine.iter_mut() {
+                    *v = true;
+                }
+            }));
+        }
+        pool.run(tasks);
+        assert!(hits.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut x = 0u64;
+        let tasks: Vec<Task> = vec![Box::new(|| x += 41), Box::new(|| ())];
+        pool.run(tasks);
+        x += 1;
+        assert_eq!(x, 42);
+    }
+
+    #[test]
+    fn more_tasks_than_workers() {
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0u8; 37];
+        let mut rest = data.as_mut_slice();
+        let mut tasks: Vec<Task> = Vec::new();
+        while !rest.is_empty() {
+            let take = rest.len().min(3);
+            let (mine, tail) = rest.split_at_mut(take);
+            rest = tail;
+            tasks.push(Box::new(move || {
+                for v in mine.iter_mut() {
+                    *v = 1;
+                }
+            }));
+        }
+        pool.run(tasks);
+        assert!(data.iter().all(|&v| v == 1));
+    }
+}

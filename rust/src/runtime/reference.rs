@@ -39,11 +39,14 @@ use std::cell::RefCell;
 use anyhow::{bail, Result};
 
 use super::backend::Backend;
+use super::kernels::par::{self, AttnJob};
+use super::kernels::simd;
 use super::kernels::{
     attend_paged_into, gelu, gemm_into, matvec_into, q4_gemm_into, q4_sparse_gemm_into,
 };
 use super::kv::{KvArena, MemoryStats, DEFAULT_BLOCK_TOKENS};
 use super::model::{ModelInfo, Session};
+use super::pool::{self, WorkerPool};
 use crate::pack::layout::PackedQ4;
 use crate::quant::sparse::{pack_sparse, SparseMatrix};
 use crate::quant::{self, prune_log_scale, Sparsity, SGROUP};
@@ -51,6 +54,48 @@ use crate::util::rng::Rng;
 
 /// Byte-level vocabulary, matching `coordinator::tokenizer`.
 pub const REF_VOCAB: usize = 256;
+
+/// Which kernel implementation executes the hot path. Every tier is
+/// **bit-identical** to [`Scalar`](KernelTier::Scalar) — the scalar
+/// kernels are the oracle, the other tiers are how fast the same bits
+/// are produced (see `runtime::kernels::simd` for why that holds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelTier {
+    /// Resolve at engine construction: `SimdParallel` when more than
+    /// one thread is available, else `Simd` when AVX2 is detected, else
+    /// `Scalar`. The `EDGELLM_KERNEL_TIER` environment variable, when
+    /// set to a parseable tier, overrides an `Auto` config (the CI
+    /// lever — tests build default configs).
+    #[default]
+    Auto,
+    /// The single-threaded scalar oracle kernels — the reference
+    /// everything else is compared against. Pin with
+    /// `--kernel-tier scalar` when bisecting a numeric question.
+    Scalar,
+    /// Single-threaded with runtime-dispatched AVX2 bodies
+    /// (`runtime::kernels::simd`); falls back to scalar-order bodies
+    /// per call on machines without AVX2.
+    Simd,
+    /// SIMD kernels driven by the persistent worker pool
+    /// (`runtime::kernels::par`), splitting GEMM output columns and
+    /// per-session attention across cores with deterministic disjoint
+    /// partitioning.
+    SimdParallel,
+}
+
+impl KernelTier {
+    /// Parse a CLI/env spelling (`auto`, `scalar`, `simd`,
+    /// `simd-parallel`). Returns `None` for anything else.
+    pub fn parse(s: &str) -> Option<KernelTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelTier::Auto),
+            "scalar" => Some(KernelTier::Scalar),
+            "simd" => Some(KernelTier::Simd),
+            "simd-parallel" | "simdparallel" | "parallel" => Some(KernelTier::SimdParallel),
+            _ => None,
+        }
+    }
+}
 
 /// Dimensions of the reference model.
 #[derive(Debug, Clone)]
@@ -73,6 +118,13 @@ pub struct ReferenceConfig {
     /// 64 full-length sessions' worth — storage materializes lazily, so
     /// the generous default costs nothing until blocks are touched.
     pub kv_pool_blocks: usize,
+    /// Kernel execution tier (CLI `--kernel-tier`). All tiers produce
+    /// bit-identical results; `Auto` picks the fastest available.
+    pub kernel_tier: KernelTier,
+    /// Worker count for the `SimdParallel` tier (CLI `--threads`).
+    /// `0` = auto: `EDGELLM_THREADS` when set, else the machine's
+    /// available parallelism. Ignored by the single-threaded tiers.
+    pub threads: usize,
 }
 
 impl Default for ReferenceConfig {
@@ -87,6 +139,8 @@ impl Default for ReferenceConfig {
             ffn_sparsity: Sparsity::Dense,
             kv_block_tokens: DEFAULT_BLOCK_TOKENS,
             kv_pool_blocks: 0,
+            kernel_tier: KernelTier::Auto,
+            threads: 0,
         }
     }
 }
@@ -131,22 +185,6 @@ impl QLinear {
             QBody::Dense(PackedQ4::from_quant(&qm))
         };
         QLinear { d_in, k_pad, n, body }
-    }
-
-    /// Batched forward over `b` zero-padded activation rows (`b × k_pad`).
-    fn forward(
-        &self,
-        x: &[f32],
-        b: usize,
-        partial: &mut [f32],
-        xcol: &mut [f32],
-        qrow: &mut [f32],
-        out: &mut [f32],
-    ) {
-        match &self.body {
-            QBody::Dense(p) => q4_gemm_into(x, b, p, partial, xcol, qrow, out),
-            QBody::Sparse { m, slot_scale } => q4_sparse_gemm_into(x, b, m, slot_scale, out),
-        }
     }
 
     /// Dequantized weight at (input row, output col) — reference path.
@@ -216,6 +254,19 @@ fn ensure(v: &mut Vec<f32>, len: usize) {
     }
 }
 
+/// The resolved execution engine behind [`KernelTier`]: which kernel
+/// family every GEMM/attention dispatch goes through. Resolved once at
+/// construction — the hot path matches on a three-way enum, never
+/// re-detects features.
+enum Exec {
+    /// scalar oracle kernels, single-threaded
+    Scalar,
+    /// `kernels::simd` bodies, single-threaded
+    Simd,
+    /// `kernels::par` drivers over this persistent pool
+    Parallel(WorkerPool),
+}
+
 pub struct RefLlm {
     info: ModelInfo,
     /// token embeddings, `REF_VOCAB × d` (row lookup, not a GEMM)
@@ -224,6 +275,11 @@ pub struct RefLlm {
     /// output head, input-major `d × REF_VOCAB`
     w_out: Vec<f32>,
     buckets: Vec<usize>,
+    /// resolved kernel tier (see [`KernelTier`]); every dispatch helper
+    /// below matches on this
+    exec: Exec,
+    /// human-readable tier name for `info`/stats/benches
+    tier_label: String,
     scratch: RefCell<Scratch>,
     /// all session KV storage, block-granular; sessions carry only a
     /// block table (RefCell: `Backend` methods take `&self`, and the
@@ -301,14 +357,138 @@ impl RefLlm {
         } else {
             blocks_per_session * 64
         };
+        // resolve the kernel tier once: explicit config wins, the
+        // EDGELLM_KERNEL_TIER env var overrides an Auto config (the CI
+        // lever — integration tests build default configs), and Auto
+        // itself prefers all cores, then AVX2, then the oracle
+        let mut tier = cfg.kernel_tier;
+        if tier == KernelTier::Auto {
+            if let Some(t) = std::env::var("EDGELLM_KERNEL_TIER")
+                .ok()
+                .and_then(|s| KernelTier::parse(&s))
+            {
+                tier = t;
+            }
+        }
+        let threads = if cfg.threads > 0 {
+            cfg.threads
+        } else {
+            pool::default_threads()
+        };
+        let exec = match tier {
+            KernelTier::Scalar => Exec::Scalar,
+            KernelTier::Simd => Exec::Simd,
+            KernelTier::SimdParallel => Exec::Parallel(WorkerPool::new(threads)),
+            KernelTier::Auto => {
+                if threads > 1 {
+                    Exec::Parallel(WorkerPool::new(threads))
+                } else if simd::available() {
+                    Exec::Simd
+                } else {
+                    Exec::Scalar
+                }
+            }
+        };
+        let tier_label = match &exec {
+            Exec::Scalar => "scalar".to_string(),
+            Exec::Simd => "simd".to_string(),
+            Exec::Parallel(p) => format!("simd-parallel({})", p.threads()),
+        };
         RefLlm {
             info,
             emb,
             layers,
             w_out,
             buckets,
+            exec,
+            tier_label,
             scratch: RefCell::new(Scratch::default()),
             arena: RefCell::new(KvArena::new(cfg.n_layers, d, bt, max_blocks)),
+        }
+    }
+
+    /// The resolved kernel tier's human-readable name (`"scalar"`,
+    /// `"simd"`, `"simd-parallel(8)"`).
+    pub fn kernel_tier_label(&self) -> &str {
+        &self.tier_label
+    }
+
+    /// Worker slots the scratch arena must provision for (1 on the
+    /// single-threaded tiers).
+    fn pool_threads(&self) -> usize {
+        match &self.exec {
+            Exec::Parallel(p) => p.threads(),
+            _ => 1,
+        }
+    }
+
+    /// Tier-dispatched dense GEMM — every tier produces bit-identical
+    /// output (see `kernels::simd`), so callers never care which ran.
+    fn gemm(&self, x: &[f32], b: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+        match &self.exec {
+            Exec::Scalar => gemm_into(x, b, k, w, n, out),
+            Exec::Simd => simd::gemm_into(x, b, k, w, n, out),
+            Exec::Parallel(p) => par::gemm_into(p, x, b, k, w, n, out),
+        }
+    }
+
+    /// Tier-dispatched matvec (the prefill logits head).
+    fn matvec(&self, w: &[f32], x: &[f32], out: &mut [f32]) {
+        match &self.exec {
+            Exec::Scalar => matvec_into(w, x, out),
+            Exec::Simd => simd::matvec_into(w, x, out),
+            Exec::Parallel(p) => par::matvec_into(p, w, x, out),
+        }
+    }
+
+    /// Tier-dispatched quantized forward over `b` zero-padded
+    /// activation rows (`b × k_pad`) of a [`QLinear`].
+    #[allow(clippy::too_many_arguments)]
+    fn q_forward(
+        &self,
+        q: &QLinear,
+        x: &[f32],
+        b: usize,
+        partial: &mut [f32],
+        xcol: &mut [f32],
+        qrow: &mut [f32],
+        out: &mut [f32],
+    ) {
+        match (&self.exec, &q.body) {
+            (Exec::Scalar, QBody::Dense(p)) => q4_gemm_into(x, b, p, partial, xcol, qrow, out),
+            (Exec::Simd, QBody::Dense(p)) => simd::q4_gemm_into(x, b, p, partial, xcol, qrow, out),
+            (Exec::Parallel(pl), QBody::Dense(p)) => {
+                par::q4_gemm_into(pl, x, b, p, partial, xcol, qrow, out)
+            }
+            (Exec::Scalar, QBody::Sparse { m, slot_scale }) => {
+                q4_sparse_gemm_into(x, b, m, slot_scale, out)
+            }
+            (Exec::Simd, QBody::Sparse { m, slot_scale }) => {
+                simd::q4_sparse_gemm_into(x, b, m, slot_scale, out)
+            }
+            (Exec::Parallel(pl), QBody::Sparse { m, slot_scale }) => {
+                par::q4_sparse_gemm_into(pl, x, b, m, slot_scale, out)
+            }
+        }
+    }
+
+    /// Tier-dispatched attention over a batch of independent jobs.
+    /// `scores` is softmax scratch (`pool_threads() × max_tokens` wide,
+    /// see [`RefLlm::reserve`]); its contents never escape, so tiers
+    /// that stripe it differently still produce identical `ctx` rows.
+    fn attend_all(&self, jobs: Vec<AttnJob<'_>>, scores: &mut [f32], max_len: usize) {
+        match &self.exec {
+            Exec::Scalar => {
+                for j in jobs {
+                    attend_paged_into(j.q, &j.keys, &j.vals, &mut scores[..j.len], j.ctx);
+                }
+            }
+            Exec::Simd => {
+                for j in jobs {
+                    simd::attend_paged_into(j.q, &j.keys, &j.vals, &mut scores[..j.len], j.ctx);
+                }
+            }
+            Exec::Parallel(p) => par::attend_jobs(p, jobs, scores, max_len),
         }
     }
 
@@ -334,13 +514,16 @@ impl RefLlm {
         ensure(&mut sc.v, rows * d);
         ensure(&mut sc.ctx, rows * d);
         ensure(&mut sc.o, rows * d);
-        ensure(&mut sc.scores, self.info.max_tokens);
+        // scores: one max_tokens-wide softmax stripe per worker;
+        // xcol: one batch-wide activation gather per worker stripe
+        let t = self.pool_threads();
+        ensure(&mut sc.scores, t * self.info.max_tokens);
         ensure(&mut sc.ffn_in, rows * kup);
         ensure(&mut sc.ffn_up, rows * d_ffn);
         ensure(&mut sc.ffn_mid, rows * kdown);
         ensure(&mut sc.ffn_out, rows * d);
         ensure(&mut sc.partial, rows * d_ffn.max(d));
-        ensure(&mut sc.xcol, rows);
+        ensure(&mut sc.xcol, t * rows);
         ensure(&mut sc.qrow, d_ffn.max(d));
         ensure(&mut sc.logits, rows * REF_VOCAB);
     }
@@ -354,7 +537,8 @@ impl RefLlm {
             let src = &sc.h[s * d..(s + 1) * d];
             sc.ffn_in[s * kup..s * kup + d].copy_from_slice(src);
         }
-        layer.w_up.forward(
+        self.q_forward(
+            &layer.w_up,
             &sc.ffn_in,
             b,
             &mut sc.partial,
@@ -367,7 +551,8 @@ impl RefLlm {
                 sc.ffn_mid[s * kdown + i] = gelu(sc.ffn_up[s * d_ffn + i]);
             }
         }
-        layer.w_down.forward(
+        self.q_forward(
+            &layer.w_down,
             &sc.ffn_mid,
             b,
             &mut sc.partial,
@@ -381,16 +566,16 @@ impl RefLlm {
     /// streaming its weight matrix once for the whole batch.
     fn qkv(&self, layer: &Layer, b: usize, sc: &mut Scratch) {
         let d = self.info.d_model;
-        gemm_into(&sc.h, b, d, &layer.wq, d, &mut sc.q);
-        gemm_into(&sc.h, b, d, &layer.wk, d, &mut sc.k);
-        gemm_into(&sc.h, b, d, &layer.wv, d, &mut sc.v);
+        self.gemm(&sc.h, b, d, &layer.wq, d, &mut sc.q);
+        self.gemm(&sc.h, b, d, &layer.wk, d, &mut sc.k);
+        self.gemm(&sc.h, b, d, &layer.wv, d, &mut sc.v);
     }
 
     /// Output projection + residual mix + quantized FFN + residual mix,
     /// applied to `b` rows of `sc.ctx`/`sc.h` in place.
     fn mix_and_ffn(&self, layer: &Layer, b: usize, sc: &mut Scratch) {
         let d = self.info.d_model;
-        gemm_into(&sc.ctx, b, d, &layer.wo, d, &mut sc.o);
+        self.gemm(&sc.ctx, b, d, &layer.wo, d, &mut sc.o);
         for i in 0..b * d {
             sc.h[i] = (sc.h[i] + sc.o[i]).tanh();
         }
@@ -476,22 +661,28 @@ impl RefLlm {
                 let arena = &*arena;
                 let kr = arena.k_rows(&session.kv, li);
                 let vr = arena.v_rows(&session.kv, li);
-                for i in 0..n {
-                    let len = start + i + 1;
-                    attend_paged_into(
-                        &sc.q[i * d..(i + 1) * d],
-                        &kr,
-                        &vr,
-                        &mut sc.scores[..len],
-                        &mut sc.ctx[i * d..(i + 1) * d],
-                    );
-                }
+                // one independent causal-attention job per suffix
+                // position, all sharing the same gather view —
+                // the parallel tier spreads them across workers
+                let jobs: Vec<AttnJob> = sc.q[..n * d]
+                    .chunks(d)
+                    .zip(sc.ctx[..n * d].chunks_mut(d))
+                    .enumerate()
+                    .map(|(i, (qrow, ctxrow))| AttnJob {
+                        q: qrow,
+                        keys: kr,
+                        vals: vr,
+                        len: start + i + 1,
+                        ctx: ctxrow,
+                    })
+                    .collect();
+                self.attend_all(jobs, &mut sc.scores, t);
             }
             self.mix_and_ffn(layer, n, sc);
         }
         session.pos = t;
         let mut logits = vec![0f32; REF_VOCAB];
-        matvec_into(&self.w_out, &sc.h[(n - 1) * d..n * d], &mut logits);
+        self.matvec(&self.w_out, &sc.h[(n - 1) * d..n * d], &mut logits);
         // make this prompt's blocks adoptable by later sessions (the
         // index takes its own refcounts, so they survive end_session)
         self.arena.borrow_mut().register_prefix(prompt, &session.kv);
@@ -552,6 +743,12 @@ impl RefLlm {
         for (li, layer) in self.layers.iter().enumerate() {
             self.qkv(layer, b, sc);
             {
+                // scatter every session's fresh K/V row first, then
+                // attend all sessions — same order per session as the
+                // interleaved form (a session's attend never read
+                // another session's rows), but now the attends are a
+                // batch of independent jobs the parallel tier can
+                // spread across workers
                 let mut arena = self.arena.borrow_mut();
                 for (s, sess) in sessions.iter_mut().enumerate() {
                     let pos = sess.pos;
@@ -561,21 +758,30 @@ impl RefLlm {
                     arena
                         .v_row_mut(&sess.kv, li, pos)
                         .copy_from_slice(&sc.v[s * d..(s + 1) * d]);
-                    let len = pos + 1;
-                    let kr = arena.k_rows(&sess.kv, li);
-                    let vr = arena.v_rows(&sess.kv, li);
-                    attend_paged_into(
-                        &sc.q[s * d..(s + 1) * d],
-                        &kr,
-                        &vr,
-                        &mut sc.scores[..len],
-                        &mut sc.ctx[s * d..(s + 1) * d],
-                    );
                 }
+                let arena = &*arena;
+                let mut max_len = 0usize;
+                let jobs: Vec<AttnJob> = sessions
+                    .iter()
+                    .zip(sc.q[..b * d].chunks(d))
+                    .zip(sc.ctx[..b * d].chunks_mut(d))
+                    .map(|((sess, qrow), ctxrow)| {
+                        let len = sess.pos + 1;
+                        max_len = max_len.max(len);
+                        AttnJob {
+                            q: qrow,
+                            keys: arena.k_rows(&sess.kv, li),
+                            vals: arena.v_rows(&sess.kv, li),
+                            len,
+                            ctx: ctxrow,
+                        }
+                    })
+                    .collect();
+                self.attend_all(jobs, &mut sc.scores, max_len);
             }
             self.mix_and_ffn(layer, b, sc);
         }
-        gemm_into(&sc.h, b, d, &self.w_out, REF_VOCAB, &mut sc.logits);
+        self.gemm(&sc.h, b, d, &self.w_out, REF_VOCAB, &mut sc.logits);
         for sess in sessions.iter_mut() {
             sess.pos += 1;
         }
@@ -690,6 +896,14 @@ impl Backend for RefLlm {
 
     fn ffn_weight_bytes(&self) -> Option<usize> {
         Some(RefLlm::ffn_weight_bytes(self))
+    }
+
+    /// The tier resolved at construction (`--kernel-tier` /
+    /// `EDGELLM_KERNEL_TIER` / auto-detect) — every tier is
+    /// bit-identical, so this is provenance for benches and the stats
+    /// line, not a semantic switch.
+    fn kernel_tier(&self) -> Option<String> {
+        Some(self.tier_label.clone())
     }
 
     /// Retirement returns the session's blocks to the free list, where

@@ -9,7 +9,7 @@
 
 use edgellm::quant::Sparsity;
 use edgellm::runtime::model::{LlmRuntime, Session};
-use edgellm::runtime::reference::{RefLlm, ReferenceConfig};
+use edgellm::runtime::reference::{KernelTier, RefLlm, ReferenceConfig};
 use edgellm::util::rng::Rng;
 
 const TOL: f32 = 1e-4;
@@ -309,6 +309,79 @@ fn shared_prefix_decode_is_bit_identical_to_private() {
     }
     for s in &sessions {
         assert_eq!(s.pos, control.pos);
+    }
+}
+
+fn logit_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Prefill a mixed-length batch and run several batched decode rounds,
+/// returning every logits vector as raw bits — the whole observable
+/// compute trajectory of the runtime.
+fn bit_trajectory(rt: &LlmRuntime) -> Vec<Vec<u32>> {
+    let prompts: [&[i32]; 3] = [&[3, 1, 4, 1, 5], &[9], &[2, 7, 1, 8, 2, 8, 1, 8, 2, 8]];
+    let mut out = Vec::new();
+    let mut sessions = Vec::new();
+    for p in prompts {
+        let (l, s) = rt.prefill(p).unwrap();
+        out.push(logit_bits(&l));
+        sessions.push(s);
+    }
+    for round in 0..6i32 {
+        let tokens: Vec<i32> = (0..3).map(|i| (round * 3 + i) * 17 % 256).collect();
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        for l in rt.decode_batch(&mut refs, &tokens).unwrap() {
+            out.push(logit_bits(&l));
+        }
+    }
+    out
+}
+
+/// Acceptance (kernel tiers, PR 10): the `Simd` and `SimdParallel`
+/// tiers run the scalar oracle's per-element operation sequence
+/// unchanged (mul+add, never FMA; vectorization only across independent
+/// accumulators), so every logits vector — prefill and decode, at every
+/// round — is **bit**-identical to the `Scalar` tier, at any thread
+/// count. Shapes are chosen hostile: `d_model = 20` gives `d_ffn = 80`
+/// and a 256-wide logits head with partial tail lanes, the batch (3) is
+/// smaller than the largest pool (8), and one prompt is a single token.
+#[test]
+fn kernel_tiers_are_bit_identical_across_thread_counts() {
+    let mk = |tier, threads| {
+        LlmRuntime::reference(ReferenceConfig {
+            d_model: 20, // not a vector-lane multiple: exercises tails
+            kernel_tier: tier,
+            threads,
+            ..cfg(Sparsity::Dense)
+        })
+    };
+    let want = bit_trajectory(&mk(KernelTier::Scalar, 1));
+    let simd = bit_trajectory(&mk(KernelTier::Simd, 1));
+    assert_eq!(want, simd, "simd tier diverged from the scalar oracle");
+    for threads in [1usize, 2, 8] {
+        let got = bit_trajectory(&mk(KernelTier::SimdParallel, threads));
+        assert_eq!(want, got, "simd-parallel({threads}) diverged from the scalar oracle");
+    }
+}
+
+/// Same tier matrix over the structured-sparse FFN path (the gather
+/// kernel) and a paged arena small enough that sessions cross block
+/// boundaries mid-trajectory.
+#[test]
+fn kernel_tiers_are_bit_identical_on_sparse_paged_path() {
+    let mk = |tier, threads| {
+        LlmRuntime::reference(ReferenceConfig {
+            kernel_tier: tier,
+            threads,
+            kv_block_tokens: 8,
+            ..cfg(Sparsity::Quarter)
+        })
+    };
+    let want = bit_trajectory(&mk(KernelTier::Scalar, 1));
+    for threads in [2usize, 8] {
+        let got = bit_trajectory(&mk(KernelTier::SimdParallel, threads));
+        assert_eq!(want, got, "sparse simd-parallel({threads}) diverged");
     }
 }
 

@@ -519,6 +519,63 @@ fn prop_trace_ring_preserves_per_request_order_under_concurrent_recording() {
 }
 
 #[test]
+fn prop_parallel_kernels_bit_identical_across_thread_counts() {
+    // PR 10 acceptance: the pool-driven kernel tier is bitwise invariant
+    // across threads ∈ {1, 2, 8} on hostile shapes — fewer output
+    // columns than workers, non-multiple-of-8 widths, partial tail
+    // lanes — because stripes partition the output and never change any
+    // element's operation order.
+    use edgellm::pack::layout::PackedQ4;
+    use edgellm::runtime::kernels::{self, par};
+    use edgellm::runtime::pool::WorkerPool;
+    let pools: Vec<WorkerPool> = [1usize, 2, 8].iter().map(|&t| WorkerPool::new(t)).collect();
+    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    let mut rng = Rng::new(909);
+    for case in 0..CASES {
+        let k = 1 + case % 40;
+        let n = [2usize, 3, 5, 8, 13, 26, 67][case % 7];
+        let b = 1 + case % 4;
+        let x: Vec<f32> = (0..b * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0f32; b * n];
+        kernels::gemm_into(&x, b, k, &w, n, &mut want);
+        for pool in &pools {
+            let mut got = vec![0f32; b * n];
+            par::gemm_into(pool, &x, b, k, &w, n, &mut got);
+            assert_eq!(
+                bits(&want),
+                bits(&got),
+                "case {case} gemm {k}x{n} b{b} threads {}",
+                pool.threads()
+            );
+        }
+        // quantized GEMM: nibble-packed, so widths stay even
+        let qk = QBLOCK * (1 + case % 2);
+        let qn = [2usize, 4, 10, 26][case % 4];
+        let wq: Vec<f32> = (0..qk * qn).map(|_| rng.normal() as f32).collect();
+        let p = PackedQ4::from_quant(&quantize(&wq, qk, qn));
+        let xq: Vec<f32> = (0..b * qk).map(|_| rng.normal() as f32).collect();
+        let mut partial = vec![0f32; b * qn];
+        let mut qrow = vec![0f32; qn];
+        let mut xcol = vec![0f32; b];
+        let mut want = vec![0f32; b * qn];
+        kernels::q4_gemm_into(&xq, b, &p, &mut partial, &mut xcol, &mut qrow, &mut want);
+        for pool in &pools {
+            // per-worker activation gathers, as the engine provisions
+            let mut xcolp = vec![0f32; pool.threads() * b];
+            let mut got = vec![0f32; b * qn];
+            par::q4_gemm_into(pool, &xq, b, &p, &mut partial, &mut xcolp, &mut qrow, &mut got);
+            assert_eq!(
+                bits(&want),
+                bits(&got),
+                "case {case} q4 {qk}x{qn} b{b} threads {}",
+                pool.threads()
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_rng_choose_indices_uniformish() {
     // sanity on the test harness itself: chosen index sets cover the range
     let mut rng = Rng::new(808);

@@ -52,6 +52,10 @@ impl Config {
                 "bridge/device.rs",
                 "bridge/client.rs",
                 "coordinator/server.rs",
+                // not a wire surface, but a panic inside a pool worker
+                // would poison every request sharing the runtime — the
+                // dispatch path must bubble, never unwrap
+                "runtime/pool.rs",
             ]
             .iter()
             .map(|s| s.to_string())
